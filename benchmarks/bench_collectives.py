@@ -1,0 +1,71 @@
+"""jmpi collective microbenchmarks (8 emulated ranks).
+
+Per op × payload size: µs/call of the JIT-resident collective (whole timed
+loop compiled — 100 chained calls per dispatch to amortize dispatch cost)
+plus the host round-trip equivalent for allreduce (the Listing-2 cost).
+Derived column reports effective GB/s through the emulated transport.
+"""
+
+from __future__ import annotations
+
+import timeit
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+import repro.core as jmpi
+
+INNER = 50
+
+
+def timed_loop(mesh, op, numel):
+    @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+    def f(x):
+        def body(i, acc):
+            if op == "allreduce":
+                _, y = jmpi.allreduce(acc)
+            elif op == "ring_allreduce":
+                _, y = jmpi.ring_allreduce(acc)
+            elif op == "allgather":
+                _, g = jmpi.allgather(acc)
+                y = g.reshape(jmpi.size(), -1).sum(0)
+            elif op == "alltoall":
+                _, y = jmpi.alltoall(acc)
+            elif op == "bcast":
+                _, y = jmpi.bcast(acc, root=0)
+            elif op == "compressed8":
+                st = jmpi.init_state(acc)
+                _, y, _ = jmpi.compressed_allreduce(acc, st, bits=8)
+            else:
+                raise ValueError(op)
+            return y / jnp.maximum(jnp.abs(y).max(), 1.0)
+
+        return jax.lax.fori_loop(0, INNER, body, x)
+
+    x = jnp.ones((numel,), jnp.float32)
+    f(x).block_until_ready()
+    t = min(timeit.repeat(lambda: f(x).block_until_ready(), number=1,
+                          repeat=5))
+    return t / INNER
+
+
+def main():
+    mesh = jax.make_mesh((len(jax.devices()),), ("ranks",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    n = mesh.devices.size
+    for numel in (1024, 65536, 1048576):
+        nbytes = numel * 4
+        for op in ("allreduce", "ring_allreduce", "allgather", "alltoall",
+                   "bcast", "compressed8"):
+            if op == "alltoall" and numel % n:
+                continue
+            t = timed_loop(mesh, op, numel)
+            wire = 2 * (n - 1) / n * nbytes if "allreduce" in op else nbytes
+            print(f"coll_{op}_{numel},{t*1e6:.2f},"
+                  f"bytes={nbytes} eff_GBps={wire/t/1e9:.2f}")
+
+
+if __name__ == "__main__":
+    main()

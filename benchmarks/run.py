@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section headers on
+stderr-ish comment lines).  Emulated-device counts are process-global, so
+each module runs in a child process with XLA_FLAGS set there (the main
+process stays at 1 device).
+
+  bench_pi            paper Listing 1 + Fig. 1 (JIT speedup; jmpi-vs-roundtrip
+                      speedup over communication frequency)      [4 ranks]
+  bench_halo          paper Fig. 2 (Cahn–Hilliard strong scaling) [1,2,4,8]
+  bench_mpdata        paper Fig. 3 (decomposition layouts)        [8 ranks]
+  bench_collectives   jmpi op microbenchmarks                     [8 ranks]
+  bench_trainer_comm  trainer backends: jmpi vs hostbridge        [8 ranks]
+  bench_kernels       kernel-structure twins (blockwise/chunked)  [1 rank]
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+
+from repro.testing import child_env
+
+
+MODULES = [
+    ("benchmarks.bench_pi", 4),
+    ("benchmarks.bench_halo", 1),
+    ("benchmarks.bench_halo", 2),
+    ("benchmarks.bench_halo", 4),
+    ("benchmarks.bench_halo", 8),
+    ("benchmarks.bench_mpdata", 8),
+    ("benchmarks.bench_collectives", 8),
+    ("benchmarks.bench_trainer_comm", 8),
+    ("benchmarks.bench_kernels", 1),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for mod, n_dev in MODULES:
+        print(f"# {mod} (n_devices={n_dev})", flush=True)
+        proc = subprocess.run(
+            [sys.executable, "-m", mod], env=child_env(n_dev),
+            capture_output=True, text=True, timeout=3600)
+        sys.stdout.write(proc.stdout)
+        if proc.returncode != 0:
+            failures.append(mod)
+            sys.stdout.write(f"# FAILED {mod}\n{proc.stderr[-2000:]}\n")
+        sys.stdout.flush()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Listing 7: distributed Cahn–Hilliard via py-pde's recipe.
+
+    PYTHONPATH=src python examples/cahn_hilliard_mpi.py
+
+8 emulated ranks, decomposition [2, -1] exactly as the paper's listing;
+droplet statistics printed as the simulation coarsens.
+"""
+
+import os
+import sys
+import time
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.pde import cahn_hilliard as ch  # noqa: E402
+
+
+def main():
+    n = 128
+    rng = np.random.default_rng(0)
+    # paper: ScalarField.random_uniform(grid, 0.49, 0.51)
+    state = jnp.asarray(rng.uniform(0.49, 0.51, (n, n)), jnp.float32)
+
+    mesh = jax.make_mesh((2, 4), ("px", "py"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    run = ch.make_solver(mesh, decomposition=(2, -1), dt=1e-3, k=0.01,
+                         c0=0.5, inner_steps=200)
+
+    print(f"Cahn–Hilliard on {n}x{n}, decomposition [2,-1] over 8 ranks")
+    t0 = time.perf_counter()
+    for outer in range(5):
+        state = run(state)
+        c = np.asarray(state)
+        print(f"  t={(outer+1)*200} steps: <c>={c.mean():.4f} "
+              f"std={c.std():.4f} min={c.min():.3f} max={c.max():.3f}")
+    print(f"done in {time.perf_counter()-t0:.1f}s "
+          f"(1000 steps, halo exchange inside the compiled block)")
+
+
+if __name__ == "__main__":
+    main()

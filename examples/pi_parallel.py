@@ -1,0 +1,35 @@
+"""Paper Listings 1–4, end to end: estimate π with JIT-resident allreduce.
+
+    PYTHONPATH=src python examples/pi_parallel.py
+
+Spawns 4 emulated ranks (the paper's worker count), runs the whole
+compute+communicate loop inside one compiled block (pi_numba_mpi analogue),
+the host round-trip variant (pi_mpi4py analogue), and prints the speedup
+table that paper Fig. 1 plots.
+"""
+
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks import bench_pi  # noqa: E402
+
+
+def main():
+    print("rank-parallel π (4 emulated ranks)\n")
+    rows = bench_pi.bench_jit_speedup()
+    print(f"JIT speedup of get_pi_part (paper Listing 1 ~100x): "
+          f"{rows[0][1]:.1f}x   [{rows[0][2]}]\n")
+    print("JIT-resident comm vs host round-trip (paper Fig. 1):")
+    print(f"{'N_TIMES/n_intervals':>20s} {'speedup':>9s}   detail")
+    for name, val, derived in bench_pi.bench_speedup_sweep():
+        x = name.split('x')[-1]
+        print(f"{x:>20s} {val:9.2f}   {derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Batched serving demo: prefill + decode with KV caches over the engine.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch h2o-danube-3-4b]
+
+Loads a reduced config of the chosen architecture (fresh random weights —
+this demonstrates the serving *path*: batched prefill, per-step decode with
+donated caches, SWA ring caches where the arch uses them), runs a batch of
+8 requests and reports tokens/s.
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import arch_names, get_tiny  # noqa: E402
+from repro.models import lm as lm_lib  # noqa: E402
+from repro.serve.engine import Engine, ServeConfig  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-3-4b", choices=arch_names())
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_tiny(args.arch)
+    if cfg.embeds_input or cfg.n_img_tokens:
+        print(f"{args.arch} needs modality inputs; pick a text arch")
+        return
+    params = lm_lib.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, ServeConfig(max_prompt=32,
+                                          max_new_tokens=args.new_tokens))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (args.batch, 16),
+                           dtype=np.int32)
+    out = eng.generate(prompts)           # compile + generate
+    t0 = time.perf_counter()
+    out = eng.generate(prompts)
+    dt = time.perf_counter() - t0
+    total = out.shape[0] * out.shape[1]
+    print(f"[serve_lm] {cfg.name}: batch={args.batch} "
+          f"new_tokens={out.shape[1]} -> {total/dt:.0f} tok/s "
+          f"(window={cfg.window})")
+    print(out[:2])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+
+from repro.configs import (deepseek_v3_671b, h2o_danube_3_4b, internvl2_1b,
+                           minitron_8b, mixtral_8x22b, musicgen_large,
+                           qwen2_1p5b, xlstm_350m, yi_6b, zamba2_1p2b)
+from repro.configs.base import SHAPES, ModelConfig, RunConfig, ShapeCell
+
+ARCHS = {
+    "musicgen-large": musicgen_large,
+    "zamba2-1.2b": zamba2_1p2b,
+    "qwen2-1.5b": qwen2_1p5b,
+    "minitron-8b": minitron_8b,
+    "yi-6b": yi_6b,
+    "h2o-danube-3-4b": h2o_danube_3_4b,
+    "mixtral-8x22b": mixtral_8x22b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "xlstm-350m": xlstm_350m,
+    "internvl2-1b": internvl2_1b,
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    return ARCHS[arch].get_config()
+
+
+def get_tiny(arch: str) -> ModelConfig:
+    return ARCHS[arch].tiny()
+
+
+def arch_names() -> list[str]:
+    return list(ARCHS)

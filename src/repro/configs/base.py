@@ -1,0 +1,150 @@
+"""Config schema: model architecture, input-shape cells, run options."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ModelConfig:
+    # identity
+    name: str = "model"
+    family: str = "dense"          # dense | moe | hybrid | ssm | vlm | audio
+
+    # trunk
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    d_ff: int = 512
+    vocab_size: int = 256
+    vocab_pad_multiple: int = 128
+    qkv_bias: bool = False
+    mlp_type: str = "gated_silu"    # gated_silu | relu2
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+
+    # sliding-window attention (None = full)
+    window: Optional[int] = None
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 2
+    n_shared_experts: int = 0
+    first_k_dense: int = 0
+    moe_ff: Optional[int] = None     # expert intermediate (defaults d_ff)
+    dense_ff: Optional[int] = None   # d_ff of the first_k_dense layers
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    moe_groups: int = 1              # dispatch groups (launcher: = data shards)
+
+    # MLA (deepseek)
+    mla: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    # Mamba2 / hybrid
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    shared_attn_every: int = 0       # zamba2: shared attn block cadence
+
+    # xLSTM
+    slstm_every: int = 0             # 1 sLSTM per this many blocks (0 = none)
+    xlstm_proj_factor: float = 2.0
+
+    # multi-token prediction (deepseek)
+    mtp: bool = False
+
+    # modality frontends (stubs: embeddings arrive via input_specs)
+    n_img_tokens: int = 0            # vlm: patch-embedding positions
+    n_cond_tokens: int = 0           # audio: cross-attn conditioning length
+    cross_attn: bool = False
+    embeds_input: bool = False       # inputs are frame embeddings, not tokens
+
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+    # training
+    remat: str = "full"              # full | dots | none
+    carry_barrier: bool = False      # pin layer-scan carries (defeats the
+    # CPU-XLA whole-stack convert hoist; §Perf B5)
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            self.head_dim = self.d_model // self.n_heads
+        if self.moe_ff is None:
+            self.moe_ff = self.d_ff
+        if self.dense_ff is None:
+            self.dense_ff = self.d_ff
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Eligible for long_500k (SSM/hybrid state or bounded SWA window)."""
+        return self.ssm_state > 0 or self.family == "ssm" or self.window is not None
+
+    def n_params(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS roofline math)."""
+        from repro.models.lm import count_params
+        return count_params(self)
+
+    def n_active_params(self) -> int:
+        from repro.models.lm import count_params
+        return count_params(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (shape) column: seq_len × global_batch × step kind."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+    needs_subquadratic: bool = False
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode",
+                           needs_subquadratic=True),
+}
+
+
+@dataclasses.dataclass
+class RunConfig:
+    """Trainer/server runtime options."""
+
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"         # adamw | adafactor
+    opt_state_dtype: str = "float32"  # float32 | bfloat16 (deepseek memory plan)
+    comm_backend: str = "gspmd"      # gspmd | jmpi | hostbridge
+    grad_compression_bits: int = 0   # 0 = off, 8 or 16
+    microbatch: int = 0              # 0 = no grad accumulation
+    seed: int = 0

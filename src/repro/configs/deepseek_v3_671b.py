@@ -1,0 +1,37 @@
+"""deepseek-v3-671b [moe]: 61L d_model=7168 128H d_ff=2048 (expert)
+vocab=129280, MoE 1 shared + 256 routed top-8, MLA, MTP
+[arXiv:2412.19437; hf].
+
+MLA: q_lora 1536 / kv_lora 512 / qk_nope 128 / qk_rope 64 / v 128; decode
+uses the latent-absorbed path (576 B-of-bf16 per token per layer cache).
+First 3 layers dense (d_ff 18432).  EP: 256 experts / 16-wide model axis =
+16 experts per shard.  Memory plan (DESIGN.md §5): bf16 optimizer moments,
+no fp32 master (stochastic-rounding note) ⇒ 6 B/param ≈ 4.0 TB state.
+MLA is *full* attention ⇒ long_500k skipped (assignment policy).
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b", family="moe",
+        n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128,
+        d_ff=2048, dense_ff=18432, vocab_size=129280,
+        n_experts=256, top_k=8, n_shared_experts=1, first_k_dense=3,
+        mla=True, q_lora_rank=1536, kv_lora_rank=512,
+        qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+        mtp=True,
+    )
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b-tiny", family="moe",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=96, dense_ff=128, vocab_size=256, vocab_pad_multiple=8,
+        n_experts=4, top_k=2, n_shared_experts=1, first_k_dense=1,
+        mla=True, q_lora_rank=32, kv_lora_rank=24,
+        qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+        mtp=True,
+    )

@@ -1,0 +1,29 @@
+"""internvl2-1b [vlm]: 24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151655 — InternViT + Qwen2-0.5B LM backbone [arXiv:2404.16821; hf].
+
+Vision frontend stub (assignment): ``input_specs`` provides 256 precomputed,
+pre-projected patch embeddings that prepend the token embeddings.  vocab
+151655 pads to 151680 (×128) for TP divisibility; 14 heads replicate across
+the model axis (DESIGN.md §4 fallback).
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b", family="vlm",
+        n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+        d_ff=4864, vocab_size=151655, vocab_pad_multiple=128,
+        qkv_bias=True, rope_theta=1e6, tie_embeddings=True,
+        n_img_tokens=256,
+    )
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b-tiny", family="vlm",
+        n_layers=2, d_model=56, n_heads=7, n_kv_heads=1,
+        d_ff=128, vocab_size=256, vocab_pad_multiple=8,
+        qkv_bias=True, tie_embeddings=True, n_img_tokens=8,
+    )

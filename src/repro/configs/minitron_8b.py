@@ -1,0 +1,23 @@
+"""minitron-8b [dense]: 32L d_model=4096 32H (GQA kv=8) d_ff=16384
+vocab=256000 — pruned nemotron [arXiv:2407.14679; hf].
+
+Nemotron lineage: squared-ReLU (non-gated) MLP, huge sentencepiece vocab.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b", family="dense",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=16384, vocab_size=256000, mlp_type="relu2",
+    )
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b-tiny", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab_size=256, vocab_pad_multiple=8, mlp_type="relu2",
+    )

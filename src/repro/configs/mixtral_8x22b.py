@@ -1,0 +1,27 @@
+"""mixtral-8x22b [moe]: 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8 experts top-2, SWA [arXiv:2401.04088; hf].
+
+8 experts < 16-wide model axis ⇒ expert-TP sharding (each expert's FF dim
+shards over model; experts replicated) — DESIGN.md §4.  SWA ⇒ long_500k runs
+with a bounded ring cache.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b", family="moe",
+        n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=16384, vocab_size=32768,
+        n_experts=8, top_k=2, window=4096,
+    )
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b-tiny", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab_size=256, vocab_pad_multiple=8,
+        n_experts=4, top_k=2, window=16,
+    )

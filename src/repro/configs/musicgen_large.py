@@ -1,0 +1,31 @@
+"""musicgen-large [audio]: 48L d_model=2048 32H (GQA kv=32) d_ff=8192
+vocab=2048 — decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+
+Frontend stub (assignment): inputs are precomputed EnCodec frame embeddings
+(sum of the 4 codebook embeddings); text conditioning enters via cross-attn
+to a 256-token stub sequence.  Single 2048-way head as assigned (the real
+model carries 4 parallel codebook heads — deviation noted in DESIGN.md §4).
+Full attention → long_500k skipped.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large", family="audio",
+        n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32,
+        d_ff=8192, vocab_size=2048, vocab_pad_multiple=128,
+        mlp_type="gelu",  # musicgen: non-gated GELU FFN
+        embeds_input=True, cross_attn=True, n_cond_tokens=256,
+        tie_embeddings=False,
+    )
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large-tiny", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=64, vocab_pad_multiple=8,
+        embeds_input=True, cross_attn=True, n_cond_tokens=8,
+    )

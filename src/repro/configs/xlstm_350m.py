@@ -1,0 +1,28 @@
+"""xlstm-350m [ssm]: 24L d_model=1024 4H d_ff=0 vocab=50304 — sLSTM + mLSTM
+blocks [arXiv:2405.04517; unverified].
+
+d_ff=0: projections live inside the blocks (mLSTM up/down ×2, sLSTM post-MLP
+4/3).  sLSTM every 8th block (7:1 mLSTM:sLSTM).  O(1) state ⇒ runs long_500k.
+sLSTM's recurrence is inherently sequential (lax.scan over time) — noted in
+the roofline analysis.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m", family="ssm",
+        n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab_size=50304,
+        slstm_every=8, xlstm_proj_factor=2.0,
+    )
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m-tiny", family="ssm",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab_size=256, vocab_pad_multiple=8,
+        slstm_every=2, xlstm_proj_factor=2.0,
+    )

@@ -1,0 +1,194 @@
+"""Collective operations: allreduce, bcast, scatter, gather, allgather,
+alltoall, reduce_scatter, barrier — the numba-mpi v1.0 collective surface
+(+ reduce_scatter/alltoall beyond v1.0), lowered to native XLA collectives.
+
+Every op: takes NumPy-like payloads (or Views), deduces dtype/shape from the
+data (paper §2.3 "signatures do not require supplying data types or sizes"),
+threads the ordering token, and returns ``(status, value)`` — or
+``(status, value, token)`` when an explicit token is passed.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import token as token_lib
+from repro.core import views as views_lib
+from repro.core.comm import Communicator, resolve
+from repro.core.token import SUCCESS
+
+
+class Operator(enum.Enum):
+    """Reduction operators (paper: 'Operator enumeration, default SUM')."""
+
+    SUM = "sum"
+    PROD = "prod"
+    MIN = "min"
+    MAX = "max"
+    LAND = "land"
+    LOR = "lor"
+
+
+def _tok_in(token):
+    explicit = token is not None
+    return (token if explicit else token_lib.ambient().get()), explicit
+
+
+def _tok_out(explicit, new_token, status, value):
+    if explicit:
+        return status, value, new_token
+    token_lib.ambient().set(new_token)
+    return status, value
+
+
+def _pack(x):
+    if isinstance(x, views_lib.View):
+        return x.pack()
+    return jnp.asarray(x)
+
+
+def allreduce(x, op: Operator = Operator.SUM, *,
+              comm: Communicator | None = None, token=None):
+    """MPI_Allreduce. SUM/MIN/MAX lower to one psum/pmin/pmax; PROD uses an
+    allgather+reduce (XLA has no native product collective); LAND/LOR lower
+    to pmin/pmax over booleans."""
+    comm = resolve(comm)
+    tok, explicit = _tok_in(token)
+    val = _pack(x)
+    tok, val = token_lib.tie(tok, val)
+    if op is Operator.SUM:
+        out = jax.lax.psum(val, comm.axes)
+    elif op is Operator.MIN:
+        out = jax.lax.pmin(val, comm.axes)
+    elif op is Operator.MAX:
+        out = jax.lax.pmax(val, comm.axes)
+    elif op is Operator.PROD:
+        g = jax.lax.all_gather(val, comm.axes, axis=0, tiled=False)
+        out = jnp.prod(g, axis=0).astype(val.dtype)
+    elif op is Operator.LAND:
+        out = jax.lax.pmin((val != 0).astype(jnp.int32), comm.axes).astype(val.dtype)
+    elif op is Operator.LOR:
+        out = jax.lax.pmax((val != 0).astype(jnp.int32), comm.axes).astype(val.dtype)
+    else:  # pragma: no cover - exhaustive enum
+        raise ValueError(f"unsupported operator {op}")
+    new_tok = token_lib.advance(tok, out)
+    return _tok_out(explicit, new_tok, SUCCESS, out)
+
+
+def bcast(x, root: int = 0, *, comm: Communicator | None = None, token=None):
+    """MPI_Bcast: root's value lands on every rank.
+
+    Lowered as a masked psum (non-root ranks contribute zeros) — one
+    all-reduce, exact for every dtype (zeros are additive identity), and the
+    pattern XLA rewrites into a broadcast when the mesh topology allows.
+    """
+    comm = resolve(comm)
+    tok, explicit = _tok_in(token)
+    val = _pack(x)
+    tok, val = token_lib.tie(tok, val)
+    mask = (comm.rank() == root)
+    contrib = jnp.where(mask, val, jnp.zeros_like(val))
+    # Sum of {root's value, zeros} == root's value: exact for every dtype,
+    # no overflow possible.  Bool goes through int32 (psum needs arithmetic).
+    if val.dtype == jnp.bool_:
+        out = jax.lax.psum(contrib.astype(jnp.int32), comm.axes).astype(jnp.bool_)
+    else:
+        out = jax.lax.psum(contrib, comm.axes)
+    new_tok = token_lib.advance(tok, out)
+    return _tok_out(explicit, new_tok, SUCCESS, out)
+
+
+def scatter(x, root: int = 0, *, comm: Communicator | None = None, token=None):
+    """MPI_Scatter: rank i receives the i-th equal chunk (axis 0) of root's
+    buffer. Lowered as bcast + static per-rank dynamic_slice; XLA's partitioner
+    elides the unused chunks on real meshes."""
+    comm = resolve(comm)
+    tok, explicit = _tok_in(token)
+    val = _pack(x)
+    n = comm.size()
+    if val.shape[0] % n:
+        raise ValueError(f"scatter payload axis0={val.shape[0]} not divisible "
+                         f"by comm size {n}")
+    status, full, tok = bcast(val, root, comm=comm, token=tok)
+    chunk = val.shape[0] // n
+    start = comm.rank() * chunk
+    out = jax.lax.dynamic_slice_in_dim(full, start, chunk, axis=0)
+    new_tok = token_lib.advance(tok, out)
+    return _tok_out(explicit, new_tok, status, out)
+
+
+def allgather(x, *, comm: Communicator | None = None, token=None):
+    """MPI_Allgather: concatenate every rank's buffer along axis 0."""
+    comm = resolve(comm)
+    tok, explicit = _tok_in(token)
+    val = _pack(x)
+    tok, val = token_lib.tie(tok, val)
+    out = jax.lax.all_gather(val, comm.axes, axis=0, tiled=True)
+    new_tok = token_lib.advance(tok, out)
+    return _tok_out(explicit, new_tok, SUCCESS, out)
+
+
+def gather(x, root: int = 0, *, comm: Communicator | None = None, token=None):
+    """MPI_Gather: the concatenation is *valid at root*. SPMD lowering uses
+    all_gather (every rank materializes the result; contents identical), the
+    root-only contract is preserved at the API level."""
+    del root  # root-only validity is a contract, not a dataflow difference
+    return allgather(x, comm=comm, token=token)
+
+
+def alltoall(x, *, comm: Communicator | None = None, token=None,
+             split_axis: int = 0, concat_axis: int = 0):
+    """MPI_Alltoall: rank j receives chunk j from every rank, concatenated.
+
+    Payload axis ``split_axis`` must be divisible by comm size.
+    """
+    comm = resolve(comm)
+    if len(comm.axes) != 1:
+        raise ValueError("alltoall currently requires a single-axis "
+                         "communicator (split the comm first)")
+    tok, explicit = _tok_in(token)
+    val = _pack(x)
+    n = comm.size()
+    if val.shape[split_axis] % n:
+        raise ValueError(f"alltoall axis {split_axis} size {val.shape[split_axis]}"
+                         f" not divisible by comm size {n}")
+    tok, val = token_lib.tie(tok, val)
+    out = jax.lax.all_to_all(val, comm.axes[0], split_axis=split_axis,
+                             concat_axis=concat_axis, tiled=True)
+    new_tok = token_lib.advance(tok, out)
+    return _tok_out(explicit, new_tok, SUCCESS, out)
+
+
+def reduce_scatter(x, op: Operator = Operator.SUM, *,
+                   comm: Communicator | None = None, token=None):
+    """MPI_Reduce_scatter_block (SUM only): psum_scatter along axis 0."""
+    comm = resolve(comm)
+    if op is not Operator.SUM:
+        raise ValueError("reduce_scatter supports SUM only")
+    tok, explicit = _tok_in(token)
+    val = _pack(x)
+    n = comm.size()
+    if val.shape[0] % n:
+        raise ValueError(f"reduce_scatter axis0={val.shape[0]} not divisible "
+                         f"by comm size {n}")
+    tok, val = token_lib.tie(tok, val)
+    out = jax.lax.psum_scatter(val, comm.axes, scatter_dimension=0, tiled=True)
+    new_tok = token_lib.advance(tok, out)
+    return _tok_out(explicit, new_tok, SUCCESS, out)
+
+
+def barrier(*, comm: Communicator | None = None, token=None):
+    """MPI_Barrier: a 1-element psum tied into the token chain. No jmpi op
+    sequenced after the barrier can be scheduled before every rank reaches it."""
+    comm = resolve(comm)
+    tok, explicit = _tok_in(token)
+    probe = jax.lax.psum(tok, comm.axes)
+    new_tok = token_lib.advance(tok, probe)
+    if explicit:
+        return SUCCESS, new_tok
+    token_lib.ambient().set(new_tok)
+    return SUCCESS

@@ -1,0 +1,146 @@
+"""Communicators — process groups over mesh-axis subsets.
+
+numba-mpi v1.0 exposes only ``MPI_COMM_WORLD`` (non-default communicators are
+named future work in the paper §4).  We implement the full abstraction: a
+``Communicator`` names an ordered subset of the enclosing ``shard_map`` mesh
+axes; ranks are row-major linearized over those axes (first axis slowest),
+matching the ``jax.lax.ppermute`` tuple-axis linearization.  Devices that
+share coordinates on the *other* mesh axes form independent groups — exactly
+MPI's ``Comm_split`` semantics, obtained for free from named-axis SPMD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import token as token_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class Communicator:
+    """A process group spanning the named mesh axes (row-major rank order)."""
+
+    axes: tuple[str, ...]
+
+    def __post_init__(self):
+        if not self.axes:
+            raise ValueError("Communicator needs at least one mesh axis")
+
+    # -- topology (static; trace-time) ------------------------------------
+    def size(self) -> int:
+        """Number of ranks. Static Python int (psum of a literal)."""
+        return int(jax.lax.psum(1, self.axes))
+
+    def axis_sizes(self) -> tuple[int, ...]:
+        return tuple(int(jax.lax.psum(1, a)) for a in self.axes)
+
+    # -- identity (traced; per-device) -------------------------------------
+    def rank(self) -> jax.Array:
+        """This device's rank within the group (traced int32)."""
+        return jax.lax.axis_index(self.axes)
+
+    def coords(self) -> tuple[jax.Array, ...]:
+        return tuple(jax.lax.axis_index(a) for a in self.axes)
+
+    # -- derived communicators ---------------------------------------------
+    def split(self, axes: Sequence[str]) -> "Communicator":
+        """Sub-communicator over a subset of this group's axes.
+
+        MPI ``Comm_split`` with color = coordinates on the dropped axes.
+        """
+        axes = tuple(axes)
+        missing = [a for a in axes if a not in self.axes]
+        if missing:
+            raise ValueError(f"axes {missing} not part of communicator {self.axes}")
+        return Communicator(axes)
+
+    # -- permutation builders (static, for p2p) -----------------------------
+    def ring_perm(self, shift: int = 1) -> list[tuple[int, int]]:
+        """src→dst pairs for a cyclic shift by ``shift`` (MPI_Cart_shift)."""
+        n = self.size()
+        return [(i, (i + shift) % n) for i in range(n)]
+
+    def pairwise_perm(self, pairs: Sequence[tuple[int, int]],
+                      bidirectional: bool = False) -> list[tuple[int, int]]:
+        """Explicit (src, dst) pairs; validates ranks and injectivity."""
+        n = self.size()
+        perm = list(pairs)
+        if bidirectional:
+            perm += [(d, s) for (s, d) in pairs]
+        srcs = [s for s, _ in perm]
+        dsts = [d for _, d in perm]
+        for r in srcs + dsts:
+            if not (0 <= r < n):
+                raise ValueError(f"rank {r} out of range for comm of size {n}")
+        if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+            raise ValueError("permutation must be injective (one message per "
+                             "rank per ppermute); split into multiple calls")
+        return perm
+
+    def neighbor_perm(self, fn: Callable[[int], int | None]) -> list[tuple[int, int]]:
+        """Build a permutation from a dest-function evaluated per static rank."""
+        perm = []
+        for src in range(self.size()):
+            dst = fn(src)
+            if dst is not None:
+                perm.append((src, int(dst)))
+        return self.pairwise_perm(perm)
+
+
+# --------------------------------------------------------------------------
+# Ambient "world" — set by ``repro.core.spmd`` so call sites can write
+# ``jmpi.rank()`` exactly as in the paper's listings.
+# --------------------------------------------------------------------------
+_WORLD: list[Communicator | None] = [None]
+
+
+def set_world(comm: Communicator | None) -> None:
+    _WORLD[0] = comm
+
+
+def world() -> Communicator:
+    if _WORLD[0] is None:
+        raise RuntimeError(
+            "No ambient communicator: call jmpi ops inside a repro.core.spmd-"
+            "wrapped function, or pass comm= explicitly.")
+    return _WORLD[0]
+
+
+def resolve(comm: Communicator | None) -> Communicator:
+    return comm if comm is not None else world()
+
+
+def spmd(mesh, in_specs, out_specs, axis_names: tuple[str, ...] | None = None,
+         check_vma: bool = False, jit: bool = True):
+    """``mpiexec`` analogue: wrap a function in jit(shard_map) + install WORLD.
+
+    Inside the wrapped function, ``jmpi.rank()/size()`` and every collective
+    default to a communicator spanning all mesh axes (row-major), and a fresh
+    ambient ordering token is installed — mirroring numba-mpi's import-time
+    MPI_Init. The whole body is ONE XLA program: compute *and* communication
+    JIT-resident, which is the paper's point (``jit=False`` opts into eager
+    shard_map — the per-op-dispatch mode, for debugging only; it is the
+    moral equivalent of running numba-mpi with NUMBA_DISABLE_JIT).
+    """
+    def deco(fn):
+        names = axis_names if axis_names is not None else tuple(mesh.axis_names)
+
+        def body(*args, **kwargs):
+            prev = _WORLD[0]
+            set_world(Communicator(names))
+            token_lib.reset_ambient()
+            try:
+                return fn(*args, **kwargs)
+            finally:
+                set_world(prev)
+                token_lib.reset_ambient()
+
+        wrapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs, check_vma=check_vma)
+        return jax.jit(wrapped) if jit else wrapped
+
+    return deco

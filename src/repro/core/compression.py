@@ -1,0 +1,106 @@
+"""Gradient compression for data-parallel allreduce (beyond-paper feature).
+
+Two wire-honest modes:
+
+* ``bits=16`` — bf16 payload through native ``psum`` (XLA keeps the wire in
+  bf16): 2× fewer collective bytes than fp32.
+* ``bits=8``  — int8 wire format via the two-phase schedule
+  ``all_to_all(int8) → local int32 accumulate → requantize → all_gather(int8)``.
+  Per-rank wire bytes ≈ 2·|g|·1B versus ≈ 2·(n−1)/n·|g|·4B for an fp32 ring
+  allreduce: a 4× reduction.  (A plain ``psum(int8→int32)`` would *not* be
+  compressed — XLA moves int32 on the wire — which is why the schedule is
+  explicit here.)
+
+Error feedback (Seide et al. 2014; Karimireddy et al. 2019) is applied to the
+send-side quantization: the residual e_t is added to g_{t+1} before the next
+compression, keeping the accumulated transmitted gradient unbiased up to a
+vanishing tail.  The second-stage (post-sum) quantization error is not fed
+back (it is shared across ranks and one quantization level of an n-fold sum);
+this matches common practice and is covered by the convergence test in
+``tests/test_compression.py``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives
+from repro.core import token as token_lib
+from repro.core.comm import Communicator, resolve
+from repro.core.token import SUCCESS
+
+
+class CompressionState(NamedTuple):
+    error: jax.Array  # send-side residual feedback buffer
+
+
+def init_state(like: jax.Array) -> CompressionState:
+    return CompressionState(error=jnp.zeros(like.shape, jnp.float32))
+
+
+def _quantize(x32: jax.Array, qmax: float, comm: Communicator):
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x32)), comm.axes)
+    scale = jnp.maximum(amax / qmax, 1e-30)
+    q = jnp.clip(jnp.round(x32 / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_allreduce(g: jax.Array, state: CompressionState, *,
+                         comm: Communicator | None = None,
+                         bits: int = 8, mean: bool = True):
+    """(status, reduced, new_state) — mean/sum-allreduce with compressed wire."""
+    comm = resolve(comm)
+    n = comm.size()
+    g32 = g.astype(jnp.float32) + state.error
+
+    if bits == 16:
+        sent = g32.astype(jnp.bfloat16)
+        status, summed = collectives.allreduce(sent, comm=comm)
+        summed = summed.astype(jnp.float32)
+        new_error = g32 - sent.astype(jnp.float32)  # send-side rounding residual
+        out = summed / n if mean else summed
+        return status, out.astype(g.dtype), CompressionState(error=new_error)
+
+    if bits != 8:
+        raise ValueError(f"bits must be 8 or 16, got {bits}")
+    qmax = 127.0
+
+    q, scale = _quantize(g32, qmax, comm)
+    new_error = g32 - q.astype(jnp.float32) * scale
+
+    flat = q.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.int8)])
+    seg_len = flat.shape[0] // n
+
+    # Phase 1 (int8 wire): every rank receives its segment from all ranks.
+    status, segs = collectives.alltoall(flat.reshape(n, seg_len), comm=comm)
+    acc = segs.astype(jnp.int32).sum(axis=0).astype(jnp.float32) * scale  # (seg_len,)
+
+    # Requantize the reduced segment for the gather phase (int8 wire again).
+    q2, scale2 = _quantize(acc, qmax, comm)
+
+    # Phase 2 (int8 wire): collect every rank's reduced segment.
+    status, gathered = collectives.allgather(q2, comm=comm)
+    summed = gathered.astype(jnp.float32) * scale2
+    if pad:
+        summed = summed[:-pad]
+    out = summed.reshape(g.shape)
+    if mean:
+        out = out / n
+    return status, out.astype(g.dtype), CompressionState(error=new_error)
+
+
+def wire_bytes_per_rank(numel: int, n: int, bits: int = 8,
+                        baseline_dtype=jnp.float32) -> tuple[float, float]:
+    """(compressed, fp32-ring-psum) wire bytes per rank — used by §Perf math."""
+    base = 2 * (n - 1) / n * numel * jnp.dtype(baseline_dtype).itemsize
+    if bits == 16:
+        comp = 2 * (n - 1) / n * numel * 2
+    else:
+        comp = 2 * numel * 1
+    return float(comp), float(base)

@@ -1,0 +1,67 @@
+"""HostBridge — the mpi4py-analogue *baseline* (paper Listing 2).
+
+mpi4py cannot be called from inside Numba-JIT code, so each communication
+forces a round-trip: leave the compiled block, run interpreted MPI, re-enter.
+The XLA-world equivalent of that failure mode is the pattern this class
+implements deliberately: one jit dispatch per compute fragment, then a
+device→host transfer, a host-side (numpy) reduction standing in for the
+interpreted MPI call, and a host→device transfer back.  Every iteration pays
+dispatch latency + two PCIe/host-RAM hops + a host synchronization.
+
+This is the "before" column for the paper's Fig. 1 reproduction
+(``benchmarks/bench_pi.py``) and for the trainer's ``comm_backend=hostbridge``
+mode.  Nothing here is a strawman: the per-call structure mirrors exactly what
+``pi_mpi4py`` does in the paper (compute in fast code, communicate outside).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+class HostBridge:
+    """Host-side 'MPI library' over the per-device shards of a mesh array."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self.n = int(np.prod(mesh.devices.shape))
+
+    # --- host-side collectives (the "interpreted MPI" stand-ins) ----------
+    def allreduce_host(self, shards: list[np.ndarray]) -> np.ndarray:
+        return np.sum(np.stack(shards), axis=0)
+
+    def bcast_host(self, shards: list[np.ndarray], root: int = 0) -> np.ndarray:
+        return shards[root]
+
+    # --- the round-trip loop ----------------------------------------------
+    def fetch_shards(self, sharded_value) -> list[np.ndarray]:
+        """Device → host: one transfer per device shard (addressable data)."""
+        return [np.asarray(s.data) for s in sharded_value.addressable_shards]
+
+    def roundtrip_allreduce(self, sharded_value):
+        """device_get → numpy sum → device_put (replicated)."""
+        shards = self.fetch_shards(sharded_value)
+        reduced = self.allreduce_host(shards)
+        return jax.device_put(reduced)
+
+    def loop(self, step_fn: Callable, state, n_iters: int, reduce_extract=None,
+             reduce_insert=None):
+        """Run ``n_iters`` of: jit(step_fn) → host allreduce → feed back.
+
+        ``reduce_extract(out)`` picks the array to reduce; ``reduce_insert
+        (state, reduced)`` threads it back.  Identity defaults reduce the
+        whole output.  Each iteration is a separate dispatch — by design.
+        """
+        step = jax.jit(step_fn)
+        reduce_extract = reduce_extract or (lambda o: o)
+        reduce_insert = reduce_insert or (lambda s, r: r)
+        for _ in range(n_iters):
+            out = step(state)
+            part = reduce_extract(out)
+            part.block_until_ready()  # the host sync mpi4py implies
+            reduced = self.roundtrip_allreduce(part)
+            state = reduce_insert(out, reduced)
+        return state

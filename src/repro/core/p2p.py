@@ -1,0 +1,200 @@
+"""Point-to-point messaging: send/recv/sendrecv, isend/irecv, wait/test.
+
+SPMD adaptation (DESIGN.md §2, "static topology"): in MPI each rank runs its
+own control flow and may compute ``dest``/``source`` at run time; under XLA
+SPMD every device traces the *same* program and the communication pattern must
+be static.  A jmpi point-to-point call therefore carries the full (src, dst)
+pair list — one ``lax.ppermute`` — instead of per-rank branches.  The paper's
+Listing 5 (rank 0 ⇄ rank 1 exchange with isend/irecv + waitall) maps to::
+
+    reqs = jmpi.isendrecv(src_data, pairs=[(0, 1), (1, 0)], tag=11)
+    status, dst_data = jmpi.wait(reqs)
+
+Same wire traffic, same non-blocking semantics (XLA's latency-hiding scheduler
+starts the DMA as soon as ``src_data`` is ready and only forces completion at
+the ``wait`` consumption point), checked at trace time instead of run time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import token as token_lib
+from repro.core import views as views_lib
+from repro.core.comm import Communicator, resolve
+from repro.core.token import SUCCESS
+
+
+@dataclasses.dataclass
+class Request:
+    """Handle to an in-flight non-blocking operation (MPI_Request analogue).
+
+    Holds the in-flight value and its ordering token.  ``wait`` is the
+    dataflow point where the value becomes consumable; until then XLA is free
+    to overlap independent compute with the transfer.  ``used_ambient``
+    records whether the op drew its token from the ambient chain — explicit-
+    token requests never touch ambient state (tokens created inside lax
+    control-flow scopes must not leak to outer traces).
+    """
+
+    value: Any
+    token: jax.Array
+    tag: int = 0
+    unpack: Any = None  # View to scatter the payload back into, if any
+    used_ambient: bool = True
+
+    def _materialize(self):
+        token, value = token_lib.tie(self.token, self.value)
+        if self.unpack is not None:
+            value = self.unpack.unpack(value)
+        return token, value
+
+
+def _payload(x):
+    """Accept raw arrays or Views (non-contiguous slices)."""
+    if isinstance(x, views_lib.View):
+        return x.pack(), x
+    return x, None
+
+
+def _resolve_perm(comm: Communicator, pairs=None, perm=None, dest=None,
+                  source=None) -> list[tuple[int, int]]:
+    if perm is not None:
+        return comm.pairwise_perm(perm)
+    if pairs is not None:
+        return comm.pairwise_perm(pairs)
+    if dest is None or source is None:
+        raise ValueError("p2p needs pairs=/perm= or both source= and dest= "
+                         "(static ranks; see DESIGN.md §2 static topology)")
+    return comm.pairwise_perm([(int(source), int(dest))])
+
+
+# ---------------------------------------------------------------------------
+# Non-blocking primitives (the blocking forms are wait-wrapped versions).
+# ---------------------------------------------------------------------------
+
+def isendrecv(x, pairs=None, *, perm=None, dest=None, source=None, tag: int = 0,
+              comm: Communicator | None = None, token=None,
+              recv_into: views_lib.View | None = None) -> Request:
+    """Start a non-blocking exchange along a static (src→dst) pattern.
+
+    Fuses MPI_Isend + MPI_Irecv: each listed src sends, each listed dst
+    receives; ranks absent from the pattern receive zeros (discardable).
+    """
+    comm = resolve(comm)
+    tok = token if token is not None else token_lib.ambient().get()
+    payload, _ = _payload(x)
+    p = _resolve_perm(comm, pairs, perm, dest, source)
+    # Token-tie the payload so this ppermute cannot be hoisted over earlier
+    # jmpi ops (MPI non-overtaking order), then transfer.
+    tok, payload = token_lib.tie(tok, payload)
+    out = jax.lax.ppermute(payload, comm.axes, p)
+    new_tok = token_lib.advance(tok, out)
+    if token is None:
+        token_lib.ambient().set(new_tok)
+    return Request(value=out, token=new_tok, tag=tag, unpack=recv_into,
+                   used_ambient=token is None)
+
+
+def isend(x, dest: int, *, source: int, tag: int = 0,
+          comm: Communicator | None = None, token=None) -> tuple[int, Request]:
+    """MPI_Isend analogue (static source & dest ranks). Returns (status, req)."""
+    req = isendrecv(x, dest=dest, source=source, tag=tag, comm=comm, token=token)
+    return SUCCESS, req
+
+
+def irecv(x, source: int, *, dest: int, tag: int = 0,
+          comm: Communicator | None = None, token=None) -> tuple[int, Request]:
+    """MPI_Irecv analogue: (status, request); wait(request) -> payload.
+
+    Under SPMD the matching isend *is* the transfer (one fused permute), so
+    irecv issues that permute with ``x`` as the send-side value; on the
+    ``dest`` rank the waited value is the received buffer.  Prefer
+    :func:`isendrecv` for new code (documented in README).
+    """
+    req = isendrecv(x, dest=dest, source=source, tag=tag, comm=comm,
+                    token=token)
+    return SUCCESS, req
+
+
+def wait(req: Request):
+    """Complete a request: (status, value). Forces the dataflow dependency."""
+    token, value = req._materialize()
+    if req.used_ambient:
+        token_lib.ambient().set(token)
+    return SUCCESS, value
+
+
+def waitall(reqs: Sequence[Request]):
+    """Complete all requests: (status, [values])."""
+    out = [r._materialize() for r in reqs]
+    toks = [t for t, _ in out]
+    vals = [v for _, v in out]
+    if toks and all(r.used_ambient for r in reqs):
+        token_lib.ambient().set(sum(toks) / len(toks))
+    return SUCCESS, vals
+
+
+def waitany(reqs: Sequence[Request]):
+    """Complete one request. Deterministic choice (index 0): XLA dataflow has
+    no runtime completion order, so 'any' degenerates to 'first' (documented)."""
+    status, value = wait(reqs[0])
+    return status, 0, value
+
+
+def test(req: Request):
+    """(status, flag, value). Under XLA dataflow a value is by construction
+    available at its consumption point, so flag is statically True; the call
+    still forces ordering exactly like wait (semantics note in DESIGN.md §2).
+    """
+    status, value = wait(req)
+    return status, jnp.bool_(True), value
+
+
+def testall(reqs: Sequence[Request]):
+    status, values = waitall(reqs)
+    return status, jnp.bool_(True), values
+
+
+def testany(reqs: Sequence[Request]):
+    status, idx, value = waitany(reqs)
+    return status, jnp.bool_(True), idx, value
+
+
+# ---------------------------------------------------------------------------
+# Blocking forms
+# ---------------------------------------------------------------------------
+
+def sendrecv(x, pairs=None, *, perm=None, dest=None, source=None, tag: int = 0,
+             comm: Communicator | None = None, token=None,
+             recv_into: views_lib.View | None = None):
+    """Blocking exchange: (status, received) — or (status, received, token)
+    when an explicit token is passed (control-flow-safe form)."""
+    req = isendrecv(x, pairs=pairs, perm=perm, dest=dest, source=source,
+                    tag=tag, comm=comm, token=token, recv_into=recv_into)
+    status, value = wait(req)
+    if token is not None:
+        return status, value, req.token
+    return status, value
+
+
+def send(x, dest: int, *, source: int, tag: int = 0,
+         comm: Communicator | None = None, token=None) -> int:
+    """MPI_Send analogue (static ranks). The matched recv is the same fused
+    permute — use the return of the paired :func:`recv` for the payload."""
+    status, _ = sendrecv(x, dest=dest, source=source, tag=tag, comm=comm,
+                         token=token)
+    return status
+
+
+def recv(x, source: int, *, dest: int, tag: int = 0,
+         comm: Communicator | None = None, token=None):
+    """MPI_Recv analogue: (status, payload). ``x`` is the send-side value (the
+    fused SPMD permute needs it in-trace; on non-source ranks its contents are
+    ignored)."""
+    return sendrecv(x, dest=dest, source=source, tag=tag, comm=comm,
+                    token=token)

@@ -1,0 +1,67 @@
+"""Pure-numpy oracles for every jmpi collective.
+
+The debugging analogue of numba-mpi's JIT-disabled ``py_func`` path: each
+function takes the *global* list of per-rank payloads and returns the list of
+per-rank results, simulating what the MPI library would do.  Property tests
+drive the jmpi ops (under shard_map on emulated devices) and these oracles
+with the same inputs and assert equality.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def allreduce(shards, op="sum"):
+    stack = np.stack(shards)
+    red = {
+        "sum": lambda s: s.sum(0),
+        "prod": lambda s: s.prod(0),
+        "min": lambda s: s.min(0),
+        "max": lambda s: s.max(0),
+        "land": lambda s: (s != 0).all(0).astype(shards[0].dtype),
+        "lor": lambda s: (s != 0).any(0).astype(shards[0].dtype),
+    }[op](stack)
+    return [red.copy() for _ in shards]
+
+
+def bcast(shards, root=0):
+    return [shards[root].copy() for _ in shards]
+
+
+def scatter(shards, root=0):
+    chunks = np.split(shards[root], len(shards), axis=0)
+    return [c.copy() for c in chunks]
+
+
+def gather(shards, root=0):
+    full = np.concatenate(shards, axis=0)
+    return [full.copy() for _ in shards]  # SPMD lowering: valid-at-root contract
+
+
+def allgather(shards):
+    full = np.concatenate(shards, axis=0)
+    return [full.copy() for _ in shards]
+
+
+def alltoall(shards):
+    n = len(shards)
+    out = []
+    for j in range(n):
+        pieces = [np.split(shards[i], n, axis=0)[j] for i in range(n)]
+        out.append(np.concatenate(pieces, axis=0))
+    return out
+
+
+def reduce_scatter(shards):
+    n = len(shards)
+    total = np.stack(shards).sum(0)
+    return [c.copy() for c in np.split(total, n, axis=0)]
+
+
+def ppermute(shards, perm):
+    n = len(shards)
+    out = [np.zeros_like(shards[0]) for _ in range(n)]
+    for src, dst in perm:
+        out[dst] = shards[src].copy()
+    return out

@@ -1,0 +1,91 @@
+"""Token threading — MPI message-ordering semantics inside XLA programs.
+
+numba-mpi inherits MPI's non-overtaking guarantee from the MPI library itself:
+two sends issued by one rank to the same destination are matched in order.
+Inside an XLA program nothing stops the compiler from reordering, CSE-ing or
+even eliding "identical" collectives, so — following the mpi4jax discipline the
+paper cites — every jmpi operation threads an explicit ``Token``.  The token is
+a zero-cost (1-element) array data dependency: op N+1 consumes op N's token, so
+XLA must schedule them in program order, while *compute* that does not touch
+the token is still free to overlap (this is what makes isend/irecv genuinely
+non-blocking on TPU: the latency-hiding scheduler hoists the DMA start as early
+as its data allows and sinks the wait as late as its consumer allows).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# MPI-style status codes.  Topology errors are trace-time Python exceptions
+# (stricter than MPI's runtime codes — see DESIGN.md §2); SUCCESS is what every
+# well-formed op returns, keeping the paper's ``status == mpi.SUCCESS`` idiom.
+SUCCESS = 0
+ERR_TOPOLOGY = 1
+ERR_TRUNCATE = 2
+
+
+def new_token() -> jax.Array:
+    """A fresh ordering token (1-element float32, contents irrelevant)."""
+    return jnp.zeros((1,), jnp.float32)
+
+
+def tie(token: jax.Array, *arrays: jax.Array) -> tuple[jax.Array, ...]:
+    """Tie ``arrays`` and ``token`` together with an optimization barrier.
+
+    Returns ``(token', *arrays')`` such that XLA can neither reorder the
+    arrays' producers after the barrier nor the consumers before it.  This is
+    the ``wait`` primitive underneath p2p completion semantics.
+    """
+    out = jax.lax.optimization_barrier((token, *arrays))
+    return out
+
+
+def advance(token: jax.Array, value: jax.Array) -> jax.Array:
+    """Derive the next token from ``value`` so the op cannot be dead-code
+    eliminated or reordered w.r.t. later jmpi ops.
+
+    A data dependency is created by folding one scalar element of ``value``
+    into the token through an optimization barrier (cost: one scalar add).
+    """
+    probe = jnp.real(value.ravel()[0]).astype(jnp.float32) * 0.0
+    token, probe = jax.lax.optimization_barrier((token, probe))
+    return token + probe
+
+
+@dataclasses.dataclass
+class TokenContext:
+    """Implicit token threading for user convenience.
+
+    numba-mpi has no visible token (MPI orders messages internally).  To keep
+    call sites close to the paper's listings (``mpi.allreduce(part, pi)``),
+    ops default to an ambient per-trace token managed here; power users pass
+    and receive tokens explicitly for precise overlap control.
+    """
+
+    token: Any = None
+
+    def get(self) -> jax.Array:
+        if self.token is None:
+            self.token = new_token()
+        return self.token
+
+    def set(self, token: jax.Array) -> None:
+        self.token = token
+
+
+# Ambient context: fine because a single trace is single-threaded; shard_map
+# re-traces per call so contexts do not leak across programs.
+_AMBIENT = TokenContext()
+
+
+def ambient() -> TokenContext:
+    return _AMBIENT
+
+
+def reset_ambient() -> None:
+    """Start a fresh ambient token (call at the top of each traced program)."""
+    _AMBIENT.token = None

@@ -1,0 +1,66 @@
+"""Non-contiguous payloads (paper §2.3: 'handling of non-contiguous views
+over array slices', Listing 6: Fortran-order arrays).
+
+JAX arrays are functional values without a user-visible memory layout, so
+"non-contiguous" cannot mean strided pointers here.  What survives the
+translation is the *usability* contract: users hand jmpi a slice of a bigger
+array and receive into a slice of a bigger array, without manual staging
+copies.  ``View`` captures (array, index-expression); ``pack`` materializes
+the contiguous message (XLA fuses it into the transfer's prologue — the same
+zero-copy effect the paper gets from MPI datatypes), ``unpack`` scatters a
+received message back into the enclosing array.
+
+Fortran order: logical jnp arrays are always C-indexed; layout is an XLA
+decision.  Transposed views (``View(x.T, ...)``) are the behavioural
+equivalent and are covered by tests (DESIGN.md §2 changed-assumptions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+def _normalize_index(idx) -> tuple:
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    norm = []
+    for e in idx:
+        if isinstance(e, slice) or isinstance(e, int):
+            norm.append(e)
+        else:
+            raise TypeError(f"View index elements must be slice/int, got {e!r}")
+    return tuple(norm)
+
+
+@dataclasses.dataclass
+class View:
+    """A (possibly strided) rectangular slice of an array, as an MPI payload."""
+
+    array: Any
+    index: tuple = ()
+
+    def __post_init__(self):
+        self.index = _normalize_index(self.index)
+
+    def pack(self):
+        """Contiguous message buffer (gather/slice; fused by XLA)."""
+        x = jnp.asarray(self.array)
+        return x[self.index] if self.index else x
+
+    def unpack(self, message):
+        """Enclosing array with ``message`` scattered into the view's slots."""
+        x = jnp.asarray(self.array)
+        if not self.index:
+            return jnp.asarray(message).reshape(x.shape).astype(x.dtype)
+        return x.at[self.index].set(message.astype(x.dtype))
+
+    @property
+    def shape(self):
+        return self.pack().shape
+
+    @property
+    def dtype(self):
+        return jnp.asarray(self.array).dtype

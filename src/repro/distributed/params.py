@@ -1,0 +1,265 @@
+"""Parameter / input / cache PartitionSpec assignment (per arch × mesh).
+
+Any spec is *correct* under GSPMD (the partitioner reshards as needed) — the
+rules here pick the memory/perf-right layout: TP dims (heads / ff / vocab /
+experts) over ``model``, an FSDP dim (usually d_model) over (``pod``,
+``data``), everything small replicated.  Divisibility fallback mirrors
+DESIGN.md §4 (qwen2's 12 heads, mixtral's 8 experts, ...).
+"""
+
+from __future__ import annotations
+
+import re
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import jax
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+class ParamSharder:
+    def __init__(self, cfg, mesh, fsdp: bool = True, expert_2d: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.sizes = _axis_sizes(mesh)
+        self.model_n = self.sizes.get("model", 1)
+        dp_axes = tuple(a for a in ("pod", "data") if a in self.sizes)
+        self.dp_axes = dp_axes
+        self.dp_n = int(np.prod([self.sizes[a] for a in dp_axes])) if dp_axes else 1
+        self.fsdp = fsdp
+        # 2-D expert parallelism (§Perf B7): experts shard over model×data
+        # jointly (1 expert/device at deepseek's 256) — whole expert weights
+        # live on their owner, zero FSDP gather per step.
+        self.expert_2d = expert_2d
+
+    def _model_ok(self, dim):
+        return self.model_n > 1 and dim % self.model_n == 0
+
+    def _dp_ok(self, dim):
+        return self.fsdp and self.dp_n > 1 and dim % self.dp_n == 0
+
+    def _dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def spec_for_param(self, path: str, shape) -> P:
+        """path: '/'-joined key path, e.g. 'main/attn/wq'."""
+        cfg = self.cfg
+        s = list(shape)
+        # stacked layer dim (from init_stack/vmap): leading dim == n_layers-ish
+        # is never sharded; detect by path living under a stack.
+        def spec(*entries):
+            return P(*entries)
+
+        model = lambda d: self._model_ok(d)
+        dp = lambda d: self._dp_ok(d)
+        DP = self._dp()
+
+        # --- embeddings / heads ------------------------------------------
+        if re.search(r"(embed|head)/table$", path):
+            v, d = s[-2], s[-1]
+            return spec(*(["model" if model(v) else None,
+                           DP if dp(d) else None]))
+
+        # --- attention ----------------------------------------------------
+        if re.search(r"attn/w[qkv]$", path) or re.search(r"xattn/w[qkv]$", path):
+            ld = [None] * (len(s) - 3)
+            d, h, k = s[-3], s[-2], s[-1]
+            return spec(*ld, DP if dp(d) else None,
+                        "model" if model(h) else None, None)
+        if re.search(r"attn/wo$", path) or re.search(r"xattn/wo$", path):
+            ld = [None] * (len(s) - 3)
+            h, k, d = s[-3], s[-2], s[-1]
+            return spec(*ld, "model" if model(h) else None, None,
+                        DP if dp(d) else None)
+        if re.search(r"attn/b[qkv]$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, "model" if model(s[-2]) else None, None)
+        # MLA pieces
+        if re.search(r"attn/w_d(q|kv)$", path) or re.search(r"attn/w_kr$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, DP if dp(s[-2]) else None, None)
+        if re.search(r"attn/w_u[qkv]$", path):
+            ld = [None] * (len(s) - 3)
+            return spec(*ld, None, "model" if model(s[-2]) else None, None)
+
+        # --- MLP -----------------------------------------------------------
+        if re.search(r"mlp/w_(in|gate)$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, DP if dp(s[-2]) else None,
+                        "model" if model(s[-1]) else None)
+        if re.search(r"mlp/w_out$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, "model" if model(s[-2]) else None,
+                        DP if dp(s[-1]) else None)
+
+        # --- MoE ------------------------------------------------------------
+        if re.search(r"moe/router$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, DP if dp(s[-2]) else None, None)
+        if re.search(r"moe/w_(in|gate)$", path):
+            ld = [None] * (len(s) - 3)
+            e, d, f = s[-3], s[-2], s[-1]
+            if self.expert_2d and e % (self.model_n * self.dp_n) == 0:
+                return spec(*ld, ("model",) + self.dp_axes, None, None)
+            if model(e):            # EP (deepseek)
+                return spec(*ld, "model", DP if dp(d) else None, None)
+            return spec(*ld, None, DP if dp(d) else None,   # expert-TP
+                        "model" if model(f) else None)
+        if re.search(r"moe/w_out$", path):
+            ld = [None] * (len(s) - 3)
+            e, f, d = s[-3], s[-2], s[-1]
+            if self.expert_2d and e % (self.model_n * self.dp_n) == 0:
+                return spec(*ld, ("model",) + self.dp_axes, None, None)
+            if model(e):
+                return spec(*ld, "model", None, DP if dp(d) else None)
+            return spec(*ld, None, "model" if model(f) else None,
+                        DP if dp(d) else None)
+        if re.search(r"moe/shared/w_(in|gate)$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, DP if dp(s[-2]) else None,
+                        "model" if model(s[-1]) else None)
+        if re.search(r"moe/shared/w_out$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, "model" if model(s[-2]) else None,
+                        DP if dp(s[-1]) else None)
+
+        # --- Mamba2 ----------------------------------------------------------
+        if re.search(r"mamba/w_in$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, DP if dp(s[-2]) else None,
+                        "model" if model(s[-1]) else None)
+        if re.search(r"mamba/w_out$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, "model" if model(s[-2]) else None,
+                        DP if dp(s[-1]) else None)
+        if re.search(r"mamba/conv_w$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, None, "model" if model(s[-1]) else None)
+        if re.search(r"mamba/(conv_b|norm_scale)$", path):
+            ld = [None] * (len(s) - 1)
+            return spec(*ld, "model" if model(s[-1]) else None)
+
+        # --- xLSTM -----------------------------------------------------------
+        if re.search(r"w_up$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, DP if dp(s[-2]) else None,
+                        "model" if model(s[-1]) else None)
+        if re.search(r"w_down$", path):
+            ld = [None] * (len(s) - 2)
+            return spec(*ld, "model" if model(s[-2]) else None,
+                        DP if dp(s[-1]) else None)
+
+        # --- MTP / generic 2D / default ---------------------------------------
+        if re.search(r"mtp_proj$", path):
+            return spec(*([None] * (len(s) - 1)), DP if dp(s[-1]) else None)
+        return spec(*([None] * len(s)))
+
+    # ------------------------------------------------------------------ #
+    def tree_specs(self, tree):
+        def path_str(kp):
+            parts = []
+            for e in kp:
+                if hasattr(e, "key"):
+                    parts.append(str(e.key))
+                elif hasattr(e, "idx"):
+                    parts.append(str(e.idx))
+            return "/".join(parts)
+        return jax.tree_util.tree_map_with_path(
+            lambda kp, leaf: self.spec_for_param(path_str(kp), leaf.shape),
+            tree)
+
+    def tree_shardings(self, tree):
+        return jax.tree.map(lambda spec: NamedSharding(self.mesh, spec),
+                            self.tree_specs(tree))
+
+    # ------------------------------------------------------------------ #
+    # data & caches
+    # ------------------------------------------------------------------ #
+
+    def batch_specs(self, batch_struct, context_parallel=False):
+        DP = self._dp()
+        out = {}
+        for k, v in batch_struct.items():
+            b = v.shape[0]
+            batch_ok = self.dp_n > 1 and b % self.dp_n == 0
+            lead = DP if batch_ok else (
+                "data" if self.sizes.get("data", 1) > 1
+                and b % self.sizes["data"] == 0 else None)
+            out[k] = P(lead, *([None] * (len(v.shape) - 1)))
+        return out
+
+    def cache_specs(self, cache_struct, context_parallel=False):
+        """KV/latent/SSM cache layout.
+
+        * batch dim shards over (pod, data);
+        * KV heads shard over `model` when divisible; otherwise the sequence
+          dim shards over `model` (keeps 32k-deep GQA caches with few KV
+          heads under the per-chip HBM budget — partial-KV attention with a
+          psum combine, handled by GSPMD);
+        * MLA latent caches always shard sequence over `model` (no heads dim);
+        * context_parallel (long_500k, batch=1): sequence also over `data`.
+        """
+        DP = self._dp()
+        data_n = self.sizes.get("data", 1)
+
+        def leaf_spec(path, leaf):
+            s = leaf.shape
+            name = path[-1] if path else ""
+            entries = [None] * len(s)
+
+            def try_batch(axis=1):
+                if context_parallel:
+                    return
+                if self.dp_n > 1 and s[axis] % self.dp_n == 0:
+                    entries[axis] = DP
+                elif data_n > 1 and s[axis] % data_n == 0:
+                    entries[axis] = "data"
+
+            def try_cp(axis):
+                if context_parallel and data_n > 1 and s[axis] % data_n == 0:
+                    entries[axis] = "data"
+
+            if name == "slot_pos":                      # (L, S)
+                return P(*entries)
+            if name in ("k", "v"):                      # (L, B, S, KH, D)
+                try_batch()
+                if self._model_ok(s[3]):
+                    entries[3] = "model"
+                elif self._model_ok(s[2]) and not context_parallel:
+                    entries[2] = "model"
+                try_cp(2)
+                return P(*entries)
+            if name in ("ckv", "krope"):                # (L, B, S, R)
+                try_batch()
+                if not context_parallel and self._model_ok(s[2]):
+                    entries[2] = "model"
+                try_cp(2)
+                return P(*entries)
+            if name == "ssd":                           # (L, B, H, P, N)
+                try_batch()
+                if self._model_ok(s[2]):
+                    entries[2] = "model"
+                return P(*entries)
+            if name == "conv":                          # (L, B, k-1, C)
+                try_batch()
+                if self._model_ok(s[3]):
+                    entries[3] = "model"
+                return P(*entries)
+            if name in ("C", "n", "m", "c", "h"):       # xLSTM states
+                try_batch()
+                if len(s) >= 3 and self._model_ok(s[2]):
+                    entries[2] = "model"
+                return P(*entries)
+            if len(s) >= 2:
+                try_batch()
+            return P(*entries)
+
+        def path_of(kp):
+            return [str(getattr(e, "key", getattr(e, "idx", ""))) for e in kp]
+
+        return jax.tree_util.tree_map_with_path(
+            lambda kp, leaf: leaf_spec(path_of(kp), leaf), cache_struct)

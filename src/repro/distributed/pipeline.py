@@ -1,0 +1,68 @@
+"""Pipeline parallelism over a mesh axis, built on jmpi point-to-point.
+
+GPipe-style schedule under SPMD: every stage holds its own layer slice; the
+activations travel stage→stage through ``jmpi.sendrecv`` ring permutations
+*inside* the jit program (JIT-resident communication — the paper's thesis
+applied to pipelining).  With M microbatches and P stages the steady-state
+rotation runs M+P−1 ticks; each tick every stage processes one microbatch
+and the boundary activations shift one hop.
+
+This is the alternative use of the multi-pod ``pod`` axis (DESIGN.md §7.5);
+correctness is asserted against the single-device stacked forward in
+tests/cases_pipeline.py.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as jmpi
+
+
+def pipeline_forward(x_microbatches, stage_fn: Callable, comm: jmpi.Communicator):
+    """Run a P-stage pipeline over M microbatches.
+
+    x_microbatches: (M, ...) — every stage receives the same global inputs;
+    stage 0 consumes them, later stages consume upstream activations.
+    stage_fn(x) applies THIS stage's layer slice (per-device code under
+    shard_map).  Returns (M, ...) final-stage outputs (valid on the last
+    stage; earlier stages hold zeros), matching SPMD collective-output
+    semantics.
+    """
+    p = comm.size()
+    m = x_microbatches.shape[0]
+    rank = comm.rank()
+    fwd = comm.ring_perm(+1)
+    shape = x_microbatches.shape[1:]
+
+    def tick(t, carry):
+        inbuf, outbuf, tok = carry
+        # which microbatch enters stage 0 at tick t
+        mb_idx = jnp.clip(t, 0, m - 1)
+        first_in = jax.lax.dynamic_index_in_dim(x_microbatches, mb_idx, 0,
+                                                keepdims=False)
+        x_in = jnp.where(rank == 0, first_in, inbuf)
+        active = (t - rank >= 0) & (t - rank < m)
+        y = stage_fn(x_in)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        # shift stage outputs one hop down the ring (explicit token: the
+        # ordering chain lives in the loop carry, never the ambient context)
+        status, nxt, tok = jmpi.sendrecv(y, pairs=fwd, comm=comm, token=tok)
+        # last stage banks its finished microbatch (t - (p-1))
+        done_idx = jnp.clip(t - (p - 1), 0, m - 1)
+        bank = (rank == p - 1) & (t - (p - 1) >= 0) & (t - (p - 1) < m)
+        outbuf = jax.lax.cond(
+            bank,
+            lambda ob: jax.lax.dynamic_update_index_in_dim(
+                ob, y, done_idx, 0),
+            lambda ob: ob, outbuf)
+        return nxt, outbuf, tok
+
+    inbuf = jnp.zeros(shape, x_microbatches.dtype)
+    outbuf = jnp.zeros_like(x_microbatches)
+    inbuf, outbuf, _ = jax.lax.fori_loop(
+        0, m + p - 1, tick, (inbuf, outbuf, jmpi.new_token()))
+    return outbuf

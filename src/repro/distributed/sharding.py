@@ -1,0 +1,140 @@
+"""Logical-axis sharding: one rule table, resolved per arch × shape × mesh.
+
+Models annotate activations/params with *logical* axis names; the active
+``ShardingContext`` maps them to mesh axes with divisibility fallback (a dim
+is only sharded if the mesh axis size divides it — e.g. qwen2's 12 heads on a
+16-wide model axis fall back to replication, DESIGN.md §4).  With no context
+installed (single-device smoke tests) every helper is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (first fit that divides wins; tuple
+# entries request sharding over multiple mesh axes jointly)
+DEFAULT_RULES: dict[str, tuple] = {
+    "batch": (("pod", "data"), ("data",)),
+    "batch_attn": (("pod", "data"), ("data",)),  # attention-section batch
+    "seq_attn": (None,),             # attention-section query-sequence dim;
+    # hillclimb A overrides to ("model",) when heads can't shard over model
+    "seq": (None,),                  # context-parallel cells override
+    "kv_seq": (None,),
+    "embed": (None,),
+    "fsdp_embed": (("pod", "data"), ("data",)),   # weight FSDP dim
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (None,),
+    "ff": (("model",),),
+    "vocab": (("model",),),
+    "experts": (("model",),),
+    "moe_groups": (("pod", "data"), ("data",)),  # MoE dispatch groups;
+    # expert-2D variant sets this None and experts to ("model","data")
+    "expert_ff": (None,),
+    "inner": (("model",),),          # ssm/xlstm inner projections
+    "state": (None,),
+    "cond": (None,),
+}
+
+
+@dataclasses.dataclass
+class ShardingContext:
+    mesh: Mesh
+    rules: dict[str, tuple]
+
+    def spec_for(self, logical: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for a tensor described by logical axis names.
+
+        ``shape`` (if given) enables the divisibility fallback per dim.
+        """
+        axis_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        used: set[str] = set()
+        entries = []
+        for i, name in enumerate(logical):
+            if name is None:
+                entries.append(None)
+                continue
+            candidates = self.rules.get(name, (None,))
+            picked = None
+            for cand in candidates:
+                if cand is None:
+                    continue
+                cand = tuple(a for a in cand if a in axis_sizes)
+                if not cand or any(a in used for a in cand):
+                    continue
+                total = int(np.prod([axis_sizes[a] for a in cand]))
+                if shape is not None and shape[i] % total != 0:
+                    continue
+                picked = cand
+                break
+            if picked:
+                used.update(picked)
+                entries.append(picked if len(picked) > 1 else picked[0])
+            else:
+                entries.append(None)
+        return P(*entries)
+
+    def sharding_for(self, logical, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical, shape))
+
+
+_ACTIVE: list[Optional[ShardingContext]] = [None]
+
+
+def active() -> Optional[ShardingContext]:
+    return _ACTIVE[0]
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Install a sharding context (None mesh = no-op annotations)."""
+    prev = _ACTIVE[0]
+    if mesh is None:
+        _ACTIVE[0] = None
+    else:
+        merged = dict(DEFAULT_RULES)
+        if rules:
+            merged.update(rules)
+        _ACTIVE[0] = ShardingContext(mesh=mesh, rules=merged)
+    try:
+        yield _ACTIVE[0]
+    finally:
+        _ACTIVE[0] = prev
+
+
+def shard(x, *logical: Optional[str]):
+    """Constrain activation ``x`` to the logical layout (no-op w/o context)."""
+    ctx = _ACTIVE[0]
+    if ctx is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"{len(logical)} logical axes for rank-{x.ndim} tensor")
+    spec = ctx.spec_for(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def param_spec(logical: Sequence[Optional[str]], shape) -> P:
+    ctx = _ACTIVE[0]
+    if ctx is None:
+        return P()
+    return ctx.spec_for(logical, shape)
+
+
+# Context-parallel override used by long_500k decode cells: the KV/sequence
+# dim spreads over the data axis (batch=1 leaves it idle otherwise).
+CONTEXT_PARALLEL_RULES = {
+    "kv_seq": (("data",),),
+    "batch": (None,),
+}
+
+# Sequence-parallel residual stream (Megatron-SP analogue): hillclimb lever.
+SEQUENCE_PARALLEL_RULES = {
+    "seq": (("model",),),
+}

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel package: <name>/kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), <name>/ops.py (jit'd wrapper, model-layout adapters, interpret-mode
+fallback on CPU), <name>/ref.py (pure-jnp oracle used by the allclose tests).
+
+TPU is the compile target; on this CPU container every kernel is validated
+with interpret=True (the kernel body executes in Python with real data).
+The XLA-native model paths (repro.models.*) implement the same contracts —
+tests cross-check kernel vs model vs oracle.
+"""

@@ -1,0 +1,30 @@
+"""jit'd wrapper for decode attention (model cache layout adapters)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_grouped
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n_kv_heads", "bk", "interpret"))
+def decode_attention(q, k, v, valid_mask, *, n_kv_heads, bk=1024,
+                     interpret=None):
+    """q: (B,1,H,D) single new token; k/v cache: (B,S,KH,D);
+    valid_mask: (S,). Returns (B,1,H,D)."""
+    it = (not _on_tpu()) if interpret is None else interpret
+    b, _, h, d = q.shape
+    kh = n_kv_heads
+    g = h // kh
+    qg = q[:, 0].reshape(b, kh, g, d)
+    kt = jnp.swapaxes(k, 1, 2)                           # (B,KH,S,D)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = decode_attention_grouped(qg, kt, vt, valid_mask, bk=bk, interpret=it)
+    return o.reshape(b, 1, h, d)

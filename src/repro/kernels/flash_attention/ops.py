@@ -1,0 +1,29 @@
+"""jit'd wrapper: model layout (B,S,H,D) ⇄ kernel layout (B,H,S,D); CPU
+containers run the kernel body under interpret=True automatically."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n_kv_heads", "window", "bq",
+                                             "bk", "interpret"))
+def flash_attention(q, k, v, *, n_kv_heads, window=None, bq=512, bk=512,
+                    interpret=None):
+    """q: (B,S,H,D); k/v: (B,T,KH,D). Returns (B,S,H,D)."""
+    it = (not _on_tpu()) if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    ot = flash_attention_bhsd(qt, kt, vt, n_kv_heads=n_kv_heads,
+                              window=window, bq=bq, bk=bk, interpret=it)
+    return jnp.swapaxes(ot, 1, 2)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q, k, v, *, n_kv_heads, window=None, scale=None):
+    """q: (B,H,S,D); k/v: (B,KH,T,D) — naive masked softmax attention."""
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    g = h // kh
+    sc = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, kh, g, s, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) * sc
+    qpos = (t - s) + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jnp.exp(logits - logits.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    o = jnp.einsum("bkgst,bktd->bkgsd", w, vf)
+    return o.reshape(b, h, s, d).astype(q.dtype)

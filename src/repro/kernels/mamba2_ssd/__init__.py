@@ -1,0 +1,3 @@
+from repro.kernels.mamba2_ssd.ops import mamba2_ssd
+
+__all__ = ["mamba2_ssd"]

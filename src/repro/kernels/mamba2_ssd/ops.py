@@ -1,0 +1,27 @@
+"""jit'd wrapper for the SSD kernel (model layout (B,S,H,P) adapters)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_ssd.kernel import mamba2_ssd_bhlp
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd(x, dt, B, C, A, D, *, chunk=128, interpret=None):
+    """x: (b,S,H,P); dt: (b,S,H); B,C: (b,S,N); A,D: (H,).
+
+    Returns (y (b,S,H,P), h_final (b,H,P,N)).
+    """
+    it = (not _on_tpu()) if interpret is None else interpret
+    xt = jnp.moveaxis(x, 2, 1)          # (b,H,S,P)
+    dtt = jnp.moveaxis(dt, 2, 1)        # (b,H,S)
+    y, hf = mamba2_ssd_bhlp(xt, dtt, B, C, A, D, chunk=chunk, interpret=it)
+    return jnp.moveaxis(y, 1, 2), hf

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: sequential (non-chunked) selective-scan recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, B, C, A, D):
+    """x: (b,H,S,P); dt: (b,H,S); B,C: (b,S,N); A,D: (H,).
+
+    h_t = exp(dt_t·A)·h_{t−1} + dt_t·x_t⊗B_t ;  y_t = C_t·h_t + D·x_t.
+    Returns (y (b,H,S,P), h_final (b,H,P,N)).
+    """
+    b, H, s, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp          # (b,H,P), (b,H), (b,N), (b,N)
+        decay = jnp.exp(dtt * A[None, :])                  # (b,H)
+        upd = (dtt[..., None] * xt)[..., None] * Bt[:, None, None, :]
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 2, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 2, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    hf, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 2) + D[None, :, None, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), hf

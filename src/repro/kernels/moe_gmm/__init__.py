@@ -1,0 +1,3 @@
+from repro.kernels.moe_gmm.ops import moe_gmm
+
+__all__ = ["moe_gmm"]

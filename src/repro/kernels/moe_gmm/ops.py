@@ -1,0 +1,20 @@
+"""jit'd wrapper for the grouped matmul kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gmm.kernel import moe_gmm_ecd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "interpret"))
+def moe_gmm(x, w, n_valid=None, *, bc=128, bf=128, interpret=None):
+    """Grouped per-expert matmul. x: (E,C,D); w: (E,D,F) -> (E,C,F)."""
+    it = (not _on_tpu()) if interpret is None else interpret
+    return moe_gmm_ecd(x, w, n_valid, bc=bc, bf=bf, interpret=it)

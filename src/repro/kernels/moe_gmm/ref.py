@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the grouped matmul kernel."""
+
+import jax.numpy as jnp
+
+
+def moe_gmm_ref(x, w, n_valid=None):
+    """x: (E,C,D); w: (E,D,F); n_valid: (E,) -> (E,C,F), invalid rows 0."""
+    y = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    if n_valid is not None:
+        mask = jnp.arange(x.shape[1])[None, :, None] < n_valid[:, None, None]
+        y = jnp.where(mask, y, 0.0)
+    return y.astype(x.dtype)

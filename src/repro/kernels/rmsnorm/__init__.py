@@ -1,0 +1,3 @@
+from repro.kernels.rmsnorm.ops import rmsnorm_fused
+
+__all__ = ["rmsnorm_fused"]

@@ -1,0 +1,24 @@
+"""jit'd wrapper for fused RMSNorm (arbitrary leading dims)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_rows
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_fused(x, scale, *, eps=1e-5, block_rows=256, interpret=None):
+    """x: (..., D); scale: (D,)."""
+    it = (not _on_tpu()) if interpret is None else interpret
+    shape = x.shape
+    out = rmsnorm_rows(x.reshape(-1, shape[-1]), scale, eps=eps,
+                       block_rows=block_rows, interpret=it)
+    return out.reshape(shape)

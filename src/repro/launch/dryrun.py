@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", "")).strip()
+
+# Multi-pod dry-run (deliverable e): lower + compile every
+# (architecture × input shape × mesh) cell against the production meshes
+# (16×16 single-pod, 2×16×16 multi-pod) with ShapeDtypeStruct inputs — no
+# allocation — and extract memory_analysis / cost_analysis / the collective
+# schedule for the roofline table (EXPERIMENTS.md §Dry-run, §Roofline).
+#
+# The two lines above run before ANY other import: jax locks the device count
+# at first backend init.  Everything else (smoke tests, benches) sees 1 device
+# because only this entrypoint sets the flag.
+
+import argparse        # noqa: E402
+import gzip            # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_config          # noqa: E402
+from repro.configs.base import RunConfig                     # noqa: E402
+from repro.launch import hlo_cost                            # noqa: E402
+from repro.launch import roofline as rl                      # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.train.trainer import build_step                   # noqa: E402
+
+SKIP_LONG = {  # pure full-attention archs skip long_500k (DESIGN.md §4)
+    "musicgen-large", "qwen2-1.5b", "minitron-8b", "yi-6b",
+    "deepseek-v3-671b", "internvl2-1b",
+}
+
+
+def run_cfg_for(arch: str, kind: str = "train") -> RunConfig:
+    rc = RunConfig()
+    if arch == "deepseek-v3-671b":
+        rc.opt_state_dtype = "bfloat16"   # DESIGN.md §5 memory plan
+    if kind == "train":
+        # activation memory /k via grad accumulation (EXPERIMENTS.md §Dry-run)
+        rc.microbatch = 4
+    return rc
+
+
+def dryrun_cell(arch: str, shape: str, multi_pod: bool, rules_extra=None,
+                tag: str = "baseline", cfg_overrides=None, rc_overrides=None,
+                decode_fsdp: bool = True):
+    """Lower+compile one cell. Returns the result record (dict).
+
+    cfg_overrides / rc_overrides / rules_extra / decode_fsdp parameterize
+    §Perf hillclimb variants; the default call is the paper-faithful
+    baseline."""
+    cell = SHAPES[shape]
+    cfg = get_config(arch)
+    if cell.needs_subquadratic and arch in SKIP_LONG:
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "pure full-attention arch; long_500k needs "
+                          "sub-quadratic attention (DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rc = run_cfg_for(arch, cell.kind)
+    for k, v in (cfg_overrides or {}).items():
+        setattr(cfg, k, v)
+    for k, v in (rc_overrides or {}).items():
+        setattr(rc, k, v)
+    t0 = time.time()
+    bundle = build_step(cfg, rc, mesh, cell, rules_extra,
+                        decode_fsdp=decode_fsdp)
+    lowered = bundle.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0))
+            + int(getattr(mem, "argument_size_in_bytes", 0))
+            + int(getattr(mem, "output_size_in_bytes", 0))
+            - int(getattr(mem, "alias_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover - backend-dependent
+        mem_rec = {"error": str(e)}
+
+    xla_cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    cost = hlo_cost.analyze(hlo)   # trip-count-aware (§Roofline notes)
+    coll = {"total_bytes": cost["collective_bytes"],
+            "per_kind_bytes": cost["per_kind_bytes"],
+            "per_kind_counts": cost["per_kind_counts"]}
+    mf = rl.model_flops_for(cfg, cell)
+    terms = rl.roofline_terms(cost, coll, chips, model_flops=mf)
+
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "tag": tag, "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_rec,
+        "cost_xla": {k: float(v) for k, v in xla_cost.items()
+                     if isinstance(v, (int, float))},
+        "collectives": coll,
+        "roofline": terms,
+        "hlo_bytes": len(hlo),
+    }
+    if os.environ.get("DRYRUN_SAVE_HLO", "1") == "1":
+        hdir = os.path.join(os.environ.get("DRYRUN_OUT", "experiments/dryrun"),
+                            "hlo")
+        os.makedirs(hdir, exist_ok=True)
+        name = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}__{tag}"
+        with gzip.open(os.path.join(hdir, name + ".hlo.gz"), "wt") as f:
+            f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    os.makedirs(args.out, exist_ok=True)
+    os.environ["DRYRUN_OUT"] = args.out
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for m in meshes:
+                name = f"{arch}__{shape}__{m}__{args.tag}.json"
+                path = os.path.join(args.out, name)
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] exists, skipping {name}", flush=True)
+                    continue
+                print(f"[dryrun] {arch} × {shape} × {m} ...", flush=True)
+                try:
+                    rec = dryrun_cell(arch, shape, m == "multi",
+                                      tag=args.tag)
+                except Exception:
+                    rec = {"arch": arch, "shape": shape, "mesh": m,
+                           "tag": args.tag, "status": "failed",
+                           "traceback": traceback.format_exc()}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "failed"
+                if st == "ok":
+                    r = rec["roofline"]
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"bytes/dev={rec['memory'].get('bytes_per_device', -1)/2**30:.2f}GiB "
+                          f"compute={r['compute_s']:.4f}s "
+                          f"memory={r['memory_s']:.4f}s "
+                          f"collective={r['collective_s']:.4f}s "
+                          f"dominant={r['dominant']}", flush=True)
+                elif st == "skipped":
+                    print(f"  skipped: {rec['reason']}", flush=True)
+                else:
+                    print("  FAILED:\n" + rec["traceback"][-2000:], flush=True)
+    print(f"[dryrun] done ok={n_ok} skipped={n_skip} failed={n_fail}",
+          flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

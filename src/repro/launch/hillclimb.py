@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", "")).strip()
+
+# §Perf hillclimb driver: run named variants of the three chosen cells and
+# record each as experiments/dryrun/<cell>__<variant>.json.  Iterations and
+# their hypotheses live in EXPERIMENTS.md §Perf; this file is the
+# reproducible harness.
+#
+#   PYTHONPATH=src python -m repro.launch.hillclimb --only A1 B1 C1
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import traceback     # noqa: E402
+
+from repro.launch.dryrun import dryrun_cell   # noqa: E402
+
+# variant registry: name -> (arch, shape, kwargs for dryrun_cell)
+VARIANTS = {
+    # ---- Cell A: qwen2-1.5b × train_4k (worst roofline fraction) --------
+    # A1 as first tried (microbatch=4) left batch 64 — not divisible by
+    # data×model=256, so the constraint fell back to data-only: REFUTED
+    # (bit-identical HLO). A1b drops grad accumulation so the full 256
+    # batch can spread over both axes during attention.
+    "A1b-batch-attn-mb1": (
+        "qwen2-1.5b", "train_4k",
+        dict(rules_extra={"batch_attn": (("data", "model"), ("data",))},
+             rc_overrides=dict(microbatch=1))),
+    "A2-mb1-only-ablation": (      # isolate: how much is mb1 alone?
+        "qwen2-1.5b", "train_4k",
+        dict(rc_overrides=dict(microbatch=1))),
+    # A1b refuted: batch-boundary reshard triggers involuntary full
+    # remat in the SPMD partitioner (112 GiB, collective x4).  A3 shards the
+    # attention QUERY-SEQUENCE over the model axis instead: entering the
+    # section is a local slice (x replicated over model), leaving is a
+    # plain all-gather — the pattern GSPMD handles natively.
+    "A3-seq-attn-over-model": (
+        "qwen2-1.5b", "train_4k",
+        dict(rules_extra={"seq_attn": (("model",), None)})),
+
+    # ---- Cell B: deepseek-v3-671b × train_4k (collective + memory) ------
+    "B1-bf16-params": (
+        "deepseek-v3-671b", "train_4k",
+        dict(cfg_overrides=dict(param_dtype="bfloat16"))),
+    "B2-bf16+adafactor": (
+        "deepseek-v3-671b", "train_4k",
+        dict(cfg_overrides=dict(param_dtype="bfloat16"),
+             rc_overrides=dict(optimizer="adafactor"))),
+    "B3-bf16+adafactor+mb2": (
+        "deepseek-v3-671b", "train_4k",
+        dict(cfg_overrides=dict(param_dtype="bfloat16"),
+             rc_overrides=dict(optimizer="adafactor", microbatch=2))),
+    "B4-bf16+adafactor+mb8": (
+        "deepseek-v3-671b", "train_4k",
+        dict(cfg_overrides=dict(param_dtype="bfloat16"),
+             rc_overrides=dict(optimizer="adafactor", microbatch=8))),
+    # B2 showed temp=77.8 GiB unchanged: the layer-scan carry stack + the
+    # CPU-XLA hoisted whole-stack fp32 convert.  Barrier the carry so LICM
+    # cannot commute the convert past the slice.
+    "B5-bf16+adafactor+mb8+barrier": (
+        "deepseek-v3-671b", "train_4k",
+        dict(cfg_overrides=dict(param_dtype="bfloat16", carry_barrier=True),
+             rc_overrides=dict(optimizer="adafactor", microbatch=8))),
+
+    # B6: Megatron-style sequence parallelism — the residual stream (and
+    # the 61-layer scan carry stack, the biggest temp) shards its seq dim
+    # over `model`; attention gathers full seq at entry (seq_attn=None
+    # boundary), MoE reshards tokens to data-groups.
+    "B6-bf16+adafactor+mb4+seqpar": (
+        "deepseek-v3-671b", "train_4k",
+        dict(cfg_overrides=dict(param_dtype="bfloat16"),
+             rc_overrides=dict(optimizer="adafactor", microbatch=4),
+             rules_extra={"seq": (("model",), None)})),
+
+    # B7: 2-D expert parallelism — experts over model×data (1 expert per
+    # device at E=256): expert weights never FSDP-gather; tokens move via
+    # dispatch all-to-alls instead (napkin: ~1 TB/step of weight gathers
+    # becomes ~30 GB/step of activation movement).
+    "B7-expert2d": (
+        "deepseek-v3-671b", "train_4k",
+        dict(cfg_overrides=dict(param_dtype="bfloat16"),
+             rc_overrides=dict(optimizer="adafactor", microbatch=4),
+             rules_extra={"_expert_2d": True,
+                          "experts": (("model", "data"), ("model",)),
+                          "moe_groups": (None,)})),
+    "B8-expert2d+seqpar": (
+        "deepseek-v3-671b", "train_4k",
+        dict(cfg_overrides=dict(param_dtype="bfloat16"),
+             rc_overrides=dict(optimizer="adafactor", microbatch=4),
+             rules_extra={"_expert_2d": True,
+                          "experts": (("model", "data"), ("model",)),
+                          "moe_groups": (None,),
+                          "seq": (("model",), None)})),
+
+    # ---- Cell C: h2o-danube-3-4b × decode_32k (paper's serving regime) --
+    "C1-serve-nofsdp": (
+        "h2o-danube-3-4b", "decode_32k",
+        dict(decode_fsdp=False)),
+    "C2-serve-nofsdp-bf16": (
+        "h2o-danube-3-4b", "decode_32k",
+        dict(decode_fsdp=False,
+             cfg_overrides=dict(param_dtype="bfloat16"))),
+    "C3-serve-bf16-fsdp": (                    # ablation: bf16 but keep FSDP
+        "h2o-danube-3-4b", "decode_32k",
+        dict(cfg_overrides=dict(param_dtype="bfloat16"))),
+    # C1–C3 left a 6.05 GB/step all-gather: the model-side kv_seq constraint
+    # (default: replicated) un-sharded the seq-over-model KV cache every
+    # step.  model_rules now matches the cache layout in decode cells →
+    # partial-KV attention + tiny psum combine.  C4 = that fix alone
+    # (paper-faithful layout otherwise); C5 = fix + serving mode.
+    "C4-partialkv": (
+        "h2o-danube-3-4b", "decode_32k", dict()),
+    "C5-partialkv-serve-nofsdp-bf16": (
+        "h2o-danube-3-4b", "decode_32k",
+        dict(decode_fsdp=False,
+             cfg_overrides=dict(param_dtype="bfloat16"))),
+    # ---- mixtral train memory (43 GiB baseline): bigger grad-accum k ----
+    "X1-mixtral-mb8": (
+        "mixtral-8x22b", "train_4k",
+        dict(rc_overrides=dict(microbatch=8))),
+
+    # ---- serving-mode memory fixes for the remaining over-budget decode
+    # cells (inherit C5's lever) ------------------------------------------
+    "M1-musicgen-decode-serve": (
+        "musicgen-large", "decode_32k",
+        dict(decode_fsdp=False, cfg_overrides=dict(param_dtype="bfloat16"))),
+    "M2-deepseek-decode-serve": (
+        "deepseek-v3-671b", "decode_32k",
+        dict(cfg_overrides=dict(param_dtype="bfloat16"))),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    os.environ["DRYRUN_OUT"] = args.out
+    names = args.only or list(VARIANTS)
+    for name in names:
+        match = [k for k in VARIANTS if k.startswith(name)]
+        if not match:
+            print(f"unknown variant {name}")
+            continue
+        key = match[0]
+        arch, shape, kw = VARIANTS[key]
+        print(f"[hillclimb] {key}: {arch} × {shape} ...", flush=True)
+        try:
+            rec = dryrun_cell(arch, shape, args.mesh == "multi", tag=key,
+                              **kw)
+        except Exception:
+            rec = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                   "tag": key, "status": "failed",
+                   "traceback": traceback.format_exc()}
+        path = os.path.join(args.out,
+                            f"{arch}__{shape}__{args.mesh}__{key}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec["status"] == "ok":
+            t = rec["roofline"]
+            print(f"  ok: GiB/dev="
+                  f"{rec['memory'].get('bytes_per_device', -1)/2**30:.2f} "
+                  f"compute={t['compute_s']:.3f} memory={t['memory_s']:.3f} "
+                  f"collective={t['collective_s']:.3f} "
+                  f"dom={t['dominant']} mf/hlo="
+                  f"{t.get('model_vs_hlo_flops', 0):.2f}", flush=True)
+        else:
+            print("  FAILED\n" + rec.get("traceback", "")[-1500:], flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,324 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend counts while-loop bodies
+ONCE — a 28–100× FLOP undercount for scan-over-layers / microbatch /
+chunked-attention programs (measured in EXPERIMENTS.md §Roofline, iteration
+0).  This analyzer parses the post-optimization HLO, recovers while-loop
+trip counts from their condition computations, and accumulates per
+computation:
+
+  flops       — dot (2·|out|·k_contract via the operand symbol table),
+                elementwise ≈ 1 flop/element
+  hbm bytes   — per kernel-ish instruction (fusion / dot / copy / slice /
+                collective): operand + result bytes (the TPU fusion model:
+                each fused kernel reads its inputs once, writes its outputs
+                once)
+  collectives — result-shape bytes per op kind
+
+each multiplied by the product of enclosing while-loop trip counts.  Shapes
+are per-device (the module is SPMD-partitioned), so totals are per-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+    "u1": 1, "s1": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+}
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+
+
+def _seg_shapes(segment: str):
+    """[(elems, bytes, dims)] for every dtype[dims] literal in segment."""
+    out = []
+    for m in _SHAPE_RE.finditer(segment):
+        dt, dims_s = m.groups()
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        dims = [int(d) for d in dims_s.split(",") if d]
+        n = 1
+        for d in dims:
+            n *= d
+        out.append((n, n * nb, dims))
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_seg: str
+    operand_names: list
+    attr_seg: str
+    line: str
+    elems: int
+    bytes: int
+    dims0: list  # dims of the first result shape
+
+
+def parse_computations(hlo: str):
+    comps = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped.endswith("{") and "(" in stripped and "=" not in \
+                stripped.split("(", 1)[0]:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = {}
+                if stripped.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if stripped.startswith("}"):
+            continue
+        m = _INSTR_RE.match(stripped)
+        if not m or cur is None:
+            continue
+        name, rest = m.groups()
+        om = _OP_RE.search(rest)
+        if not om:
+            continue
+        op = om.group(1)
+        result_seg = rest[:om.start()]
+        tail = rest[om.start():]
+        depth = 0
+        end = len(tail)
+        for i, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_seg = tail[:end + 1]
+        attr_seg = tail[end + 1:]
+        operands = re.findall(r"%([\w.\-]+)", operand_seg)
+        shapes = _seg_shapes(result_seg)
+        elems = sum(s[0] for s in shapes)
+        nbytes = sum(s[1] for s in shapes)
+        dims0 = shapes[0][2] if shapes else []
+        comps[cur][name] = Instr(name, op, result_seg, operands, attr_seg,
+                                 stripped, elems, nbytes, dims0)
+    return comps, entry
+
+
+def _trip_count(while_ins: Instr, cond_instrs: dict):
+    # preferred: XLA annotates the while op itself
+    m = re.search(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)', while_ins.line)
+    if m:
+        return int(m.group(1))
+    # fallback: constant operand of the compare (possibly via a fusion wrap)
+    consts = {}
+    for ins in cond_instrs.values():
+        if ins.op == "constant":
+            mc = re.search(r"constant\((-?\d+)\)", ins.line)
+            if mc:
+                consts[ins.name] = int(mc.group(1))
+    for ins in cond_instrs.values():
+        if ins.op in ("compare", "fusion"):
+            for operand in ins.operand_names:
+                if consts.get(operand, 0) > 0:
+                    return consts[operand]
+    return 1
+
+
+class HloCost:
+    def __init__(self, hlo: str):
+        self.comps, self.entry = parse_computations(hlo)
+        self._memo = {}
+
+    def _attr_comp(self, ins, attr):
+        m = re.search(attr + r"=%?([\w.\-]+)", ins.attr_seg)
+        return m.group(1) if m and m.group(1) in self.comps else None
+
+    def _operand_bytes(self, ins, symtab):
+        return sum(symtab[o].bytes for o in ins.operand_names if o in symtab)
+
+    def _fusion_io_bytes(self, ins, symtab):
+        """HBM traffic of a fusion callsite.
+
+        Operands that the fused computation consumes ONLY through
+        dynamic-slice (and the in-place buffer of a root dynamic-update-
+        slice) are charged at *slice* size, not buffer size — XLA reads the
+        addressed window and aliases in-place updates; charging the whole
+        stacked-layer buffer per scan iteration inflated memory terms ~20×
+        (§Roofline methodology, iteration 2).
+        """
+        sub_name = self._attr_comp(ins, "calls") or self._attr_comp(
+            ins, "to_apply")
+        sub = self.comps.get(sub_name, {})
+        # map parameter name -> its operand position
+        param_pos = {}
+        for s_ins in sub.values():
+            if s_ins.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", s_ins.line)
+                if m:
+                    param_pos[s_ins.name] = int(m.group(1))
+        # classify how each parameter is consumed
+        sliced_bytes = {}      # param name -> charged bytes
+        disqualified = set()   # param read in full somewhere
+        for s_ins in sub.values():
+            if s_ins.op == "parameter":
+                continue
+            for pos, opn in enumerate(s_ins.operand_names):
+                if opn not in param_pos:
+                    continue
+                if s_ins.op == "dynamic-slice" and pos == 0:
+                    sliced_bytes[opn] = sliced_bytes.get(opn, 0) + s_ins.bytes
+                elif s_ins.op == "dynamic-update-slice" and pos == 0:
+                    # in-place window write: charge the update size (read of
+                    # the window is already the update operand's charge)
+                    upd = s_ins.operand_names[1] if len(
+                        s_ins.operand_names) > 1 else None
+                    ub = sub[upd].bytes if upd in sub else 0
+                    sliced_bytes[opn] = sliced_bytes.get(opn, 0) + ub
+                else:
+                    disqualified.add(opn)
+        total = 0
+        for param_name, pos in param_pos.items():
+            if pos >= len(ins.operand_names):
+                continue
+            parent_op = ins.operand_names[pos]
+            full = symtab[parent_op].bytes if parent_op in symtab else 0
+            if param_name in sliced_bytes and param_name not in disqualified:
+                total += min(sliced_bytes[param_name], full)
+            else:
+                total += full
+        # result: a root dynamic-update-slice aliases its big operand —
+        # charge the update window, not the buffer.
+        root_dus = any(s.op == "dynamic-update-slice" and "ROOT" in s.line
+                       for s in sub.values())
+        if root_dus:
+            upd_bytes = sum(s.bytes for s in sub.values()
+                            if s.op == "dynamic-update-slice")
+            total += min(upd_bytes, ins.bytes)
+        else:
+            total += ins.bytes
+        return total
+
+    def _dot_flops(self, ins, symtab):
+        k = 1
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attr_seg)
+        lhs = symtab.get(ins.operand_names[0]) if ins.operand_names else None
+        if m and lhs is not None:
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(lhs.dims0):
+                    k *= lhs.dims0[int(ci)]
+        return 2.0 * ins.elems * max(k, 1)
+
+    def comp_cost(self, name: str):
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = (0.0, 0.0, {}, {})  # cycle guard
+        symtab = self.comps.get(name, {})
+        flops = bytes_ = 0.0
+        coll = defaultdict(float)
+        ccnt = defaultdict(float)
+
+        for ins in symtab.values():
+            f = b = 0.0
+            if ins.op == "dot":
+                f = self._dot_flops(ins, symtab)
+                b = ins.bytes + self._operand_bytes(ins, symtab)
+            elif ins.op == "while":
+                cond = self._attr_comp(ins, "condition")
+                body = self._attr_comp(ins, "body")
+                trips = _trip_count(ins, self.comps.get(cond, {}))
+                bf, bb, bc, bcc = self.comp_cost(body) if body else (0, 0, {}, {})
+                cf, cb, _, _ = self.comp_cost(cond) if cond else (0, 0, {}, {})
+                flops += trips * (bf + cf)
+                bytes_ += trips * (bb + cb)
+                for k2, v in bc.items():
+                    coll[k2] += trips * v
+                for k2, v in bcc.items():
+                    ccnt[k2] += trips * v
+                continue
+            elif ins.op in ("fusion", "call", "map"):
+                if ins.op == "fusion":
+                    b = self._fusion_io_bytes(ins, symtab)
+                else:
+                    b = ins.bytes + self._operand_bytes(ins, symtab)
+                for attr in ("calls", "to_apply"):
+                    sub = self._attr_comp(ins, attr)
+                    if sub:
+                        sf, _, sc, scc = self.comp_cost(sub)
+                        f += sf
+                        for k2, v in sc.items():
+                            coll[k2] += v
+                        for k2, v in scc.items():
+                            ccnt[k2] += v
+            elif ins.op == "conditional":
+                branches = re.findall(r"(?:true_computation|false_computation|"
+                                      r"branch_computations)=\{?%?([\w.\-,%\s]+)\}?",
+                                      ins.attr_seg)
+                names = []
+                for b_ in branches:
+                    names += [n.strip().lstrip("%") for n in b_.split(",")]
+                costs = [self.comp_cost(n) for n in names if n in self.comps]
+                if costs:
+                    f = max(c[0] for c in costs)
+                    b = max(c[1] for c in costs)
+            elif any(ins.op == k or ins.op == k + "-start"
+                     for k in _COLLECTIVES):
+                base = next(k for k in _COLLECTIVES
+                            if ins.op in (k, k + "-start"))
+                coll[base] += ins.bytes
+                ccnt[base] += 1
+                b = ins.bytes
+                sub = self._attr_comp(ins, "to_apply")
+                if sub:
+                    f += self.comp_cost(sub)[0]
+            elif ins.op == "dynamic-slice":
+                b = 2.0 * ins.bytes                 # window read + write out
+            elif ins.op == "dynamic-update-slice":
+                upd = (symtab[ins.operand_names[1]].bytes
+                       if len(ins.operand_names) > 1
+                       and ins.operand_names[1] in symtab else ins.bytes)
+                b = 2.0 * upd                       # in-place window update
+            elif ins.op in _FREE_OPS or ins.op.endswith("-done"):
+                pass
+            else:
+                # standalone elementwise-ish op.  The CPU backend leaves many
+                # of these unfused where TPU/XLA would fuse them into their
+                # producer/consumer; count result bytes only (operands
+                # assumed hot) — the fusion-calibrated middle ground
+                # (§Roofline methodology note).
+                f = float(ins.elems)
+                b = ins.bytes
+            flops += f
+            bytes_ += b
+        self._memo[name] = (flops, bytes_, dict(coll), dict(ccnt))
+        return self._memo[name]
+
+    def totals(self):
+        f, b, c, cc = self.comp_cost(self.entry)
+        return {"flops": f, "bytes": b,
+                "collective_bytes": sum(c.values()),
+                "per_kind_bytes": c, "per_kind_counts": cc}
+
+
+def analyze(hlo: str) -> dict:
+    return HloCost(hlo).totals()

@@ -1,0 +1,54 @@
+"""Re-run the HLO cost analysis over saved .hlo.gz dumps (no recompiles).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze [--dir experiments/dryrun]
+
+Updates each cell's JSON in place with fresh roofline terms — used when the
+cost model itself is iterated (§Roofline methodology changes are replayable).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch import hlo_cost
+from repro.launch import roofline as rl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(jf))
+        if rec.get("status") != "ok":
+            continue
+        name = (f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__"
+                f"{rec.get('tag', 'baseline')}")
+        hf = os.path.join(args.dir, "hlo", name + ".hlo.gz")
+        if not os.path.exists(hf):
+            continue
+        with gzip.open(hf, "rt") as f:
+            hlo = f.read()
+        cost = hlo_cost.analyze(hlo)
+        coll = {"total_bytes": cost["collective_bytes"],
+                "per_kind_bytes": cost["per_kind_bytes"],
+                "per_kind_counts": cost["per_kind_counts"]}
+        cfg = get_config(rec["arch"])
+        mf = rl.model_flops_for(cfg, SHAPES[rec["shape"]])
+        rec["collectives"] = coll
+        rec["roofline"] = rl.roofline_terms(cost, coll, rec["chips"],
+                                            model_flops=mf)
+        with open(jf, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Render the §Dry-run / §Roofline markdown tables from dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+                                                 [--tag baseline] [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_, tag=None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        r = json.load(open(f))
+        if tag and r.get("tag") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_bytes(n):
+    return f"{n / 2**30:.2f}"
+
+
+def roofline_table(recs, mesh="single"):
+    rows = []
+    hdr = ("| arch | shape | GiB/dev | compute s | memory s | collective s | "
+           "dominant | roofline frac | model/HLO flops | collectives |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                        f"skip | — | — | {r['reason'][:40]}… |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | | |")
+            continue
+        t = r["roofline"]
+        ck = r["collectives"]["per_kind_counts"]
+        cks = " ".join(f"{k.split('-')[-1]}:{int(v)}" for k, v in
+                       sorted(ck.items()) if v)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{fmt_bytes(r['memory'].get('bytes_per_device', 0))} | "
+            f"{t['compute_s']:.3f} | {t['memory_s']:.3f} | "
+            f"{t['collective_s']:.3f} | {t['dominant']} | "
+            f"{t['roofline_fraction_compute']:.2f} | "
+            f"{t.get('model_vs_hlo_flops', 0):.2f} | {cks} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | chips | compile s | GiB/dev | "
+            "HLO flops/dev | coll bytes/dev | status |",
+            "|" + "---|" * 9]
+    for r in recs:
+        if r["status"] == "ok":
+            t = r["roofline"]
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+                f"{r['compile_s']} | "
+                f"{fmt_bytes(r['memory'].get('bytes_per_device', 0))} | "
+                f"{t['hlo_flops']:.2e} | {t['collective_bytes']:.2e} | ok |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                        f"| — | — | — | {r['status']} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun"])
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir, args.tag)
+    if args.table == "roofline":
+        print(roofline_table(recs, args.mesh))
+    else:
+        print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Model input construction: concrete batches (smoke tests / training) and
+ShapeDtypeStruct stand-ins (dry-run lowering, no allocation).
+
+The modality frontends are stubs per the assignment: musicgen receives
+precomputed EnCodec frame embeddings, internvl2 receives precomputed,
+pre-projected ViT patch embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import lm as lm_lib
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int, kind: str):
+    """Pytree of ShapeDtypeStructs for one step's data inputs."""
+    dt = cfg.act_dtype
+    d = {}
+    if cfg.embeds_input:  # audio
+        s = 1 if kind == "decode" else seq
+        d["embeds"] = jax.ShapeDtypeStruct((batch, s, cfg.d_model), dt)
+        if cfg.cross_attn:
+            d["cond"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_cond_tokens, cfg.d_model), dt)
+    elif cfg.n_img_tokens and kind != "decode":  # vlm
+        d["tokens"] = jax.ShapeDtypeStruct((batch, seq - cfg.n_img_tokens),
+                                           jnp.int32)
+        d["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_img_tokens, cfg.d_model), dt)
+    else:
+        s = 1 if kind == "decode" else seq
+        d["tokens"] = jax.ShapeDtypeStruct((batch, s), jnp.int32)
+    if kind == "train":
+        d["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return d
+
+
+def synth_batch(cfg: ModelConfig, batch: int, seq: int, kind: str, seed=0):
+    """Concrete random batch matching ``batch_struct`` (smoke tests, examples)."""
+    rng = np.random.default_rng(seed)
+    structs = batch_struct(cfg, batch, seq, kind)
+    out = {}
+    for k, s in structs.items():
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab_size
+            out[k] = jnp.asarray(rng.integers(0, hi, size=s.shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s.shape), s.dtype)
+    return out
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStructs for the decode caches (dry-run serve_step input)."""
+    return jax.eval_shape(lambda: lm_lib.init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell):
+    """Everything the step function consumes (data + caches), as structs."""
+    if cell.kind == "train":
+        return {"batch": batch_struct(cfg, cell.global_batch, cell.seq_len,
+                                      "train")}
+    if cell.kind == "prefill":
+        return {"batch": batch_struct(cfg, cell.global_batch, cell.seq_len,
+                                      "prefill")}
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "batch": batch_struct(cfg, cell.global_batch, cell.seq_len, "decode"),
+        "caches": cache_struct(cfg, cell.global_batch, cell.seq_len),
+    }

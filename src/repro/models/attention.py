@@ -1,0 +1,386 @@
+"""Attention: GQA (optionally sliding-window, optionally biased), cross-attn,
+and MLA (DeepSeek multi-head latent attention with absorbed decode).
+
+Layouts: activations (B, S, d_model); q (B, S, H, D); k/v (B, T, KH, D).
+Softmax in fp32.  The XLA-native paths here are the dry-run/roofline
+implementations; the Pallas kernels in ``repro.kernels`` implement the same
+contracts for TPU execution (tests cross-check both against each other).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.models import cache as cache_lib
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -2.0 ** 30  # large-negative in fp32, safe under bf16 casts
+
+
+# ===================================================================== #
+# GQA
+# ===================================================================== #
+
+def init_gqa(key, cfg):
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), in_axis_size=d),
+        "wk": dense_init(ks[1], (d, kh, hd), in_axis_size=d),
+        "wv": dense_init(ks[2], (d, kh, hd), in_axis_size=d),
+        "wo": dense_init(ks[3], (h, hd, d), in_axis_size=h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kh, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kh, hd), jnp.float32)
+    return p
+
+
+def _qkv(params, cfg, x, positions, rope=True):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_kv_heads):
+    """Grouped scaled-dot-product attention. mask: broadcastable to
+    (B, KH, G, S, T) or (B, 1, 1, S, T).  v's feature dim may differ from
+    q/k's (MLA)."""
+    b, s, h, d = q.shape
+    dv = v.shape[-1]
+    kh = n_kv_heads
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return o.reshape(b, s, h, dv)
+
+
+def blockwise_sdpa(q, k, v, n_kv_heads, *, window=None, q_block=512,
+                   kv_block=512, scale=None):
+    """Flash-style causal attention in pure JAX (the XLA-native twin of
+    kernels/flash_attention).
+
+    Structure chosen for O(S·block) *backward* memory: an unrolled outer
+    loop over query blocks — each wrapped in ``jax.checkpoint`` so its
+    online-softmax state is recomputed rather than saved — with an inner
+    ``lax.scan`` over exactly that block's causal∩window KV range (static
+    per block ⇒ no wasted FLOPs on fully-masked blocks).  A single scan over
+    (q,kv) pairs would carry the full accumulator and make autodiff save
+    O(S²/block) residuals — measured at 43 GiB/device on qwen2 train_4k
+    before this restructuring (EXPERIMENTS.md §Perf, iteration 0).
+
+    q: (B,S,H,Dk); k: (B,T,KH,Dk); v: (B,T,KH,Dv). Returns (B,S,H,Dv).
+    """
+    b, s, h, dk = q.shape
+    t = k.shape[1]
+    dv = v.shape[-1]
+    kh = n_kv_heads
+    g = h // kh
+    lq = min(q_block, s)
+    lk = min(kv_block, t)
+    nq, nk = -(-s // lq), -(-t // lk)
+    if s % lq or t % lk:  # pad to block multiples (masked out below)
+        q = jnp.pad(q, ((0, 0), (0, nq * lq - s), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, nk * lk - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, nk * lk - t), (0, 0), (0, 0)))
+    sc = scale if scale is not None else 1.0 / np.sqrt(dk)
+
+    kb = k.reshape(b, nk, lk, kh, dk)
+    vb = v.reshape(b, nk, lk, kh, dv)
+    diag_offset = t - s  # query i attends keys <= i + offset (prefill: t==s)
+
+    def q_block_attend(qblk, kb, vb, qi):
+        """One query block vs its static KV range. qblk: (B,Lq,KH,G,Dk)."""
+        q_lo = qi * lq + diag_offset
+        k_hi_block = min(nk - 1, (q_lo + lq - 1) // lk)       # causal bound
+        k_lo_block = 0
+        if window is not None:
+            k_lo_block = max(0, (q_lo - window + 1) // lk)
+        kis = jnp.arange(k_lo_block, k_hi_block + 1)
+
+        @jax.checkpoint   # backward recomputes p: never save (Lq,Lk) probs
+        def inner(carry, ki):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(kb, ki, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vb, ki, 1, keepdims=False)
+            logits = jnp.einsum("blkgd,bukd->bkglu", qblk, kblk
+                                ).astype(jnp.float32) * sc   # (B,KH,G,Lq,Lk)
+            qpos = q_lo + jnp.arange(lq)
+            kpos = ki * lk + jnp.arange(lk)
+            msk = kpos[None, :] <= qpos[:, None]
+            msk &= kpos[None, :] < t
+            if window is not None:
+                msk &= (qpos[:, None] - kpos[None, :]) < window
+            logits = jnp.where(msk[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkglu,bukd->bkgld", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        m0 = jnp.full((b, kh, g, lq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, lq), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, lq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), kis)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KH,G,Lq,Dv)
+        return jnp.moveaxis(out, 3, 1)                        # (B,Lq,KH,G,Dv)
+
+    attend = jax.checkpoint(q_block_attend, static_argnums=(3,))
+    qb = q.reshape(b, nq, lq, kh, g, dk)
+    outs = [attend(qb[:, qi], kb, vb, qi) for qi in range(nq)]
+    out = jnp.stack(outs, axis=1).reshape(b, nq * lq, h, dv)[:, :s]
+    return out.astype(q.dtype)
+
+
+# naive-vs-blockwise dispatch threshold (elements of the S×T score matrix)
+_BLOCKWISE_MIN_SCORES = 2048 * 2048
+
+
+def causal_mask(s, t_offset=0, window=None):
+    """(S, T) mask for queries at positions t_offset..t_offset+s-1 over keys
+    at 0..t_offset+s-1 (prefill: t_offset=0, square)."""
+    t = t_offset + s
+    qi = jnp.arange(s)[:, None] + t_offset
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= (qi - kj) < window
+    return m
+
+
+def _self_attention(cfg, q, k, v):
+    """Dispatch: blockwise (flash-style) for long sequences, naive for tiny."""
+    s, t = q.shape[1], k.shape[1]
+    if s * t >= _BLOCKWISE_MIN_SCORES:
+        return blockwise_sdpa(q, k, v, cfg.n_kv_heads, window=cfg.window)
+    mask = causal_mask(s, window=cfg.window)[None, None, None]
+    return _sdpa(q, k, v, mask, cfg.n_kv_heads)
+
+
+def gqa_forward(params, cfg, x, positions):
+    """Train/prefill self-attention over the full sequence.
+
+    q/k/v are constrained on the ``batch_attn`` logical axis: by default it
+    equals ``batch``, but when the head count cannot shard over the model
+    axis (qwen2's 12, internvl2's 14) the hillclimb rules point it at
+    ("data","model") so the attention *batch* spreads over the otherwise-
+    idle model ranks instead of replicating the whole attention computation
+    16× (EXPERIMENTS.md §Perf cell A).
+    """
+    q, k, v = _qkv(params, cfg, x, positions)
+    q = shard(q, "batch_attn", "seq_attn", "heads", None)
+    k = shard(k, "batch_attn", "seq", "kv_heads", None)
+    v = shard(v, "batch_attn", "seq", "kv_heads", None)
+    o = _self_attention(cfg, q, k, v)
+    o = shard(o, "batch_attn", "seq_attn", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return shard(y, "batch", "seq", "embed")
+
+
+def gqa_prefill(params, cfg, x, positions, kv_cache_layer):
+    """Prefill that also fills the layer's KV cache (window-aware)."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    s = x.shape[1]
+    o = _self_attention(cfg, q, k, v)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+
+    cache_len = kv_cache_layer["k"].shape[1]  # (B, S_c, KH, D) per-layer slice
+    pos = positions if positions.ndim == 1 else positions[0]
+    if cfg.window is None or s <= cache_len:
+        n = min(s, cache_len)
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache_layer["k"], k[:, :n], 0, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache_layer["v"], v[:, :n], 0, axis=1)
+        slot = jnp.full((cache_len,), -1, jnp.int32)
+        slot = jax.lax.dynamic_update_slice_in_dim(
+            slot, pos[:n].astype(jnp.int32), 0, axis=0)
+    else:  # SWA ring: last `window` keys, each at slot (position % window)
+        pos_last = pos[-cache_len:].astype(jnp.int32)
+        idx = pos_last % cache_len
+        new_k = jnp.zeros_like(kv_cache_layer["k"]).at[:, idx].set(k[:, -cache_len:])
+        new_v = jnp.zeros_like(kv_cache_layer["v"]).at[:, idx].set(v[:, -cache_len:])
+        slot = jnp.full((cache_len,), -1, jnp.int32).at[idx].set(pos_last)
+    new_cache = {"k": new_k, "v": new_v, "slot_pos": slot}
+    return shard(y, "batch", "seq", "embed"), new_cache
+
+
+def gqa_decode(params, cfg, x, t, kv_cache_layer):
+    """One-token decode against the cache. x: (B, 1, d); t: scalar position."""
+    b = x.shape[0]
+    pos = jnp.full((b, 1), t, jnp.int32)
+    q, k, v = _qkv(params, cfg, x, pos)
+
+    cache = kv_cache_layer
+    s_c = cache["k"].shape[1]
+    w = cache_lib.slot_write_index(cache["slot_pos"], t, cfg.window)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, w, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, w, axis=1)
+    new_slot = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.full((1,), t, jnp.int32), w, axis=0)
+
+    new_k = shard(new_k, "batch", "kv_seq", "kv_heads", None)
+    new_v = shard(new_v, "batch", "kv_seq", "kv_heads", None)
+    mask = cache_lib.valid_mask(new_slot, t, cfg.window)  # (S_c,)
+    o = _sdpa(q, new_k, new_v, mask[None, None, None, None, :], cfg.n_kv_heads)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return y, {"k": new_k, "v": new_v, "slot_pos": new_slot}
+
+
+# ===================================================================== #
+# Cross-attention (musicgen text conditioning; no cache, no causal mask)
+# ===================================================================== #
+
+def init_cross_attn(key, cfg):
+    return init_gqa(key, cfg)
+
+
+def cross_attn(params, cfg, x, cond):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bcd,dhk->bchk", cond, params["wk"].astype(dt))
+    v = jnp.einsum("bcd,dhk->bchk", cond, params["wv"].astype(dt))
+    o = _sdpa(q, k, v, jnp.bool_(True), cfg.n_kv_heads)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+
+
+# ===================================================================== #
+# MLA — multi-head latent attention (DeepSeek-V3)
+# ===================================================================== #
+
+def init_mla(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (d, cfg.q_lora_rank), in_axis_size=d),
+        "q_norm": jnp.ones((cfg.q_lora_rank,), jnp.float32),
+        "w_uq": dense_init(ks[1], (cfg.q_lora_rank,
+                                   h, cfg.qk_nope_dim + cfg.qk_rope_dim),
+                           in_axis_size=cfg.q_lora_rank),
+        "w_dkv": dense_init(ks[2], (d, cfg.kv_lora_rank), in_axis_size=d),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), jnp.float32),
+        "w_kr": dense_init(ks[3], (d, cfg.qk_rope_dim), in_axis_size=d),
+        "w_uk": dense_init(ks[4], (cfg.kv_lora_rank, h, cfg.qk_nope_dim),
+                           in_axis_size=cfg.kv_lora_rank),
+        "w_uv": dense_init(ks[5], (cfg.kv_lora_rank, h, cfg.v_head_dim),
+                           in_axis_size=cfg.kv_lora_rank),
+        "wo": dense_init(ks[6], (h, cfg.v_head_dim, d),
+                         in_axis_size=h * cfg.v_head_dim),
+    }
+
+
+def _mla_q(params, cfg, x, positions):
+    from repro.models.layers import rmsnorm
+    dt = x.dtype
+    cq = rmsnorm({"scale": params["q_norm"]}, x @ params["w_dq"].astype(dt))
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"].astype(dt))
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(params, cfg, x, positions):
+    from repro.models.layers import rmsnorm
+    dt = x.dtype
+    ckv = rmsnorm({"scale": params["kv_norm"]}, x @ params["w_dkv"].astype(dt))
+    kr = apply_rope((x @ params["w_kr"].astype(dt))[:, :, None, :],
+                    positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, kr
+
+
+def mla_forward(params, cfg, x, positions):
+    """Train/prefill: expand the latent into per-head K/V (flop-optimal when
+    S is large and every key attends), then flash-style blockwise attention."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    ckv, kr = _mla_latent(params, cfg, x, positions)
+    k_nope = jnp.einsum("btr,rhk->bthk", ckv, params["w_uk"].astype(dt))
+    v = jnp.einsum("btr,rhk->bthk", ckv, params["w_uv"].astype(dt))
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)       # (B,S,H,192)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :], (b, s, h, cfg.qk_rope_dim))],
+        axis=-1)
+    # seq_attn (not seq): under sequence parallelism the residual stream is
+    # seq-sharded but attention needs the full sequence per head shard —
+    # the None here forces the Megatron-SP gather at the section boundary.
+    q_full = shard(q_full, "batch", "seq_attn", "heads", None)
+    k_full = shard(k_full, "batch", "seq_attn", "heads", None)
+    v = shard(v, "batch", "seq_attn", "heads", None)
+    if s * s >= _BLOCKWISE_MIN_SCORES:
+        o = blockwise_sdpa(q_full, k_full, v, h)
+    else:
+        mask = causal_mask(s)[None, None, None]
+        o = _sdpa(q_full, k_full, v, mask, h)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return shard(y, "batch", "seq", "embed")
+
+
+def mla_prefill(params, cfg, x, positions, mla_cache_layer):
+    y = mla_forward(params, cfg, x, positions)
+    ckv, kr = _mla_latent(params, cfg, x, positions)
+    s = x.shape[1]
+    cache_len = mla_cache_layer["ckv"].shape[1]
+    new_ckv = jax.lax.dynamic_update_slice_in_dim(
+        mla_cache_layer["ckv"], ckv, 0, axis=1)
+    new_kr = jax.lax.dynamic_update_slice_in_dim(
+        mla_cache_layer["krope"], kr, 0, axis=1)
+    pos = positions if positions.ndim == 1 else positions[0]
+    slot = jnp.full((cache_len,), -1, jnp.int32)
+    slot = jax.lax.dynamic_update_slice_in_dim(
+        slot, pos.astype(jnp.int32), 0, axis=0)
+    return y, {"ckv": new_ckv, "krope": new_kr, "slot_pos": slot}
+
+
+def mla_decode(params, cfg, x, t, mla_cache_layer):
+    """Absorbed decode: attention runs in the 512-d latent space; the cache
+    stores (kv_lora_rank + qk_rope_dim) = 576 bytes-per-token-per-layer of
+    bf16 — the paper-relevant memory-bound win of MLA."""
+    dt = x.dtype
+    b = x.shape[0]
+    pos = jnp.full((b, 1), t, jnp.int32)
+    q_nope, q_rope = _mla_q(params, cfg, x, pos)          # (B,1,H,·)
+    ckv_new, kr_new = _mla_latent(params, cfg, x, pos)    # (B,1,R), (B,1,Dr)
+
+    cache = mla_cache_layer
+    new_ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, t, axis=1)
+    new_kr = jax.lax.dynamic_update_slice_in_dim(cache["krope"], kr_new, t, axis=1)
+    new_slot = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.full((1,), t, jnp.int32), t, axis=0)
+    new_ckv = shard(new_ckv, "batch", "kv_seq", None)
+    new_kr = shard(new_kr, "batch", "kv_seq", None)
+
+    # Absorb W_uk into the query: q_lat (B,1,H,R)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"].astype(dt))
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    logits = (jnp.einsum("bshr,btr->bhst", q_lat, new_ckv)
+              + jnp.einsum("bshk,btk->bhst", q_rope, new_kr)).astype(jnp.float32)
+    mask = cache_lib.valid_mask(new_slot, t, None)[None, None, None, :]
+    logits = jnp.where(mask, logits * scale, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(dt)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, new_ckv)       # (B,1,H,R)
+    # Expand through W_uv then project out.
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, params["w_uv"].astype(dt))
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return y, {"ckv": new_ckv, "krope": new_kr, "slot_pos": new_slot}

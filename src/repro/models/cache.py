@@ -1,0 +1,86 @@
+"""Decode-time caches: GQA KV (full or SWA ring), MLA latent, SSM/xLSTM state.
+
+All caches are plain pytrees (dicts) so they pass through jit boundaries,
+``input_specs`` can describe them as ShapeDtypeStructs for the dry-run, and
+sharding rules apply per leaf.  Slot bookkeeping uses an explicit
+``slot_pos`` array ((S_cache,) int32, -1 = empty slot) so sliding-window ring
+buffers and linear caches share one masking rule:
+valid  =  slot_pos >= 0  &  slot_pos <= t  &  (window is None or t - slot_pos < window).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_kv_cache(cfg, batch, max_len, dtype=None):
+    """Full-length (or SWA ring) KV cache for one attention layer stack.
+
+    Returned arrays carry a leading layer dim so the layer scan can
+    scan over the cache in lockstep with the stacked params.
+    """
+    dt = dtype or cfg.act_dtype
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    s = max_len if cfg.window is None else min(cfg.window, max_len)
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, s, kh, hd), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, s, kh, hd), dt),
+        "slot_pos": jnp.full((cfg.n_layers, s), -1, jnp.int32),
+    }
+
+
+def init_mla_cache(cfg, batch, max_len, n_layers=None, dtype=None):
+    dt = dtype or cfg.act_dtype
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    return {
+        "ckv": jnp.zeros((nl, batch, max_len, cfg.kv_lora_rank), dt),
+        "krope": jnp.zeros((nl, batch, max_len, cfg.qk_rope_dim), dt),
+        "slot_pos": jnp.full((nl, max_len), -1, jnp.int32),
+    }
+
+
+def init_ssm_state(cfg, batch, n_layers=None, dtype=None):
+    dt = dtype or cfg.act_dtype
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((nl, batch, cfg.ssm_conv - 1, conv_ch), dt),
+        "ssd": jnp.zeros((nl, batch, nheads, cfg.ssm_headdim, cfg.ssm_state),
+                         jnp.float32),
+    }
+
+
+def init_mlstm_state(cfg, batch, n_layers, dtype=None):
+    d_inner = int(cfg.d_model * cfg.xlstm_proj_factor)
+    h = cfg.n_heads
+    dh = d_inner // h
+    return {
+        "C": jnp.zeros((n_layers, batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((n_layers, batch, h, dh), jnp.float32),
+        "m": jnp.full((n_layers, batch, h), -30.0, jnp.float32),
+    }
+
+
+def init_slstm_state(cfg, batch, n_layers, dtype=None):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    z = jnp.zeros((n_layers, batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((n_layers, batch, h, dh), -30.0, jnp.float32)}
+
+
+def slot_write_index(slot_pos_row, t, window):
+    """Where position t lands: t (linear cache) or t % window (ring)."""
+    del slot_pos_row
+    s = t if window is None else t % window
+    return s
+
+
+def valid_mask(slot_pos, t, window):
+    """(S_cache,) bool — which slots a query at position t may attend to."""
+    m = (slot_pos >= 0) & (slot_pos <= t)
+    if window is not None:
+        m &= (t - slot_pos) < window
+    return m

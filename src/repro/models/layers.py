@@ -1,0 +1,112 @@
+"""Shared layer primitives: norms, MLPs, RoPE, embeddings, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (maxtext-style)."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = (1.0 / fan_in) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# RMSNorm
+# --------------------------------------------------------------------- #
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# MLP (gated-SiLU llama-style, or relu^2 nemotron-style)
+# --------------------------------------------------------------------- #
+
+def init_mlp(key, d_model, d_ff, mlp_type="gated_silu"):
+    ks = jax.random.split(key, 3)
+    p = {"w_out": dense_init(ks[2], (d_ff, d_model), in_axis_size=d_ff)}
+    if mlp_type == "gated_silu":
+        p["w_in"] = dense_init(ks[0], (d_model, d_ff), in_axis_size=d_model)
+        p["w_gate"] = dense_init(ks[1], (d_model, d_ff), in_axis_size=d_model)
+    elif mlp_type in ("relu2", "gelu"):
+        p["w_in"] = dense_init(ks[0], (d_model, d_ff), in_axis_size=d_model)
+    else:
+        raise ValueError(mlp_type)
+    return p
+
+
+def mlp(params, cfg, x):
+    """x: (..., d_model) -> (..., d_model)."""
+    dt = x.dtype
+    w_in = params["w_in"].astype(dt)
+    h = x @ w_in
+    if "w_gate" in params:
+        g = x @ params["w_gate"].astype(dt)
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp_type == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jnp.square(jax.nn.relu(h))
+    h = shard(h, *(None,) * (h.ndim - 1), "ff")
+    return h @ params["w_out"].astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# Rotary position embeddings
+# --------------------------------------------------------------------- #
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (B, S, H, D); positions: (B, S) or (S,) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * freqs                       # (B,S,d/2) or (S,d/2)
+    if ang.ndim == 2:                                  # (S, d/2) -> (1,S,1,d/2)
+        ang = ang[None, :, None, :]
+    else:                                              # (B,S,d/2) -> (B,S,1,d/2)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Embedding / unembedding (vocab-sharded)
+# --------------------------------------------------------------------- #
+
+def init_embed(key, vocab, d_model):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02
+                      ).astype(jnp.float32)}
+
+
+def embed(params, cfg, tokens):
+    table = shard(params["table"].astype(cfg.act_dtype), "vocab", "embed")
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(params, cfg, x, table=None):
+    """Logits over the padded vocab. ``table`` reuses tied embeddings."""
+    t = table if table is not None else params["table"]
+    logits = x @ t.astype(x.dtype).T
+    return shard(logits, "batch", None, "vocab")

@@ -1,0 +1,353 @@
+"""The language model: init / train / prefill / decode across all families.
+
+Families (DESIGN.md §4): dense (qwen2, minitron, yi, danube), vlm (internvl2:
+patch-embedding stub + dense backbone), audio (musicgen: frame-embedding stub,
+optional cross-attn conditioning), moe (mixtral), mla+moe+MTP (deepseek-v3),
+hybrid (zamba2: Mamba2 backbone + shared attention block), ssm (xlstm).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.models import cache as cache_lib
+from repro.models import transformer as tfm
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (dense_init, embed, init_embed, init_rmsnorm,
+                                 rmsnorm, unembed)
+
+
+# ===================================================================== #
+# init
+# ===================================================================== #
+
+def _hybrid_segments(cfg):
+    """zamba2: contiguous mamba runs, shared attn block after each full run."""
+    k = cfg.shared_attn_every
+    segs, start = [], 0
+    while start < cfg.n_layers:
+        end = min(start + k, cfg.n_layers)
+        segs.append((start, end, end - start == k))
+        start = end
+    return segs
+
+
+def _xlstm_segments(cfg):
+    """(n_mlstm_before, has_slstm) groups: sLSTM every ``slstm_every`` blocks."""
+    k = cfg.slstm_every
+    if k <= 0:
+        return [(cfg.n_layers, False)]
+    segs = []
+    remaining = cfg.n_layers
+    while remaining > 0:
+        if remaining >= k:
+            segs.append((k - 1, True))
+            remaining -= k
+        else:
+            segs.append((remaining, False))
+            remaining = 0
+    return segs
+
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, 8)
+    p = {}
+    if not cfg.embeds_input:
+        p["embed"] = init_embed(ks[0], cfg.padded_vocab, cfg.d_model)
+    if cfg.embeds_input or not cfg.tie_embeddings:
+        p["head"] = init_embed(ks[1], cfg.padded_vocab, cfg.d_model)
+    p["final_norm"] = init_rmsnorm(cfg.d_model)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        kind = "dense_x" if cfg.cross_attn else "dense"
+        p["main"] = tfm.init_stack(ks[2], cfg, kind, cfg.n_layers)
+    elif fam == "moe" and not cfg.mla:
+        p["main"] = tfm.init_stack(ks[2], cfg, "moe", cfg.n_layers)
+    elif fam == "moe" and cfg.mla:  # deepseek-v3
+        nd = cfg.first_k_dense
+        p["dense"] = tfm.init_stack(ks[2], cfg, "mla_dense", nd)
+        p["moe"] = tfm.init_stack(ks[3], cfg, "mla_moe", cfg.n_layers - nd)
+        if cfg.mtp:
+            p["mtp_proj"] = dense_init(ks[4], (2 * cfg.d_model, cfg.d_model),
+                                       in_axis_size=2 * cfg.d_model)
+            p["mtp_norm"] = init_rmsnorm(cfg.d_model)
+            p["mtp_block"] = tfm.init_block(ks[5], cfg, "mla_dense")
+    elif fam == "hybrid":  # zamba2
+        p["mamba"] = tfm.init_stack(ks[2], cfg, "mamba", cfg.n_layers)
+        p["shared"] = tfm.init_block(ks[3], cfg, "dense")
+    elif fam == "ssm":  # xlstm
+        segs = _xlstm_segments(cfg)
+        n_m = sum(s[0] for s in segs)
+        n_s = sum(1 for s in segs if s[1])
+        keys_m = jax.random.split(ks[2], max(n_m, 1))
+        p["mlstm"] = jax.vmap(
+            lambda k: xlstm_lib.init_mlstm_block(k, cfg))(keys_m)
+        if n_s:
+            keys_s = jax.random.split(ks[3], n_s)
+            p["slstm"] = jax.vmap(
+                lambda k: xlstm_lib.init_slstm_block(k, cfg))(keys_s)
+    else:
+        raise ValueError(fam)
+    if cfg.param_dtype != "float32":   # e.g. bf16 params (DESIGN.md §5)
+        pd = jnp.dtype(cfg.param_dtype)
+        p = jax.tree.map(
+            lambda x: x.astype(pd) if x.dtype == jnp.float32 else x, p)
+    return p
+
+
+# ===================================================================== #
+# caches
+# ===================================================================== #
+
+def init_cache(cfg, batch, max_len):
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        return {"main": cache_lib.init_kv_cache(cfg, batch, max_len)}
+    if fam == "moe" and not cfg.mla:
+        return {"main": cache_lib.init_kv_cache(cfg, batch, max_len)}
+    if fam == "moe" and cfg.mla:
+        nd = cfg.first_k_dense
+        return {"dense": cache_lib.init_mla_cache(cfg, batch, max_len, nd),
+                "moe": cache_lib.init_mla_cache(cfg, batch, max_len,
+                                                cfg.n_layers - nd)}
+    if fam == "hybrid":
+        # shared attention block: one KV cache per application
+        n_apps = sum(1 for s in _hybrid_segments(cfg) if s[2])
+        kv = {k: jnp.zeros((n_apps,) + v.shape[1:], v.dtype)
+              for k, v in cache_lib.init_kv_cache(cfg, batch, max_len).items()}
+        return {"mamba": cache_lib.init_ssm_state(cfg, batch),
+                "shared": kv}
+    if fam == "ssm":
+        segs = _xlstm_segments(cfg)
+        n_m = sum(s[0] for s in segs)
+        n_s = sum(1 for s in segs if s[1])
+        c = {"mlstm": cache_lib.init_mlstm_state(cfg, batch, n_m)}
+        if n_s:
+            c["slstm"] = cache_lib.init_slstm_state(cfg, batch, n_s)
+        return c
+    raise ValueError(fam)
+
+
+# ===================================================================== #
+# trunk
+# ===================================================================== #
+
+def _slice_stack(stack, a, b):
+    return jax.tree.map(lambda x: x[a:b], stack)
+
+
+def _slice_layer(stack, i):
+    return jax.tree.map(lambda x: x[i], stack)
+
+
+def _set_layer(stack, i, layer):
+    return jax.tree.map(lambda s, l: s.at[i].set(l), stack, layer)
+
+
+def trunk(params, cfg, x, positions, mode="train", t=None, caches=None,
+          cond=None):
+    """Apply the model trunk. Returns (x, aux, new_caches)."""
+    fam = cfg.family
+    aux = jnp.float32(0.0)
+    new_caches = {} if caches is not None else None
+    C = caches or {}
+
+    if fam in ("dense", "vlm", "audio", "moe") and not cfg.mla:
+        kind = "dense_x" if cfg.cross_attn else (
+            "moe" if fam == "moe" else "dense")
+        x, aux, nc = tfm.stack_apply(params["main"], cfg, kind, x, positions,
+                                     mode, t, C.get("main"), cond)
+        if new_caches is not None:
+            new_caches["main"] = nc
+
+    elif fam == "moe" and cfg.mla:
+        x, a1, nc1 = tfm.stack_apply(params["dense"], cfg, "mla_dense", x,
+                                     positions, mode, t, C.get("dense"))
+        x, a2, nc2 = tfm.stack_apply(params["moe"], cfg, "mla_moe", x,
+                                     positions, mode, t, C.get("moe"))
+        aux = a1 + a2
+        if new_caches is not None:
+            new_caches.update(dense=nc1, moe=nc2)
+
+    elif fam == "hybrid":
+        segs = _hybrid_segments(cfg)
+        mamba_cache = C.get("mamba")
+        new_m = mamba_cache
+        new_s = C.get("shared")
+        app = 0
+        for (a, b, full) in segs:
+            seg_params = _slice_stack(params["mamba"], a, b)
+            seg_cache = None if mamba_cache is None else _slice_stack(
+                mamba_cache, a, b)
+            x, ax, nc = tfm.stack_apply(seg_params, cfg, "mamba", x,
+                                        positions, mode, t, seg_cache)
+            aux = aux + ax
+            if new_caches is not None and nc is not None:
+                new_m = jax.tree.map(
+                    lambda s, u, a=a, b=b: s.at[a:b].set(u), new_m, nc)
+            if full:
+                sc = None if new_s is None else _slice_layer(C["shared"], app)
+                x, ax, ncs = tfm.block_apply(params["shared"], cfg, "dense",
+                                             x, positions, mode, t, sc)
+                aux = aux + ax
+                if new_caches is not None and ncs is not None:
+                    new_s = _set_layer(new_s, app, ncs)
+                app += 1
+        if new_caches is not None:
+            new_caches.update(mamba=new_m, shared=new_s)
+
+    elif fam == "ssm":
+        segs = _xlstm_segments(cfg)
+        mi, si = 0, 0
+        new_ml = C.get("mlstm")
+        new_sl = C.get("slstm")
+        decode = mode == "decode"
+        for (n_m, has_s) in segs:
+            for j in range(n_m):
+                lp = _slice_layer(params["mlstm"], mi)
+                st = None if new_ml is None else _slice_layer(new_ml, mi)
+                x, ns = xlstm_lib.mlstm_block(lp, cfg, x, st, decode=decode)
+                if new_caches is not None and ns is not None:
+                    new_ml = jax.tree.map(lambda s, u, i=mi: s.at[i].set(u),
+                                          new_ml, ns)
+                mi += 1
+            if has_s:
+                lp = _slice_layer(params["slstm"], si)
+                st = None if new_sl is None else _slice_layer(new_sl, si)
+                x, ns = xlstm_lib.slstm_block(lp, cfg, x, st, decode=decode)
+                if new_caches is not None and ns is not None:
+                    new_sl = jax.tree.map(lambda s, u, i=si: s.at[i].set(u),
+                                          new_sl, ns)
+                si += 1
+        if new_caches is not None:
+            new_caches.update(mlstm=new_ml)
+            if new_sl is not None:
+                new_caches["slstm"] = new_sl
+    else:
+        raise ValueError(fam)
+    return x, aux, new_caches
+
+
+# ===================================================================== #
+# embedding / head helpers
+# ===================================================================== #
+
+def embed_inputs(params, cfg, batch):
+    """Token / frame / patch embedding composition. Returns (x, cond)."""
+    cond = batch.get("cond")
+    if cfg.embeds_input:                      # musicgen: EnCodec-frame stub
+        x = batch["embeds"].astype(cfg.act_dtype)
+    elif cfg.n_img_tokens and "image_embeds" in batch:  # internvl2 ViT stub
+        tok_emb = embed(params["embed"], cfg, batch["tokens"])
+        img = batch["image_embeds"].astype(cfg.act_dtype)
+        x = jnp.concatenate([img, tok_emb], axis=1)     # decode steps: text-only
+    else:
+        x = embed(params["embed"], cfg, batch["tokens"])
+    return shard(x, "batch", "seq", "embed"), cond
+
+
+def head_logits(params, cfg, x):
+    table = params["head"]["table"] if "head" in params \
+        else params["embed"]["table"]
+    return unembed(None, cfg, x, table=table)
+
+
+def _xent(logits, labels, vocab_size):
+    """Masked next-token CE + z-loss. labels < 0 are ignored.
+
+    The gold logit is extracted with an iota-compare + masked reduce (not
+    ``take_along_axis``): a per-token gather along the vocab-sharded axis
+    would make GSPMD all-gather the full fp32 logits (~40 GiB/device at
+    qwen2's vocab) while the masked reduce partitions cleanly into a psum.
+    """
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0)
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    hit = jnp.arange(v, dtype=jnp.int32)[None, None, :] == safe[..., None]
+    gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    ce = (lse - gold) * mask
+    z = 1e-4 * jnp.square(lse) * mask
+    n = jnp.maximum(mask.sum(), 1)
+    return ce.sum() / n, z.sum() / n
+
+
+# ===================================================================== #
+# top-level steps
+# ===================================================================== #
+
+def train_loss(params, cfg, batch):
+    """(loss, metrics). labels[t] is the target for position t."""
+    x, cond = embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x, aux, _ = trunk(params, cfg, x, positions, "train", cond=cond)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = head_logits(params, cfg, x)
+    labels = batch["labels"]
+    ce, z = _xent(logits, labels, cfg.vocab_size)
+    loss = ce + z + aux
+
+    metrics = {"ce": ce, "z_loss": z, "aux_loss": aux}
+    if cfg.mtp and "mtp_block" in params:
+        # DeepSeek MTP: predict t+2 from [h_t ; emb(tok_{t+1})]
+        emb_next = embed(params["embed"], cfg, batch["tokens"])[:, 1:]
+        h_prev = x[:, :-1]
+        hcat = jnp.concatenate([h_prev, emb_next], axis=-1)
+        hm = hcat @ params["mtp_proj"].astype(hcat.dtype)
+        hm = rmsnorm(params["mtp_norm"], hm, cfg.norm_eps)
+        hm, _, _ = tfm.block_apply(params["mtp_block"], cfg, "mla_dense", hm,
+                                   positions[:-1], "train")
+        mtp_logits = head_logits(params, cfg, hm)
+        mtp_ce, _ = _xent(mtp_logits, labels[:, 1:], cfg.vocab_size)
+        loss = loss + 0.3 * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def prefill(params, cfg, batch, max_len):
+    """Fill caches from a prompt. Returns (last_logits, caches)."""
+    x, cond = embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    caches = init_cache(cfg, b, max_len)
+    x, _, caches = trunk(params, cfg, x, positions, "prefill", caches=caches,
+                         cond=cond)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = head_logits(params, cfg, x[:, -1:])
+    return logits, caches
+
+
+def decode_step(params, cfg, batch, caches, t):
+    """One decode step at position ``t``. Returns (logits, new_caches)."""
+    x, cond = embed_inputs(params, cfg, batch)          # (B,1,d)
+    positions = jnp.full((1,), t, jnp.int32)
+    x, _, caches = trunk(params, cfg, x, positions, "decode", t=t,
+                         caches=caches, cond=cond)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = head_logits(params, cfg, x)
+    return logits, caches
+
+
+# ===================================================================== #
+# analytics
+# ===================================================================== #
+
+def count_params(cfg, active_only=False) -> int:
+    shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    if active_only and cfg.n_experts:
+        n_moe_layers = cfg.n_layers - cfg.first_k_dense
+        per_layer_expert = cfg.n_experts * 3 * cfg.d_model * cfg.moe_ff
+        active_per_layer = cfg.top_k * 3 * cfg.d_model * cfg.moe_ff
+        total -= n_moe_layers * (per_layer_expert - active_per_layer)
+    return total

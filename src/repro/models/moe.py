@@ -1,0 +1,117 @@
+"""Mixture-of-experts FFN with group-local, capacity-bounded gather dispatch.
+
+Dispatch strategy (TPU adaptation, DESIGN.md §4): a one-hot dispatch einsum
+is O(T·E·C) memory — infeasible at deepseek scale (1M tokens × 256 experts) —
+and ragged grouped matmul shards poorly under GSPMD.  Instead tokens are
+split into ``cfg.moe_groups`` groups (the launcher sets groups = number of
+data shards, so a group == one device's tokens, exactly like per-device
+expert-parallel dispatch), and within each group every expert *gathers* its
+top-C tokens: an (E, C) index matrix drives a gather → batched expert matmul
+(G,E,C,d)×(E,d,f) → scatter-add combine.  All dims static and MXU-aligned;
+the G axis shards over (pod, data) and the E axis over model (EP, deepseek),
+or E stays replicated with the expert FF dim sharded instead (expert-TP,
+mixtral's 8 experts < 16-wide model axis).
+
+Tokens beyond an expert's per-group capacity C = ceil(Tg·k/E·capacity_factor)
+are dropped (their combine weight never lands) — the standard capacity trade,
+kept rare by the Switch-style aux load-balance loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.moe_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), in_axis_size=d),
+        "w_in": dense_init(ks[1], (e, d, f), in_axis_size=d),
+        "w_gate": dense_init(ks[2], (e, d, f), in_axis_size=d),
+        "w_out": dense_init(ks[3], (e, f, d), in_axis_size=f),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_in": dense_init(kss[0], (d, fs), in_axis_size=d),
+            "w_gate": dense_init(kss[1], (d, fs), in_axis_size=d),
+            "w_out": dense_init(kss[2], (fs, d), in_axis_size=fs),
+        }
+    return p
+
+
+def capacity(tokens_per_group: int, cfg) -> int:
+    c = int(tokens_per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    c = min(max(8, -(-c // 8) * 8), tokens_per_group)  # 8-aligned, <= Tg
+    return c
+
+
+def moe_ffn(params, cfg, x):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    t = b * s
+    g = max(1, min(getattr(cfg, "moe_groups", 1), t))
+    while t % g:
+        g -= 1
+    tg = t // g
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(tg, cfg)
+
+    xt = x.reshape(g, tg, d)
+    xt = shard(xt, "moe_groups", None, "embed")
+
+    # --- route (per group) -------------------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xt,
+                        params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                  # (G,Tg,k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * Σ_e mean-prob_e · mean-assignment_e
+    me = probs.mean(axis=1)                                        # (G,E)
+    ce = jax.vmap(lambda gi: jnp.zeros((e,), jnp.float32)
+                  .at[gi.reshape(-1)].add(1.0))(gate_idx) / (tg * k)
+    aux = e * jnp.sum(me.mean(0) * ce.mean(0)) * cfg.router_aux_coef
+
+    # --- per-expert token selection (capacity C, within group) -------------
+    def sel_group(gv, gi):
+        z = jnp.zeros((tg, e), jnp.float32)
+        return z.at[jnp.arange(tg)[:, None], gi].set(gv)
+    sel = jax.vmap(sel_group)(gate_vals, gate_idx)                 # (G,Tg,E)
+    scores = jnp.where(sel > 0, sel, -1.0).transpose(0, 2, 1)      # (G,E,Tg)
+    scores = shard(scores, "moe_groups", "experts", None)
+    top_scores, token_idx = jax.lax.top_k(scores, c)               # (G,E,C)
+    keep = (top_scores > 0).astype(dt)
+
+    # --- gather → expert matmul → scatter-add combine ----------------------
+    xs = jax.vmap(lambda xg, ti: jnp.take(xg, ti, axis=0))(xt, token_idx)
+    xs = shard(xs, "moe_groups", "experts", None, "embed")         # (G,E,C,d)
+    h = jnp.einsum("gecd,edf->gecf", xs, params["w_in"].astype(dt))
+    gg = jnp.einsum("gecd,edf->gecf", xs, params["w_gate"].astype(dt))
+    h = jax.nn.silu(gg) * h
+    h = shard(h, "moe_groups", "experts", None, "expert_ff")
+    ys = jnp.einsum("gecf,efd->gecd", h, params["w_out"].astype(dt))
+    w = (top_scores.astype(dt) * keep)[..., None]                  # (G,E,C,1)
+
+    def combine_group(yg, ti, wg):
+        return jnp.zeros((tg, d), dt).at[ti.reshape(-1)].add(
+            (yg * wg).reshape(-1, d))
+    combined = jax.vmap(combine_group)(ys, token_idx, w)           # (G,Tg,d)
+    combined = shard(combined, "moe_groups", None, "embed")
+
+    # --- shared experts (dense path, deepseek) -----------------------------
+    if "shared" in params:
+        sp = params["shared"]
+        hs = jax.nn.silu(jnp.einsum("gtd,df->gtf", xt, sp["w_gate"].astype(dt))) \
+            * jnp.einsum("gtd,df->gtf", xt, sp["w_in"].astype(dt))
+        combined = combined + jnp.einsum("gtf,fd->gtd", hs,
+                                         sp["w_out"].astype(dt))
+
+    return combined.reshape(b, s, d), aux

@@ -1,0 +1,202 @@
+"""Mamba2 (state-space duality) block: chunked-parallel train/prefill path
+(matmul-heavy, MXU-friendly — the formulation the Pallas kernel accelerates)
+plus the O(1)-state single-step decode path.
+
+Shapes follow the Mamba2 paper: d_inner = expand·d_model, heads = d_inner /
+headdim, scalar decay per head (A), shared B/C of size ssm_state per group
+(n_groups=1 here, zamba2's choice), short causal conv over (x,B,C).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return d_inner, nheads, conv_ch
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_inner, nheads, conv_ch = dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "w_in": dense_init(ks[0], (d, 2 * d_inner + 2 * cfg.ssm_state + nheads),
+                           in_axis_size=d),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nheads,), 0.01))).astype(jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "w_out": dense_init(ks[2], (d_inner, d), in_axis_size=d_inner),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, nheads, _ = dims(cfg)
+    n = cfg.ssm_state
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * n]
+    dt = proj[..., -nheads:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv, kernel k. xbc: (B,S,C); state: (B,k-1,C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)           # (B, S+k-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+              for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return jax.nn.silu(out + b.astype(xbc.dtype)), new_state
+
+
+def ssd_chunked(xh, dt, A, B, C, chunk=64, h0=None):
+    """Chunked-parallel SSD scan.
+
+    xh: (b, s, H, P) inputs; dt: (b, s, H) positive step sizes;
+    A: (H,) negative decay rates; B, C: (b, s, N).
+    Returns (y (b,s,H,P), h_final (b,H,P,N)). fp32 state math.
+
+    Within a chunk the recurrence h_t = e^{A·dt_t} h_{t-1} + dt_t·B_t⊗x_t is
+    unrolled into two matmuls against decay-weighted masks (the "dual" /
+    attention-like form); across chunks a short scan carries the state.
+    """
+    b, s, H, P = xh.shape
+    N = B.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    L = chunk
+    xc = xh.reshape(b, nc, L, H, P).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, L, H).astype(jnp.float32)
+    Bc = B.reshape(b, nc, L, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, L, N).astype(jnp.float32)
+
+    dA = dtc * A  # (b,nc,L,H) negative
+    seg = jnp.cumsum(dA, axis=2)                       # Σ_{u<=t} dA_u
+    # intra-chunk "attention": M[t,u] = e^{seg_t - seg_u} for u<=t
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]      # (b,nc,L,L,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    M = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    # G[t,u] = C_t·B_u  (shared across heads; n_groups=1)
+    G = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)                # (b,nc,L,L)
+    W = G[..., None] * M                                     # (b,nc,L,L,H)
+    y_intra = jnp.einsum("bclmh,bcmh,bcmhp->bclhp", W, dtc, xc)
+
+    # chunk-final states: h_c = Σ_u e^{seg_L - seg_u} dt_u B_u ⊗ x_u
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)          # (b,nc,L,H)
+    hc = jnp.einsum("bclh,bclh,bcln,bclhp->bchpn",
+                    decay_to_end, dtc, Bc, xc)               # per-chunk state
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                  # (b,nc,H)
+
+    # inter-chunk scan (nc steps)
+    def scan_fn(h, inp):
+        hci, dci = inp                                       # (b,H,P,N),(b,H)
+        h_new = h * dci[:, :, None, None] + hci
+        return h_new, h
+    h_init = jnp.zeros((b, H, P, N), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+    hcs = jnp.moveaxis(hc, 1, 0)                             # (nc,b,H,P,N)
+    dcs = jnp.moveaxis(chunk_decay, 1, 0)                    # (nc,b,H)
+    h_final, h_prevs = jax.lax.scan(scan_fn, h_init, (hcs, dcs))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # (b,nc,H,P,N)
+
+    # contribution of carried-in state to each position
+    decay_from_start = jnp.exp(seg)                          # (b,nc,L,H)
+    y_inter = jnp.einsum("bclh,bcln,bchpn->bclhp",
+                         decay_from_start, Cc, h_prevs)
+    y = (y_intra + y_inter).reshape(b, nc * L, H, P)
+    if pad:
+        y = y[:, :s]
+    return y.astype(xh.dtype), h_final
+
+
+def ssd_decode_step(h, xh, dt, A, B, C):
+    """Single-token state update. h: (b,H,P,N); xh: (b,H,P); dt: (b,H);
+    B,C: (b,N). Returns (y (b,H,P), h')."""
+    dA = jnp.exp(dt * A)                                     # (b,H)
+    h32 = h.astype(jnp.float32)
+    upd = (dt[:, :, None] * xh.astype(jnp.float32))[..., None] \
+        * B.astype(jnp.float32)[:, None, None, :]            # (b,H,P,N)
+    h_new = h32 * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C.astype(jnp.float32))
+    return y.astype(xh.dtype), h_new
+
+
+def _gated_norm(scale, y, z, eps=1e-5):
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def mamba2_forward(params, cfg, x, state=None, chunk=64):
+    """Train/prefill. x: (B,S,d). Returns (y, new_state or None)."""
+    d_inner, nheads, _ = dims(cfg)
+    n = cfg.ssm_state
+    dt_ = x.dtype
+    proj = x @ params["w_in"].astype(dt_)
+    z, xbc, dtp = _split_proj(cfg, proj)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xh = xbc[..., :d_inner]
+    B = xbc[..., d_inner:d_inner + n]
+    C = xbc[..., d_inner + n:]
+    xh = shard(xh.reshape(*xh.shape[:2], nheads, cfg.ssm_headdim),
+               "batch", None, "heads", None)
+    dtv = jax.nn.softplus(dtp.astype(jnp.float32)
+                          + params["dt_bias"])               # (B,S,H)
+    dtv = shard(dtv, "batch", None, "heads")  # heads→model keeps the (L,L,H)
+    A = -jnp.exp(params["A_log"])             # intra-chunk masks sharded (H,)
+    h0 = None if state is None else state["ssd"]
+    y, h_final = ssd_chunked(xh, dtv, A, B, C, chunk=chunk, h0=h0)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(*y.shape[:2], d_inner)
+    y = _gated_norm(params["norm_scale"], y, z, cfg.norm_eps)
+    out = y @ params["w_out"].astype(dt_)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype),
+                     "ssd": h_final}
+    return shard(out, "batch", None, "embed"), new_state
+
+
+def mamba2_decode(params, cfg, x, state):
+    """One token. x: (B,1,d); state: {conv (B,k-1,C), ssd (B,H,P,N)}."""
+    d_inner, nheads, _ = dims(cfg)
+    n = cfg.ssm_state
+    dt_ = x.dtype
+    proj = x @ params["w_in"].astype(dt_)                    # (B,1,·)
+    z, xbc, dtp = _split_proj(cfg, proj)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 state["conv"])
+    xh = xbc[:, 0, :d_inner].reshape(-1, nheads, cfg.ssm_headdim)
+    B = xbc[:, 0, d_inner:d_inner + n]
+    C = xbc[:, 0, d_inner + n:]
+    dtv = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, h_new = ssd_decode_step(state["ssd"], xh, dtv, A, B, C)
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, d_inner)
+    y = _gated_norm(params["norm_scale"], y, z, cfg.norm_eps)
+    out = y @ params["w_out"].astype(dt_)
+    return out, {"conv": new_conv.astype(state["conv"].dtype), "ssd": h_new}

@@ -1,0 +1,152 @@
+"""Block assembly and layer stacks (scan-over-layers + remat).
+
+Block kinds:
+  dense     — GQA attn + MLP                     (qwen2, minitron, yi, danube,
+                                                  internvl2 backbone, zamba2's
+                                                  shared block)
+  dense_x   — GQA self-attn + cross-attn + MLP   (musicgen w/ text cond)
+  moe       — GQA attn + MoE FFN                 (mixtral)
+  mla_dense — MLA attn + dense MLP               (deepseek first-3 layers)
+  mla_moe   — MLA attn + MoE FFN                 (deepseek main stack)
+  mamba     — Mamba2 mixer only                  (zamba2 backbone)
+
+Uniform stacks hold parameters with a leading layer axis and are traversed by
+``lax.scan`` (one traced layer → O(1) compile time at 61 layers) with
+``jax.checkpoint`` activation rematerialization around the body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import init_mlp, init_rmsnorm, mlp, rmsnorm
+
+ATTN_KINDS = {"dense", "dense_x", "moe"}
+MLA_KINDS = {"mla_dense", "mla_moe"}
+
+
+def init_block(key, cfg, kind):
+    ks = jax.random.split(key, 6)
+    p = {}
+    if kind in ATTN_KINDS:
+        p["attn_norm"] = init_rmsnorm(cfg.d_model)
+        p["attn"] = attn.init_gqa(ks[0], cfg)
+    elif kind in MLA_KINDS:
+        p["attn_norm"] = init_rmsnorm(cfg.d_model)
+        p["attn"] = attn.init_mla(ks[0], cfg)
+    if kind == "dense_x":
+        p["xattn_norm"] = init_rmsnorm(cfg.d_model)
+        p["xattn"] = attn.init_cross_attn(ks[1], cfg)
+    if kind in ("dense", "dense_x"):
+        p["mlp_norm"] = init_rmsnorm(cfg.d_model)
+        p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    elif kind == "mla_dense":
+        p["mlp_norm"] = init_rmsnorm(cfg.d_model)
+        p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.dense_ff, cfg.mlp_type)
+    elif kind in ("moe", "mla_moe"):
+        p["moe_norm"] = init_rmsnorm(cfg.d_model)
+        p["moe"] = moe_lib.init_moe(ks[3], cfg)
+    if kind == "mamba":
+        p["mamba_norm"] = init_rmsnorm(cfg.d_model)
+        p["mamba"] = ssm_lib.init_mamba2(ks[4], cfg)
+    return p
+
+
+def _mix(params, cfg, kind, x, positions, mode, t=None, cache=None, cond=None):
+    """Sequence-mixer sublayer. Returns (y, new_cache)."""
+    h = rmsnorm(params["attn_norm"], x, cfg.norm_eps) \
+        if kind not in ("mamba",) else rmsnorm(params["mamba_norm"], x, cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        if mode == "train":
+            return attn.gqa_forward(params["attn"], cfg, h, positions), None
+        if mode == "prefill":
+            return attn.gqa_prefill(params["attn"], cfg, h, positions, cache)
+        return attn.gqa_decode(params["attn"], cfg, h, t, cache)
+    if kind in MLA_KINDS:
+        if mode == "train":
+            return attn.mla_forward(params["attn"], cfg, h, positions), None
+        if mode == "prefill":
+            return attn.mla_prefill(params["attn"], cfg, h, positions, cache)
+        return attn.mla_decode(params["attn"], cfg, h, t, cache)
+    if kind == "mamba":
+        if mode in ("train", "prefill"):
+            st = cache if mode == "prefill" else None
+            y, new_state = ssm_lib.mamba2_forward(params["mamba"], cfg, h, st)
+            return y, new_state
+        return ssm_lib.mamba2_decode(params["mamba"], cfg, h, cache)
+    raise ValueError(kind)
+
+
+def block_apply(params, cfg, kind, x, positions, mode="train", t=None,
+                cache=None, cond=None):
+    """One block. Returns (x, aux_loss, new_cache)."""
+    y, new_cache = _mix(params, cfg, kind, x, positions, mode, t, cache, cond)
+    x = x + y
+    aux = jnp.float32(0.0)
+    if kind == "dense_x" and cond is not None:
+        h = rmsnorm(params["xattn_norm"], x, cfg.norm_eps)
+        x = x + attn.cross_attn(params["xattn"], cfg, h, cond)
+    if "mlp" in params:
+        h = rmsnorm(params["mlp_norm"], x, cfg.norm_eps)
+        x = x + mlp(params["mlp"], cfg, h)
+    elif "moe" in params:
+        h = rmsnorm(params["moe_norm"], x, cfg.norm_eps)
+        y, aux = moe_lib.moe_ffn(params["moe"], cfg, h)
+        x = x + y
+    return x, aux, new_cache
+
+
+def init_stack(key, cfg, kind, n_layers):
+    """Stacked params with leading layer axis (for lax.scan)."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: init_block(k, cfg, kind))(keys)
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def stack_apply(stack_params, cfg, kind, x, positions, mode="train", t=None,
+                cache=None, cond=None):
+    """Scan the stack. cache (if any) carries a leading layer axis.
+
+    Returns (x, aux_total, new_cache)."""
+
+    def body(carry, layer_in):
+        xc, aux = carry
+        lp, lcache = layer_in
+        if cfg.carry_barrier:
+            xc = jax.lax.optimization_barrier(xc)
+        xc, a, new_cache = block_apply(lp, cfg, kind, xc, positions, mode,
+                                       t, lcache, cond)
+        return (xc, aux + a), new_cache
+
+    body = _remat(body, cfg)
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                       (stack_params, cache))
+    return x, aux, new_cache
+
+
+def stack_apply_nocache(stack_params, cfg, kind, x, positions, cond=None):
+    def body(carry, lp):
+        xc, aux = carry
+        if cfg.carry_barrier:
+            xc = jax.lax.optimization_barrier(xc)
+        xc, a, _ = block_apply(lp, cfg, kind, xc, positions, "train",
+                               cond=cond)
+        return (xc, aux + a), None
+
+    body = _remat(body, cfg)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), stack_params)
+    return x, aux

@@ -1,0 +1,270 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory with recurrent weights, inherently sequential).
+
+mLSTM is gated linear attention with per-head scalar forget/input gates and a
+max-state stabilizer m; we implement the chunkwise-parallel form (matmuls
+within chunks, short scan across chunks) for train/prefill — the same
+structure the Mamba2 SSD path uses — and the O(1) recurrent step for decode.
+
+sLSTM has hidden-to-gate recurrent weights (block-diagonal per head), so the
+time loop is a true ``lax.scan`` (documented as serial in the roofline notes;
+xLSTM places sLSTM in 1 of 8 blocks so the cost is bounded).
+
+Block wiring follows the xLSTM paper's pre-LN residual blocks: mLSTM block
+up-projects ×2, runs the cell, gates, down-projects; sLSTM block runs the
+cell at model width, then a gated (4/3×) MLP.  d_ff=0 in the assigned config
+means exactly this: no separate FFN outside the blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init, init_mlp, mlp, rmsnorm, init_rmsnorm
+
+
+# ===================================================================== #
+# mLSTM
+# ===================================================================== #
+
+def mlstm_dims(cfg):
+    d_inner = int(cfg.d_model * cfg.xlstm_proj_factor)
+    h = cfg.n_heads
+    dh = d_inner // h
+    return d_inner, h, dh
+
+
+def init_mlstm_block(key, cfg):
+    d = cfg.d_model
+    d_inner, h, dh = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": init_rmsnorm(d),
+        "w_up": dense_init(ks[0], (d, 2 * d_inner), in_axis_size=d),  # x | gate
+        # q/k/v are block-diagonal per head (xLSTM paper's BlockLinear):
+        # (H, dh, dh) instead of (d_inner, d_inner) — 1/H the parameters.
+        "wq": dense_init(ks[1], (h, dh, dh), in_axis_size=dh),
+        "wk": dense_init(ks[2], (h, dh, dh), in_axis_size=dh),
+        "wv": dense_init(ks[3], (h, dh, dh), in_axis_size=dh),
+        "w_if": dense_init(ks[4], (d_inner, 2 * h), in_axis_size=d_inner),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.full((h,), 3.0)]
+                                ).astype(jnp.float32),
+        "out_norm": jnp.ones((h, dh), jnp.float32),
+        "w_down": dense_init(ks[5], (d_inner, d), in_axis_size=d_inner),
+    }
+
+
+def _mlstm_gates(params, xin):
+    """log input gate (i), log forget gate (f) per head: (B,S,H) each."""
+    gif = xin @ params["w_if"].astype(xin.dtype) + params["b_if"].astype(xin.dtype)
+    h = gif.shape[-1] // 2
+    log_i = gif[..., :h].astype(jnp.float32)            # exp gating: log i = raw
+    log_f = jax.nn.log_sigmoid(gif[..., h:].astype(jnp.float32))
+    return log_i, log_f
+
+
+def mlstm_chunked(q, k, v, log_i, log_f, chunk=64, state=None):
+    """Chunkwise-parallel mLSTM with stabilizer.
+
+    q,k,v: (B,S,H,D); log_i/log_f: (B,S,H).
+    state: optional dict(C (B,H,D,D), n (B,H,D), m (B,H)).
+    Returns (y (B,S,H,D), new_state).
+    """
+    b, s, H, D = q.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    L = chunk
+    qc = q.reshape(b, nc, L, H, D).astype(jnp.float32) / jnp.sqrt(D)
+    kc = k.reshape(b, nc, L, H, D).astype(jnp.float32)
+    vc = v.reshape(b, nc, L, H, D).astype(jnp.float32)
+    lic = log_i.reshape(b, nc, L, H)
+    lfc = log_f.reshape(b, nc, L, H)
+
+    F = jnp.cumsum(lfc, axis=2)                        # Σ log f within chunk
+    # intra-chunk log weights: W[t,u] = F_t − F_u + i_u  (u ≤ t)
+    logw = F[:, :, :, None, :] - F[:, :, None, :, :] + lic[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    logw = jnp.where(causal[None, None, :, :, None], logw, -jnp.inf)
+    # carried-state contribution at t has log weight F_t (+ m_prev inside state)
+
+    def scan_chunk(carry, inp):
+        C_prev, n_prev, m_prev = carry                 # (b,H,D,D),(b,H,D),(b,H)
+        qci, kci, vci, lici, Fi, logwi = inp
+        # stabilizer per query position t: max over intra weights & carried
+        m_intra = jnp.max(logwi, axis=2)               # (b,L,H) max over u
+        m_t = jnp.maximum(Fi + m_prev[:, None, :], m_intra)   # (b,L,H)
+        # intra-chunk attention (stabilized)
+        w_int = jnp.exp(logwi - m_t[:, :, None, :])    # (b,L,L,H)
+        scores = jnp.einsum("blhd,buhd->bluh", qci, kci)
+        y_num = jnp.einsum("bluh,buhd->blhd", scores * w_int, vci)
+        den_int = jnp.sum(scores * w_int, axis=2)      # Σ_u w·(q_t·k_u): (b,L,H)
+        # carried-state contribution, weight exp(F_t + m_prev − m_t)
+        w_car = jnp.exp(Fi + m_prev[:, None, :] - m_t)  # (b,L,H)
+        y_num = y_num + w_car[..., None] * jnp.einsum("blhd,bhde->blhe",
+                                                      qci, C_prev)
+        den_car = w_car * jnp.einsum("blhd,bhd->blh", qci, n_prev)
+        den = jnp.maximum(jnp.abs(den_int + den_car), jnp.exp(-m_t))
+        y = y_num / den[..., None]
+
+        # chunk-end state update (stabilized at m_state_new)
+        F_L = Fi[:, -1, :]                             # (b,H)
+        k_logw = F_L[:, None, :] - Fi + lici           # (b,L,H)
+        m_state_new = jnp.maximum(F_L + m_prev, jnp.max(k_logw, axis=1))
+        w_k = jnp.exp(k_logw - m_state_new[:, None, :])
+        decay = jnp.exp(F_L + m_prev - m_state_new)
+        C_new = C_prev * decay[:, :, None, None] \
+            + jnp.einsum("blh,blhd,blhe->bhde", w_k, kci, vci)
+        n_new = n_prev * decay[:, :, None] \
+            + jnp.einsum("blh,blhd->bhd", w_k, kci)
+        return (C_new, n_new, m_state_new), y
+
+    if state is None:
+        C0 = jnp.zeros((b, H, D, D), jnp.float32)
+        n0 = jnp.zeros((b, H, D), jnp.float32)
+        m0 = jnp.full((b, H), -30.0, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    xs = (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(lic, 1, 0),
+          jnp.moveaxis(F, 1, 0), jnp.moveaxis(logw, 1, 0))
+    (Cf, nf, mf), ys = jax.lax.scan(scan_chunk, (C0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * L, H, D)
+    if pad:
+        y = y[:, :s]
+    return y.astype(q.dtype), {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_decode_step(state, q, k, v, log_i, log_f):
+    """q,k,v: (B,H,D); log_i/log_f: (B,H). Returns (y, new_state)."""
+    C, n, m = (state["C"], state["n"], state["m"])
+    q = q.astype(jnp.float32) / jnp.sqrt(q.shape[-1])
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, log_i)
+    C_new = C * jnp.exp(log_f + m - m_new)[..., None, None] \
+        + jnp.exp(log_i - m_new)[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n_new = n * jnp.exp(log_f + m - m_new)[..., None] \
+        + jnp.exp(log_i - m_new)[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)),
+                      jnp.exp(-m_new))
+    y = num / den[..., None]
+    return y.astype(q.dtype), {"C": C_new, "n": n_new, "m": m_new}
+
+
+def mlstm_block(params, cfg, x, state=None, decode=False):
+    """Pre-LN residual mLSTM block. x: (B,S,d)."""
+    d_inner, H, D = mlstm_dims(cfg)
+    dt = x.dtype
+    xin = rmsnorm(params["norm"], x, cfg.norm_eps)
+    up = xin @ params["w_up"].astype(dt)
+    xi, gate = up[..., :d_inner], up[..., d_inner:]
+    xi = shard(xi, "batch", None, "inner")
+    xh = xi.reshape(*xi.shape[:2], H, D)               # (B,S,H,dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, params["wq"].astype(dt))
+    k = jnp.einsum("bshd,hde->bshe", xh, params["wk"].astype(dt))
+    v = jnp.einsum("bshd,hde->bshe", xh, params["wv"].astype(dt))
+    log_i, log_f = _mlstm_gates(params, xi)
+    if decode:
+        y, new_state = mlstm_decode_step(state, q[:, 0], k[:, 0], v[:, 0],
+                                         log_i[:, 0], log_f[:, 0])
+        y = y[:, None]
+    else:
+        y, new_state = mlstm_chunked(q, k, v, log_i, log_f, state=state)
+    # per-head norm then merge
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + cfg.norm_eps)
+         * params["out_norm"]).astype(dt)
+    y = y.reshape(*y.shape[:2], d_inner)
+    y = y * jax.nn.silu(gate)
+    out = y @ params["w_down"].astype(dt)
+    return x + shard(out, "batch", None, "embed"), new_state
+
+
+# ===================================================================== #
+# sLSTM
+# ===================================================================== #
+
+def slstm_dims(cfg):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return h, dh
+
+
+def init_slstm_block(key, cfg):
+    d = cfg.d_model
+    h, dh = slstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    ff = int(d * 4 / 3)
+    return {
+        "norm": init_rmsnorm(d),
+        # input weights for gates i,f,z,o: (d, 4, H, Dh)
+        "w_x": dense_init(ks[0], (d, 4, h, dh), in_axis_size=d),
+        # recurrent block-diagonal per head: (4, H, Dh, Dh)
+        "w_r": (jax.random.normal(ks[1], (4, h, dh, dh)) / jnp.sqrt(dh)
+                ).astype(jnp.float32),
+        "b": jnp.zeros((4, h, dh), jnp.float32),
+        "w_out": dense_init(ks[2], (d, d), in_axis_size=d),
+        "mlp_norm": init_rmsnorm(d),
+        "mlp": init_mlp(ks[3], d, ff, "gated_silu"),
+    }
+
+
+def _slstm_cell(params, carry, xt):
+    """One time step. carry: (c,n,h,m) each (B,H,Dh); xt: (B,4,H,Dh)."""
+    c, n, hprev, m = carry
+    pre = xt.astype(jnp.float32) \
+        + jnp.einsum("bhd,ghde->bghe", hprev, params["w_r"]) \
+        + params["b"]
+    zi, zf, zz, zo = [pre[:, i] for i in range(4)]     # (B,H,Dh)
+    log_i = zi                                          # exp input gate (log)
+    log_f = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_st = jnp.exp(log_i - m_new)
+    f_st = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(zz)
+    o = jax.nn.sigmoid(zo)
+    c_new = f_st * c + i_st * z
+    n_new = f_st * n + i_st
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(params, cfg, x, state=None, decode=False):
+    """x: (B,S,d). Sequential lax.scan over time (sLSTM is recurrent)."""
+    h, dh = slstm_dims(cfg)
+    dt = x.dtype
+    b, s, d = x.shape
+    xin = rmsnorm(params["norm"], x, cfg.norm_eps)
+    xg = jnp.einsum("bsd,dghe->bsghe", xin, params["w_x"].astype(dt))
+
+    if state is None:
+        z = jnp.zeros((b, h, dh), jnp.float32)
+        carry = (z, z, z, jnp.full((b, h, dh), -30.0, jnp.float32))
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+
+    if decode:
+        carry, ht = _slstm_cell(params, carry, xg[:, 0])
+        ys = ht[:, None]
+    else:
+        xs = jnp.moveaxis(xg, 1, 0)                    # (S,B,4,H,Dh)
+        carry, ys = jax.lax.scan(
+            lambda cr, xt: _slstm_cell(params, cr, xt), carry, xs)
+        ys = jnp.moveaxis(ys, 0, 1)                    # (B,S,H,Dh)
+    y = ys.reshape(b, -1, d).astype(dt) @ params["w_out"].astype(dt)
+    x = x + y
+    new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    # post-MLP (4/3 gated)
+    x = x + mlp(params["mlp"], cfg, rmsnorm(params["mlp_norm"], x, cfg.norm_eps))
+    return x, new_state

@@ -1,0 +1,110 @@
+"""MPDATA 2-D advection — the PyMPDATA-MPI example (paper §3.2).
+
+Solves ∂t ψ + ∇·(u ψ) = 0 (homogeneous advection, G=1, μ=0 — the
+"hello-world" setup of the paper's Fig. 3) with the two-pass MPDATA scheme:
+a donor-cell upwind pass followed by ``n_iters−1`` antidiffusive corrective
+passes (Smolarkiewicz velocities) on proper face-centred Courant fields.
+Periodic boundaries via jmpi halo exchange; the full time loop (all passes +
+communication) is one JIT-compiled block.
+
+The decomposition axis is a *user choice* exactly as PyMPDATA-MPI exposes it
+(paper Fig. 3 compares layouts): build the mesh (r, c) and the solver
+decomposes rows over the first axis and columns over the second.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro.core as jmpi
+from repro.pde.stencil import halo_exchange_2d
+
+
+def _flux(psi_l, psi_r, c):
+    """Donor-cell flux through a face with Courant number c."""
+    return jnp.maximum(c, 0.0) * psi_l + jnp.minimum(c, 0.0) * psi_r
+
+
+def _advect(psi_h, cx_f, cy_f):
+    """One upwind pass on a halo-1 padded block.
+
+    cx_f: (n, m+1) Courant at x-faces (col j−1/2 .. m−1/2);
+    cy_f: (n+1, m) Courant at y-faces.  Returns the interior update (n, m).
+    """
+    n, m = psi_h.shape[0] - 2, psi_h.shape[1] - 2
+    c = psi_h[1:1 + n, 1:1 + m]
+    up = psi_h[0:n, 1:1 + m]
+    dn = psi_h[2:2 + n, 1:1 + m]
+    lf = psi_h[1:1 + n, 0:m]
+    rt = psi_h[1:1 + n, 2:2 + m]
+    fx_r = _flux(c, rt, cx_f[:, 1:])
+    fx_l = _flux(lf, c, cx_f[:, :-1])
+    fy_d = _flux(c, dn, cy_f[1:, :])
+    fy_u = _flux(up, c, cy_f[:-1, :])
+    return c - (fx_r - fx_l) - (fy_d - fy_u)
+
+
+def _antidiff(psi_h, cx, cy, eps=1e-10):
+    """Smolarkiewicz antidiffusive face Courant fields from a halo-1 padded
+    (positive-definite) field, for constant first-pass Courants (cx, cy)."""
+    n, m = psi_h.shape[0] - 2, psi_h.shape[1] - 2
+    row = psi_h[1:1 + n, :]                      # (n, m+2)
+    ax = (row[:, 1:] - row[:, :-1]) / (row[:, 1:] + row[:, :-1] + eps)
+    col = psi_h[:, 1:1 + m]                      # (n+2, m)
+    ay = (col[1:, :] - col[:-1, :]) / (col[1:, :] + col[:-1, :] + eps)
+    cx2 = (jnp.abs(cx) - cx * cx) * ax           # (n, m+1)
+    cy2 = (jnp.abs(cy) - cy * cy) * ay           # (n+1, m)
+    return cx2, cy2
+
+
+def _mpdata_step(psi, cx, cy, n_iters, exchange):
+    ph = exchange(psi)
+    n, m = psi.shape
+    cx_f = jnp.full((n, m + 1), cx)
+    cy_f = jnp.full((n + 1, m), cy)
+    out = _advect(ph, cx_f, cy_f)
+    for _ in range(n_iters - 1):
+        oh = exchange(out)
+        cx2, cy2 = _antidiff(oh, cx, cy)
+        out = _advect(oh, cx2, cy2)
+    return out
+
+
+def make_solver(mesh, *, courant=(0.2, 0.2), n_iters=2, inner_steps=50):
+    """Multi-rank MPDATA solver: run(psi_global, n_outer) -> psi_global."""
+    axes = mesh.axis_names
+    rows, cols = mesh.devices.shape
+
+    @jmpi.spmd(mesh, in_specs=P(axes[0], axes[1]),
+               out_specs=P(axes[0], axes[1]))
+    def run_block(psi):
+        world = jmpi.world()
+        comm_r = world.split([axes[0]]) if rows > 1 else None
+        comm_c = world.split([axes[1]]) if cols > 1 else None
+        exchange = lambda f: halo_exchange_2d(f, comm_r, comm_c, halo=1)
+        cx, cy = courant
+        return jax.lax.fori_loop(
+            0, inner_steps,
+            lambda i, p: _mpdata_step(p, cx, cy, n_iters, exchange), psi)
+
+    def run(psi_global, n_outer=1):
+        for _ in range(n_outer):
+            psi_global = run_block(psi_global)
+        return psi_global
+
+    return run
+
+
+def reference_step(psi, courant=(0.2, 0.2), n_iters=2):
+    """Single-device periodic oracle (jnp.roll halos)."""
+    def pad(a):
+        a = jnp.concatenate([a[-1:], a, a[:1]], axis=0)
+        return jnp.concatenate([a[:, -1:], a, a[:, :1]], axis=1)
+    def exchange(f):
+        return pad(f)
+    cx, cy = courant
+    return _mpdata_step(psi, cx, cy, n_iters, exchange)

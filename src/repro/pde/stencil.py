@@ -1,0 +1,70 @@
+"""Domain-decomposition halo exchange on top of jmpi (paper §3 substrate).
+
+py-pde and PyMPDATA-MPI both reduce their distributed needs to one
+primitive: exchange boundary strips with grid neighbours, then run the local
+stencil.  ``halo_exchange_2d`` implements exactly that with jmpi
+``sendrecv`` ring permutations over the mesh axes — JIT-resident, so the
+whole PDE step (stencil + communication) is one compiled block, which is the
+paper's point.
+
+The decomposition layout is the communicator layout: decompose along axis 0,
+axis 1, or both, by building the mesh with the matching axis sizes
+(paper Fig. 3's layout study = benchmarks/bench_mpdata.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+import repro.core as jmpi
+
+
+def halo_exchange_2d(field, comm_rows: jmpi.Communicator | None,
+                     comm_cols: jmpi.Communicator | None, halo: int = 1):
+    """Pad ``field`` (local block) with periodic neighbour strips.
+
+    comm_rows: communicator along the row-decomposed axis (axis 0) — ranks
+    above/below; comm_cols: along axis 1 — ranks left/right.  Either may be
+    None (axis not decomposed → wrap locally).
+    Returns (n + 2·halo, m + 2·halo).
+    """
+    h = halo
+
+    # --- axis 0 (rows): send bottom strip down / top strip up -------------
+    if comm_rows is not None and comm_rows.size() > 1:
+        down = comm_rows.ring_perm(+1)
+        up = comm_rows.ring_perm(-1)
+        _, top_halo = jmpi.sendrecv(field[-h:, :], pairs=down,
+                                    comm=comm_rows)              # from above
+        _, bot_halo = jmpi.sendrecv(field[:h, :], pairs=up,
+                                    comm=comm_rows)              # from below
+    else:
+        top_halo = field[-h:, :]
+        bot_halo = field[:h, :]
+    field = jnp.concatenate([top_halo, field, bot_halo], axis=0)
+
+    # --- axis 1 (cols): include the fresh halo rows so corners resolve ----
+    if comm_cols is not None and comm_cols.size() > 1:
+        right = comm_cols.ring_perm(+1)
+        left = comm_cols.ring_perm(-1)
+        _, left_halo = jmpi.sendrecv(field[:, -h:], pairs=right,
+                                     comm=comm_cols)
+        _, right_halo = jmpi.sendrecv(field[:, :h], pairs=left,
+                                      comm=comm_cols)
+    else:
+        left_halo = field[:, -h:]
+        right_halo = field[:, :h]
+    return jnp.concatenate([left_halo, field, right_halo], axis=1)
+
+
+def laplacian(c_halo, dx: float = 1.0, halo: int = 1):
+    """5-point Laplacian of the interior of a halo-padded block."""
+    h = halo
+    n = c_halo.shape[0] - 2 * h
+    m = c_halo.shape[1] - 2 * h
+    c = c_halo[h:h + n, h:h + m]
+    up = c_halo[h - 1:h - 1 + n, h:h + m]
+    dn = c_halo[h + 1:h + 1 + n, h:h + m]
+    lf = c_halo[h:h + n, h - 1:h - 1 + m]
+    rt = c_halo[h:h + n, h + 1:h + 1 + m]
+    return (up + dn + lf + rt - 4.0 * c) / (dx * dx)

@@ -1,0 +1,63 @@
+"""Batched serving engine: prefill + decode loop over the step builders.
+
+Continuous-batching-lite: requests are padded into a fixed batch, prefilled
+once, then decoded step-by-step with greedy sampling; finished sequences
+(EOS or max_tokens) are masked out.  The decode step donates its caches so
+the loop is allocation-free after warmup.  The same ``build_decode_step``
+is what the dry-run lowers for the decode_32k / long_500k cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import lm as lm_lib
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_prompt: int = 64
+    max_new_tokens: int = 32
+    eos_id: int = -1            # -1: never stops early
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                 mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.sc = serve_cfg
+        self._prefill = jax.jit(
+            lambda p, b: lm_lib.prefill(p, cfg, b,
+                                        serve_cfg.max_prompt
+                                        + serve_cfg.max_new_tokens))
+        self._decode = jax.jit(
+            lambda p, b, c, t: lm_lib.decode_step(p, cfg, b, c, t),
+            donate_argnums=(2,))
+
+    def generate(self, prompts: np.ndarray) -> np.ndarray:
+        """prompts: (B, S) int32 (right-aligned, no padding support needed
+        for the synthetic benches). Returns (B, max_new_tokens) int32."""
+        b, s = prompts.shape
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        token = jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1)
+        out = [np.asarray(token)[:, 0]]
+        alive = np.ones((b,), bool)
+        for i in range(self.sc.max_new_tokens - 1):
+            t = s + i
+            logits, caches = self._decode(self.params, {"tokens": token},
+                                          caches, t)
+            token = jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1)
+            tok_np = np.asarray(token)[:, 0]
+            if self.sc.eos_id >= 0:
+                alive &= tok_np != self.sc.eos_id
+                if not alive.any():
+                    out.append(tok_np)
+                    break
+            out.append(tok_np)
+        return np.stack(out, axis=1)

@@ -1,0 +1,69 @@
+"""Test/bench harness utilities.
+
+Multi-rank behaviour needs emulated devices, but
+``--xla_force_host_platform_device_count`` is process-global and must never
+leak into the main test process (smoke tests and benches see exactly 1
+device).  ``run_cases`` therefore executes a *case module* in a subprocess
+with the flag set only there, runs every ``case_*`` function, and reports a
+per-case PASS/FAIL transcript back to the parent.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+
+def child_env(n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    # keep child import path identical to parent
+    env["PYTHONPATH"] = os.pathsep.join(p for p in (
+        os.path.join(_repo_root(), "src"), env.get("PYTHONPATH", "")) if p)
+    return env
+
+
+def _repo_root() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(here))  # src/repro -> repo root
+
+
+_RUNNER = r"""
+import sys, traceback
+mod_name = sys.argv[1]
+only = sys.argv[2] if len(sys.argv) > 2 and sys.argv[2] != "-" else None
+import importlib
+mod = importlib.import_module(mod_name)
+cases = [n for n in dir(mod) if n.startswith("case_")]
+if only:
+    cases = [c for c in cases if c == only]
+failed = []
+for name in sorted(cases):
+    try:
+        getattr(mod, name)()
+        print(f"PASS {name}", flush=True)
+    except Exception:
+        failed.append(name)
+        print(f"FAIL {name}", flush=True)
+        traceback.print_exc()
+sys.exit(1 if failed else 0)
+"""
+
+
+def run_cases(module: str, n_devices: int = 8, only: str | None = None,
+              timeout: int = 900) -> str:
+    """Run all case_* functions of ``module`` under N emulated devices.
+
+    Returns the child transcript; raises AssertionError (with transcript) on
+    any failure so pytest shows exactly which cases broke.
+    """
+    proc = subprocess.run(
+        [sys.executable, "-c", _RUNNER, module, only or "-"],
+        env=child_env(n_devices), capture_output=True, text=True,
+        timeout=timeout, cwd=_repo_root())
+    transcript = proc.stdout + proc.stderr
+    assert proc.returncode == 0, (
+        f"case module {module} failed under {n_devices} devices:\n{transcript}")
+    return transcript

@@ -1,0 +1,99 @@
+"""Sharded checkpointing with elastic resharding (fault-tolerance substrate).
+
+Format: one ``.npz`` per host process holding its addressable shards +
+a JSON index (tree structure, global shapes, mesh, step).  Single-process
+here, but the layout is the multi-host one: each host writes only what it
+owns; restore re-shards to whatever mesh the restarting job has — a job that
+lost a pod restarts on the smaller mesh from the same checkpoint (elastic),
+asserted by tests/test_ft.py.
+
+Writes are atomic (tmp + rename) and ``save_async`` overlaps serialization
+with the next training step — the checkpoint/restart half of the
+straggler/failure story (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, state_tree, step: int, extra: dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(state_tree)
+    tmp = os.path.join(path, ".tmp.shard0.npz")
+    np.savez(tmp, **flat)
+    os.replace(tmp, os.path.join(path, "shard0.npz"))
+    index = {
+        "step": int(step),
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                 for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    tmpi = os.path.join(path, ".tmp.index.json")
+    with open(tmpi, "w") as f:
+        json.dump(index, f)
+    os.replace(tmpi, os.path.join(path, "index.json"))
+
+
+class AsyncSaver:
+    """Overlap checkpoint serialization with compute (one in flight)."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+
+    def save_async(self, path, state_tree, step, extra=None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, state_tree)  # device→host now
+        self._thread = threading.Thread(
+            target=save, args=(path, host_tree, step, extra), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def restore(path: str, like_tree, mesh=None, shardings=None):
+    """Restore into the structure of ``like_tree``; if ``shardings`` given,
+    device_put each leaf with its (possibly different-mesh) sharding —
+    elastic resharding is exactly this re-placement."""
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    data = np.load(os.path.join(path, "shard0.npz"))
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves = []
+    for pathk, leaf in flat_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", ""))) for p in pathk)
+        arr = data[key]
+        if list(arr.shape) != list(leaf.shape):
+            raise ValueError(f"checkpoint/model shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like_tree), leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, index["step"], index.get("extra", {})
+
+
+def latest_step(path: str) -> int | None:
+    idx = os.path.join(path, "index.json")
+    if not os.path.exists(idx):
+        return None
+    with open(idx) as f:
+        return json.load(f)["step"]

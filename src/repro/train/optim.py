@@ -1,0 +1,130 @@
+"""Optimizers: AdamW (dtype-configurable moments — deepseek's bf16 memory
+plan, DESIGN.md §5) and Adafactor (factored second moment) for the largest
+cells.  Pure-pytree implementation: states shard exactly like their params.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), grads), g
+
+
+# ------------------------------------------------------------------ #
+# AdamW
+# ------------------------------------------------------------------ #
+
+def adamw_init(params, run_cfg):
+    dt = jnp.dtype(run_cfg.opt_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, run_cfg):
+    b1, b2, eps = run_cfg.beta1, run_cfg.beta2, run_cfg.eps
+    lr, wd = run_cfg.learning_rate, run_cfg.weight_decay
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    corr1 = 1.0 - b1 ** t
+    corr2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        u = (m32 / corr1) / (jnp.sqrt(v32 / corr2) + eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (u + wd * p32)
+        return (p_new.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ------------------------------------------------------------------ #
+# Adafactor (factored second moments; beyond-paper memory lever)
+# ------------------------------------------------------------------ #
+
+def adafactor_init(params, run_cfg):
+    def factored(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(factored, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, run_cfg):
+    lr = run_cfg.learning_rate
+    step = state["step"] + 1
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+    eps = 1e-30
+
+    def upd(p, g, f):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if p.ndim >= 2:
+            vr = f["vr"] * decay + g2.mean(-1) * (1 - decay)
+            vc = f["vc"] * decay + g2.mean(-2) * (1 - decay)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(-1, keepdims=True)[..., None], eps))
+            u = g32 / jnp.sqrt(denom + eps)
+            newf = {"vr": vr, "vc": vc}
+        else:
+            v = f["v"] * decay + g2 * (1 - decay)
+            u = g32 / jnp.sqrt(v + eps)
+            newf = {"v": v}
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms)
+        p_new = p.astype(jnp.float32) - lr * u
+        return p_new.astype(p.dtype), newf
+
+    leaves_p, tdef = jax.tree.flatten(params)
+    leaves_g = tdef.flatten_up_to(grads)
+    leaves_f = tdef.flatten_up_to(state["f"])
+    new_p, new_f = [], []
+    for p, g, f in zip(leaves_p, leaves_g, leaves_f):
+        a, b = upd(p, g, f)
+        new_p.append(a)
+        new_f.append(b)
+    return (jax.tree.unflatten(tdef, new_p),
+            {"f": jax.tree.unflatten(tdef, new_f), "step": step})
+
+
+def init(params, run_cfg):
+    if run_cfg.optimizer == "adamw":
+        return adamw_init(params, run_cfg)
+    if run_cfg.optimizer == "adafactor":
+        return adafactor_init(params, run_cfg)
+    raise ValueError(run_cfg.optimizer)
+
+
+def update(params, grads, state, run_cfg):
+    if run_cfg.optimizer == "adamw":
+        return adamw_update(params, grads, state, run_cfg)
+    return adafactor_update(params, grads, state, run_cfg)

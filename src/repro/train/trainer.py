@@ -1,0 +1,314 @@
+"""Step builders: train_step / prefill_step / decode_step, with GSPMD
+shardings derived from the rule tables, remat+scan inherited from the model,
+and donation set up so params/opt-state/caches update in place.
+
+``comm_backend``:
+  gspmd      — XLA-inferred collectives inside one jit program (baseline for
+               the dry-run / roofline path).
+  jmpi       — the paper's technique made explicit at trainer scale: the whole
+               step runs under shard_map and the data-parallel gradient
+               mean is an explicit ``jmpi.allreduce`` (with optional int8/bf16
+               compression) *inside* the compiled program.
+  hostbridge — the mpi4py analogue: per-step host round-trip gradient
+               reduction between two jit dispatches (paper Listing 2's cost,
+               measured in benchmarks/bench_trainer_comm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.core as jmpi
+from repro.configs.base import ModelConfig, RunConfig, ShapeCell
+from repro.distributed import sharding as sh
+from repro.distributed.params import ParamSharder
+from repro.launch import specs as specs_lib
+from repro.models import lm as lm_lib
+from repro.train import optim
+
+
+def _dp_size(mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes.get(a, 1) for a in ("pod", "data")]))
+
+
+def model_rules(cfg, cell: Optional[ShapeCell] = None, extra=None):
+    rules = {}
+    if cell is not None and cell.kind == "decode" and cell.global_batch == 1:
+        rules.update(sh.CONTEXT_PARALLEL_RULES)
+    elif cell is not None and cell.kind == "decode" and (
+            cfg.mla or cfg.n_kv_heads % 16 != 0):
+        # KV caches with few KV heads (and MLA latent caches) shard their
+        # sequence over `model` (ParamSharder.cache_specs); the activation
+        # rule must MATCH or the in-model constraint forces an all-gather of
+        # the whole cache every step (found in §Perf cell C: 6.05 GB/step of
+        # self-inflicted gathers).  Partial-KV attention + psum combine is
+        # what GSPMD derives once the layouts agree.
+        rules.update({"kv_seq": (("model",), None)})
+    if cfg.n_experts and cfg.n_experts % 16 != 0:
+        # expert-TP fallback (mixtral): experts replicated, expert FF sharded
+        rules.update({"experts": (None,), "expert_ff": (("model",),)})
+    if cell is not None and cell.kind in ("train", "prefill") \
+            and cfg.n_heads % 16 != 0:
+        # §Perf A3 (confirmed −43% on the dominant term): when heads can't
+        # shard over `model`, shard the attention query-sequence there
+        # instead of replicating the whole attention computation 16×.
+        rules.setdefault("seq_attn", (("model",), None))
+    if extra:
+        rules.update(extra)
+    return rules
+
+
+class StepBundle:
+    """A step function plus everything needed to lower it."""
+
+    def __init__(self, fn, in_shardings, out_shardings, donate_argnums=(),
+                 args_struct=None):
+        self.fn = fn
+        self.in_shardings = in_shardings
+        self.out_shardings = out_shardings
+        self.donate_argnums = donate_argnums
+        self.args_struct = args_struct
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.args_struct)
+
+
+def build_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh, cell,
+                     rules_extra=None) -> StepBundle:
+    """GSPMD train step: loss → grads → clip → optimizer, one XLA program."""
+    cfg.moe_groups = _dp_size(mesh)
+    rules = model_rules(cfg, cell, rules_extra)
+    expert_2d = bool(rules.pop("_expert_2d", False))
+    sharder = ParamSharder(cfg, mesh, expert_2d=expert_2d)
+
+    params_struct = jax.eval_shape(
+        lambda: lm_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    opt_struct = jax.eval_shape(lambda: optim.init(params_struct, run_cfg))
+    batch_struct = specs_lib.batch_struct(cfg, cell.global_batch,
+                                          cell.seq_len, "train")
+
+    p_shard = sharder.tree_shardings(params_struct)
+    # moments shard like their params; scalars replicate
+    if run_cfg.optimizer == "adamw":
+        o_shard = {"m": sharder.tree_shardings(opt_struct["m"]),
+                   "v": sharder.tree_shardings(opt_struct["v"]),
+                   "step": NamedSharding(mesh, P())}
+    else:
+        o_shard = jax.tree.map(lambda l: NamedSharding(mesh, P(*([None] * l.ndim))),
+                               opt_struct)
+    b_shard = jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                           sharder.batch_specs(batch_struct))
+
+    k = max(1, run_cfg.microbatch)
+
+    def train_step(params, opt_state, batch):
+        with sh.use_sharding(mesh, rules):
+            def loss_fn(p, mb):
+                loss, metrics = lm_lib.train_loss(p, cfg, mb)
+                return loss, metrics
+
+            if k == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                # Microbatched gradient accumulation (activation memory /k;
+                # fp32 accumulator shards like the params).
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]),
+                    batch)
+
+                def mb_body(acc, mb):
+                    (l, m), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb)
+                    acc = jax.tree.map(
+                        lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                    return acc, (l, m)
+
+                acc0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                grads, (losses, ms) = jax.lax.scan(mb_body, acc0, mbs)
+                grads = jax.tree.map(lambda g: g / k, grads)
+                metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+            grads, gnorm = optim.clip_by_global_norm(grads, run_cfg.grad_clip)
+            new_params, new_opt = optim.update(params, grads, opt_state,
+                                               run_cfg)
+            metrics = dict(metrics, grad_norm=gnorm)
+            return new_params, new_opt, metrics
+
+    in_sh = (p_shard, o_shard, b_shard)
+    out_sh = (p_shard, o_shard, None)
+    return StepBundle(train_step, in_sh, out_sh, donate_argnums=(0, 1),
+                      args_struct=(params_struct, opt_struct, batch_struct))
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, cell, rules_extra=None) -> StepBundle:
+    cfg.moe_groups = _dp_size(mesh)
+    rules = model_rules(cfg, cell, rules_extra)
+    sharder = ParamSharder(cfg, mesh)
+    params_struct = jax.eval_shape(
+        lambda: lm_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    batch_struct = specs_lib.batch_struct(cfg, cell.global_batch,
+                                          cell.seq_len, "prefill")
+    p_shard = sharder.tree_shardings(params_struct)
+    b_shard = jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                           sharder.batch_specs(batch_struct))
+
+    def prefill_step(params, batch):
+        with sh.use_sharding(mesh, rules):
+            logits, caches = lm_lib.prefill(params, cfg, batch, cell.seq_len)
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return token, caches
+
+    return StepBundle(prefill_step, (p_shard, b_shard), None,
+                      args_struct=(params_struct, batch_struct))
+
+
+def build_decode_step(cfg: ModelConfig, mesh, cell, rules_extra=None,
+                      fsdp: bool = True) -> StepBundle:
+    """fsdp=False is serving mode: parameters shard over `model` only and
+    replicate over `data` — an inference step has no optimizer, so the
+    FSDP all-gather-per-step tax buys nothing (§Perf cell C); combine with
+    cfg.param_dtype='bfloat16' for serving-weight memory."""
+    cfg.moe_groups = _dp_size(mesh)
+    context_parallel = cell.global_batch == 1
+    rules = model_rules(cfg, cell, rules_extra)
+    sharder = ParamSharder(cfg, mesh, fsdp=fsdp)
+    params_struct = jax.eval_shape(
+        lambda: lm_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    batch_struct = specs_lib.batch_struct(cfg, cell.global_batch,
+                                          cell.seq_len, "decode")
+    cache_struct = specs_lib.cache_struct(cfg, cell.global_batch, cell.seq_len)
+
+    p_shard = sharder.tree_shardings(params_struct)
+    b_shard = jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                           sharder.batch_specs(batch_struct))
+    c_shard = jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        sharder.cache_specs(cache_struct, context_parallel=context_parallel))
+    t_shard = NamedSharding(mesh, P())
+
+    def decode_step(params, batch, caches, t):
+        with sh.use_sharding(mesh, rules):
+            logits, new_caches = lm_lib.decode_step(params, cfg, batch,
+                                                    caches, t)
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return token, new_caches
+
+    t_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    return StepBundle(decode_step, (p_shard, b_shard, c_shard, t_shard),
+                      (None, c_shard), donate_argnums=(2,),
+                      args_struct=(params_struct, batch_struct, cache_struct,
+                                   t_struct))
+
+
+def build_step(cfg, run_cfg, mesh, cell, rules_extra=None,
+               decode_fsdp: bool = True) -> StepBundle:
+    if cell.kind == "train":
+        return build_train_step(cfg, run_cfg, mesh, cell, rules_extra)
+    if cell.kind == "prefill":
+        return build_prefill_step(cfg, mesh, cell, rules_extra)
+    return build_decode_step(cfg, mesh, cell, rules_extra, fsdp=decode_fsdp)
+
+
+# ===================================================================== #
+# jmpi comm backend — the paper's technique at trainer scale
+# ===================================================================== #
+
+def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
+                          batch_shape, bucket: bool = True):
+    """Whole train step under shard_map: forward/backward on the local batch
+    shard, then an *explicit in-program* jmpi gradient allreduce (optionally
+    int8/bf16-compressed), then the optimizer — compute and communication in
+    ONE compiled block, exactly the numba-mpi thesis.  Model-parallel axes
+    are not used here (pure DP over all mesh axes); intended for the π-scale
+    examples and the trainer-comm benchmark.
+
+    ``bucket=True`` flattens all gradient leaves into ONE fp32 vector and
+    allreduces once (NCCL-style gradient bucketing): one collective per step
+    instead of one per parameter — a beyond-paper optimization recorded in
+    EXPERIMENTS.md §Perf.
+    """
+    axes = tuple(mesh.axis_names)
+    bits = run_cfg.grad_compression_bits
+
+    def _flatten_bucket(grads):
+        flat, tdef = jax.tree.flatten(grads)
+        sizes = [g.size for g in flat]
+        shapes = [g.shape for g in flat]
+        vec = jnp.concatenate([g.reshape(-1).astype(jnp.float32)
+                               for g in flat])
+        return vec, (tdef, sizes, shapes, [g.dtype for g in flat])
+
+    def _unflatten_bucket(vec, spec):
+        tdef, sizes, shapes, dtypes = spec
+        out, off = [], 0
+        for sz, shp, dt in zip(sizes, shapes, dtypes):
+            out.append(vec[off:off + sz].reshape(shp).astype(dt))
+            off += sz
+        return jax.tree.unflatten(tdef, out)
+
+    def local_step(params, opt_state, comp_state, batch):
+        comm = jmpi.Communicator(axes)
+        n = comm.size()
+
+        def loss_fn(p):
+            loss, metrics = lm_lib.train_loss(p, cfg, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        if bucket:
+            vec, spec = _flatten_bucket(grads)
+            if bits:
+                cvec, cspec = _flatten_bucket(comp_state)
+                _, rvec, nc = jmpi.compressed_allreduce(
+                    vec, jmpi.CompressionState(error=cvec), comm=comm,
+                    bits=bits, mean=True)
+                comp_state = _unflatten_bucket(nc.error, cspec)
+            else:
+                _, rvec = jmpi.allreduce(vec)
+                rvec = rvec / n
+            grads = _unflatten_bucket(rvec, spec)
+        else:
+            flat, tdef = jax.tree.flatten(grads)
+            if bits:
+                cflat = tdef.flatten_up_to(comp_state)
+                out_flat, new_c = [], []
+                for g, cs in zip(flat, cflat):
+                    _, r, nc = jmpi.compressed_allreduce(g, cs, comm=comm,
+                                                         bits=bits, mean=True)
+                    out_flat.append(r)
+                    new_c.append(nc)
+                grads = jax.tree.unflatten(tdef, out_flat)
+                comp_state = jax.tree.unflatten(tdef, new_c)
+            else:
+                grads = jax.tree.unflatten(
+                    tdef, [jmpi.allreduce(g)[1] / n for g in flat])
+
+        grads, gnorm = optim.clip_by_global_norm(grads, run_cfg.grad_clip)
+        new_params, new_opt = optim.update(params, grads, opt_state, run_cfg)
+        _, loss_mean = jmpi.allreduce(loss)
+        return new_params, new_opt, comp_state, loss_mean / n
+
+    pspec = jax.tree.map(lambda _: P(), jax.eval_shape(
+        lambda: lm_lib.init_params(cfg, jax.random.PRNGKey(0))))
+    from jax.sharding import PartitionSpec
+    data_spec = P(axes)
+
+    step = jmpi.spmd(mesh,
+                     in_specs=(P(), P(), P(), data_spec),
+                     out_specs=(P(), P(), P(), P()))(local_step)
+    return step

@@ -1,0 +1,447 @@
+"""Multi-rank jmpi cases (run under 8 emulated devices via repro.testing).
+
+Each ``case_*`` function mirrors one slice of the numba-mpi v1.0 test matrix
+(paper §2.5): wrapper↔MPI mapping, dtype coverage, contiguity handling,
+JIT-enabled and JIT-disabled execution.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # full dtype matrix (child proc only)
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+import repro.core as jmpi
+from repro.core import ref
+
+N = 8
+DTYPES = [jnp.float32, jnp.float64, jnp.int32, jnp.int64, jnp.complex64,
+          jnp.bfloat16]
+
+
+def mesh1d():
+    return jax.make_mesh((N,), ("ranks",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def mesh2d():
+    return jax.make_mesh((2, 4), ("a", "b"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def shards_of(out):
+    return [np.asarray(out[i]) for i in range(out.shape[0])]
+
+
+def spmd_collective(fn, shards, out_shape_factor=1):
+    """Run fn(rank_local_block) on every rank; return per-rank results."""
+    mesh = mesh1d()
+
+    @jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))
+    def run(x):
+        y = fn(x[0])
+        return y[None]
+
+    glob = jnp.stack(shards)
+    return shards_of(run(glob))
+
+
+def rand(shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        x = rng.standard_normal(shape) + 1j * rng.standard_normal(shape)
+    elif jnp.issubdtype(jnp.dtype(dtype), np.integer):
+        x = rng.integers(-20, 20, size=shape)
+    else:
+        x = rng.standard_normal(shape)
+    return np.asarray(jnp.asarray(x, dtype=dtype))
+
+
+# ---------------------------------------------------------------------- #
+# identity / environment
+# ---------------------------------------------------------------------- #
+
+def case_rank_size_initialized():
+    assert jmpi.initialized()
+    mesh = mesh1d()
+
+    @jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))
+    def f(x):
+        r = jmpi.rank()
+        assert jmpi.size() == N  # static int at trace time
+        return (x[0] * 0 + r)[None]
+
+    out = f(jnp.zeros((N, 1), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out).ravel(), np.arange(N))
+
+
+def case_wtime():
+    t0 = jmpi.wtime()
+    t1 = jmpi.wtime()
+    assert t1 >= t0
+
+
+# ---------------------------------------------------------------------- #
+# p2p
+# ---------------------------------------------------------------------- #
+
+def case_sendrecv_ring_all_dtypes():
+    for dt in DTYPES:
+        src = [rand((3, 2), dt, seed=i) for i in range(N)]
+
+        def ring(x):
+            comm = jmpi.world()
+            status, y = jmpi.sendrecv(x, pairs=comm.ring_perm(1))
+            assert status == jmpi.SUCCESS
+            return y
+
+        got = spmd_collective(ring, src)
+        want = ref.ppermute(src, [(i, (i + 1) % N) for i in range(N)])
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w, err_msg=f"dtype={dt}")
+
+
+def case_listing5_exchange():
+    """Paper Listing 5: ranks 0 and 1 exchange buffers via isend/irecv+waitall."""
+    src = [rand((100,), jnp.float64, seed=i) for i in range(N)]
+
+    def exchange(x):
+        req = jmpi.isendrecv(x, pairs=[(0, 1), (1, 0)], tag=11)
+        status, [y] = jmpi.waitall([req])
+        assert status == jmpi.SUCCESS
+        return y
+
+    got = spmd_collective(exchange, src)
+    np.testing.assert_array_equal(got[0], src[1])
+    np.testing.assert_array_equal(got[1], src[0])
+    for i in range(2, N):
+        np.testing.assert_array_equal(got[i], np.zeros_like(src[i]))
+
+
+def case_send_recv_blocking_pair():
+    src = [rand((4, 4), jnp.float32, seed=10 + i) for i in range(N)]
+
+    def f(x):
+        status, y = jmpi.recv(x, source=2, dest=5, tag=7)
+        assert status == jmpi.SUCCESS
+        return y
+
+    got = spmd_collective(f, src)
+    np.testing.assert_array_equal(got[5], src[2])
+
+
+def case_isend_wait_test_variants():
+    src = [rand((6,), jnp.float32, seed=20 + i) for i in range(N)]
+
+    def f(x):
+        r1 = jmpi.isendrecv(x, pairs=[(0, 3)], tag=1)
+        r2 = jmpi.isendrecv(x * 2, pairs=[(1, 4)], tag=2)
+        st, flag, v1 = jmpi.test(r1)
+        assert st == jmpi.SUCCESS
+        st, idx, v2 = jmpi.waitany([r2])
+        assert idx == 0
+        return v1 + v2
+
+    got = spmd_collective(f, src)
+    np.testing.assert_allclose(got[3], src[0], rtol=1e-6)
+    np.testing.assert_allclose(got[4], 2 * src[1], rtol=1e-6)
+
+
+def case_p2p_trace_time_topology_errors():
+    src = [rand((2,), jnp.float32, seed=i) for i in range(N)]
+
+    def bad(x):
+        status, y = jmpi.sendrecv(x, pairs=[(0, 1), (0, 2)])  # src 0 twice
+        return y
+
+    try:
+        spmd_collective(bad, src)
+    except Exception as e:
+        assert "injective" in str(e)
+    else:
+        raise AssertionError("expected trace-time topology error")
+
+
+# ---------------------------------------------------------------------- #
+# collectives vs numpy oracle
+# ---------------------------------------------------------------------- #
+
+def case_allreduce_operators():
+    for op, name in [(jmpi.Operator.SUM, "sum"), (jmpi.Operator.MIN, "min"),
+                     (jmpi.Operator.MAX, "max"), (jmpi.Operator.PROD, "prod")]:
+        src = [rand((2, 3), jnp.float64, seed=30 + i) for i in range(N)]
+        got = spmd_collective(
+            lambda x, op=op: jmpi.allreduce(x, op)[1], src)
+        want = ref.allreduce([np.asarray(s) for s in src], name)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-10, err_msg=name)
+
+
+def case_allreduce_logical():
+    src = [np.asarray(rand((5,), jnp.int32, seed=40 + i) % 2) for i in range(N)]
+    for op, name in [(jmpi.Operator.LAND, "land"), (jmpi.Operator.LOR, "lor")]:
+        got = spmd_collective(lambda x, op=op: jmpi.allreduce(x, op)[1],
+                              [jnp.asarray(s) for s in src])
+        want = ref.allreduce(src, name)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w, err_msg=name)
+
+
+def case_bcast_all_dtypes():
+    for dt in DTYPES:
+        src = [rand((3, 3), dt, seed=50 + i) for i in range(N)]
+        got = spmd_collective(lambda x: jmpi.bcast(x, root=3)[1], src)
+        want = ref.bcast(src, root=3)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w, err_msg=str(dt))
+
+
+def case_scatter_gather_allgather():
+    src = [rand((N * 2, 3), jnp.float32, seed=60 + i) for i in range(N)]
+    got = spmd_collective(lambda x: jmpi.scatter(x, root=1)[1], src)
+    want = ref.scatter(src, root=1)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+    small = [rand((2, 3), jnp.float32, seed=70 + i) for i in range(N)]
+    got = spmd_collective(lambda x: jmpi.allgather(x)[1], small)
+    want = ref.allgather(small)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+    got = spmd_collective(lambda x: jmpi.gather(x, root=0)[1], small)
+    want = ref.gather(small, root=0)
+    np.testing.assert_array_equal(got[0], want[0])
+
+
+def case_alltoall_reduce_scatter():
+    src = [rand((N, 4), jnp.float32, seed=80 + i) for i in range(N)]
+    got = spmd_collective(lambda x: jmpi.alltoall(x)[1], src)
+    want = ref.alltoall(src)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+    src = [rand((N * 2,), jnp.float32, seed=90 + i) for i in range(N)]
+    got = spmd_collective(lambda x: jmpi.reduce_scatter(x)[1], src)
+    want = ref.reduce_scatter(src)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-6)
+
+
+def case_barrier_and_token_sequencing():
+    src = [rand((4,), jnp.float32, seed=100 + i) for i in range(N)]
+
+    def f(x):
+        comm = jmpi.world()
+        _, a = jmpi.sendrecv(x, pairs=comm.ring_perm(1))
+        assert jmpi.barrier() == jmpi.SUCCESS
+        _, b = jmpi.sendrecv(a, pairs=comm.ring_perm(1))
+        return b
+
+    got = spmd_collective(f, src)
+    want = ref.ppermute(ref.ppermute(src, [(i, (i + 1) % N) for i in range(N)]),
+                        [(i, (i + 1) % N) for i in range(N)])
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+# ---------------------------------------------------------------------- #
+# non-contiguous views (paper §2.3 / Listing 6)
+# ---------------------------------------------------------------------- #
+
+def case_view_strided_send_recv():
+    src = [rand((6, 6), jnp.float64, seed=110 + i) for i in range(N)]
+
+    def f(x):
+        view = jmpi.View(x, (slice(1, 5), slice(0, 6, 2)))  # strided interior
+        dst = jnp.zeros_like(x)
+        dview = jmpi.View(dst, (slice(1, 5), slice(0, 6, 2)))
+        req = jmpi.isendrecv(view, pairs=[(0, 1)], recv_into=dview)
+        _, y = jmpi.wait(req)
+        return y
+
+    got = spmd_collective(f, src)
+    want = np.zeros_like(np.asarray(src[1]))
+    want[1:5, 0:6:2] = np.asarray(src[0])[1:5, 0:6:2]
+    np.testing.assert_array_equal(got[1], want)
+
+
+def case_view_transposed_fortran_analogue():
+    src = [rand((4, 8), jnp.float32, seed=120 + i) for i in range(N)]
+
+    def f(x):
+        xt = x.T  # Fortran-order analogue (DESIGN.md §2)
+        _, y = jmpi.sendrecv(jmpi.View(xt, (slice(None), slice(1, 3))),
+                             pairs=[(2, 0)])
+        return y
+
+    got = spmd_collective(f, src)
+    np.testing.assert_array_equal(got[0], np.asarray(src[2]).T[:, 1:3])
+
+
+# ---------------------------------------------------------------------- #
+# communicators over mesh-axis subsets (beyond v1.0)
+# ---------------------------------------------------------------------- #
+
+def case_subcommunicators_2d():
+    mesh = mesh2d()
+
+    @jmpi.spmd(mesh, in_specs=P("a", "b"), out_specs=(P("a", "b"), P("a", "b")))
+    def f(x):
+        x = x[0, 0]
+        world = jmpi.world()
+        assert world.size() == 8 and world.axes == ("a", "b")
+        row = world.split(["b"])   # 2 groups of 4
+        col = world.split(["a"])   # 4 groups of 2
+        _, rsum = jmpi.allreduce(x, comm=row)
+        _, csum = jmpi.allreduce(x, comm=col)
+        return rsum[None, None], csum[None, None]
+
+    x = jnp.arange(8.0).reshape(2, 4)
+    rsum, csum = f(x)
+    np.testing.assert_allclose(np.asarray(rsum),
+                               np.broadcast_to(x.sum(1, keepdims=True), (2, 4)))
+    np.testing.assert_allclose(np.asarray(csum),
+                               np.broadcast_to(np.asarray(x).sum(0), (2, 4)))
+
+
+def case_multiaxis_world_ppermute():
+    mesh = mesh2d()
+
+    @jmpi.spmd(mesh, in_specs=P("a", "b"), out_specs=P("a", "b"))
+    def f(x):
+        x = x[0, 0]
+        comm = jmpi.world()
+        _, y = jmpi.sendrecv(x, pairs=comm.ring_perm(1))
+        return y[None, None]
+
+    x = jnp.arange(8.0).reshape(2, 4)
+    y = np.asarray(f(x)).ravel()
+    np.testing.assert_allclose(y, np.roll(np.arange(8.0), 1))
+
+
+# ---------------------------------------------------------------------- #
+# ring schedules & compression (beyond-paper §7)
+# ---------------------------------------------------------------------- #
+
+def case_ring_allreduce_matches_psum():
+    for numel in (16, 33, 257):  # incl. non-divisible-by-8 sizes
+        src = [rand((numel,), jnp.float32, seed=130 + i) for i in range(N)]
+        got = spmd_collective(lambda x: jmpi.ring_allreduce(x)[1], src)
+        want = ref.allreduce([np.asarray(s) for s in src], "sum")
+        for g, w in zip(got, want):
+            # fp32 summation order differs between ring and tree schedules
+            np.testing.assert_allclose(g, w, rtol=5e-5, atol=1e-6,
+                                       err_msg=f"n={numel}")
+
+
+def case_ring_allgather_matches():
+    src = [rand((3, 2), jnp.float32, seed=140 + i) for i in range(N)]
+    got = spmd_collective(lambda x: jmpi.ring_allgather(x)[1], src)
+    want = ref.allgather([np.asarray(s) for s in src])
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-6)
+
+
+def case_compressed_allreduce_accuracy_and_feedback():
+    rng = np.random.default_rng(0)
+    g_global = [rng.standard_normal((64,)).astype(np.float32) for _ in range(N)]
+    mean_true = np.mean(np.stack(g_global), axis=0)
+
+    def f(x):
+        x = x[0]
+        st = jmpi.init_state(x)
+        status, red, st2 = jmpi.compressed_allreduce(x, st, bits=8)
+        assert status == jmpi.SUCCESS
+        return jnp.stack([red, st2.error])[None]
+
+    mesh = mesh1d()
+    run = jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))(f)
+    out = run(jnp.stack(g_global)[:, None])
+    red = np.asarray(out[0, 0]).ravel()
+    err = np.asarray(out[0, 1]).ravel()
+    amax = np.abs(np.stack(g_global)).max()
+    np.testing.assert_allclose(red, mean_true, atol=2 * amax / 127)
+    # error feedback: residual bounded by one quantization level
+    assert np.abs(err).max() <= amax / 127 + 1e-6
+
+    # bf16 mode
+    def f16(x):
+        x = x[0]
+        st = jmpi.init_state(x)
+        _, red, _ = jmpi.compressed_allreduce(x, st, bits=16)
+        return red[None]
+
+    run16 = jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))(f16)
+    red16 = np.asarray(run16(jnp.stack(g_global)[:, None]))[0, 0]
+    np.testing.assert_allclose(red16, mean_true, atol=amax / 64)
+
+
+# ---------------------------------------------------------------------- #
+# JIT-disabled debug mode (paper: full functionality with JIT off)
+# ---------------------------------------------------------------------- #
+
+def case_disable_jit_debug_mode():
+    src = [rand((4,), jnp.float32, seed=150 + i) for i in range(N)]
+    with jax.disable_jit():
+        got = spmd_collective(lambda x: jmpi.allreduce(x)[1], src)
+    want = ref.allreduce([np.asarray(s) for s in src], "sum")
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------- #
+# property-based (hypothesis) — invariants over shapes/dtypes
+# ---------------------------------------------------------------------- #
+
+def case_property_collectives_match_oracle():
+    from hypothesis import given, settings, strategies as st
+
+    dtypes = st.sampled_from([np.float32, np.float64, np.int32])
+    shapes = st.tuples(st.integers(1, 5), st.integers(1, 4))
+
+    @settings(max_examples=15, deadline=None)
+    @given(dt=dtypes, shape=shapes, seed=st.integers(0, 2**16),
+           op=st.sampled_from(["sum", "min", "max"]))
+    def inner(dt, shape, seed, op):
+        rng = np.random.default_rng(seed)
+        if np.issubdtype(dt, np.integer):
+            src = [rng.integers(-9, 9, size=shape).astype(dt) for _ in range(N)]
+        else:
+            src = [rng.standard_normal(shape).astype(dt) for _ in range(N)]
+        opmap = {"sum": jmpi.Operator.SUM, "min": jmpi.Operator.MIN,
+                 "max": jmpi.Operator.MAX}
+        got = spmd_collective(
+            lambda x, o=opmap[op]: jmpi.allreduce(x, o)[1],
+            [jnp.asarray(s) for s in src])
+        want = ref.allreduce(src, op)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5)
+
+    inner()
+
+
+def case_property_permute_roundtrip():
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(shift=st.integers(1, N - 1), seed=st.integers(0, 2**16))
+    def inner(shift, seed):
+        rng = np.random.default_rng(seed)
+        src = [rng.standard_normal((3,)).astype(np.float32) for _ in range(N)]
+
+        def f(x, s=shift):
+            comm = jmpi.world()
+            _, y = jmpi.sendrecv(x, pairs=comm.ring_perm(s))
+            _, z = jmpi.sendrecv(y, pairs=comm.ring_perm(N - s))
+            return z
+
+        got = spmd_collective(f, [jnp.asarray(s) for s in src])
+        for g, w in zip(got, src):  # shift then unshift == identity
+            np.testing.assert_allclose(g, w, rtol=1e-6)
+
+    inner()

@@ -1,0 +1,108 @@
+"""Multi-rank PDE cases (paper §3): halo exchange correctness, distributed
+Cahn–Hilliard vs single-device oracle, MPDATA vs oracle across decomposition
+layouts + conservation/positivity properties.  Run under 8 emulated devices.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+import repro.core as jmpi
+from repro.pde import cahn_hilliard as ch
+from repro.pde import mpdata
+from repro.pde.stencil import halo_exchange_2d
+
+
+def mesh2d(rows, cols, axes=("px", "py")):
+    return jax.make_mesh((rows, cols), axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def case_halo_exchange_matches_roll():
+    """Halo-padded blocks must reproduce the globally-rolled array."""
+    for rows, cols in ((2, 4), (4, 2), (1, 8), (8, 1)):
+        mesh = mesh2d(rows, cols)
+        n = 16
+        x = jnp.arange(n * n, dtype=jnp.float32).reshape(n, n)
+
+        @jmpi.spmd(mesh, in_specs=P("px", "py"), out_specs=P("px", "py"))
+        def f(blk):
+            world = jmpi.world()
+            cr = world.split(["px"]) if rows > 1 else None
+            cc = world.split(["py"]) if cols > 1 else None
+            h = halo_exchange_2d(blk, cr, cc, halo=1)
+            # interior of padded block must equal block; check neighbours by
+            # reconstructing the shifted field
+            up = h[0:blk.shape[0], 1:1 + blk.shape[1]]
+            return up  # block shifted down by one row (periodic)
+
+        got = f(x)
+        want = jnp.roll(x, 1, axis=0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   err_msg=f"decomp {rows}x{cols}")
+
+
+def case_cahn_hilliard_matches_oracle():
+    rng = np.random.default_rng(0)
+    n = 32
+    c0 = jnp.asarray(0.5 + 0.01 * rng.standard_normal((n, n)), jnp.float32)
+    for rows, cols in ((2, 4), (1, 8)):
+        mesh = mesh2d(rows, cols)
+        run = ch.make_solver(mesh, (rows, cols), inner_steps=20)
+        got = run(c0, n_outer=1)
+        want = c0
+        for _ in range(20):
+            want = ch.reference_step(want)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-4,
+                                   err_msg=f"decomp {rows}x{cols}")
+
+
+def case_mpdata_matches_oracle_all_layouts():
+    """Paper Fig. 3: decomposition along dim 0 / dim 1 / 2-D must all give
+    the same (oracle) answer."""
+    rng = np.random.default_rng(1)
+    n = 32
+    psi0 = jnp.asarray(np.exp(-((np.arange(n) - 16) ** 2)[:, None] / 32
+                              - ((np.arange(n) - 12) ** 2)[None, :] / 32),
+                       jnp.float32) + 0.01
+    want = psi0
+    for _ in range(10):
+        want = mpdata.reference_step(want)
+    for rows, cols in ((8, 1), (1, 8), (2, 4)):
+        mesh = mesh2d(rows, cols)
+        run = mpdata.make_solver(mesh, inner_steps=10)
+        got = run(psi0, n_outer=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-4,
+                                   err_msg=f"decomp {rows}x{cols}")
+
+
+def case_mpdata_conservation_and_positivity():
+    """Property: homogeneous periodic advection conserves Σψ and keeps ψ>0."""
+    rng = np.random.default_rng(2)
+    n = 32
+    psi0 = jnp.asarray(np.abs(rng.standard_normal((n, n))) + 0.1, jnp.float32)
+    mesh = mesh2d(2, 4)
+    run = mpdata.make_solver(mesh, inner_steps=25)
+    out = run(psi0, n_outer=2)
+    np.testing.assert_allclose(float(out.sum()), float(psi0.sum()),
+                               rtol=1e-5)
+    assert float(out.min()) >= 0.0
+
+
+def case_cahn_hilliard_conserves_mass_when_k0():
+    """Property: pure Cahn–Hilliard (k=0) conserves total concentration."""
+    rng = np.random.default_rng(3)
+    n = 32
+    c0 = jnp.asarray(0.5 + 0.05 * rng.standard_normal((n, n)), jnp.float32)
+    mesh = mesh2d(2, 4)
+    run = ch.make_solver(mesh, (2, 4), k=0.0, inner_steps=50)
+    out = run(c0, n_outer=1)
+    np.testing.assert_allclose(float(out.mean()), float(c0.mean()),
+                               rtol=1e-6)

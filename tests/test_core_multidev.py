@@ -1,0 +1,44 @@
+"""Pytest wrappers for the multi-rank jmpi cases (8 emulated devices).
+
+The device-count flag is process-global, so each case module runs in a child
+process (see repro.testing); the transcript lists per-case PASS/FAIL.
+"""
+
+import pytest
+
+from repro.testing import run_cases
+
+CASES = [
+    "case_rank_size_initialized",
+    "case_wtime",
+    "case_sendrecv_ring_all_dtypes",
+    "case_listing5_exchange",
+    "case_send_recv_blocking_pair",
+    "case_isend_wait_test_variants",
+    "case_p2p_trace_time_topology_errors",
+    "case_allreduce_operators",
+    "case_allreduce_logical",
+    "case_bcast_all_dtypes",
+    "case_scatter_gather_allgather",
+    "case_alltoall_reduce_scatter",
+    "case_barrier_and_token_sequencing",
+    "case_view_strided_send_recv",
+    "case_view_transposed_fortran_analogue",
+    "case_subcommunicators_2d",
+    "case_multiaxis_world_ppermute",
+    "case_ring_allreduce_matches_psum",
+    "case_ring_allgather_matches",
+    "case_compressed_allreduce_accuracy_and_feedback",
+    "case_disable_jit_debug_mode",
+    "case_property_collectives_match_oracle",
+    "case_property_permute_roundtrip",
+]
+
+# One subprocess for the whole module keeps jax-import cost paid once; the
+# transcript still reports each case. Individual reruns:
+#   pytest -k case_name  (runs just that case in its own child)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_core_case(case):
+    run_cases("tests.cases_core", n_devices=8, only=case)

@@ -1,0 +1,18 @@
+"""Pytest wrappers for multi-rank distributed-runtime cases."""
+
+import pytest
+
+from repro.testing import run_cases
+
+CASES = [
+    "case_pipeline_matches_stacked_forward",
+    "case_collective_matmul_ag_matches",
+    "case_collective_matmul_rs_matches",
+    "case_jmpi_trainer_matches_gspmd",
+    "case_jmpi_trainer_compressed_grads_converge",
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_distributed_case(case):
+    run_cases("tests.cases_distributed", n_devices=8, only=case)

@@ -1,0 +1,18 @@
+"""Pytest wrappers for the multi-rank PDE cases (8 emulated devices)."""
+
+import pytest
+
+from repro.testing import run_cases
+
+CASES = [
+    "case_halo_exchange_matches_roll",
+    "case_cahn_hilliard_matches_oracle",
+    "case_mpdata_matches_oracle_all_layouts",
+    "case_mpdata_conservation_and_positivity",
+    "case_cahn_hilliard_conserves_mass_when_k0",
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_pde_case(case):
+    run_cases("tests.cases_pde", n_devices=8, only=case)
