@@ -1,21 +1,43 @@
 """jmpi collective microbenchmarks (8 emulated ranks).
 
 Per op × payload size: µs/call of the JIT-resident collective (whole timed
-loop compiled — 100 chained calls per dispatch to amortize dispatch cost)
+loop compiled — chained calls per dispatch to amortize dispatch cost)
 plus the host round-trip equivalent for allreduce (the Listing-2 cost).
 Derived column reports effective GB/s through the emulated transport.
+
+``--sweep-algorithms``: sweep every registered collective algorithm over the
+payload grid, print the per-cell winners (crossover points) and the derived
+size-aware policy table (``repro.launch.collective_tuner``); ``--emit-policy
+PATH`` additionally writes the JSON table that ``jmpi.load_policy`` consumes.
 """
 
 from __future__ import annotations
 
-import timeit
+import argparse
+import os
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
+# Process-global and read at backend init: emulate 8 devices when the caller
+# (benchmarks/run.py child_env, CI) has not already pinned a device count.
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", "")).strip()
 
-import repro.core as jmpi
+# Self-contained invocation (`python benchmarks/bench_collectives.py`):
+# make src/ importable without requiring the caller to export PYTHONPATH.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import timeit            # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+import repro.core as jmpi                    # noqa: E402
+from repro.core import compat                # noqa: E402
 
 INNER = 50
 
@@ -51,9 +73,8 @@ def timed_loop(mesh, op, numel):
     return t / INNER
 
 
-def main():
-    mesh = jax.make_mesh((len(jax.devices()),), ("ranks",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+def micro():
+    mesh = compat.make_mesh((len(jax.devices()),), ("ranks",))
     n = mesh.devices.size
     for numel in (1024, 65536, 1048576):
         nbytes = numel * 4
@@ -65,6 +86,37 @@ def main():
             wire = 2 * (n - 1) / n * nbytes if "allreduce" in op else nbytes
             print(f"coll_{op}_{numel},{t*1e6:.2f},"
                   f"bytes={nbytes} eff_GBps={wire/t/1e9:.2f}")
+
+
+def sweep_algorithms(emit_policy: str | None):
+    from repro.launch import collective_tuner
+
+    mesh = collective_tuner.tune_mesh(len(jax.devices()))
+    records = collective_tuner.sweep(mesh)
+    print("op,algorithm,numel,us_per_call")
+    for r in records:
+        print(f"{r['op']},{r['algorithm']},{r['numel']},"
+              f"{r['us_per_call']:.2f}")
+    print()
+    print(collective_tuner.crossover_report(records))
+    table = collective_tuner.build_policy(records)
+    print()
+    print("derived policy table (non-default rules = measured wins):")
+    print(table.describe())
+    if emit_policy:
+        table.save(emit_policy)
+        print(f"\npolicy table written to {emit_policy}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep-algorithms", action="store_true")
+    ap.add_argument("--emit-policy", default=None)
+    args = ap.parse_args()
+    if args.sweep_algorithms:
+        sweep_algorithms(args.emit_policy)
+    else:
+        micro()
 
 
 if __name__ == "__main__":

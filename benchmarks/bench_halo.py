@@ -14,6 +14,7 @@ from __future__ import annotations
 import timeit
 
 import jax
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -27,8 +28,7 @@ def main():
     n_dev = len(jax.devices())
     rows = min(2, n_dev)
     cols = n_dev // rows
-    mesh = jax.make_mesh((rows, cols), ("px", "py"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((rows, cols), ("px", "py"))
     rng = np.random.default_rng(0)
     c0 = jnp.asarray(0.5 + 0.01 * rng.standard_normal((GRID, GRID)),
                      jnp.float32)

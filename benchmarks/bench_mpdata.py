@@ -11,6 +11,7 @@ from __future__ import annotations
 import timeit
 
 import jax
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -36,8 +37,7 @@ def main():
     if n_dev >= 4:
         layouts.append((2, n_dev // 2))
     for rows, cols in layouts:
-        mesh = jax.make_mesh((rows, cols), ("px", "py"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((rows, cols), ("px", "py"))
         run = mpdata.make_solver(mesh, inner_steps=STEPS)
         check = mpdata.make_solver(mesh, inner_steps=5)
         got = check(psi0)

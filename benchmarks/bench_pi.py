@@ -24,6 +24,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 import repro.core as jmpi
+from repro.core import compat
 
 N_TIMES = 200          # paper uses 10000; scaled to CPU-emulated devices
 RTOL = 1e-3
@@ -160,8 +161,7 @@ def make_pi_roundtrip(mesh, n_intervals):
 
 
 def bench_speedup_sweep():
-    mesh = jax.make_mesh((len(jax.devices()),), ("ranks",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((len(jax.devices()),), ("ranks",))
     rows = []
     for x in (1, 4, 16):
         n_intervals = max(64, N_TIMES // x)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core as jmpi
+from repro.core import compat
 from repro.configs import get_tiny
 from repro.configs.base import RunConfig
 from repro.launch.specs import synth_batch
@@ -30,8 +31,7 @@ from repro.train.trainer import build_jmpi_train_step
 
 def main():
     cfg = get_tiny("yi-6b")
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((len(jax.devices()),), ("data",))
     n = mesh.devices.size
     batch = synth_batch(cfg, batch=8 * n, seq=64, kind="train")
 
@@ -62,7 +62,7 @@ def main():
     # into two dispatches with a host synchronization between them (grads+
     # reduce | optimizer) — the communication mechanism held fixed, so
     # t_roundtrip/t_jmpi isolates the leave-the-compiled-block cost.
-    grad_reduce_fn = jax.jit(jax.shard_map(
+    grad_reduce_fn = jax.jit(compat.shard_map(
         lambda p, b: jax.tree.map(
             lambda g: jax.lax.pmean(g, "data"),
             jax.grad(lambda pp: lm_lib.train_loss(pp, cfg, b)[0])(p)),
@@ -84,7 +84,7 @@ def main():
     # --- hostbridge: per-rank grads to host, numpy reduction, re-upload —
     # the full mpi4py pattern (different transport: see EXPERIMENTS.md
     # emulation caveat).
-    grad_fn = jax.jit(jax.shard_map(
+    grad_fn = jax.jit(compat.shard_map(
         lambda p, b: jax.tree.map(
             lambda g: g[None],
             jax.grad(lambda pp: lm_lib.train_loss(pp, cfg, b)[0])(p)),

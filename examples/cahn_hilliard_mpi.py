@@ -15,6 +15,7 @@ if "XLA_FLAGS" not in os.environ:
 sys.path.insert(0, "src")
 
 import jax  # noqa: E402
+from repro.core import compat
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
@@ -27,8 +28,7 @@ def main():
     # paper: ScalarField.random_uniform(grid, 0.49, 0.51)
     state = jnp.asarray(rng.uniform(0.49, 0.51, (n, n)), jnp.float32)
 
-    mesh = jax.make_mesh((2, 4), ("px", "py"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("px", "py"))
     run = ch.make_solver(mesh, decomposition=(2, -1), dt=1e-3, k=0.01,
                          c0=0.5, inner_steps=200)
 

@@ -146,5 +146,8 @@ class RunConfig:
     opt_state_dtype: str = "float32"  # float32 | bfloat16 (deepseek memory plan)
     comm_backend: str = "gspmd"      # gspmd | jmpi | hostbridge
     grad_compression_bits: int = 0   # 0 = off, 8 or 16
+    # Collective-algorithm registry knobs (repro.core.registry):
+    collective_policy: str = ""      # path to a tuner-emitted policy JSON
+    collective_algorithm: str = ""   # force the grad-allreduce algorithm
     microbatch: int = 0              # 0 = no grad accumulation
     seed: int = 0

@@ -16,12 +16,31 @@ Typical use (paper Listing 3 analogue)::
         part = get_pi_part(intervals, jmpi.rank(), jmpi.size())
         status, pi = jmpi.allreduce(part)
         return pi
+
+Collective algorithm registry
+-----------------------------
+Each logical collective has multiple registered lowerings (``xla_native``,
+``ring``, ``recursive_doubling``, ``tree``, ``pairwise``, ``bf16_wire``);
+the active :class:`repro.core.registry.PolicyTable` picks one per call from
+the payload bytes and group size, **at trace time**.  Control points::
+
+    jmpi.allreduce(x, algorithm="ring")          # force per call
+    jmpi.set_algorithm("allreduce", "ring")      # force per process
+    with jmpi.algorithm_override(bcast="tree"):  # force per scope
+        ...
+    jmpi.load_policy("experiments/collective_policy.json")  # tuned table
+
+Regenerate the tuned table with ``python -m repro.launch.hillclimb
+--tune-collectives`` or inspect crossovers with
+``python benchmarks/bench_collectives.py --sweep-algorithms``.
 """
 
 import time as _time
 
 import jax as _jax
 
+from repro.core import registry
+from repro.core import schedules as _schedules  # registers rd/tree/pairwise
 from repro.core.collectives import (Operator, allgather, allreduce, alltoall,
                                     barrier, bcast, gather, reduce_scatter,
                                     scatter)
@@ -29,9 +48,12 @@ from repro.core.comm import Communicator, resolve, set_world, spmd, world
 from repro.core.compression import (CompressionState, compressed_allreduce,
                                     init_state, wire_bytes_per_rank)
 from repro.core.hostbridge import HostBridge
-from repro.core.p2p import (Request, irecv, isend, isendrecv, recv, send,
-                            sendrecv, test, testall, testany, wait, waitall,
-                            waitany)
+from repro.core.p2p import (ANY_TAG, Request, irecv, isend, isendrecv, recv,
+                            send, sendrecv, test, testall, testany, wait,
+                            waitall, waitany)
+from repro.core.registry import (PolicyRule, PolicyTable, algorithm_override,
+                                 algorithms, clear_algorithms, load_policy,
+                                 save_policy, set_algorithm, set_policy)
 from repro.core.ring import ring_allgather, ring_allreduce
 from repro.core.token import (ERR_TOPOLOGY, ERR_TRUNCATE, SUCCESS, TokenContext,
                               ambient, new_token, reset_ambient, tie)
@@ -67,7 +89,7 @@ RequestType = Request  # paper spells it mpi.RequestType in Listing 5
 __all__ = [
     "Operator", "Communicator", "Request", "RequestType", "View",
     "HostBridge", "CompressionState", "TokenContext",
-    "SUCCESS", "ERR_TOPOLOGY", "ERR_TRUNCATE",
+    "SUCCESS", "ERR_TOPOLOGY", "ERR_TRUNCATE", "ANY_TAG",
     "allgather", "allreduce", "alltoall", "barrier", "bcast", "gather",
     "reduce_scatter", "scatter", "sendrecv", "send", "recv", "isend", "irecv",
     "isendrecv", "wait", "waitall", "waitany", "test", "testall", "testany",
@@ -75,4 +97,7 @@ __all__ = [
     "wire_bytes_per_rank", "spmd", "world", "set_world", "resolve",
     "ambient", "new_token", "reset_ambient", "tie",
     "initialized", "rank", "size", "wtime",
+    "registry", "PolicyRule", "PolicyTable", "algorithms", "set_algorithm",
+    "clear_algorithms", "algorithm_override", "set_policy", "load_policy",
+    "save_policy",
 ]

@@ -1,11 +1,20 @@
 """Collective operations: allreduce, bcast, scatter, gather, allgather,
 alltoall, reduce_scatter, barrier — the numba-mpi v1.0 collective surface
-(+ reduce_scatter/alltoall beyond v1.0), lowered to native XLA collectives.
+(+ reduce_scatter/alltoall beyond v1.0), dispatched through the
+collective-algorithm registry (``repro.core.registry``).
 
 Every op: takes NumPy-like payloads (or Views), deduces dtype/shape from the
 data (paper §2.3 "signatures do not require supplying data types or sizes"),
 threads the ordering token, and returns ``(status, value)`` — or
 ``(status, value, token)`` when an explicit token is passed.
+
+Algorithm selection (new in the registry refactor): each logical op has
+≥2 interchangeable lowerings — the ``xla_native`` kernels defined here, the
+chunked-ring schedules in ``repro.core.ring``, and the latency-optimal
+schedules in ``repro.core.schedules``.  Which one lowers is decided at trace
+time from the payload size and group size by the active policy table; force
+a specific one per-call with ``algorithm="ring"`` or globally with
+``jmpi.set_algorithm("allreduce", "ring")``.
 """
 
 from __future__ import annotations
@@ -16,6 +25,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry
 from repro.core import token as token_lib
 from repro.core import views as views_lib
 from repro.core.comm import Communicator, resolve
@@ -51,15 +61,15 @@ def _pack(x):
     return jnp.asarray(x)
 
 
-def allreduce(x, op: Operator = Operator.SUM, *,
-              comm: Communicator | None = None, token=None):
-    """MPI_Allreduce. SUM/MIN/MAX lower to one psum/pmin/pmax; PROD uses an
-    allgather+reduce (XLA has no native product collective); LAND/LOR lower
-    to pmin/pmax over booleans."""
-    comm = resolve(comm)
-    tok, explicit = _tok_in(token)
-    val = _pack(x)
-    tok, val = token_lib.tie(tok, val)
+# ===========================================================================
+# xla_native kernels (registry entries): one XLA collective per op.
+# ===========================================================================
+
+@registry.register("allreduce", "xla_native")
+def _allreduce_xla(val, tok, comm, *, op):
+    """SUM/MIN/MAX lower to one psum/pmin/pmax; PROD uses an allgather+reduce
+    (XLA has no native product collective); LAND/LOR lower to pmin/pmax over
+    booleans."""
     if op is Operator.SUM:
         out = jax.lax.psum(val, comm.axes)
     elif op is Operator.MIN:
@@ -75,21 +85,14 @@ def allreduce(x, op: Operator = Operator.SUM, *,
         out = jax.lax.pmax((val != 0).astype(jnp.int32), comm.axes).astype(val.dtype)
     else:  # pragma: no cover - exhaustive enum
         raise ValueError(f"unsupported operator {op}")
-    new_tok = token_lib.advance(tok, out)
-    return _tok_out(explicit, new_tok, SUCCESS, out)
+    return out, tok
 
 
-def bcast(x, root: int = 0, *, comm: Communicator | None = None, token=None):
-    """MPI_Bcast: root's value lands on every rank.
-
-    Lowered as a masked psum (non-root ranks contribute zeros) — one
-    all-reduce, exact for every dtype (zeros are additive identity), and the
-    pattern XLA rewrites into a broadcast when the mesh topology allows.
-    """
-    comm = resolve(comm)
-    tok, explicit = _tok_in(token)
-    val = _pack(x)
-    tok, val = token_lib.tie(tok, val)
+@registry.register("bcast", "xla_native")
+def _bcast_xla(val, tok, comm, *, root):
+    """Masked psum (non-root ranks contribute zeros) — one all-reduce, exact
+    for every dtype (zeros are additive identity), and the pattern XLA
+    rewrites into a broadcast when the mesh topology allows."""
     mask = (comm.rank() == root)
     contrib = jnp.where(mask, val, jnp.zeros_like(val))
     # Sum of {root's value, zeros} == root's value: exact for every dtype,
@@ -98,14 +101,68 @@ def bcast(x, root: int = 0, *, comm: Communicator | None = None, token=None):
         out = jax.lax.psum(contrib.astype(jnp.int32), comm.axes).astype(jnp.bool_)
     else:
         out = jax.lax.psum(contrib, comm.axes)
+    return out, tok
+
+
+@registry.register("allgather", "xla_native")
+def _allgather_xla(val, tok, comm):
+    out = jax.lax.all_gather(val, comm.axes, axis=0, tiled=True)
+    return out, tok
+
+
+@registry.register("reduce_scatter", "xla_native")
+def _reduce_scatter_xla(val, tok, comm, *, op):
+    out = jax.lax.psum_scatter(val, comm.axes, scatter_dimension=0, tiled=True)
+    return out, tok
+
+
+@registry.register("alltoall", "xla_native",
+                    supports=lambda val, comm, **kw: len(comm.axes) == 1)
+def _alltoall_xla(val, tok, comm, *, split_axis=0, concat_axis=0):
+    out = jax.lax.all_to_all(val, comm.axes[0], split_axis=split_axis,
+                             concat_axis=concat_axis, tiled=True)
+    return out, tok
+
+
+# ===========================================================================
+# Public ops — pack payload, select algorithm, thread the token.
+# ===========================================================================
+
+def allreduce(x, op: Operator = Operator.SUM, *,
+              comm: Communicator | None = None, token=None,
+              algorithm: str | None = None):
+    """MPI_Allreduce.  ``algorithm``: force a registry entry by name
+    (xla_native | ring | recursive_doubling | bf16_wire); default is the
+    active policy's size-aware choice."""
+    comm = resolve(comm)
+    tok, explicit = _tok_in(token)
+    val = _pack(x)
+    algo = registry.select("allreduce", val, comm, algorithm=algorithm, op=op)
+    tok, val = token_lib.tie(tok, val)
+    out, tok = algo.fn(val, tok, comm, op=op)
     new_tok = token_lib.advance(tok, out)
     return _tok_out(explicit, new_tok, SUCCESS, out)
 
 
-def scatter(x, root: int = 0, *, comm: Communicator | None = None, token=None):
+def bcast(x, root: int = 0, *, comm: Communicator | None = None, token=None,
+          algorithm: str | None = None):
+    """MPI_Bcast: root's value lands on every rank (xla_native | tree)."""
+    comm = resolve(comm)
+    tok, explicit = _tok_in(token)
+    val = _pack(x)
+    algo = registry.select("bcast", val, comm, algorithm=algorithm, root=root)
+    tok, val = token_lib.tie(tok, val)
+    out, tok = algo.fn(val, tok, comm, root=root)
+    new_tok = token_lib.advance(tok, out)
+    return _tok_out(explicit, new_tok, SUCCESS, out)
+
+
+def scatter(x, root: int = 0, *, comm: Communicator | None = None, token=None,
+            algorithm: str | None = None):
     """MPI_Scatter: rank i receives the i-th equal chunk (axis 0) of root's
     buffer. Lowered as bcast + static per-rank dynamic_slice; XLA's partitioner
-    elides the unused chunks on real meshes."""
+    elides the unused chunks on real meshes.  The underlying bcast follows the
+    same algorithm selection as :func:`bcast`."""
     comm = resolve(comm)
     tok, explicit = _tok_in(token)
     val = _pack(x)
@@ -113,7 +170,8 @@ def scatter(x, root: int = 0, *, comm: Communicator | None = None, token=None):
     if val.shape[0] % n:
         raise ValueError(f"scatter payload axis0={val.shape[0]} not divisible "
                          f"by comm size {n}")
-    status, full, tok = bcast(val, root, comm=comm, token=tok)
+    status, full, tok = bcast(val, root, comm=comm, token=tok,
+                              algorithm=algorithm)
     chunk = val.shape[0] // n
     start = comm.rank() * chunk
     out = jax.lax.dynamic_slice_in_dim(full, start, chunk, axis=0)
@@ -121,31 +179,35 @@ def scatter(x, root: int = 0, *, comm: Communicator | None = None, token=None):
     return _tok_out(explicit, new_tok, status, out)
 
 
-def allgather(x, *, comm: Communicator | None = None, token=None):
-    """MPI_Allgather: concatenate every rank's buffer along axis 0."""
+def allgather(x, *, comm: Communicator | None = None, token=None,
+              algorithm: str | None = None):
+    """MPI_Allgather: concatenate every rank's buffer along axis 0
+    (xla_native | ring)."""
     comm = resolve(comm)
     tok, explicit = _tok_in(token)
     val = _pack(x)
+    algo = registry.select("allgather", val, comm, algorithm=algorithm)
     tok, val = token_lib.tie(tok, val)
-    out = jax.lax.all_gather(val, comm.axes, axis=0, tiled=True)
+    out, tok = algo.fn(val, tok, comm)
     new_tok = token_lib.advance(tok, out)
     return _tok_out(explicit, new_tok, SUCCESS, out)
 
 
-def gather(x, root: int = 0, *, comm: Communicator | None = None, token=None):
+def gather(x, root: int = 0, *, comm: Communicator | None = None, token=None,
+           algorithm: str | None = None):
     """MPI_Gather: the concatenation is *valid at root*. SPMD lowering uses
     all_gather (every rank materializes the result; contents identical), the
     root-only contract is preserved at the API level."""
     del root  # root-only validity is a contract, not a dataflow difference
-    return allgather(x, comm=comm, token=token)
+    return allgather(x, comm=comm, token=token, algorithm=algorithm)
 
 
 def alltoall(x, *, comm: Communicator | None = None, token=None,
-             split_axis: int = 0, concat_axis: int = 0):
-    """MPI_Alltoall: rank j receives chunk j from every rank, concatenated.
-
-    Payload axis ``split_axis`` must be divisible by comm size.
-    """
+             split_axis: int = 0, concat_axis: int = 0,
+             algorithm: str | None = None):
+    """MPI_Alltoall: rank j receives chunk j from every rank, concatenated
+    (xla_native | pairwise).  Payload axis ``split_axis`` must be divisible
+    by comm size."""
     comm = resolve(comm)
     if len(comm.axes) != 1:
         raise ValueError("alltoall currently requires a single-axis "
@@ -156,16 +218,20 @@ def alltoall(x, *, comm: Communicator | None = None, token=None,
     if val.shape[split_axis] % n:
         raise ValueError(f"alltoall axis {split_axis} size {val.shape[split_axis]}"
                          f" not divisible by comm size {n}")
+    algo = registry.select("alltoall", val, comm, algorithm=algorithm,
+                           split_axis=split_axis, concat_axis=concat_axis)
     tok, val = token_lib.tie(tok, val)
-    out = jax.lax.all_to_all(val, comm.axes[0], split_axis=split_axis,
-                             concat_axis=concat_axis, tiled=True)
+    out, tok = algo.fn(val, tok, comm, split_axis=split_axis,
+                       concat_axis=concat_axis)
     new_tok = token_lib.advance(tok, out)
     return _tok_out(explicit, new_tok, SUCCESS, out)
 
 
 def reduce_scatter(x, op: Operator = Operator.SUM, *,
-                   comm: Communicator | None = None, token=None):
-    """MPI_Reduce_scatter_block (SUM only): psum_scatter along axis 0."""
+                   comm: Communicator | None = None, token=None,
+                   algorithm: str | None = None):
+    """MPI_Reduce_scatter_block (SUM only): psum_scatter along axis 0
+    (xla_native | ring)."""
     comm = resolve(comm)
     if op is not Operator.SUM:
         raise ValueError("reduce_scatter supports SUM only")
@@ -175,8 +241,10 @@ def reduce_scatter(x, op: Operator = Operator.SUM, *,
     if val.shape[0] % n:
         raise ValueError(f"reduce_scatter axis0={val.shape[0]} not divisible "
                          f"by comm size {n}")
+    algo = registry.select("reduce_scatter", val, comm, algorithm=algorithm,
+                           op=op)
     tok, val = token_lib.tie(tok, val)
-    out = jax.lax.psum_scatter(val, comm.axes, scatter_dimension=0, tiled=True)
+    out, tok = algo.fn(val, tok, comm, op=op)
     new_tok = token_lib.advance(tok, out)
     return _tok_out(explicit, new_tok, SUCCESS, out)
 

@@ -17,6 +17,7 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.core import token as token_lib
 
 
@@ -139,8 +140,8 @@ def spmd(mesh, in_specs, out_specs, axis_names: tuple[str, ...] | None = None,
                 set_world(prev)
                 token_lib.reset_ambient()
 
-        wrapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                                out_specs=out_specs, check_vma=check_vma)
+        wrapped = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs, check_vma=check_vma)
         return jax.jit(wrapped) if jit else wrapped
 
     return deco

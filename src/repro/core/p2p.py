@@ -26,7 +26,10 @@ import jax.numpy as jnp
 from repro.core import token as token_lib
 from repro.core import views as views_lib
 from repro.core.comm import Communicator, resolve
-from repro.core.token import SUCCESS
+from repro.core.token import ERR_TRUNCATE, SUCCESS
+
+#: Wildcard for :func:`wait`'s ``tag=`` filter (MPI_ANY_TAG analogue).
+ANY_TAG = -1
 
 
 @dataclasses.dataclass
@@ -38,7 +41,9 @@ class Request:
     to overlap independent compute with the transfer.  ``used_ambient``
     records whether the op drew its token from the ambient chain — explicit-
     token requests never touch ambient state (tokens created inside lax
-    control-flow scopes must not leak to outer traces).
+    control-flow scopes must not leak to outer traces).  ``status`` is
+    SUCCESS unless the receive buffer was statically too small for the
+    message (ERR_TRUNCATE, detected at trace time from the static shapes).
     """
 
     value: Any
@@ -46,19 +51,20 @@ class Request:
     tag: int = 0
     unpack: Any = None  # View to scatter the payload back into, if any
     used_ambient: bool = True
+    status: int = SUCCESS
 
     def _materialize(self):
         token, value = token_lib.tie(self.token, self.value)
         if self.unpack is not None:
-            value = self.unpack.unpack(value)
+            value = self.unpack.scatter_into(value)
         return token, value
 
 
 def _payload(x):
-    """Accept raw arrays or Views (non-contiguous slices)."""
+    """Accept raw arrays, NumPy-likes (lists/scalars) or Views."""
     if isinstance(x, views_lib.View):
         return x.pack(), x
-    return x, None
+    return jnp.asarray(x), None
 
 
 def _resolve_perm(comm: Communicator, pairs=None, perm=None, dest=None,
@@ -89,6 +95,12 @@ def isendrecv(x, pairs=None, *, perm=None, dest=None, source=None, tag: int = 0,
     tok = token if token is not None else token_lib.ambient().get()
     payload, _ = _payload(x)
     p = _resolve_perm(comm, pairs, perm, dest, source)
+    status = SUCCESS
+    if recv_into is not None and recv_into.pack().size < payload.size:
+        # Message statically larger than the receive view: MPI_ERR_TRUNCATE.
+        # The transfer still happens (shapes are static under SPMD); the
+        # receive view keeps the leading elements and the status reports it.
+        status = ERR_TRUNCATE
     # Token-tie the payload so this ppermute cannot be hoisted over earlier
     # jmpi ops (MPI non-overtaking order), then transfer.
     tok, payload = token_lib.tie(tok, payload)
@@ -97,7 +109,7 @@ def isendrecv(x, pairs=None, *, perm=None, dest=None, source=None, tag: int = 0,
     if token is None:
         token_lib.ambient().set(new_tok)
     return Request(value=out, token=new_tok, tag=tag, unpack=recv_into,
-                   used_ambient=token is None)
+                   used_ambient=token is None, status=status)
 
 
 def isend(x, dest: int, *, source: int, tag: int = 0,
@@ -121,37 +133,60 @@ def irecv(x, source: int, *, dest: int, tag: int = 0,
     return SUCCESS, req
 
 
-def wait(req: Request):
-    """Complete a request: (status, value). Forces the dataflow dependency."""
+def _check_tag(req: Request, tag: int) -> None:
+    if tag != ANY_TAG and tag != req.tag:
+        # MPI would leave the recv unmatched (deadlock); our static-topology
+        # discipline surfaces the mismatch at trace time instead.
+        raise ValueError(f"tag mismatch: waiting for tag {tag} on a request "
+                         f"posted with tag {req.tag} (use ANY_TAG to ignore)")
+
+
+def wait(req: Request, tag: int = ANY_TAG):
+    """Complete a request: (status, value). Forces the dataflow dependency.
+
+    ``tag``: assert the request was posted with this tag (MPI tag matching;
+    mismatch is a trace-time error, see DESIGN.md §2 static topology).
+    Status is the request's — ERR_TRUNCATE when the receive view was
+    statically smaller than the message.
+    """
+    _check_tag(req, tag)
     token, value = req._materialize()
     if req.used_ambient:
         token_lib.ambient().set(token)
-    return SUCCESS, value
+    return req.status, value
 
 
 def waitall(reqs: Sequence[Request]):
-    """Complete all requests: (status, [values])."""
+    """Complete all requests: (status, [values]).  Status is SUCCESS only if
+    every request succeeded (first error code otherwise, MPI_Waitall-style)."""
     out = [r._materialize() for r in reqs]
     toks = [t for t, _ in out]
     vals = [v for _, v in out]
     if toks and all(r.used_ambient for r in reqs):
         token_lib.ambient().set(sum(toks) / len(toks))
-    return SUCCESS, vals
+    status = next((r.status for r in reqs if r.status != SUCCESS), SUCCESS)
+    return status, vals
 
 
-def waitany(reqs: Sequence[Request]):
-    """Complete one request. Deterministic choice (index 0): XLA dataflow has
-    no runtime completion order, so 'any' degenerates to 'first' (documented)."""
-    status, value = wait(reqs[0])
+def waitany(reqs: Sequence[Request], tag: int = ANY_TAG):
+    """Complete one request: (status, index, value).
+
+    Ordering guarantee: XLA dataflow has no runtime completion order, so
+    'any' deterministically completes the FIRST (lowest-index, i.e. earliest
+    issued) request — index 0 always.  Later requests stay pending and can
+    be waited on afterwards; their tokens are untouched, so issue order is
+    preserved (MPI non-overtaking).
+    """
+    status, value = wait(reqs[0], tag=tag)
     return status, 0, value
 
 
-def test(req: Request):
+def test(req: Request, tag: int = ANY_TAG):
     """(status, flag, value). Under XLA dataflow a value is by construction
     available at its consumption point, so flag is statically True; the call
     still forces ordering exactly like wait (semantics note in DESIGN.md §2).
     """
-    status, value = wait(req)
+    status, value = wait(req, tag=tag)
     return status, jnp.bool_(True), value
 
 
@@ -160,8 +195,11 @@ def testall(reqs: Sequence[Request]):
     return status, jnp.bool_(True), values
 
 
-def testany(reqs: Sequence[Request]):
-    status, idx, value = waitany(reqs)
+def testany(reqs: Sequence[Request], tag: int = ANY_TAG):
+    """(status, flag, index, value) — same deterministic first-request
+    ordering as :func:`waitany`, with the statically-True flag of
+    :func:`test`."""
+    status, idx, value = waitany(reqs, tag=tag)
     return status, jnp.bool_(True), idx, value
 
 

@@ -1,0 +1,284 @@
+"""Collective-algorithm registry + size-aware selection policy.
+
+Every logical collective (allreduce, bcast, allgather, reduce_scatter,
+alltoall) has ≥2 interchangeable lowerings — ``xla_native`` (the XLA
+collective, latency/bandwidth profile chosen by the compiler), ``ring``
+(chunked ppermute schedule, overlappable), ``recursive_doubling`` (log₂ n
+full-payload exchange rounds — latency-optimal for small payloads),
+``tree`` (binomial-tree bcast), ``pairwise`` (alltoall as n−1 shifted
+permutes), ``bf16_wire`` (half-width wire for bandwidth-bound float sums).
+OMB-Py (Alnaasan et al., 2021) shows the right choice is payload-size- and
+rank-count-dependent; this module is the seam that makes the choice a table
+lookup instead of a rewrite.
+
+Selection order, resolved **at trace time** (payload shapes are static):
+
+1. explicit ``algorithm=`` argument on the collective call (error if the
+   named algorithm cannot handle the payload);
+2. a process-global per-op override installed by :func:`set_algorithm` /
+   the :func:`algorithm_override` context manager;
+3. the active :class:`PolicyTable` — first matching (op, rank-count,
+   byte-range) rule, else the table's per-op default;
+4. ``xla_native`` as the final fallback (always registered, supports
+   everything its public op supports).
+
+If the chosen algorithm's ``supports`` predicate rejects the payload (e.g.
+``recursive_doubling`` on a non-power-of-two group, ``ring`` allreduce for a
+non-SUM operator) the selection silently falls back to ``xla_native`` —
+except for case 1, where the caller asked by name and gets a trace-time
+``ValueError`` instead.
+
+Policy tables serialize to JSON.  ``repro.launch.collective_tuner`` sweeps
+algorithms × sizes on the live backend and emits a tuned table;
+``benchmarks/bench_collectives.py --sweep-algorithms`` prints the same
+table with the measured crossover points.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+from typing import Any, Callable, Optional
+
+OPS = ("allreduce", "bcast", "allgather", "reduce_scatter", "alltoall")
+DEFAULT_ALGORITHM = "xla_native"
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """A registered lowering for one logical collective op.
+
+    ``fn(val, tok, comm, **kw) -> (out, tok)`` — the kernel; receives the
+    packed payload and the ordering token (already tied), threads the token
+    through its own communication steps, and returns the result plus the
+    final token.  ``supports(val, comm, **kw) -> bool`` is a trace-time
+    eligibility predicate (static shapes / static group size only).
+    """
+
+    op: str
+    name: str
+    fn: Callable[..., Any]
+    supports: Callable[..., bool]
+
+
+_REGISTRY: dict[str, dict[str, Algorithm]] = {op: {} for op in OPS}
+
+
+def register(op: str, name: str, supports: Callable[..., bool] | None = None):
+    """Decorator: register ``fn`` as algorithm ``name`` for logical ``op``."""
+    if op not in _REGISTRY:
+        raise ValueError(f"unknown collective op {op!r}; expected one of {OPS}")
+
+    def deco(fn):
+        _REGISTRY[op][name] = Algorithm(
+            op=op, name=name, fn=fn,
+            supports=supports if supports is not None
+            else (lambda val, comm, **kw: True))
+        return fn
+
+    return deco
+
+
+def algorithms(op: str) -> list[str]:
+    """Registered algorithm names for ``op`` (sorted; xla_native first)."""
+    names = sorted(_REGISTRY[op])
+    if DEFAULT_ALGORITHM in names:
+        names.remove(DEFAULT_ALGORITHM)
+        names.insert(0, DEFAULT_ALGORITHM)
+    return names
+
+
+def get(op: str, name: str) -> Algorithm:
+    if op not in _REGISTRY:
+        raise ValueError(f"unknown collective op {op!r}; expected one of {OPS}")
+    if name not in _REGISTRY[op]:
+        raise ValueError(
+            f"no algorithm {name!r} registered for {op!r}; "
+            f"available: {algorithms(op)}")
+    return _REGISTRY[op][name]
+
+
+# ---------------------------------------------------------------------------
+# Policy table — size/rank-count → algorithm, JSON round-trippable
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    """First matching rule wins: op equal, rank count equal (when pinned),
+    payload bytes within [min_bytes, max_bytes]."""
+
+    op: str
+    algorithm: str
+    min_bytes: int = 0
+    max_bytes: Optional[int] = None   # None = unbounded
+    ranks: Optional[int] = None       # None = any group size
+
+    def matches(self, op: str, nbytes: int, n_ranks: int) -> bool:
+        if self.op != op:
+            return False
+        if self.ranks is not None and self.ranks != n_ranks:
+            return False
+        if nbytes < self.min_bytes:
+            return False
+        if self.max_bytes is not None and nbytes > self.max_bytes:
+            return False
+        return True
+
+
+@dataclasses.dataclass
+class PolicyTable:
+    rules: list[PolicyRule] = dataclasses.field(default_factory=list)
+    default: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def choose(self, op: str, nbytes: int, n_ranks: int) -> str:
+        for rule in self.rules:
+            if rule.matches(op, nbytes, n_ranks):
+                return rule.algorithm
+        return self.default.get(op, DEFAULT_ALGORITHM)
+
+    # -- serialization ----------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "version": 1,
+            "rules": [dataclasses.asdict(r) for r in self.rules],
+            "default": self.default,
+        }, indent=1)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PolicyTable":
+        doc = json.loads(text)
+        return cls(rules=[PolicyRule(**r) for r in doc.get("rules", [])],
+                   default=dict(doc.get("default", {})))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "PolicyTable":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def describe(self) -> str:
+        """Human-readable policy table (what the bench sweep prints)."""
+        lines = [f"{'op':<16}{'bytes':<24}{'ranks':<8}algorithm",
+                 "-" * 60]
+        for r in self.rules:
+            hi = "inf" if r.max_bytes is None else str(r.max_bytes)
+            rk = "any" if r.ranks is None else str(r.ranks)
+            lines.append(f"{r.op:<16}{f'[{r.min_bytes}, {hi}]':<24}"
+                         f"{rk:<8}{r.algorithm}")
+        for op in OPS:
+            lines.append(f"{op:<16}{'(default)':<24}{'any':<8}"
+                         f"{self.default.get(op, DEFAULT_ALGORITHM)}")
+        return "\n".join(lines)
+
+
+def default_policy() -> PolicyTable:
+    """Built-in policy: XLA-native everywhere except latency-bound (tiny)
+    payloads, where the log₂n-round schedules win on latency (rule of thumb
+    from OMB-Py-style sweeps; regenerate with the tuner for real hardware)."""
+    return PolicyTable(
+        rules=[
+            PolicyRule("allreduce", "recursive_doubling", max_bytes=1024),
+            PolicyRule("bcast", "tree", max_bytes=1024),
+        ],
+        default={op: DEFAULT_ALGORITHM for op in OPS},
+    )
+
+
+_ACTIVE_POLICY: list[PolicyTable] = [default_policy()]
+_OVERRIDES: dict[str, str] = {}
+
+
+def active_policy() -> PolicyTable:
+    return _ACTIVE_POLICY[0]
+
+
+def set_policy(table: PolicyTable | None) -> None:
+    """Install ``table`` as the process-global policy (None = built-in)."""
+    _ACTIVE_POLICY[0] = table if table is not None else default_policy()
+
+
+def load_policy(path: str) -> PolicyTable:
+    """Load a tuner-emitted JSON policy table and make it active."""
+    table = PolicyTable.load(path)
+    set_policy(table)
+    return table
+
+
+def save_policy(path: str) -> None:
+    active_policy().save(path)
+
+
+def set_algorithm(op: str, name: str | None) -> None:
+    """Force ``op`` to use algorithm ``name`` for all subsequent traces
+    (``jmpi.set_algorithm``); ``None`` clears the override.  Unsupported
+    payloads still fall back to ``xla_native``."""
+    if name is None:
+        _OVERRIDES.pop(op, None)
+        return
+    get(op, name)  # validate eagerly
+    _OVERRIDES[op] = name
+
+
+def clear_algorithms() -> None:
+    _OVERRIDES.clear()
+
+
+@contextlib.contextmanager
+def algorithm_override(**ops_to_names: str):
+    """Scoped :func:`set_algorithm` for one or more ops:
+
+        with jmpi.algorithm_override(allreduce="ring"):
+            ... trace code ...
+    """
+    saved = dict(_OVERRIDES)
+    try:
+        for op, name in ops_to_names.items():
+            set_algorithm(op, name)
+        yield
+    finally:
+        _OVERRIDES.clear()
+        _OVERRIDES.update(saved)
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+def payload_bytes(val) -> int:
+    """Static payload size (trace-time: shapes/dtypes are static)."""
+    import numpy as np
+    return int(np.prod(val.shape, dtype=int)) * val.dtype.itemsize
+
+
+def choose_name(op: str, nbytes: int, n_ranks: int) -> str:
+    """Policy-level choice (override → table), without eligibility checks.
+    Host-side helper for planners (ParamSharder.collective_plan, overlap)."""
+    if op in _OVERRIDES:
+        return _OVERRIDES[op]
+    return active_policy().choose(op, nbytes, n_ranks)
+
+
+def select(op_name: str, val, comm, algorithm: str | None = None,
+           **kw) -> Algorithm:
+    """Resolve the algorithm for one collective call (trace time).
+
+    (First parameter is ``op_name`` because ``op=`` is a kernel kwarg —
+    the reduction Operator — forwarded through ``**kw``.)
+    """
+    if algorithm is not None:
+        algo = get(op_name, algorithm)
+        if not algo.supports(val, comm, **kw):
+            raise ValueError(
+                f"algorithm {algorithm!r} cannot handle this {op_name} call "
+                f"(shape={tuple(val.shape)}, dtype={val.dtype}, "
+                f"ranks={comm.size()}, {kw})")
+        return algo
+    name = choose_name(op_name, payload_bytes(val), comm.size())
+    algo = _REGISTRY[op_name].get(name)
+    if algo is not None and algo.supports(val, comm, **kw):
+        return algo
+    return get(op_name, DEFAULT_ALGORITHM)

@@ -10,8 +10,12 @@ scheduler can overlap chunk k's permute with chunk k±1's add — and, when the
 caller interleaves matmul flops between steps (see
 ``repro.distributed.overlap.collective_matmul``), comm hides under compute.
 
-Used by §Perf hillclimbing for collective-bound cells; correctness is tested
-against ``jmpi.allreduce`` and the numpy oracle.
+Registered in the collective-algorithm registry as the ``ring`` entries for
+allreduce / allgather / reduce_scatter; pick them per call
+(``jmpi.allreduce(x, algorithm="ring")``), globally
+(``jmpi.set_algorithm("allreduce", "ring")``), or let the policy table route
+bandwidth-bound payloads here.  Correctness is tested against the XLA-native
+kernels and the numpy oracle.
 """
 
 from __future__ import annotations
@@ -19,6 +23,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry
 from repro.core import token as token_lib
 from repro.core.comm import Communicator, resolve
 from repro.core.token import SUCCESS
@@ -31,16 +36,39 @@ def _split(x, n):
     return x.reshape(n, -1, *x.shape[1:]), pad
 
 
-def ring_allreduce(x, *, comm: Communicator | None = None, token=None):
+def _unrolled(step, n_steps, carry):
+    """Unroll the ring so every permute is a distinct HLO op (overlappable).
+
+    A fori_loop would serialize steps behind a loop counter; rings are short
+    (n−1 ≤ 15 on a 16-wide axis) so full unroll is the right trade.
+    """
+    for i in range(n_steps):
+        carry = step(i, carry)
+    return carry
+
+
+def _dynamic_set(chunks, value, idx):
+    return jax.lax.dynamic_update_index_in_dim(chunks, value, idx, axis=0)
+
+
+def _sum_only(val, comm, *, op=None, **kw):
+    from repro.core.collectives import Operator
+    return op is None or op is Operator.SUM
+
+
+# ===========================================================================
+# Registry kernels
+# ===========================================================================
+
+@registry.register("allreduce", "ring", supports=_sum_only)
+def _ring_allreduce_kernel(val, tok, comm, *, op=None):
     """Bandwidth-optimal allreduce: 2·(n−1) chunk steps, 2·(n−1)/n · |x| bytes
     per link — same wire cost as XLA's psum, but overlappable chunk-by-chunk."""
-    comm = resolve(comm)
-    tok = token if token is not None else token_lib.ambient().get()
     n = comm.size()
     if n == 1:
-        return SUCCESS, x, tok
-    orig_shape, orig_dtype = x.shape, x.dtype
-    flat = x.reshape(x.shape[0], -1) if x.ndim > 1 else x.reshape(-1, 1)
+        return val, tok
+    orig_shape, orig_dtype = val.shape, val.dtype
+    flat = val.reshape(val.shape[0], -1) if val.ndim > 1 else val.reshape(-1, 1)
     chunks, pad = _split(flat, n)  # (n, chunk, rest)
     rank = comm.rank()
     fwd = comm.ring_perm(+1)
@@ -84,39 +112,19 @@ def ring_allreduce(x, *, comm: Communicator | None = None, token=None):
     if pad:
         flat_out = flat_out[:flat.shape[0]]
     out = flat_out.reshape(orig_shape).astype(orig_dtype)
-    if token is None:
-        token_lib.ambient().set(tok)
-        return SUCCESS, out
-    return SUCCESS, out, tok
+    return out, tok
 
 
-def _dynamic_set(chunks, value, idx):
-    return jax.lax.dynamic_update_index_in_dim(chunks, value, idx, axis=0)
-
-
-def _unrolled(step, n_steps, carry):
-    """Unroll the ring so every permute is a distinct HLO op (overlappable).
-
-    A fori_loop would serialize steps behind a loop counter; rings are short
-    (n−1 ≤ 15 on a 16-wide axis) so full unroll is the right trade.
-    """
-    for i in range(n_steps):
-        carry = step(i, carry)
-    return carry
-
-
-def ring_allgather(x, *, comm: Communicator | None = None, token=None):
+@registry.register("allgather", "ring")
+def _ring_allgather_kernel(val, tok, comm):
     """Allgather as n−1 ppermute steps; axis-0 concatenation, tiled layout."""
-    comm = resolve(comm)
-    tok = token if token is not None else token_lib.ambient().get()
     n = comm.size()
     if n == 1:
-        return SUCCESS, x, tok
+        return val, tok
     rank = comm.rank()
     fwd = comm.ring_perm(+1)
-    pieces = [None] * n  # traced values; assembled by static slot below
-    cur = x
-    slots = jnp.zeros((n,) + x.shape, x.dtype)
+    cur = val
+    slots = jnp.zeros((n,) + val.shape, val.dtype)
     slots = jax.lax.dynamic_update_index_in_dim(slots, cur, rank, axis=0)
     for i in range(n - 1):
         tok, cur = token_lib.tie(tok, cur)
@@ -124,9 +132,54 @@ def ring_allgather(x, *, comm: Communicator | None = None, token=None):
         tok = token_lib.advance(tok, cur)
         src = (rank - (i + 1)) % n
         slots = jax.lax.dynamic_update_index_in_dim(slots, cur, src, axis=0)
-    del pieces
-    out = slots.reshape((n * x.shape[0],) + x.shape[1:])
-    if token is None:
-        token_lib.ambient().set(tok)
-        return SUCCESS, out
-    return SUCCESS, out, tok
+    out = slots.reshape((n * val.shape[0],) + val.shape[1:])
+    return out, tok
+
+
+@registry.register("reduce_scatter", "ring", supports=_sum_only)
+def _ring_reduce_scatter_kernel(val, tok, comm, *, op=None):
+    """Reduce-scatter as the ring's phase 1 plus one final alignment hop:
+    n−1 accumulate-and-forward chunk steps leave rank r with reduced chunk
+    (r+1) mod n; a last forward permute homes chunk r on rank r."""
+    n = comm.size()
+    if n == 1:
+        return val, tok
+    rank = comm.rank()
+    fwd = comm.ring_perm(+1)
+    chunks = val.reshape(n, val.shape[0] // n, *val.shape[1:])
+
+    def rs_step(i, carry):
+        acc, tok = carry
+        idx = (rank - i) % n
+        send = jax.lax.dynamic_index_in_dim(chunks, idx, axis=0, keepdims=False)
+        send = send + acc
+        tok, send = token_lib.tie(tok, send)
+        recv = jax.lax.ppermute(send, comm.axes, fwd)
+        tok = token_lib.advance(tok, recv)
+        return recv, tok
+
+    acc = jnp.zeros_like(chunks[0])
+    acc, tok = _unrolled(rs_step, n - 1, (acc, tok))
+    own_idx = (rank - (n - 1)) % n
+    own = jax.lax.dynamic_index_in_dim(chunks, own_idx, axis=0, keepdims=False)
+    full_chunk = acc + own            # reduced chunk (rank+1) mod n
+    tok, full_chunk = token_lib.tie(tok, full_chunk)
+    out = jax.lax.ppermute(full_chunk, comm.axes, fwd)   # home chunk r → rank r
+    tok = token_lib.advance(tok, out)
+    return out, tok
+
+
+# ===========================================================================
+# Back-compat public wrappers (pre-registry API, used by benches/tests)
+# ===========================================================================
+
+def ring_allreduce(x, *, comm: Communicator | None = None, token=None):
+    """``jmpi.allreduce(x, algorithm="ring")`` under the original name."""
+    from repro.core import collectives
+    return collectives.allreduce(x, comm=comm, token=token, algorithm="ring")
+
+
+def ring_allgather(x, *, comm: Communicator | None = None, token=None):
+    """``jmpi.allgather(x, algorithm="ring")`` under the original name."""
+    from repro.core import collectives
+    return collectives.allgather(x, comm=comm, token=token, algorithm="ring")

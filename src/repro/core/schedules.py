@@ -1,0 +1,150 @@
+"""Latency-oriented hand-scheduled collectives (registry entries).
+
+Complements ``repro.core.ring`` (bandwidth-optimal chunked rings) with the
+classic *latency*-optimal schedules from the MPI literature:
+
+* ``recursive_doubling`` allreduce — log₂ n rounds, each a full-payload
+  exchange with the rank whose id differs in bit k (MPICH's small-message
+  allreduce).  α·log n latency versus the ring's α·2(n−1): the right choice
+  for tiny, latency-bound payloads (loss scalars, norms, barriers-with-data).
+* ``tree`` bcast — binomial tree rooted at ``root``: the set of informed
+  ranks doubles each round, ⌈log₂ n⌉ ppermute hops move the payload
+  verbatim (bit-exact for every dtype, any group size).
+* ``pairwise`` alltoall — n−1 shifted permute rounds; each round r sends the
+  chunk destined to rank (me+r) directly (MPI_Alltoall's pairwise-exchange
+  algorithm; trades the XLA fused all-to-all for overlappable steps).
+
+All kernels follow the registry contract ``fn(val, tok, comm, **kw) ->
+(out, tok)``: payload already packed and token-tied by the public op,
+token threaded through every hop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.core import token as token_lib
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def _combine(op, operators):
+    """Elementwise combiner (and pre/post transforms) for an Operator."""
+    O = operators
+    if op is O.SUM:
+        return (lambda a, b: a + b), None, None
+    if op is O.PROD:
+        return (lambda a, b: a * b), None, None
+    if op is O.MIN:
+        return jnp.minimum, None, None
+    if op is O.MAX:
+        return jnp.maximum, None, None
+    if op is O.LAND:
+        return (jnp.minimum,
+                lambda v: (v != 0).astype(jnp.int32),
+                lambda v, dtype: v.astype(dtype))
+    if op is O.LOR:
+        return (jnp.maximum,
+                lambda v: (v != 0).astype(jnp.int32),
+                lambda v, dtype: v.astype(dtype))
+    raise ValueError(f"unsupported operator {op}")
+
+
+def recursive_doubling_allreduce(val, tok, comm, *, op):
+    """MPI_Allreduce, recursive doubling: partner = rank XOR 2^k per round."""
+    from repro.core.collectives import Operator
+    n = comm.size()
+    # n == 1 still applies pre/post (LAND/LOR normalize to {0,1} like the
+    # xla_native kernel); the exchange loop simply has zero rounds.
+    combine, pre, post = _combine(op, Operator)
+    dtype = val.dtype
+    cur = pre(val) if pre is not None else val
+    k = 0
+    while (1 << k) < n:
+        d = 1 << k
+        perm = [(i, i ^ d) for i in range(n)]  # involution: injective
+        tok, cur = token_lib.tie(tok, cur)
+        recv = jax.lax.ppermute(cur, comm.axes, perm)
+        tok = token_lib.advance(tok, recv)
+        cur = combine(cur, recv)
+        k += 1
+    if post is not None:
+        cur = post(cur, dtype)
+    return cur, tok
+
+
+def _rd_supports(val, comm, *, op=None, **kw):
+    return _is_pow2(comm.size())
+
+
+registry.register("allreduce", "recursive_doubling",
+                  supports=_rd_supports)(recursive_doubling_allreduce)
+
+
+def tree_bcast(val, tok, comm, *, root):
+    """MPI_Bcast, binomial tree: informed set doubles every round.
+
+    Payload moves verbatim (no arithmetic) — bit-exact for every dtype.
+    Ranks are numbered relative to the root; works for any group size.
+    """
+    n = comm.size()
+    if n == 1:
+        return val, tok
+    rank = comm.rank()
+    rrank = (rank - root) % n         # traced; root ≡ 0 in tree coordinates
+    dtype = val.dtype
+    as_bool = dtype == jnp.bool_
+    cur = val.astype(jnp.int8) if as_bool else val
+    d = 1
+    while d < n:
+        # ranks [0, d) send to [d, 2d) (tree coordinates), skipping dst ≥ n
+        perm = [((root + i) % n, (root + i + d) % n)
+                for i in range(min(d, n - d))]
+        tok, cur = token_lib.tie(tok, cur)
+        recv = jax.lax.ppermute(cur, comm.axes, perm)
+        tok = token_lib.advance(tok, recv)
+        is_receiver = (rrank >= d) & (rrank < min(2 * d, n))
+        cur = jnp.where(is_receiver, recv, cur)
+        d *= 2
+    if as_bool:
+        cur = cur.astype(jnp.bool_)
+    return cur, tok
+
+
+registry.register("bcast", "tree")(tree_bcast)
+
+
+def pairwise_alltoall(val, tok, comm, *, split_axis=0, concat_axis=0):
+    """MPI_Alltoall, pairwise exchange: round r ships chunk (me+r) mod n."""
+    n = comm.size()
+    if n == 1:
+        return val, tok
+    rank = comm.rank()
+    chunk = val.shape[0] // n
+    chunks = val.reshape(n, chunk, *val.shape[1:])
+    out = jnp.zeros_like(chunks)
+    own = jax.lax.dynamic_index_in_dim(chunks, rank, axis=0, keepdims=False)
+    out = jax.lax.dynamic_update_index_in_dim(out, own, rank, axis=0)
+    for shift in range(1, n):
+        perm = [(i, (i + shift) % n) for i in range(n)]
+        dst = (rank + shift) % n      # the rank whose chunk we ship this round
+        send = jax.lax.dynamic_index_in_dim(chunks, dst, axis=0, keepdims=False)
+        tok, send = token_lib.tie(tok, send)
+        recv = jax.lax.ppermute(send, comm.axes, perm)
+        tok = token_lib.advance(tok, recv)
+        src = (rank - shift) % n      # who that chunk came from
+        out = jax.lax.dynamic_update_index_in_dim(out, recv, src, axis=0)
+    return out.reshape(val.shape), tok
+
+
+def _pairwise_supports(val, comm, *, split_axis=0, concat_axis=0, **kw):
+    return (len(comm.axes) == 1 and split_axis == 0 and concat_axis == 0
+            and val.shape[0] % comm.size() == 0)
+
+
+registry.register("alltoall", "pairwise",
+                  supports=_pairwise_supports)(pairwise_alltoall)

@@ -57,6 +57,23 @@ class View:
             return jnp.asarray(message).reshape(x.shape).astype(x.dtype)
         return x.at[self.index].set(message.astype(x.dtype))
 
+    def scatter_into(self, message):
+        """MPI-recv style write of ``message`` into the view's slots.
+
+        The first ``min(message.size, view.size)`` elements land (row-major);
+        when the message is *longer* than the view the tail is dropped — the
+        MPI_ERR_TRUNCATE condition, reported by the request's status — and
+        when it is shorter the remaining view slots keep their prior
+        contents (MPI writes only ``count`` received elements)."""
+        cur = self.pack()
+        m = jnp.ravel(jnp.asarray(message))[:cur.size]
+        if m.size < cur.size:
+            flat = jnp.concatenate(
+                [m.astype(cur.dtype), cur.ravel()[m.size:]])
+        else:
+            flat = m.astype(cur.dtype)
+        return self.unpack(flat.reshape(cur.shape))
+
     @property
     def shape(self):
         return self.pack().shape

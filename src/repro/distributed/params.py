@@ -16,6 +16,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 import jax
 
+from repro.core import registry
+
 
 def _axis_sizes(mesh):
     return dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -175,6 +177,30 @@ class ParamSharder:
     def tree_shardings(self, tree):
         return jax.tree.map(lambda spec: NamedSharding(self.mesh, spec),
                             self.tree_specs(tree))
+
+    # ------------------------------------------------------------------ #
+    # collective plan — which algorithm each gradient payload lowers to
+    # ------------------------------------------------------------------ #
+
+    def collective_plan(self, tree, grad_dtype=np.float32):
+        """Per-parameter data-parallel gradient-reduction plan.
+
+        For every leaf: the allreduce payload bytes (grads in
+        ``grad_dtype``) and the algorithm the active policy table routes
+        that payload to on this mesh's DP group.  Consumed by the launch
+        report and by tests; the trace-time dispatch in
+        ``repro.core.collectives`` makes the same choice, so this is the
+        human-readable preview of what the compiled step will do.
+        """
+        itemsize = np.dtype(grad_dtype).itemsize
+        n = self.dp_n
+
+        def leaf_plan(kp, leaf):
+            nbytes = int(np.prod(leaf.shape, dtype=int)) * itemsize
+            return {"op": "allreduce", "bytes": nbytes, "ranks": n,
+                    "algorithm": registry.choose_name("allreduce", nbytes, n)}
+
+        return jax.tree_util.tree_map_with_path(leaf_plan, tree)
 
     # ------------------------------------------------------------------ #
     # data & caches

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.core import compat
 
 NEG_INF = -2.0 ** 30
 MINLANE = 128
@@ -101,7 +102,7 @@ def decode_attention_grouped(q, k, v, valid_mask, *, scale=None, bk=1024,
             pltpu.VMEM((g, MINLANE), jnp.float32),
             pltpu.VMEM((g, MINLANE), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf, maskf)

@@ -1,0 +1,165 @@
+"""Bench-driven collective-algorithm tuner.
+
+Sweeps every registered algorithm of every logical collective over a payload
+-size grid on the live backend, picks the fastest per (op, size) cell, and
+emits the JSON :class:`repro.core.registry.PolicyTable` that the trace-time
+dispatcher consumes (``jmpi.load_policy``).  This is the OMB-Py loop turned
+into a build step: measure → table → every future trace picks the winning
+schedule for its payload.
+
+Entry points:
+  * ``python -m repro.launch.hillclimb --tune-collectives`` (emits
+    ``experiments/collective_policy.json``)
+  * ``python benchmarks/bench_collectives.py --sweep-algorithms`` (prints
+    the sweep CSV + the derived policy table with crossover points)
+"""
+
+from __future__ import annotations
+
+import timeit
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+import repro.core as jmpi
+from repro.core import registry
+
+#: payload grid in fp32 elements: 256 B … 4 MiB — brackets the latency→
+#: bandwidth crossover on every transport we target.
+SIZES = (64, 1024, 16384, 262144, 1048576)
+OPS = registry.OPS
+INNER = 20
+
+
+def tune_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D mesh over the first ``n_devices`` local (possibly emulated)
+    devices — capped at 8 by default so a 512-device dry-run environment
+    still tunes on a realistic group size."""
+    devs = jax.devices()
+    n = n_devices or min(8, len(devs))
+    return Mesh(np.array(devs[:n]), ("ranks",))
+
+
+def _op_body(op: str, algo: str, n: int):
+    def body(acc):
+        if op == "allreduce":
+            _, y = jmpi.allreduce(acc, algorithm=algo)
+        elif op == "bcast":
+            _, y = jmpi.bcast(acc, root=0, algorithm=algo)
+        elif op == "allgather":
+            _, g = jmpi.allgather(acc, algorithm=algo)
+            y = g.reshape(n, -1).sum(0)
+        elif op == "reduce_scatter":
+            _, s = jmpi.reduce_scatter(acc, algorithm=algo)
+            y = jnp.tile(s, n)
+        elif op == "alltoall":
+            _, y = jmpi.alltoall(acc, algorithm=algo)
+        else:  # pragma: no cover
+            raise ValueError(op)
+        return y / jnp.maximum(jnp.abs(y).max(), 1.0)
+
+    return body
+
+
+def timed_loop(mesh, op: str, algo: str, numel: int,
+               inner: int = INNER, repeat: int = 3) -> float:
+    """Seconds per call of the JIT-resident collective (whole chained loop
+    compiled; dispatch amortized across ``inner`` calls)."""
+
+    @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+    def f(x):
+        body = _op_body(op, algo, jmpi.size())
+        return jax.lax.fori_loop(0, inner, lambda i, a: body(a), x)
+
+    x = jnp.ones((numel,), jnp.float32)
+    f(x).block_until_ready()
+    t = min(timeit.repeat(lambda: f(x).block_until_ready(), number=1,
+                          repeat=repeat))
+    return t / inner
+
+
+def sweep(mesh, sizes=SIZES, ops=OPS, inner: int = INNER) -> list[dict]:
+    """algorithms × sizes grid; one record per measured cell.  Combinations
+    an algorithm statically cannot handle (non-divisible payload, non-pow2
+    group, multi-axis comm) are skipped."""
+    n = int(np.prod([d for d in mesh.devices.shape]))
+    records = []
+    for op in ops:
+        for numel in sizes:
+            if op in ("alltoall", "reduce_scatter") and numel % n:
+                continue
+            for algo in registry.algorithms(op):
+                try:
+                    t = timed_loop(mesh, op, algo, numel, inner=inner)
+                except ValueError:
+                    continue  # supports() rejected the payload at trace time
+                records.append({
+                    "op": op, "algorithm": algo, "numel": numel,
+                    "nbytes": numel * 4, "ranks": n,
+                    "us_per_call": t * 1e6,
+                })
+    return records
+
+
+def build_policy(records: list[dict]) -> registry.PolicyTable:
+    """argmin over algorithms per (op, size) cell → byte-range rules.
+
+    Bucket edges sit at the geometric midpoints between measured sizes;
+    rules are emitted only where a non-default algorithm wins (the default
+    column stays ``xla_native``), pinned to the measured rank count.
+    """
+    rules: list[registry.PolicyRule] = []
+    ops = sorted({r["op"] for r in records})
+    for op in ops:
+        sizes = sorted({r["nbytes"] for r in records if r["op"] == op})
+        edges = [0] + [int((a * b) ** 0.5) for a, b in zip(sizes, sizes[1:])] \
+            + [None]
+        for i, nbytes in enumerate(sizes):
+            cell = [r for r in records
+                    if r["op"] == op and r["nbytes"] == nbytes]
+            winner = min(cell, key=lambda r: r["us_per_call"])
+            if winner["algorithm"] == registry.DEFAULT_ALGORITHM:
+                continue
+            rules.append(registry.PolicyRule(
+                op=op, algorithm=winner["algorithm"],
+                min_bytes=edges[i], max_bytes=edges[i + 1],
+                ranks=winner["ranks"]))
+    return registry.PolicyTable(
+        rules=rules,
+        default={op: registry.DEFAULT_ALGORITHM for op in OPS})
+
+
+def crossover_report(records: list[dict]) -> str:
+    """Winner per (op, size) with the runner-up gap — the measured
+    crossover points the ISSUE asks the bench to record."""
+    lines = [f"{'op':<16}{'nbytes':>10}  {'winner':<20}{'us':>9}  gap_vs_next"]
+    for op in sorted({r["op"] for r in records}):
+        for nbytes in sorted({r["nbytes"] for r in records
+                              if r["op"] == op}):
+            cell = sorted((r for r in records
+                           if r["op"] == op and r["nbytes"] == nbytes),
+                          key=lambda r: r["us_per_call"])
+            w = cell[0]
+            gap = (f"{cell[1]['us_per_call'] / w['us_per_call']:.2f}x"
+                   if len(cell) > 1 else "-")
+            lines.append(f"{op:<16}{nbytes:>10}  {w['algorithm']:<20}"
+                         f"{w['us_per_call']:>9.1f}  {gap}")
+    return "\n".join(lines)
+
+
+def tune(out_path: str, n_devices: int | None = None,
+         sizes=SIZES) -> registry.PolicyTable:
+    """Measure, build the policy table, save it, and make it active."""
+    mesh = tune_mesh(n_devices)
+    records = sweep(mesh, sizes=sizes)
+    table = build_policy(records)
+    table.save(out_path)
+    registry.set_policy(table)
+    print(crossover_report(records))
+    print()
+    print(table.describe())
+    print(f"\npolicy table written to {out_path} "
+          f"(consume with jmpi.load_policy)")
+    return table

@@ -1,5 +1,9 @@
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+# Emulated device count (process-global, must be set before jax init).
+# 512 = the dry-run pod mesh; set HILLCLIMB_DEVICES=8 for --tune-collectives
+# so the tuner measures a realistic group size.
+_N_DEV = os.environ.get("HILLCLIMB_DEVICES", "512")
+os.environ["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={_N_DEV} "
                            + os.environ.get("XLA_FLAGS", "")).strip()
 
 # §Perf hillclimb driver: run named variants of the three chosen cells and
@@ -130,12 +134,30 @@ VARIANTS = {
 }
 
 
+def tune_collectives(out_path: str, n_devices: int | None = None):
+    """§Perf: bench-driven collective-algorithm tuning — sweep the registry's
+    algorithms × payload sizes, emit the policy table consumed at trace time
+    (``jmpi.load_policy`` / ``RunConfig.collective_policy``).  Run with
+    ``HILLCLIMB_DEVICES=8`` so the emulated group matches the test topology."""
+    from repro.launch import collective_tuner
+    return collective_tuner.tune(out_path, n_devices=n_devices)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tune-collectives", action="store_true",
+                    help="sweep collective algorithms and emit the policy "
+                         "table instead of running dry-run variants")
+    ap.add_argument("--tune-out", default="experiments/collective_policy.json")
+    ap.add_argument("--tune-devices", type=int, default=None)
     args = ap.parse_args()
+    if args.tune_collectives:
+        os.makedirs(os.path.dirname(args.tune_out) or ".", exist_ok=True)
+        tune_collectives(args.tune_out, n_devices=args.tune_devices)
+        return
     os.environ["DRYRUN_OUT"] = args.out
     names = args.only or list(VARIANTS)
     for name in names:

@@ -13,12 +13,13 @@ from __future__ import annotations
 
 import jax
 
+from repro.core import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(n: int | None = None, axes=("data",)):
@@ -31,8 +32,7 @@ def make_host_mesh(n: int | None = None, axes=("data",)):
         shape = (n,)
     else:
         shape = (n // 2, 2) if n % 2 == 0 else (n, 1)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 # TPU v5e hardware constants (per chip) — roofline denominators.

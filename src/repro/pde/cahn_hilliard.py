@@ -20,7 +20,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 import repro.core as jmpi
-from repro.pde.stencil import halo_exchange_2d, laplacian
+from repro.pde.stencil import global_sum, halo_exchange_2d, laplacian
 
 
 def _step(c, *, dt, dx, k, c0, comm_r, comm_c):
@@ -33,12 +33,17 @@ def _step(c, *, dt, dx, k, c0, comm_r, comm_c):
 
 
 def make_solver(mesh, decomposition=(1, -1), *, dt=1e-3, dx=1.0, k=0.01,
-                c0=0.5, inner_steps=100):
+                c0=0.5, inner_steps=100, diagnostics: bool = False):
     """Build a jit-compiled multi-rank solver over ``mesh``.
 
     decomposition: (rows, cols) rank-grid; -1 = "rest of the ranks" (the
     py-pde convention from paper Listing 7's ``decomposition=[2, -1]``).
     Returns run(c_global, n_outer) -> c_global after n_outer·inner_steps.
+
+    ``diagnostics=True``: run() additionally returns the global Σc after the
+    block — a scalar jmpi allreduce inside the same compiled program, routed
+    by the collective-algorithm policy to its small-payload entry while the
+    halo strips stay on their ppermute path (per-payload selection).
     """
     n_dev = int(np.prod(mesh.devices.shape))
     rows, cols = decomposition
@@ -51,21 +56,27 @@ def make_solver(mesh, decomposition=(1, -1), *, dt=1e-3, dx=1.0, k=0.01,
     assert mesh.devices.shape == (rows, cols) or len(axes) == 2, \
         "mesh must be 2-D (rows, cols)"
 
-    @jmpi.spmd(mesh, in_specs=P(axes[0], axes[1]),
-               out_specs=P(axes[0], axes[1]))
+    out_specs = (P(axes[0], axes[1]), P()) if diagnostics \
+        else P(axes[0], axes[1])
+
+    @jmpi.spmd(mesh, in_specs=P(axes[0], axes[1]), out_specs=out_specs)
     def run_block(c_local):
         world = jmpi.world()
         comm_r = world.split([axes[0]]) if rows > 1 else None
         comm_c = world.split([axes[1]]) if cols > 1 else None
         step = functools.partial(_step, dt=dt, dx=dx, k=k, c0=c0,
                                  comm_r=comm_r, comm_c=comm_c)
-        return jax.lax.fori_loop(0, inner_steps, lambda i, c: step(c),
-                                 c_local)
+        c = jax.lax.fori_loop(0, inner_steps, lambda i, c: step(c), c_local)
+        if diagnostics:
+            return c, global_sum(c, world)
+        return c
 
     def run(c_global, n_outer=1):
+        mass = None
         for _ in range(n_outer):
-            c_global = run_block(c_global)
-        return c_global
+            out = run_block(c_global)
+            c_global, mass = out if diagnostics else (out, None)
+        return (c_global, mass) if diagnostics else c_global
 
     return run
 

@@ -57,6 +57,29 @@ def halo_exchange_2d(field, comm_rows: jmpi.Communicator | None,
     return jnp.concatenate([left_halo, field, right_halo], axis=1)
 
 
+def global_sum(field, *comms: "jmpi.Communicator | None"):
+    """Global Σfield across the decomposition — the PDE diagnostics reduce
+    (mass conservation, residual norms).
+
+    The local partial sum is a scalar, so the collective-algorithm policy
+    routes this through its latency-optimal small-payload entry
+    (recursive_doubling under the built-in table) rather than the
+    bandwidth schedule the field itself would get — the per-payload
+    selection the registry exists for.  ``comms``: one communicator per
+    decomposed axis (None entries skipped; no live comm → local sum).
+
+    Uses an explicit fresh token (control-flow safe): diagnostics typically
+    run right after a ``fori_loop``/``scan`` time loop, and the ambient
+    token set inside that loop's trace must not be consumed outside it.
+    """
+    total = jnp.sum(field)
+    for comm in comms:
+        if comm is not None and comm.size() > 1:
+            _, total, _ = jmpi.allreduce(total, comm=comm,
+                                         token=jmpi.new_token())
+    return total
+
+
 def laplacian(c_halo, dx: float = 1.0, halo: int = 1):
     """5-point Laplacian of the interior of a halo-padded block."""
     h = halo

@@ -240,9 +240,22 @@ def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
     allreduces once (NCCL-style gradient bucketing): one collective per step
     instead of one per parameter — a beyond-paper optimization recorded in
     EXPERIMENTS.md §Perf.
+
+    Collective algorithms: every jmpi op in the step goes through the
+    algorithm registry, so the payload size picks the lowering at trace
+    time.  ``run_cfg.collective_policy`` (path) installs a tuner-emitted
+    policy table before tracing; ``run_cfg.collective_algorithm`` forces a
+    specific algorithm for the gradient allreduce (bucketed → one big
+    payload; per-leaf → each leaf routed by its own size).
     """
     axes = tuple(mesh.axis_names)
     bits = run_cfg.grad_compression_bits
+    # Policy is applied around the step's trace only (see local_step), so
+    # one RunConfig's tuned table never leaks into other steps built in the
+    # same process (A/B comparisons stay independent).
+    policy_table = (jmpi.PolicyTable.load(run_cfg.collective_policy)
+                    if run_cfg.collective_policy else None)
+    grad_algo = run_cfg.collective_algorithm or None
 
     def _flatten_bucket(grads):
         flat, tdef = jax.tree.flatten(grads)
@@ -261,6 +274,16 @@ def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
         return jax.tree.unflatten(tdef, out)
 
     def local_step(params, opt_state, comp_state, batch):
+        from repro.core import registry as registry_lib
+        prev_policy = registry_lib.active_policy()
+        if policy_table is not None:
+            registry_lib.set_policy(policy_table)  # scoped to this trace
+        try:
+            return _local_step(params, opt_state, comp_state, batch)
+        finally:
+            registry_lib.set_policy(prev_policy)
+
+    def _local_step(params, opt_state, comp_state, batch):
         comm = jmpi.Communicator(axes)
         n = comm.size()
 
@@ -279,7 +302,7 @@ def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
                     bits=bits, mean=True)
                 comp_state = _unflatten_bucket(nc.error, cspec)
             else:
-                _, rvec = jmpi.allreduce(vec)
+                _, rvec = jmpi.allreduce(vec, algorithm=grad_algo)
                 rvec = rvec / n
             grads = _unflatten_bucket(rvec, spec)
         else:
@@ -296,7 +319,8 @@ def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
                 comp_state = jax.tree.unflatten(tdef, new_c)
             else:
                 grads = jax.tree.unflatten(
-                    tdef, [jmpi.allreduce(g)[1] / n for g in flat])
+                    tdef, [jmpi.allreduce(g, algorithm=grad_algo)[1] / n
+                           for g in flat])
 
         grads, gnorm = optim.clip_by_global_norm(grads, run_cfg.grad_clip)
         new_params, new_opt = optim.update(params, grads, opt_state, run_cfg)

@@ -11,6 +11,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 import repro.core as jmpi
+from repro.core import compat
 from repro.distributed.overlap import collective_matmul_ag, collective_matmul_rs
 from repro.distributed.pipeline import pipeline_forward
 
@@ -18,8 +19,7 @@ N = 8
 
 
 def mesh1d():
-    return jax.make_mesh((N,), ("stages",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((N,), ("stages",))
 
 
 def case_pipeline_matches_stacked_forward():
@@ -90,6 +90,47 @@ def case_collective_matmul_rs_matches():
                                rtol=1e-4, atol=1e-4)
 
 
+def case_matmul_allgather_policy_routes():
+    """Registry-aware overlap entry point: whatever schedule the active
+    policy routes the allgather to, the result matches the plain matmul —
+    and forcing ring via the policy demonstrably takes the overlapped path
+    (same numerics, collective_permute lowering)."""
+    from repro.core import registry
+    from repro.distributed.overlap import matmul_allgather
+
+    rng = np.random.default_rng(3)
+    m, k, p = 32, 16, 24
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, p)), jnp.float32)
+    mesh = mesh1d()
+
+    for algo in ("xla_native", "ring"):
+        # fresh function per policy: a shared jitted fn would hit the jit
+        # cache on the second iteration and never re-trace under the new
+        # policy (selection happens at trace time)
+        @jmpi.spmd(mesh, in_specs=(P("stages"), P()), out_specs=P())
+        def run(xs, w):
+            return matmul_allgather(xs, w, jmpi.world())
+
+        table = jmpi.PolicyTable(
+            rules=[jmpi.PolicyRule("allgather", algo)],
+            default={"allgather": "xla_native"})
+        prev = registry.active_policy()
+        jmpi.set_policy(table)
+        try:
+            hlo = jax.jit(run).lower(x, w).as_text()
+            got = run(x, w)
+        finally:
+            jmpi.set_policy(prev)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                                   rtol=1e-4, atol=1e-5, err_msg=algo)
+        n_perm = hlo.count("collective_permute")
+        if algo == "ring":
+            assert n_perm >= N - 1, f"ring policy must take the overlapped path ({n_perm})"
+        else:
+            assert n_perm == 0, f"native policy must not permute ({n_perm})"
+
+
 def case_jmpi_trainer_matches_gspmd():
     """One train step, tiny model: explicit jmpi DP allreduce inside
     shard_map == GSPMD single-program gradients (same loss, same params)."""
@@ -107,8 +148,7 @@ def case_jmpi_trainer_matches_gspmd():
     opt = optim.init(params, rc)
     batch = synth_batch(cfg, batch=8, seq=16, kind="train")
 
-    mesh = jax.make_mesh((N,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((N,), ("data",))
 
     # jmpi backend
     step = build_jmpi_train_step(cfg, rc, mesh, None)
@@ -141,8 +181,7 @@ def case_jmpi_trainer_compressed_grads_converge():
     rc = RunConfig(learning_rate=1e-2, grad_compression_bits=8)
     params = lm_lib.init_params(cfg, jax.random.PRNGKey(0))
     opt = optim.init(params, rc)
-    mesh = jax.make_mesh((N,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((N,), ("data",))
     step = build_jmpi_train_step(cfg, rc, mesh, None)
     comp = jax.tree.map(lambda p: jmpi.init_state(p), params)
     batch = synth_batch(cfg, batch=8, seq=16, kind="train", seed=0)

@@ -13,14 +13,14 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 import repro.core as jmpi
+from repro.core import compat
 from repro.pde import cahn_hilliard as ch
 from repro.pde import mpdata
 from repro.pde.stencil import halo_exchange_2d
 
 
 def mesh2d(rows, cols, axes=("px", "py")):
-    return jax.make_mesh((rows, cols), axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((rows, cols), axes)
 
 
 def case_halo_exchange_matches_roll():
@@ -94,6 +94,21 @@ def case_mpdata_conservation_and_positivity():
     np.testing.assert_allclose(float(out.sum()), float(psi0.sum()),
                                rtol=1e-5)
     assert float(out.min()) >= 0.0
+
+
+def case_cahn_hilliard_diagnostics_mass():
+    """diagnostics=True: the in-program global_sum (a scalar jmpi allreduce,
+    policy-routed to the small-payload algorithm) reports the exact global
+    mass of the final field."""
+    rng = np.random.default_rng(4)
+    n = 32
+    c0 = jnp.asarray(0.5 + 0.05 * rng.standard_normal((n, n)), jnp.float32)
+    mesh = mesh2d(2, 4)
+    run = ch.make_solver(mesh, (2, 4), k=0.0, inner_steps=10,
+                         diagnostics=True)
+    out, mass = run(c0, n_outer=1)
+    np.testing.assert_allclose(float(mass), float(jnp.sum(out)), rtol=1e-5)
+    np.testing.assert_allclose(float(mass), float(jnp.sum(c0)), rtol=1e-5)
 
 
 def case_cahn_hilliard_conserves_mass_when_k0():

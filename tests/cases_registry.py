@@ -1,0 +1,244 @@
+"""Collective-algorithm registry cases — device-count agnostic.
+
+Run under 1, 2 and 8 emulated devices (see tests/test_registry_multidev.py):
+every registered algorithm of every logical op must match the numpy oracle
+— and, for allreduce, the default ``jmpi.allreduce`` dispatch — across
+Operator variants, dtypes (float32 / bfloat16 / int32) and non-contiguous
+``View`` payloads.  Property-based via repro.testing.property_testing
+(hypothesis when installed, deterministic shim otherwise).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+import repro.core as jmpi
+from repro.core import compat, ref, registry
+from repro.testing import property_testing
+
+N = len(jax.devices())  # the emulated device count chosen by the harness
+
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32]
+OP_NAMES = {jmpi.Operator.SUM: "sum", jmpi.Operator.PROD: "prod",
+            jmpi.Operator.MIN: "min", jmpi.Operator.MAX: "max",
+            jmpi.Operator.LAND: "land", jmpi.Operator.LOR: "lor"}
+
+
+def mesh1d():
+    return compat.make_mesh((N,), ("ranks",))
+
+
+def spmd_collective(fn, shards):
+    mesh = mesh1d()
+
+    @jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))
+    def run(x):
+        return fn(x[0])[None]
+
+    out = run(jnp.stack(shards))
+    return [np.asarray(out[i]) for i in range(N)]
+
+
+def rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if jnp.issubdtype(jnp.dtype(dtype), np.integer):
+        x = rng.integers(-9, 9, size=shape)
+    else:
+        x = rng.standard_normal(shape)
+    return jnp.asarray(x, dtype=dtype)
+
+
+def _tol(dtype, algo, op):
+    if dtype == jnp.bfloat16 or algo == "bf16_wire":
+        return dict(rtol=0.1, atol=0.1 * max(1, N))
+    if dtype == jnp.int32:
+        return dict(rtol=0, atol=0)
+    return dict(rtol=5e-5, atol=1e-5)
+
+
+def _oracle_cmp(got, want, **tol):
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float64),
+                                   np.asarray(w, np.float64), **tol)
+
+
+# ---------------------------------------------------------------------- #
+# exhaustive: every algorithm × op × dtype vs oracle AND default dispatch
+# ---------------------------------------------------------------------- #
+
+def case_allreduce_all_algorithms_match_oracle():
+    for op, name in OP_NAMES.items():
+        for dt in DTYPES:
+            if name in ("land", "lor") and dt == jnp.bfloat16:
+                continue  # logical ops over float payloads: int path only
+            src = [rand((3, 2), dt, seed=11 * i + 1) for i in range(N)]
+            np_src = [np.asarray(s, np.float64) if dt != jnp.int32
+                      else np.asarray(s) for s in src]
+            want = ref.allreduce(np_src, name)
+            deflt = spmd_collective(
+                lambda x, o=op: jmpi.allreduce(x, o)[1], src)
+            for algo in registry.algorithms("allreduce"):
+                try:
+                    got = spmd_collective(
+                        lambda x, a=algo, o=op: jmpi.allreduce(
+                            x, o, algorithm=a)[1], src)
+                except ValueError:
+                    # algorithm statically unsupported (e.g. ring×MIN,
+                    # bf16_wire×int, rd×non-pow2 group): selection contract
+                    continue
+                _oracle_cmp(got, want, **_tol(dt, algo, name),
+                            err_msg=f"{algo} {name} {dt}")
+                _oracle_cmp(got, deflt, **_tol(dt, algo, name),
+                            err_msg=f"{algo} vs default {name} {dt}")
+
+
+def case_bcast_allgather_rs_alltoall_algorithms_match_oracle():
+    for dt in DTYPES:
+        src = [rand((N * 2, 3), dt, seed=7 * i + 3) for i in range(N)]
+        np_src = [np.asarray(s, np.float64) if dt != jnp.int32
+                  else np.asarray(s) for s in src]
+        tol = _tol(dt, "", "sum")
+        for algo in registry.algorithms("bcast"):
+            got = spmd_collective(
+                lambda x, a=algo: jmpi.bcast(x, root=N - 1, algorithm=a)[1],
+                src)
+            # bcast moves bits verbatim: exact for every dtype/algorithm
+            _oracle_cmp(got, ref.bcast(np_src, root=N - 1), rtol=0, atol=0,
+                        err_msg=f"bcast {algo} {dt}")
+        for algo in registry.algorithms("allgather"):
+            got = spmd_collective(
+                lambda x, a=algo: jmpi.allgather(x, algorithm=a)[1], src)
+            _oracle_cmp(got, ref.allgather(np_src), rtol=0, atol=0,
+                        err_msg=f"allgather {algo} {dt}")
+        for algo in registry.algorithms("reduce_scatter"):
+            try:
+                got = spmd_collective(
+                    lambda x, a=algo: jmpi.reduce_scatter(
+                        x, algorithm=a)[1], src)
+            except ValueError:
+                continue
+            _oracle_cmp(got, ref.reduce_scatter(np_src), **tol,
+                        err_msg=f"reduce_scatter {algo} {dt}")
+        for algo in registry.algorithms("alltoall"):
+            got = spmd_collective(
+                lambda x, a=algo: jmpi.alltoall(x, algorithm=a)[1], src)
+            _oracle_cmp(got, ref.alltoall(np_src), rtol=0, atol=0,
+                        err_msg=f"alltoall {algo} {dt}")
+
+
+def case_view_payloads_all_allreduce_algorithms():
+    """Non-contiguous (strided) View payloads through every algorithm."""
+    for algo in registry.algorithms("allreduce"):
+        src = [rand((6, 6), jnp.float32, seed=13 * i + 5) for i in range(N)]
+
+        def f(x, a=algo):
+            view = jmpi.View(x, (slice(1, 5), slice(0, 6, 2)))
+            try:
+                _, y = jmpi.allreduce(view, algorithm=a)
+            except ValueError:
+                _, y = jmpi.allreduce(view)
+            return y
+
+        got = spmd_collective(f, src)
+        want = ref.allreduce(
+            [np.asarray(s, np.float64)[1:5, 0:6:2] for s in src], "sum")
+        _oracle_cmp(got, want, **_tol(jnp.float32, algo, "sum"),
+                    err_msg=f"view allreduce {algo}")
+
+
+# ---------------------------------------------------------------------- #
+# property-based sweep (hypothesis or shim)
+# ---------------------------------------------------------------------- #
+
+def case_property_all_algorithms_match_default():
+    given, settings, st = property_testing()
+
+    algos = registry.algorithms("allreduce")
+    ops = [jmpi.Operator.SUM, jmpi.Operator.MIN, jmpi.Operator.MAX]
+
+    @settings(max_examples=12, deadline=None)
+    @given(algo=st.sampled_from(algos), op_i=st.integers(0, len(ops) - 1),
+           rows=st.integers(1, 4), cols=st.integers(1, 3),
+           dt_i=st.integers(0, len(DTYPES) - 1), seed=st.integers(0, 2 ** 16))
+    def inner(algo, op_i, rows, cols, dt_i, seed):
+        op, dt = ops[op_i], DTYPES[dt_i]
+        src = [rand((rows, cols), dt, seed=seed + i) for i in range(N)]
+        try:
+            got = spmd_collective(
+                lambda x, a=algo, o=op: jmpi.allreduce(x, o, algorithm=a)[1],
+                src)
+        except ValueError:
+            return  # statically unsupported combination
+        want = spmd_collective(
+            lambda x, o=op: jmpi.allreduce(
+                x, o, algorithm="xla_native")[1], src)
+        name = OP_NAMES[op]
+        _oracle_cmp(got, want, **_tol(dt, algo, name),
+                    err_msg=f"{algo} {name} {dt} {rows}x{cols}")
+
+    inner()
+
+
+# ---------------------------------------------------------------------- #
+# selection machinery under devices (policy/override observable in HLO)
+# ---------------------------------------------------------------------- #
+
+def case_override_changes_lowering():
+    """set_algorithm/algorithm_override actually change the lowered HLO:
+    ring allreduce lowers to collective-permute chains, xla_native to one
+    all-reduce."""
+    if N < 2:
+        return  # single rank: every algorithm is the identity
+    mesh = mesh1d()
+
+    def lowered(algorithm):
+        @jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))
+        def f(x):
+            _, y = jmpi.allreduce(x[0], algorithm=algorithm)
+            return y[None]
+
+        x = jnp.zeros((N, 64), jnp.float32)
+        return jax.jit(f).lower(x).as_text()
+
+    ring_hlo = lowered("ring")
+    native_hlo = lowered("xla_native")
+    assert ring_hlo.count("collective_permute") >= 2 * (N - 1), \
+        "ring allreduce must lower to ppermute chains"
+    assert "all-reduce" in native_hlo or "all_reduce" in native_hlo
+
+    with jmpi.algorithm_override(allreduce="ring"):
+        via_override = lowered(None)
+    assert via_override.count("collective_permute") >= 2 * (N - 1), \
+        "algorithm_override must reroute the default dispatch"
+
+
+def case_policy_table_routes_by_size():
+    """A policy with a tiny-payload rule routes small payloads to the rule's
+    algorithm and large payloads to the default — observable in the HLO."""
+    if N < 2:
+        return
+    mesh = mesh1d()
+    table = jmpi.PolicyTable(
+        rules=[jmpi.PolicyRule("allreduce", "ring", max_bytes=1024)],
+        default={"allreduce": "xla_native"})
+    prev = registry.active_policy()
+    jmpi.set_policy(table)
+    try:
+        def lowered(numel):
+            @jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))
+            def f(x):
+                _, y = jmpi.allreduce(x[0])
+                return y[None]
+
+            x = jnp.zeros((N, numel), jnp.float32)
+            return jax.jit(f).lower(x).as_text()
+
+        small = lowered(16)        # 64 B -> ring
+        large = lowered(65536)     # 256 KiB -> xla_native
+        assert small.count("collective_permute") >= 2 * (N - 1)
+        assert large.count("collective_permute") == 0
+    finally:
+        jmpi.set_policy(prev)

@@ -1,12 +1,16 @@
 """Pytest wrappers for the multi-rank jmpi cases (8 emulated devices).
 
 The device-count flag is process-global, so each case module runs in a child
-process (see repro.testing); the transcript lists per-case PASS/FAIL.
+process (see repro.testing); the whole module executes ONCE per device count
+(cached transcript) and each parametrized test asserts its own case — per-
+case reporting at one subprocess per module.
 """
 
 import pytest
 
-from repro.testing import run_cases
+from repro.testing import assert_case
+
+pytestmark = pytest.mark.multidev
 
 CASES = [
     "case_rank_size_initialized",
@@ -16,6 +20,9 @@ CASES = [
     "case_send_recv_blocking_pair",
     "case_isend_wait_test_variants",
     "case_p2p_trace_time_topology_errors",
+    "case_p2p_tag_matching",
+    "case_p2p_err_truncate",
+    "case_waitany_testany_ordering",
     "case_allreduce_operators",
     "case_allreduce_logical",
     "case_bcast_all_dtypes",
@@ -34,11 +41,11 @@ CASES = [
     "case_property_permute_roundtrip",
 ]
 
-# One subprocess for the whole module keeps jax-import cost paid once; the
-# transcript still reports each case. Individual reruns:
-#   pytest -k case_name  (runs just that case in its own child)
+# Individual reruns in a fresh child:
+#   PYTHONPATH=src python -c "from repro.testing import run_cases; \
+#       run_cases('tests.cases_core', 8, only='case_name')"
 
 
 @pytest.mark.parametrize("case", CASES)
 def test_core_case(case):
-    run_cases("tests.cases_core", n_devices=8, only=case)
+    assert_case("tests.cases_core", case, n_devices=8)

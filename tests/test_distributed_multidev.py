@@ -2,17 +2,22 @@
 
 import pytest
 
-from repro.testing import run_cases
+from repro.testing import assert_case
+
+pytestmark = pytest.mark.multidev
 
 CASES = [
     "case_pipeline_matches_stacked_forward",
     "case_collective_matmul_ag_matches",
     "case_collective_matmul_rs_matches",
-    "case_jmpi_trainer_matches_gspmd",
-    "case_jmpi_trainer_compressed_grads_converge",
+    "case_matmul_allgather_policy_routes",
+    pytest.param("case_jmpi_trainer_matches_gspmd",
+                 marks=pytest.mark.slow),
+    pytest.param("case_jmpi_trainer_compressed_grads_converge",
+                 marks=pytest.mark.slow),
 ]
 
 
 @pytest.mark.parametrize("case", CASES)
 def test_distributed_case(case):
-    run_cases("tests.cases_distributed", n_devices=8, only=case)
+    assert_case("tests.cases_distributed", case, n_devices=8)

@@ -76,7 +76,8 @@ def test_flash_attention_suffix_decode():
 
 
 def test_flash_attention_property():
-    from hypothesis import given, settings, strategies as st
+    from repro.testing import property_testing
+    given, settings, st = property_testing()
 
     @settings(max_examples=10, deadline=None)
     @given(s=st.integers(16, 128), kh=st.sampled_from([1, 2, 4]),
@@ -203,7 +204,8 @@ def test_rmsnorm_matches_ref(dtype, shape, br):
 
 
 def test_rmsnorm_property():
-    from hypothesis import given, settings, strategies as st
+    from repro.testing import property_testing
+    given, settings, st = property_testing()
 
     @settings(max_examples=15, deadline=None)
     @given(r=st.integers(1, 64), d=st.sampled_from([8, 64, 256]),

@@ -2,7 +2,9 @@
 
 import pytest
 
-from repro.testing import run_cases
+from repro.testing import assert_case
+
+pytestmark = pytest.mark.multidev
 
 CASES = [
     "case_halo_exchange_matches_roll",
@@ -10,9 +12,10 @@ CASES = [
     "case_mpdata_matches_oracle_all_layouts",
     "case_mpdata_conservation_and_positivity",
     "case_cahn_hilliard_conserves_mass_when_k0",
+    "case_cahn_hilliard_diagnostics_mass",
 ]
 
 
 @pytest.mark.parametrize("case", CASES)
 def test_pde_case(case):
-    run_cases("tests.cases_pde", n_devices=8, only=case)
+    assert_case("tests.cases_pde", case, n_devices=8)

@@ -1,0 +1,31 @@
+"""Pytest wrappers for the collective-algorithm registry cases.
+
+Acceptance: every registry algorithm passes the oracle property tests for
+n ∈ {1, 2, 8} ranks.  The case module is device-count agnostic; each count
+runs it once in its own child process (cached transcript).  The 8-rank run
+compiles the full algorithm × operator × dtype matrix and is marked slow
+(quick lane covers 1 and 2 ranks).
+"""
+
+import pytest
+
+from repro.testing import assert_case
+
+pytestmark = pytest.mark.multidev
+
+CASES = [
+    "case_allreduce_all_algorithms_match_oracle",
+    "case_bcast_allgather_rs_alltoall_algorithms_match_oracle",
+    "case_view_payloads_all_allreduce_algorithms",
+    "case_property_all_algorithms_match_default",
+    "case_override_changes_lowering",
+    "case_policy_table_routes_by_size",
+]
+
+N_RANKS = [1, 2, pytest.param(8, marks=pytest.mark.slow)]
+
+
+@pytest.mark.parametrize("n", N_RANKS)
+@pytest.mark.parametrize("case", CASES)
+def test_registry_case(case, n):
+    assert_case("tests.cases_registry", case, n_devices=n)
