@@ -16,6 +16,8 @@ process stays at 1 device).
 
 from __future__ import annotations
 
+import json
+import os
 import subprocess
 import sys
 
@@ -23,31 +25,66 @@ from repro.testing import child_env
 
 
 MODULES = [
-    ("benchmarks.bench_pi", 4),
-    ("benchmarks.bench_halo", 1),
-    ("benchmarks.bench_halo", 2),
-    ("benchmarks.bench_halo", 4),
-    ("benchmarks.bench_halo", 8),
-    ("benchmarks.bench_mpdata", 8),
-    ("benchmarks.bench_collectives", 8),
-    ("benchmarks.bench_trainer_comm", 8),
-    ("benchmarks.bench_kernels", 1),
+    ("benchmarks.bench_pi", 4, ()),
+    ("benchmarks.bench_halo", 1, ()),
+    ("benchmarks.bench_halo", 2, ()),
+    ("benchmarks.bench_halo", 4, ()),
+    ("benchmarks.bench_halo", 8, ()),
+    ("benchmarks.bench_mpdata", 8, ()),
+    ("benchmarks.bench_collectives", 8, ()),
+    ("benchmarks.bench_collectives", 8, ("--persistent",)),
+    ("benchmarks.bench_trainer_comm", 8, ()),
+    ("benchmarks.bench_kernels", 1, ()),
 ]
+
+#: CSV rows from these modules are also written to BENCH_collectives.json at
+#: the repo root — one machine-readable artifact per run so the collective
+#: perf trajectory (incl. persistent-plan reuse) is recorded PR over PR.
+ARTIFACT_MODULE = "benchmarks.bench_collectives"
+ARTIFACT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_collectives.json")
+
+
+def _parse_rows(stdout: str) -> list[dict]:
+    rows = []
+    for line in stdout.splitlines():
+        if line.startswith("#") or "," not in line:
+            continue
+        name, value, *rest = line.split(",")
+        try:
+            value = float(value)
+        except ValueError:
+            continue
+        # "value" (not us_per_call): persistent-mode rows carry trace ms
+        # and cache counters in this column, not only per-call microseconds.
+        rows.append({"name": name, "value": value,
+                     "derived": ",".join(rest)})
+    return rows
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     failures = []
-    for mod, n_dev in MODULES:
-        print(f"# {mod} (n_devices={n_dev})", flush=True)
+    artifact_rows: list[dict] = []
+    for mod, n_dev, extra in MODULES:
+        print(f"# {mod} (n_devices={n_dev}{' ' + ' '.join(extra) if extra else ''})",
+              flush=True)
         proc = subprocess.run(
-            [sys.executable, "-m", mod], env=child_env(n_dev),
+            [sys.executable, "-m", mod, *extra], env=child_env(n_dev),
             capture_output=True, text=True, timeout=3600)
         sys.stdout.write(proc.stdout)
         if proc.returncode != 0:
             failures.append(mod)
             sys.stdout.write(f"# FAILED {mod}\n{proc.stderr[-2000:]}\n")
+        elif mod == ARTIFACT_MODULE:
+            artifact_rows.extend(_parse_rows(proc.stdout))
         sys.stdout.flush()
+    if artifact_rows:
+        with open(ARTIFACT_PATH, "w") as f:
+            json.dump({"version": 1, "module": ARTIFACT_MODULE,
+                       "rows": artifact_rows}, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {len(artifact_rows)} rows to {ARTIFACT_PATH}")
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

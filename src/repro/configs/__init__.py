@@ -5,6 +5,9 @@ from repro.configs import (deepseek_v3_671b, h2o_danube_3_4b, internvl2_1b,
                            qwen2_1p5b, xlstm_350m, yi_6b, zamba2_1p2b)
 from repro.configs.base import SHAPES, ModelConfig, RunConfig, ShapeCell
 
+__all__ = ["SHAPES", "ModelConfig", "RunConfig", "ShapeCell",
+           "ARCHS", "get", "get_tiny"]
+
 ARCHS = {
     "musicgen-large": musicgen_large,
     "zamba2-1.2b": zamba2_1p2b,

@@ -7,15 +7,51 @@ programs so compute and communication live in one XLA executable, plus the
 beyond-paper features (non-default communicators, alltoall/reduce_scatter,
 ring schedules, compressed allreduce) recorded in DESIGN.md §7.
 
-Typical use (paper Listing 3 analogue)::
+jmpi 2.0 — communicator-centric API
+-----------------------------------
+The :class:`Communicator` is the center of the API: every routine is a
+method (``comm.allreduce``, ``comm.isend``, ``comm.dup()``, ``comm.split()``),
+and the module-level functions below are thin wrappers that resolve the
+ambient WORLD and delegate — every v1.0 call site keeps working.
+
+Migration table (module function → communicator method)::
+
+    jmpi.rank() / jmpi.size()       comm.rank() / comm.size()
+    jmpi.allreduce(x, op)           comm.allreduce(x, op)
+    jmpi.bcast(x, root)             comm.bcast(x, root)
+    jmpi.scatter / gather           comm.scatter / comm.gather
+    jmpi.allgather / alltoall       comm.allgather / comm.alltoall
+    jmpi.reduce_scatter             comm.reduce_scatter
+    jmpi.barrier()                  comm.barrier()
+    jmpi.[i]send / [i]recv          comm.[i]send / comm.[i]recv
+    jmpi.[i]sendrecv                comm.[i]sendrecv
+    (new, MPI-3)                    comm.iallreduce/ibcast/iscatter/igather/
+                                    iallgather/ialltoall/ireduce_scatter/
+                                    ibarrier  -> Request
+    (new, MPI-4)                    comm.<collective>_init(...) -> Plan;
+                                    comm.sendrecv_init(...)    -> Plan
+
+Nonblocking collectives return the SAME ``Request`` type as isend/irecv, so
+mixed p2p + collective request lists complete through one unified
+``wait``/``waitall``/``waitany``/``test``/``testall``/``testany``.
+
+Persistent plans (paper Listing-3 analogue, 2.0 style)::
 
     import repro.core as jmpi
 
     @jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P())
     def pi_step(intervals):
-        part = get_pi_part(intervals, jmpi.rank(), jmpi.size())
-        status, pi = jmpi.allreduce(part)
+        comm = jmpi.world()
+        part = get_pi_part(intervals, comm.rank(), comm.size())
+        plan = comm.allreduce_init(                 # algorithm frozen ONCE,
+            jax.ShapeDtypeStruct(part.shape, part.dtype))  # plan cached
+        status, pi = jmpi.wait(plan.start(part))    # re-startable per step
         return pi
+
+``plan.start(x)`` skips the per-call registry/policy dispatch (the choice is
+frozen at init) and the process-global plan cache returns the same Plan on
+re-trace — see ``benchmarks/bench_collectives.py --persistent`` and
+:func:`plan_cache_stats`.
 
 Collective algorithm registry
 -----------------------------
@@ -30,8 +66,10 @@ the payload bytes and group size, **at trace time**.  Control points::
         ...
     jmpi.load_policy("experiments/collective_policy.json")  # tuned table
 
-Regenerate the tuned table with ``python -m repro.launch.hillclimb
---tune-collectives`` or inspect crossovers with
+An (algorithm, Operator) pair the lowering cannot honor raises a uniform
+trace-time ``ValueError`` naming both — never a silent fallback to a wrong
+reduction.  Regenerate the tuned table with ``python -m
+repro.launch.hillclimb --tune-collectives`` or inspect crossovers with
 ``python benchmarks/bench_collectives.py --sweep-algorithms``.
 """
 
@@ -40,10 +78,14 @@ import time as _time
 import jax as _jax
 
 from repro.core import registry
-from repro.core import schedules as _schedules  # registers rd/tree/pairwise
+from repro.core import schedules as _schedules
+
+_ = _schedules  # imported for its side effect: registers rd/tree/pairwise
 from repro.core.collectives import (Operator, allgather, allreduce, alltoall,
-                                    barrier, bcast, gather, reduce_scatter,
-                                    scatter)
+                                    barrier, bcast, gather, iallgather,
+                                    iallreduce, ialltoall, ibarrier, ibcast,
+                                    igather, ireduce_scatter, iscatter,
+                                    reduce_scatter, scatter)
 from repro.core.comm import Communicator, resolve, set_world, spmd, world
 from repro.core.compression import (CompressionState, compressed_allreduce,
                                     init_state, wire_bytes_per_rank)
@@ -51,6 +93,10 @@ from repro.core.hostbridge import HostBridge
 from repro.core.p2p import (ANY_TAG, Request, irecv, isend, isendrecv, recv,
                             send, sendrecv, test, testall, testany, wait,
                             waitall, waitany)
+from repro.core.plans import (Plan, allgather_init, allreduce_init,
+                              alltoall_init, barrier_init, bcast_init,
+                              gather_init, plan_cache_clear, plan_cache_stats,
+                              reduce_scatter_init, scatter_init, sendrecv_init)
 from repro.core.registry import (PolicyRule, PolicyTable, algorithm_override,
                                  algorithms, clear_algorithms, load_policy,
                                  save_policy, set_algorithm, set_policy)
@@ -87,11 +133,17 @@ def wtime() -> float:
 RequestType = Request  # paper spells it mpi.RequestType in Listing 5
 
 __all__ = [
-    "Operator", "Communicator", "Request", "RequestType", "View",
+    "Operator", "Communicator", "Request", "RequestType", "View", "Plan",
     "HostBridge", "CompressionState", "TokenContext",
     "SUCCESS", "ERR_TOPOLOGY", "ERR_TRUNCATE", "ANY_TAG",
     "allgather", "allreduce", "alltoall", "barrier", "bcast", "gather",
-    "reduce_scatter", "scatter", "sendrecv", "send", "recv", "isend", "irecv",
+    "reduce_scatter", "scatter",
+    "iallgather", "iallreduce", "ialltoall", "ibarrier", "ibcast", "igather",
+    "ireduce_scatter", "iscatter",
+    "allgather_init", "allreduce_init", "alltoall_init", "barrier_init",
+    "bcast_init", "gather_init", "reduce_scatter_init", "scatter_init",
+    "sendrecv_init", "plan_cache_stats", "plan_cache_clear",
+    "sendrecv", "send", "recv", "isend", "irecv",
     "isendrecv", "wait", "waitall", "waitany", "test", "testall", "testany",
     "ring_allreduce", "ring_allgather", "compressed_allreduce", "init_state",
     "wire_bytes_per_rank", "spmd", "world", "set_world", "resolve",

@@ -3,24 +3,32 @@ alltoall, reduce_scatter, barrier — the numba-mpi v1.0 collective surface
 (+ reduce_scatter/alltoall beyond v1.0), dispatched through the
 collective-algorithm registry (``repro.core.registry``).
 
+jmpi 2.0 surface: every op exists in three forms sharing ONE dispatch path —
+
+* blocking   — ``allreduce(x) -> (status, value)`` (v1.0-compatible);
+* nonblocking — ``iallreduce(x) -> Request`` (MPI-3 ``MPI_Iallreduce``):
+  the same :class:`repro.core.p2p.Request` as isend/irecv, so a mixed list
+  of p2p and collective requests flows through one unified
+  ``wait/waitall/waitany/test/testall/testany``;
+* persistent — ``allreduce_init(...) -> Plan`` (MPI-4 ``MPI_Allreduce_init``,
+  in :mod:`repro.core.plans`): algorithm choice frozen once, re-dispatched
+  from a cache on hot paths.
+
 Every op: takes NumPy-like payloads (or Views), deduces dtype/shape from the
 data (paper §2.3 "signatures do not require supplying data types or sizes"),
 threads the ordering token, and returns ``(status, value)`` — or
 ``(status, value, token)`` when an explicit token is passed.
 
-Algorithm selection (new in the registry refactor): each logical op has
-≥2 interchangeable lowerings — the ``xla_native`` kernels defined here, the
-chunked-ring schedules in ``repro.core.ring``, and the latency-optimal
-schedules in ``repro.core.schedules``.  Which one lowers is decided at trace
-time from the payload size and group size by the active policy table; force
-a specific one per-call with ``algorithm="ring"`` or globally with
+Algorithm selection: each logical op has ≥2 interchangeable lowerings — the
+``xla_native`` kernels defined here, the chunked-ring schedules in
+``repro.core.ring``, and the latency-optimal schedules in
+``repro.core.schedules``.  Which one lowers is decided at trace time from
+the payload size and group size by the active policy table; force a
+specific one per-call with ``algorithm="ring"`` or globally with
 ``jmpi.set_algorithm("allreduce", "ring")``.
 """
 
 from __future__ import annotations
-
-import enum
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,18 +37,16 @@ from repro.core import registry
 from repro.core import token as token_lib
 from repro.core import views as views_lib
 from repro.core.comm import Communicator, resolve
+from repro.core.operators import Operator
+from repro.core.p2p import Request
 from repro.core.token import SUCCESS
 
-
-class Operator(enum.Enum):
-    """Reduction operators (paper: 'Operator enumeration, default SUM')."""
-
-    SUM = "sum"
-    PROD = "prod"
-    MIN = "min"
-    MAX = "max"
-    LAND = "land"
-    LOR = "lor"
+__all__ = [
+    "Operator", "allreduce", "bcast", "scatter", "gather", "allgather",
+    "alltoall", "reduce_scatter", "barrier", "iallreduce", "ibcast",
+    "iscatter", "igather", "iallgather", "ialltoall", "ireduce_scatter",
+    "ibarrier",
+]
 
 
 def _tok_in(token):
@@ -55,10 +61,7 @@ def _tok_out(explicit, new_token, status, value):
     return status, value
 
 
-def _pack(x):
-    if isinstance(x, views_lib.View):
-        return x.pack()
-    return jnp.asarray(x)
+_pack = views_lib.pack
 
 
 # ===========================================================================
@@ -110,7 +113,7 @@ def _allgather_xla(val, tok, comm):
     return out, tok
 
 
-@registry.register("reduce_scatter", "xla_native")
+@registry.register("reduce_scatter", "xla_native", operators=(Operator.SUM,))
 def _reduce_scatter_xla(val, tok, comm, *, op):
     out = jax.lax.psum_scatter(val, comm.axes, scatter_dimension=0, tiled=True)
     return out, tok
@@ -125,7 +128,149 @@ def _alltoall_xla(val, tok, comm, *, split_axis=0, concat_axis=0):
 
 
 # ===========================================================================
-# Public ops — pack payload, select algorithm, thread the token.
+# Shared dispatch: pack payload, select algorithm, thread the token, wrap
+# the in-flight value in a Request.  Blocking ops complete it immediately;
+# the i* forms hand the Request to the unified wait/test machinery.
+# ===========================================================================
+
+def _issue(op_name, x, *, comm, token, algorithm, tag=0, **kw):
+    comm = resolve(comm)
+    tok, explicit = _tok_in(token)
+    val = _pack(x)
+    algo = registry.select(op_name, val, comm, algorithm=algorithm, **kw)
+    tok, val = token_lib.tie(tok, val)
+    out, tok = algo.fn(val, tok, comm, **kw)
+    new_tok = token_lib.advance(tok, out)
+    if not explicit:
+        token_lib.ambient().set(new_tok)
+    return Request(value=out, token=new_tok, tag=tag,
+                   used_ambient=not explicit), explicit
+
+
+def _finish(req, explicit):
+    """Blocking completion: same (status, value[, token]) tuple as v1.0."""
+    return _tok_out(explicit, req.token, req.status, req.value)
+
+
+# ===========================================================================
+# Nonblocking collectives (MPI-3 ``MPI_I<collective>`` analogues).
+#
+# Issue eagerly, complete at wait: the returned Request holds the collective
+# result and its ordering token; XLA's latency-hiding scheduler overlaps
+# independent compute until the ``wait``/``test`` consumption point — the
+# exact Request model of isend/irecv, so mixed p2p+collective request lists
+# flow through one waitall/waitany/testall/testany.
+# ===========================================================================
+
+def iallreduce(x, op: Operator = Operator.SUM, *,
+               comm: Communicator | None = None, token=None,
+               algorithm: str | None = None, tag: int = 0) -> Request:
+    """MPI_Iallreduce: start a nonblocking allreduce, complete via wait*/test*."""
+    req, _ = _issue("allreduce", x, comm=comm, token=token,
+                    algorithm=algorithm, tag=tag, op=op)
+    return req
+
+
+def ibcast(x, root: int = 0, *, comm: Communicator | None = None, token=None,
+           algorithm: str | None = None, tag: int = 0) -> Request:
+    """MPI_Ibcast: root's value lands on every rank at completion."""
+    req, _ = _issue("bcast", x, comm=comm, token=token, algorithm=algorithm,
+                    tag=tag, root=root)
+    return req
+
+
+def iscatter(x, root: int = 0, *, comm: Communicator | None = None,
+             token=None, algorithm: str | None = None, tag: int = 0) -> Request:
+    """MPI_Iscatter: rank i's Request completes with the i-th equal chunk
+    (axis 0) of root's buffer.  Lowered as bcast + static per-rank slice;
+    XLA's partitioner elides the unused chunks on real meshes."""
+    comm = resolve(comm)
+    val = _pack(x)
+    n = comm.size()
+    if val.shape[0] % n:
+        raise ValueError(f"scatter payload axis0={val.shape[0]} not divisible "
+                         f"by comm size {n}")
+    breq, explicit = _issue("bcast", val, comm=comm, token=token,
+                            algorithm=algorithm, root=root)
+    chunk = val.shape[0] // n
+    out = jax.lax.dynamic_slice_in_dim(breq.value, comm.rank() * chunk, chunk,
+                                       axis=0)
+    new_tok = token_lib.advance(breq.token, out)
+    if not explicit:
+        token_lib.ambient().set(new_tok)
+    return Request(value=out, token=new_tok, tag=tag,
+                   used_ambient=not explicit, status=breq.status)
+
+
+def iallgather(x, *, comm: Communicator | None = None, token=None,
+               algorithm: str | None = None, tag: int = 0) -> Request:
+    """MPI_Iallgather: completes with every rank's buffer concatenated
+    along axis 0."""
+    req, _ = _issue("allgather", x, comm=comm, token=token,
+                    algorithm=algorithm, tag=tag)
+    return req
+
+
+def igather(x, root: int = 0, *, comm: Communicator | None = None, token=None,
+            algorithm: str | None = None, tag: int = 0) -> Request:
+    """MPI_Igather: the concatenation is *valid at root*. SPMD lowering uses
+    all_gather (every rank materializes the result; contents identical), the
+    root-only contract is preserved at the API level."""
+    del root  # root-only validity is a contract, not a dataflow difference
+    return iallgather(x, comm=comm, token=token, algorithm=algorithm, tag=tag)
+
+
+def ialltoall(x, *, comm: Communicator | None = None, token=None,
+              split_axis: int = 0, concat_axis: int = 0,
+              algorithm: str | None = None, tag: int = 0) -> Request:
+    """MPI_Ialltoall: completes with chunk j from every rank, concatenated."""
+    comm = resolve(comm)
+    if len(comm.axes) != 1:
+        raise ValueError("alltoall currently requires a single-axis "
+                         "communicator (split the comm first)")
+    val = _pack(x)
+    n = comm.size()
+    if val.shape[split_axis] % n:
+        raise ValueError(f"alltoall axis {split_axis} size {val.shape[split_axis]}"
+                         f" not divisible by comm size {n}")
+    req, _ = _issue("alltoall", val, comm=comm, token=token,
+                    algorithm=algorithm, tag=tag, split_axis=split_axis,
+                    concat_axis=concat_axis)
+    return req
+
+
+def ireduce_scatter(x, op: Operator = Operator.SUM, *,
+                    comm: Communicator | None = None, token=None,
+                    algorithm: str | None = None, tag: int = 0) -> Request:
+    """MPI_Ireduce_scatter_block: completes with this rank's reduced chunk."""
+    comm = resolve(comm)
+    val = _pack(x)
+    n = comm.size()
+    if val.shape[0] % n:
+        raise ValueError(f"reduce_scatter axis0={val.shape[0]} not divisible "
+                         f"by comm size {n}")
+    req, _ = _issue("reduce_scatter", val, comm=comm, token=token,
+                    algorithm=algorithm, tag=tag, op=op)
+    return req
+
+
+def ibarrier(*, comm: Communicator | None = None, token=None,
+             tag: int = 0) -> Request:
+    """MPI_Ibarrier: the Request's completion point is the synchronization —
+    no jmpi op sequenced after ``wait(req)`` can be scheduled before every
+    rank reached the barrier."""
+    comm = resolve(comm)
+    tok, explicit = _tok_in(token)
+    probe = jax.lax.psum(tok, comm.axes)
+    new_tok = token_lib.advance(tok, probe)
+    if not explicit:
+        token_lib.ambient().set(new_tok)
+    return Request(value=probe, token=new_tok, tag=tag,
+                   used_ambient=not explicit)
+
+
+# ===========================================================================
+# Blocking forms (v1.0 surface) — issue + immediate completion.
 # ===========================================================================
 
 def allreduce(x, op: Operator = Operator.SUM, *,
@@ -134,70 +279,41 @@ def allreduce(x, op: Operator = Operator.SUM, *,
     """MPI_Allreduce.  ``algorithm``: force a registry entry by name
     (xla_native | ring | recursive_doubling | bf16_wire); default is the
     active policy's size-aware choice."""
-    comm = resolve(comm)
-    tok, explicit = _tok_in(token)
-    val = _pack(x)
-    algo = registry.select("allreduce", val, comm, algorithm=algorithm, op=op)
-    tok, val = token_lib.tie(tok, val)
-    out, tok = algo.fn(val, tok, comm, op=op)
-    new_tok = token_lib.advance(tok, out)
-    return _tok_out(explicit, new_tok, SUCCESS, out)
+    req, explicit = _issue("allreduce", x, comm=comm, token=token,
+                           algorithm=algorithm, op=op)
+    return _finish(req, explicit)
 
 
 def bcast(x, root: int = 0, *, comm: Communicator | None = None, token=None,
           algorithm: str | None = None):
     """MPI_Bcast: root's value lands on every rank (xla_native | tree)."""
-    comm = resolve(comm)
-    tok, explicit = _tok_in(token)
-    val = _pack(x)
-    algo = registry.select("bcast", val, comm, algorithm=algorithm, root=root)
-    tok, val = token_lib.tie(tok, val)
-    out, tok = algo.fn(val, tok, comm, root=root)
-    new_tok = token_lib.advance(tok, out)
-    return _tok_out(explicit, new_tok, SUCCESS, out)
+    req, explicit = _issue("bcast", x, comm=comm, token=token,
+                           algorithm=algorithm, root=root)
+    return _finish(req, explicit)
 
 
 def scatter(x, root: int = 0, *, comm: Communicator | None = None, token=None,
             algorithm: str | None = None):
     """MPI_Scatter: rank i receives the i-th equal chunk (axis 0) of root's
-    buffer. Lowered as bcast + static per-rank dynamic_slice; XLA's partitioner
-    elides the unused chunks on real meshes.  The underlying bcast follows the
-    same algorithm selection as :func:`bcast`."""
-    comm = resolve(comm)
-    tok, explicit = _tok_in(token)
-    val = _pack(x)
-    n = comm.size()
-    if val.shape[0] % n:
-        raise ValueError(f"scatter payload axis0={val.shape[0]} not divisible "
-                         f"by comm size {n}")
-    status, full, tok = bcast(val, root, comm=comm, token=tok,
-                              algorithm=algorithm)
-    chunk = val.shape[0] // n
-    start = comm.rank() * chunk
-    out = jax.lax.dynamic_slice_in_dim(full, start, chunk, axis=0)
-    new_tok = token_lib.advance(tok, out)
-    return _tok_out(explicit, new_tok, status, out)
+    buffer.  The underlying bcast follows the same algorithm selection as
+    :func:`bcast`."""
+    explicit = token is not None
+    req = iscatter(x, root, comm=comm, token=token, algorithm=algorithm)
+    return _finish(req, explicit)
 
 
 def allgather(x, *, comm: Communicator | None = None, token=None,
               algorithm: str | None = None):
     """MPI_Allgather: concatenate every rank's buffer along axis 0
     (xla_native | ring)."""
-    comm = resolve(comm)
-    tok, explicit = _tok_in(token)
-    val = _pack(x)
-    algo = registry.select("allgather", val, comm, algorithm=algorithm)
-    tok, val = token_lib.tie(tok, val)
-    out, tok = algo.fn(val, tok, comm)
-    new_tok = token_lib.advance(tok, out)
-    return _tok_out(explicit, new_tok, SUCCESS, out)
+    req, explicit = _issue("allgather", x, comm=comm, token=token,
+                           algorithm=algorithm)
+    return _finish(req, explicit)
 
 
 def gather(x, root: int = 0, *, comm: Communicator | None = None, token=None,
            algorithm: str | None = None):
-    """MPI_Gather: the concatenation is *valid at root*. SPMD lowering uses
-    all_gather (every rank materializes the result; contents identical), the
-    root-only contract is preserved at the API level."""
+    """MPI_Gather: the concatenation is *valid at root* (see igather)."""
     del root  # root-only validity is a contract, not a dataflow difference
     return allgather(x, comm=comm, token=token, algorithm=algorithm)
 
@@ -208,55 +324,28 @@ def alltoall(x, *, comm: Communicator | None = None, token=None,
     """MPI_Alltoall: rank j receives chunk j from every rank, concatenated
     (xla_native | pairwise).  Payload axis ``split_axis`` must be divisible
     by comm size."""
-    comm = resolve(comm)
-    if len(comm.axes) != 1:
-        raise ValueError("alltoall currently requires a single-axis "
-                         "communicator (split the comm first)")
-    tok, explicit = _tok_in(token)
-    val = _pack(x)
-    n = comm.size()
-    if val.shape[split_axis] % n:
-        raise ValueError(f"alltoall axis {split_axis} size {val.shape[split_axis]}"
-                         f" not divisible by comm size {n}")
-    algo = registry.select("alltoall", val, comm, algorithm=algorithm,
-                           split_axis=split_axis, concat_axis=concat_axis)
-    tok, val = token_lib.tie(tok, val)
-    out, tok = algo.fn(val, tok, comm, split_axis=split_axis,
-                       concat_axis=concat_axis)
-    new_tok = token_lib.advance(tok, out)
-    return _tok_out(explicit, new_tok, SUCCESS, out)
+    explicit = token is not None
+    req = ialltoall(x, comm=comm, token=token, split_axis=split_axis,
+                    concat_axis=concat_axis, algorithm=algorithm)
+    return _finish(req, explicit)
 
 
 def reduce_scatter(x, op: Operator = Operator.SUM, *,
                    comm: Communicator | None = None, token=None,
                    algorithm: str | None = None):
-    """MPI_Reduce_scatter_block (SUM only): psum_scatter along axis 0
-    (xla_native | ring)."""
-    comm = resolve(comm)
-    if op is not Operator.SUM:
-        raise ValueError("reduce_scatter supports SUM only")
-    tok, explicit = _tok_in(token)
-    val = _pack(x)
-    n = comm.size()
-    if val.shape[0] % n:
-        raise ValueError(f"reduce_scatter axis0={val.shape[0]} not divisible "
-                         f"by comm size {n}")
-    algo = registry.select("reduce_scatter", val, comm, algorithm=algorithm,
-                           op=op)
-    tok, val = token_lib.tie(tok, val)
-    out, tok = algo.fn(val, tok, comm, op=op)
-    new_tok = token_lib.advance(tok, out)
-    return _tok_out(explicit, new_tok, SUCCESS, out)
+    """MPI_Reduce_scatter_block along axis 0 (xla_native | ring).  The
+    xla_native lowering (psum_scatter) is SUM-only; other Operators require
+    an algorithm that declares them (e.g. ``ring``) — an unsupported pair
+    raises the registry's uniform trace-time error."""
+    explicit = token is not None
+    req = ireduce_scatter(x, op, comm=comm, token=token, algorithm=algorithm)
+    return _finish(req, explicit)
 
 
 def barrier(*, comm: Communicator | None = None, token=None):
     """MPI_Barrier: a 1-element psum tied into the token chain. No jmpi op
     sequenced after the barrier can be scheduled before every rank reaches it."""
-    comm = resolve(comm)
-    tok, explicit = _tok_in(token)
-    probe = jax.lax.psum(tok, comm.axes)
-    new_tok = token_lib.advance(tok, probe)
-    if explicit:
-        return SUCCESS, new_tok
-    token_lib.ambient().set(new_tok)
+    req = ibarrier(comm=comm, token=token)
+    if token is not None:
+        return SUCCESS, req.token
     return SUCCESS

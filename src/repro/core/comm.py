@@ -1,4 +1,6 @@
-"""Communicators — process groups over mesh-axis subsets.
+"""Communicators — process groups over mesh-axis subsets, and (jmpi 2.0)
+the center of the API: every v1.0 routine and every beyond-paper collective
+is a ``Communicator`` method.
 
 numba-mpi v1.0 exposes only ``MPI_COMM_WORLD`` (non-default communicators are
 named future work in the paper §4).  We implement the full abstraction: a
@@ -7,25 +9,49 @@ axes; ranks are row-major linearized over those axes (first axis slowest),
 matching the ``jax.lax.ppermute`` tuple-axis linearization.  Devices that
 share coordinates on the *other* mesh axes form independent groups — exactly
 MPI's ``Comm_split`` semantics, obtained for free from named-axis SPMD.
+
+jmpi 2.0 method surface (module-level functions remain as thin wrappers that
+resolve the ambient WORLD and delegate here — no v1.0 call site breaks)::
+
+    comm = jmpi.world()                 # or Communicator(("data",)), .split()
+    status, y = comm.allreduce(x)       # blocking collective
+    req = comm.iallreduce(x)            # MPI-3 nonblocking -> Request
+    plan = comm.allreduce_init(jax.ShapeDtypeStruct(x.shape, x.dtype))
+    req = plan.start(x)                 # MPI-4 persistent -> Request
+    status, y = jmpi.wait(req)          # one unified completion model
+
+The method bodies import their implementation modules lazily: collectives /
+p2p / plans all import this module for ``resolve``, so eager imports here
+would cycle.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Callable, Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import compat
 from repro.core import token as token_lib
+from repro.core.operators import Operator
+
+_DUP_CONTEXTS = itertools.count(1)
 
 
 @dataclasses.dataclass(frozen=True)
 class Communicator:
-    """A process group spanning the named mesh axes (row-major rank order)."""
+    """A process group spanning the named mesh axes (row-major rank order).
+
+    ``context`` distinguishes :meth:`dup` clones (MPI_Comm_dup semantics: a
+    duplicated communicator is a distinct communication context — it hashes
+    and compares separately, so e.g. persistent plans built on the dup are
+    cached independently of the original's).
+    """
 
     axes: tuple[str, ...]
+    context: int = 0
 
     def __post_init__(self):
         if not self.axes:
@@ -57,7 +83,15 @@ class Communicator:
         missing = [a for a in axes if a not in self.axes]
         if missing:
             raise ValueError(f"axes {missing} not part of communicator {self.axes}")
-        return Communicator(axes)
+        # Inherit the communication context: a dup's sub-communicators stay
+        # distinct from the original's (their plans/caches are independent),
+        # while re-derived splits of the SAME parent compare equal.
+        return Communicator(axes, self.context)
+
+    def dup(self) -> "Communicator":
+        """MPI_Comm_dup: same group, fresh communication context (distinct
+        identity — plans/caches keyed on the dup are independent)."""
+        return dataclasses.replace(self, context=next(_DUP_CONTEXTS))
 
     # -- permutation builders (static, for p2p) -----------------------------
     def ring_perm(self, shift: int = 1) -> list[tuple[int, int]]:
@@ -90,6 +124,182 @@ class Communicator:
             if dst is not None:
                 perm.append((src, int(dst)))
         return self.pairwise_perm(perm)
+
+    # ======================================================================
+    # jmpi 2.0 — every routine as a communicator method.  Lazy imports:
+    # collectives/p2p/plans import this module (resolve), so the delegation
+    # must bind at call time.
+    # ======================================================================
+
+    # -- blocking collectives (v1.0 surface) -------------------------------
+    def allreduce(self, x, op: Operator = Operator.SUM, *, token=None,
+                  algorithm=None):
+        from repro.core import collectives as c
+        return c.allreduce(x, op, comm=self, token=token, algorithm=algorithm)
+
+    def bcast(self, x, root: int = 0, *, token=None, algorithm=None):
+        from repro.core import collectives as c
+        return c.bcast(x, root, comm=self, token=token, algorithm=algorithm)
+
+    def scatter(self, x, root: int = 0, *, token=None, algorithm=None):
+        from repro.core import collectives as c
+        return c.scatter(x, root, comm=self, token=token, algorithm=algorithm)
+
+    def gather(self, x, root: int = 0, *, token=None, algorithm=None):
+        from repro.core import collectives as c
+        return c.gather(x, root, comm=self, token=token, algorithm=algorithm)
+
+    def allgather(self, x, *, token=None, algorithm=None):
+        from repro.core import collectives as c
+        return c.allgather(x, comm=self, token=token, algorithm=algorithm)
+
+    def alltoall(self, x, *, token=None, split_axis: int = 0,
+                 concat_axis: int = 0, algorithm=None):
+        from repro.core import collectives as c
+        return c.alltoall(x, comm=self, token=token, split_axis=split_axis,
+                          concat_axis=concat_axis, algorithm=algorithm)
+
+    def reduce_scatter(self, x, op: Operator = Operator.SUM, *, token=None,
+                       algorithm=None):
+        from repro.core import collectives as c
+        return c.reduce_scatter(x, op, comm=self, token=token,
+                                algorithm=algorithm)
+
+    def barrier(self, *, token=None):
+        from repro.core import collectives as c
+        return c.barrier(comm=self, token=token)
+
+    # -- nonblocking collectives (MPI-3 i* -> Request) ---------------------
+    def iallreduce(self, x, op: Operator = Operator.SUM, *, token=None,
+                   algorithm=None, tag: int = 0):
+        from repro.core import collectives as c
+        return c.iallreduce(x, op, comm=self, token=token,
+                            algorithm=algorithm, tag=tag)
+
+    def ibcast(self, x, root: int = 0, *, token=None, algorithm=None,
+               tag: int = 0):
+        from repro.core import collectives as c
+        return c.ibcast(x, root, comm=self, token=token, algorithm=algorithm,
+                        tag=tag)
+
+    def iscatter(self, x, root: int = 0, *, token=None, algorithm=None,
+                 tag: int = 0):
+        from repro.core import collectives as c
+        return c.iscatter(x, root, comm=self, token=token,
+                          algorithm=algorithm, tag=tag)
+
+    def igather(self, x, root: int = 0, *, token=None, algorithm=None,
+                tag: int = 0):
+        from repro.core import collectives as c
+        return c.igather(x, root, comm=self, token=token, algorithm=algorithm,
+                         tag=tag)
+
+    def iallgather(self, x, *, token=None, algorithm=None, tag: int = 0):
+        from repro.core import collectives as c
+        return c.iallgather(x, comm=self, token=token, algorithm=algorithm,
+                            tag=tag)
+
+    def ialltoall(self, x, *, token=None, split_axis: int = 0,
+                  concat_axis: int = 0, algorithm=None, tag: int = 0):
+        from repro.core import collectives as c
+        return c.ialltoall(x, comm=self, token=token, split_axis=split_axis,
+                           concat_axis=concat_axis, algorithm=algorithm,
+                           tag=tag)
+
+    def ireduce_scatter(self, x, op: Operator = Operator.SUM, *, token=None,
+                        algorithm=None, tag: int = 0):
+        from repro.core import collectives as c
+        return c.ireduce_scatter(x, op, comm=self, token=token,
+                                 algorithm=algorithm, tag=tag)
+
+    def ibarrier(self, *, token=None, tag: int = 0):
+        from repro.core import collectives as c
+        return c.ibarrier(comm=self, token=token, tag=tag)
+
+    # -- point-to-point ----------------------------------------------------
+    def send(self, x, dest: int, *, source: int, tag: int = 0, token=None):
+        from repro.core import p2p
+        return p2p.send(x, dest, source=source, tag=tag, comm=self,
+                        token=token)
+
+    def recv(self, x, source: int, *, dest: int, tag: int = 0, token=None):
+        from repro.core import p2p
+        return p2p.recv(x, source, dest=dest, tag=tag, comm=self, token=token)
+
+    def sendrecv(self, x, pairs=None, *, perm=None, dest=None, source=None,
+                 tag: int = 0, token=None, recv_into=None):
+        from repro.core import p2p
+        return p2p.sendrecv(x, pairs, perm=perm, dest=dest, source=source,
+                            tag=tag, comm=self, token=token,
+                            recv_into=recv_into)
+
+    def isend(self, x, dest: int, *, source: int, tag: int = 0, token=None):
+        from repro.core import p2p
+        return p2p.isend(x, dest, source=source, tag=tag, comm=self,
+                         token=token)
+
+    def irecv(self, x, source: int, *, dest: int, tag: int = 0, token=None):
+        from repro.core import p2p
+        return p2p.irecv(x, source, dest=dest, tag=tag, comm=self,
+                         token=token)
+
+    def isendrecv(self, x, pairs=None, *, perm=None, dest=None, source=None,
+                  tag: int = 0, token=None, recv_into=None):
+        from repro.core import p2p
+        return p2p.isendrecv(x, pairs, perm=perm, dest=dest, source=source,
+                             tag=tag, comm=self, token=token,
+                             recv_into=recv_into)
+
+    # -- persistent plans (MPI-4 *_init -> Plan) ---------------------------
+    def allreduce_init(self, shape_dtype, op: Operator = Operator.SUM, *,
+                       algorithm=None):
+        from repro.core import plans
+        return plans.allreduce_init(shape_dtype, op, comm=self,
+                                    algorithm=algorithm)
+
+    def bcast_init(self, shape_dtype, root: int = 0, *, algorithm=None):
+        from repro.core import plans
+        return plans.bcast_init(shape_dtype, root, comm=self,
+                                algorithm=algorithm)
+
+    def scatter_init(self, shape_dtype, root: int = 0, *, algorithm=None):
+        from repro.core import plans
+        return plans.scatter_init(shape_dtype, root, comm=self,
+                                  algorithm=algorithm)
+
+    def gather_init(self, shape_dtype, root: int = 0, *, algorithm=None):
+        from repro.core import plans
+        return plans.gather_init(shape_dtype, root, comm=self,
+                                 algorithm=algorithm)
+
+    def allgather_init(self, shape_dtype, *, algorithm=None):
+        from repro.core import plans
+        return plans.allgather_init(shape_dtype, comm=self,
+                                    algorithm=algorithm)
+
+    def alltoall_init(self, shape_dtype, *, split_axis: int = 0,
+                      concat_axis: int = 0, algorithm=None):
+        from repro.core import plans
+        return plans.alltoall_init(shape_dtype, comm=self,
+                                   split_axis=split_axis,
+                                   concat_axis=concat_axis,
+                                   algorithm=algorithm)
+
+    def reduce_scatter_init(self, shape_dtype, op: Operator = Operator.SUM,
+                            *, algorithm=None):
+        from repro.core import plans
+        return plans.reduce_scatter_init(shape_dtype, op, comm=self,
+                                         algorithm=algorithm)
+
+    def barrier_init(self):
+        from repro.core import plans
+        return plans.barrier_init(comm=self)
+
+    def sendrecv_init(self, shape_dtype, pairs=None, *, perm=None, dest=None,
+                      source=None):
+        from repro.core import plans
+        return plans.sendrecv_init(shape_dtype, pairs, perm=perm, dest=dest,
+                                   source=source, comm=self)
 
 
 # --------------------------------------------------------------------------

@@ -34,9 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import collectives
 from repro.core import registry
-from repro.core import token as token_lib
 from repro.core.comm import Communicator, resolve
-from repro.core.token import SUCCESS
 
 
 # ---------------------------------------------------------------------------
@@ -46,11 +44,11 @@ from repro.core.token import SUCCESS
 # ---------------------------------------------------------------------------
 
 def _bf16_supports(val, comm, *, op=None, **kw):
-    return ((op is None or op is collectives.Operator.SUM)
-            and jnp.issubdtype(val.dtype, jnp.floating))
+    return jnp.issubdtype(val.dtype, jnp.floating)
 
 
-@registry.register("allreduce", "bf16_wire", supports=_bf16_supports)
+@registry.register("allreduce", "bf16_wire", supports=_bf16_supports,
+                   operators=(collectives.Operator.SUM,))
 def _bf16_wire_allreduce(val, tok, comm, *, op=None):
     """SUM-allreduce with a bfloat16 wire: XLA keeps the psum payload in
     bf16, so collective bytes halve versus fp32 at ~3 decimal digits of

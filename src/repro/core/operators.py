@@ -1,0 +1,78 @@
+"""Reduction operators and their elementwise algebra — shared by every
+registered collective lowering.
+
+``Operator`` is the paper's reduction enumeration (default SUM).  The helpers
+here are what lets *every* hand-scheduled collective (ring, recursive
+doubling) honor the full six-operator surface instead of special-casing SUM:
+
+* :func:`combiner` — (combine, pre, post) for an operator.  LAND/LOR work in
+  an int32 {0, 1} domain (``pre`` normalizes, ``post`` casts back), which is
+  also what the xla_native kernel does, so all lowerings agree bit-for-bit
+  on logical reductions.
+* :func:`identity_scalar` — the combiner's identity element in the working
+  dtype, for schedules that thread an accumulator (ring reduce-scatter
+  phase): 0 for SUM/LOR, 1 for PROD/LAND, ±dtype-extreme for MIN/MAX.
+"""
+
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Operator(enum.Enum):
+    """Reduction operators (paper: 'Operator enumeration, default SUM')."""
+
+    SUM = "sum"
+    PROD = "prod"
+    MIN = "min"
+    MAX = "max"
+    LAND = "land"
+    LOR = "lor"
+
+
+def combiner(op: Operator):
+    """(combine, pre, post) for ``op``.
+
+    ``combine(a, b)`` is the elementwise reduction; ``pre(v)`` maps the
+    payload into the working domain and ``post(v, dtype)`` maps back (both
+    None when the payload dtype is the working domain already).
+    """
+    if op is Operator.SUM:
+        return (lambda a, b: a + b), None, None
+    if op is Operator.PROD:
+        return (lambda a, b: a * b), None, None
+    if op is Operator.MIN:
+        return jnp.minimum, None, None
+    if op is Operator.MAX:
+        return jnp.maximum, None, None
+    if op is Operator.LAND:
+        return (jnp.minimum,
+                lambda v: (v != 0).astype(jnp.int32),
+                lambda v, dtype: v.astype(dtype))
+    if op is Operator.LOR:
+        return (jnp.maximum,
+                lambda v: (v != 0).astype(jnp.int32),
+                lambda v, dtype: v.astype(dtype))
+    raise ValueError(f"unsupported operator {op}")
+
+
+def identity_scalar(op: Operator, dtype):
+    """The identity element of ``op``'s combiner, as a python/numpy scalar in
+    ``dtype`` (the *working* dtype: int32 for LAND/LOR after ``pre``)."""
+    dt = jnp.dtype(dtype)
+    if op in (Operator.SUM, Operator.LOR):
+        return np.asarray(0, dt)
+    if op in (Operator.PROD, Operator.LAND):
+        return np.asarray(1, dt)
+    if op is Operator.MIN:
+        if jnp.issubdtype(dt, jnp.integer):
+            return np.asarray(np.iinfo(dt).max, dt)
+        return np.asarray(np.inf, dt)
+    if op is Operator.MAX:
+        if jnp.issubdtype(dt, jnp.integer):
+            return np.asarray(np.iinfo(dt).min, dt)
+        return np.asarray(-np.inf, dt)
+    raise ValueError(f"unsupported operator {op}")

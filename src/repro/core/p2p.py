@@ -156,9 +156,17 @@ def wait(req: Request, tag: int = ANY_TAG):
     return req.status, value
 
 
-def waitall(reqs: Sequence[Request]):
+def waitall(reqs: Sequence[Request], tag: int = ANY_TAG):
     """Complete all requests: (status, [values]).  Status is SUCCESS only if
-    every request succeeded (first error code otherwise, MPI_Waitall-style)."""
+    every request succeeded (first error code otherwise, MPI_Waitall-style).
+
+    ``tag``: assert every request was posted with this tag (default ANY_TAG)
+    — same trace-time validation as :func:`wait`/:func:`waitany`.  Requests
+    may mix p2p and nonblocking-collective origins (one unified Request
+    model); completion materializes each in issue order.
+    """
+    for r in reqs:
+        _check_tag(r, tag)
     out = [r._materialize() for r in reqs]
     toks = [t for t, _ in out]
     vals = [v for _, v in out]
@@ -190,8 +198,11 @@ def test(req: Request, tag: int = ANY_TAG):
     return status, jnp.bool_(True), value
 
 
-def testall(reqs: Sequence[Request]):
-    status, values = waitall(reqs)
+def testall(reqs: Sequence[Request], tag: int = ANY_TAG):
+    """(status, flag, values) — :func:`waitall` with the statically-True flag
+    of :func:`test`; ``tag`` filters like every other completion call
+    (ANY_TAG default, trace-time mismatch error otherwise)."""
+    status, values = waitall(reqs, tag=tag)
     return status, jnp.bool_(True), values
 
 

@@ -1,0 +1,357 @@
+"""Persistent communication plans — MPI-4 ``MPI_<Collective>_init`` (and the
+MPI-1 persistent p2p ``MPI_Send_init`` family) for jmpi.
+
+A :class:`Plan` is created once per (collective, payload signature,
+communicator): ``comm.allreduce_init(shape_dtype) -> Plan`` resolves the
+registry's trace-time algorithm choice ONCE and freezes it; every
+``plan.start(x) -> Request`` then re-issues the frozen lowering with zero
+registry/policy work — the hot-path dispatch cost of a collective inside a
+step loop drops to a token tie plus the kernel itself.  Completion flows
+through the same unified Request model as p2p and the i* collectives
+(``wait``/``waitall``/``test*``).
+
+Plans are cached process-globally, keyed on
+``(collective, algorithm, shape, dtype, comm, group size, static kwargs)``:
+a re-trace of the same program (new jit call, new shard_map trace)
+re-requests the same key and gets the SAME Plan object back.  A second
+fast-path key adds the registry's *selection epoch* (bumped on every
+``set_policy``/``set_algorithm``/override change), so a repeat ``*_init``
+under unchanged selection state skips ``registry.select`` entirely — no
+policy-table scan, no supports predicates; the cache-hit counter is how
+``benchmarks/bench_collectives.py --persistent`` shows plan reuse.  Plans
+hold only static metadata (algorithm, shapes, python ints), never tracers,
+so sharing across traces is safe.
+
+Typical hot-loop use (inside a ``jmpi.spmd`` trace)::
+
+    plan = comm.allreduce_init(jax.ShapeDtypeStruct(g.shape, g.dtype))
+    for _ in range(steps):                  # unrolled or per-trace step
+        status, g = jmpi.wait(plan.start(g))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from repro.core import token as token_lib
+from repro.core import views as views_lib
+from repro.core.comm import Communicator, resolve
+from repro.core.operators import Operator
+from repro.core.p2p import Request
+
+__all__ = [
+    "Plan", "collective_init", "allreduce_init", "bcast_init", "scatter_init",
+    "gather_init", "allgather_init", "alltoall_init", "reduce_scatter_init",
+    "barrier_init", "sendrecv_init", "plan_cache_stats", "plan_cache_clear",
+]
+
+
+def _as_struct(shape_dtype) -> jax.ShapeDtypeStruct:
+    """Accept a ShapeDtypeStruct, a concrete array, or a (shape, dtype) pair."""
+    if isinstance(shape_dtype, jax.ShapeDtypeStruct):
+        return shape_dtype
+    if isinstance(shape_dtype, tuple) and len(shape_dtype) == 2 \
+            and not hasattr(shape_dtype, "dtype"):
+        return jax.ShapeDtypeStruct(tuple(shape_dtype[0]),
+                                    jnp.dtype(shape_dtype[1]))
+    return jax.ShapeDtypeStruct(tuple(shape_dtype.shape),
+                                jnp.dtype(shape_dtype.dtype))
+
+
+_pack = views_lib.pack
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A frozen, re-startable communication operation (MPI persistent request
+    analogue).  ``start(x)`` issues one instance and returns a Request;
+    ``issue_fn(val, tok) -> (out, tok)`` is the bound lowering (algorithm +
+    communicator + static kwargs resolved at init time).
+    """
+
+    collective: str                      # "allreduce" … "sendrecv" | "barrier"
+    algorithm: str                       # frozen registry entry ("ppermute" for p2p)
+    shape: tuple                         # payload signature the plan accepts
+    dtype: Any
+    comm: Communicator
+    issue_fn: Callable[..., Any] = dataclasses.field(compare=False, repr=False)
+
+    def start(self, x=None, *, token=None, tag: int = 0) -> Request:
+        """Issue one instance of the planned op on payload ``x`` (omitted for
+        barrier plans): Request completes via the unified wait*/test*."""
+        tok = token if token is not None else token_lib.ambient().get()
+        explicit = token is not None
+        if self.collective == "barrier":
+            val = None
+        else:
+            val = _pack(x)
+            if tuple(val.shape) != self.shape or \
+                    jnp.dtype(val.dtype) != jnp.dtype(self.dtype):
+                raise ValueError(
+                    f"plan {self.collective}/{self.algorithm} is frozen for "
+                    f"shape={self.shape} dtype={jnp.dtype(self.dtype).name}; "
+                    f"got shape={tuple(val.shape)} "
+                    f"dtype={jnp.dtype(val.dtype).name} — build a new plan "
+                    f"with *_init for the new signature")
+            tok, val = token_lib.tie(tok, val)
+        out, tok = self.issue_fn(val, tok)
+        new_tok = token_lib.advance(tok, out)
+        if not explicit:
+            token_lib.ambient().set(new_tok)
+        return Request(value=out, token=new_tok, tag=tag,
+                       used_ambient=not explicit)
+
+    def describe(self) -> str:
+        return (f"Plan({self.collective}, algorithm={self.algorithm}, "
+                f"shape={self.shape}, dtype={jnp.dtype(self.dtype).name}, "
+                f"axes={self.comm.axes})")
+
+
+# ---------------------------------------------------------------------------
+# Process-global plan cache: *_init with an already-seen signature returns
+# the SAME Plan (no re-selection, no rebuild) — observable via the stats.
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: dict = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> dict:
+    """{'hits': int, 'misses': int, 'size': int} — cumulative *_init calls
+    served from / added to the plan cache."""
+    return dict(_STATS, size=len(_PLAN_CACHE))
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+    _STATS["hits"] = 0
+    _STATS["misses"] = 0
+
+
+def _cached(key, build: Callable[[], Plan]) -> Plan:
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _STATS["hits"] += 1
+        return plan
+    _STATS["misses"] += 1
+    plan = build()
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+def _cached_selected(sig, algorithm, select_fn, build_fn) -> Plan:
+    """Two-level lookup for plans whose build needs ``registry.select``.
+
+    ``sig`` must capture everything the selection *and* the built closure
+    depend on besides the registry state — shape, dtype, comm (identity AND
+    group size: the same axis names can span different mesh sizes across
+    traces in one process), and static kwargs.  Fast path: (sig, requested
+    algorithm, selection epoch) — a hit skips select() entirely; the epoch
+    is bumped by every policy/override change, so the skip is sound.  Slow
+    path: run select(), then dedupe on (sig, resolved name).
+    """
+    pre_key = ("sel", sig, algorithm, registry.selection_epoch())
+    plan = _PLAN_CACHE.get(pre_key)
+    if plan is not None:
+        _STATS["hits"] += 1
+        return plan
+    algo = select_fn()
+    key = ("plan", sig, algo.name)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _STATS["hits"] += 1
+    else:
+        _STATS["misses"] += 1
+        plan = build_fn(algo)
+        _PLAN_CACHE[key] = plan
+    _PLAN_CACHE[pre_key] = plan
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Collective plans
+# ---------------------------------------------------------------------------
+
+def collective_init(op_name: str, shape_dtype, *,
+                    comm: Communicator | None = None,
+                    algorithm: Optional[str] = None, **kw) -> Plan:
+    """Build (or fetch from cache) a persistent plan for registry collective
+    ``op_name``.  The algorithm is resolved ONCE — explicit ``algorithm=`` >
+    process override > active policy table — and frozen into the plan, so
+    later policy changes do not retarget an existing plan (MPI persistent
+    semantics: the plan IS the frozen schedule); they do invalidate the
+    selection fast path, so a fresh ``*_init`` re-selects."""
+    comm = resolve(comm)
+    val = _as_struct(shape_dtype)
+    sig = (op_name, tuple(val.shape), str(jnp.dtype(val.dtype)), comm,
+           comm.size(), tuple(sorted(kw.items())))
+
+    def select():
+        return registry.select(op_name, val, comm, algorithm=algorithm, **kw)
+
+    def build(algo):
+        fn = algo.fn
+
+        def issue(v, t):
+            return fn(v, t, comm, **kw)
+
+        return Plan(collective=op_name, algorithm=algo.name,
+                    shape=tuple(val.shape), dtype=jnp.dtype(val.dtype),
+                    comm=comm, issue_fn=issue)
+
+    return _cached_selected(sig, algorithm, select, build)
+
+
+def allreduce_init(shape_dtype, op: Operator = Operator.SUM, *,
+                   comm: Communicator | None = None,
+                   algorithm: Optional[str] = None) -> Plan:
+    """MPI_Allreduce_init analogue."""
+    return collective_init("allreduce", shape_dtype, comm=comm,
+                           algorithm=algorithm, op=op)
+
+
+def bcast_init(shape_dtype, root: int = 0, *,
+               comm: Communicator | None = None,
+               algorithm: Optional[str] = None) -> Plan:
+    """MPI_Bcast_init analogue."""
+    return collective_init("bcast", shape_dtype, comm=comm,
+                           algorithm=algorithm, root=root)
+
+
+def scatter_init(shape_dtype, root: int = 0, *,
+                 comm: Communicator | None = None,
+                 algorithm: Optional[str] = None) -> Plan:
+    """MPI_Scatter_init analogue: frozen bcast + static per-rank slice.
+
+    The group size is baked into the frozen chunk slice, so it is part of
+    the cache signature (via ``sig``) — the same shape/axes under a
+    different mesh size builds a fresh plan."""
+    comm = resolve(comm)
+    val = _as_struct(shape_dtype)
+    n = comm.size()
+    if val.shape[0] % n:
+        raise ValueError(f"scatter payload axis0={val.shape[0]} not divisible "
+                         f"by comm size {n}")
+    sig = ("scatter", tuple(val.shape), str(jnp.dtype(val.dtype)), comm, n,
+           root)
+
+    def select():
+        return registry.select("bcast", val, comm, algorithm=algorithm,
+                               root=root)
+
+    def build(balgo):
+        chunk = val.shape[0] // n
+        fn = balgo.fn
+
+        def issue(v, t):
+            full, t = fn(v, t, comm, root=root)
+            out = jax.lax.dynamic_slice_in_dim(full, comm.rank() * chunk,
+                                               chunk, axis=0)
+            return out, t
+
+        return Plan(collective="scatter", algorithm=balgo.name,
+                    shape=tuple(val.shape), dtype=jnp.dtype(val.dtype),
+                    comm=comm, issue_fn=issue)
+
+    return _cached_selected(sig, algorithm, select, build)
+
+
+def allgather_init(shape_dtype, *, comm: Communicator | None = None,
+                   algorithm: Optional[str] = None) -> Plan:
+    """MPI_Allgather_init analogue."""
+    return collective_init("allgather", shape_dtype, comm=comm,
+                           algorithm=algorithm)
+
+
+def gather_init(shape_dtype, root: int = 0, *,
+                comm: Communicator | None = None,
+                algorithm: Optional[str] = None) -> Plan:
+    """MPI_Gather_init analogue (allgather lowering, root-only contract)."""
+    del root
+    return allgather_init(shape_dtype, comm=comm, algorithm=algorithm)
+
+
+def alltoall_init(shape_dtype, *, comm: Communicator | None = None,
+                  split_axis: int = 0, concat_axis: int = 0,
+                  algorithm: Optional[str] = None) -> Plan:
+    """MPI_Alltoall_init analogue."""
+    comm = resolve(comm)
+    val = _as_struct(shape_dtype)
+    if len(comm.axes) != 1:
+        raise ValueError("alltoall currently requires a single-axis "
+                         "communicator (split the comm first)")
+    if val.shape[split_axis] % comm.size():
+        raise ValueError(f"alltoall axis {split_axis} size "
+                         f"{val.shape[split_axis]} not divisible by comm "
+                         f"size {comm.size()}")
+    return collective_init("alltoall", val, comm=comm, algorithm=algorithm,
+                           split_axis=split_axis, concat_axis=concat_axis)
+
+
+def reduce_scatter_init(shape_dtype, op: Operator = Operator.SUM, *,
+                        comm: Communicator | None = None,
+                        algorithm: Optional[str] = None) -> Plan:
+    """MPI_Reduce_scatter_init analogue."""
+    comm = resolve(comm)
+    val = _as_struct(shape_dtype)
+    if val.shape[0] % comm.size():
+        raise ValueError(f"reduce_scatter axis0={val.shape[0]} not divisible "
+                         f"by comm size {comm.size()}")
+    return collective_init("reduce_scatter", val, comm=comm,
+                           algorithm=algorithm, op=op)
+
+
+def barrier_init(*, comm: Communicator | None = None) -> Plan:
+    """MPI_Barrier_init analogue: ``plan.start()`` takes no payload."""
+    comm = resolve(comm)
+    key = ("barrier", "psum_probe", (), "float32", comm, comm.size())
+
+    def build():
+        def issue(v, t):
+            probe = jax.lax.psum(t, comm.axes)
+            return probe, t
+
+        return Plan(collective="barrier", algorithm="psum_probe", shape=(),
+                    dtype=jnp.float32, comm=comm, issue_fn=issue)
+
+    return _cached(key, build)
+
+
+# ---------------------------------------------------------------------------
+# Persistent p2p (MPI_Send_init/MPI_Recv_init family): the halo-exchange
+# workhorse — the (src, dst) pattern is validated and frozen once.
+# ---------------------------------------------------------------------------
+
+def sendrecv_init(shape_dtype, pairs=None, *, perm=None, dest=None,
+                  source=None, comm: Communicator | None = None) -> Plan:
+    """Persistent fused send+recv along a static (src → dst) pattern.
+
+    The permutation is validated (rank range, injectivity) at init and
+    frozen; ``plan.start(strip)`` is one token-tied ppermute.
+    """
+    comm = resolve(comm)
+    val = _as_struct(shape_dtype)
+    from repro.core.p2p import _resolve_perm
+    p = tuple(tuple(pr) for pr in _resolve_perm(comm, pairs, perm, dest,
+                                                source))
+    key = ("sendrecv", "ppermute", tuple(val.shape),
+           str(jnp.dtype(val.dtype)), comm, comm.size(), p)
+
+    def build():
+        perm_list = [tuple(pr) for pr in p]
+
+        def issue(v, t):
+            out = jax.lax.ppermute(v, comm.axes, perm_list)
+            return out, t
+
+        return Plan(collective="sendrecv", algorithm="ppermute",
+                    shape=tuple(val.shape), dtype=jnp.dtype(val.dtype),
+                    comm=comm, issue_fn=issue)
+
+    return _cached(key, build)

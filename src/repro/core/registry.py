@@ -54,27 +54,50 @@ class Algorithm:
     through its own communication steps, and returns the result plus the
     final token.  ``supports(val, comm, **kw) -> bool`` is a trace-time
     eligibility predicate (static shapes / static group size only).
+    ``operators`` declares the reduction Operators the kernel honors
+    (values of :class:`repro.core.operators.Operator`); ``None`` means
+    all six / operator-free — an unsupported (algorithm, operator) pair is
+    a uniform trace-time ValueError, never a silent wrong answer.
     """
 
     op: str
     name: str
     fn: Callable[..., Any]
     supports: Callable[..., bool]
+    operators: Optional[frozenset] = None
+
+    def supports_operator(self, red_op) -> bool:
+        if self.operators is None or red_op is None:
+            return True
+        return getattr(red_op, "value", red_op) in self.operators
+
+    def operator_error(self, red_op) -> str:
+        return (f"algorithm {self.name!r} for {self.op!r} does not support "
+                f"Operator.{getattr(red_op, 'name', red_op)}; supported "
+                f"operators: {sorted(self.operators)}")
 
 
 _REGISTRY: dict[str, dict[str, Algorithm]] = {op: {} for op in OPS}
 
 
-def register(op: str, name: str, supports: Callable[..., bool] | None = None):
-    """Decorator: register ``fn`` as algorithm ``name`` for logical ``op``."""
+def register(op: str, name: str, supports: Callable[..., bool] | None = None,
+             operators=None):
+    """Decorator: register ``fn`` as algorithm ``name`` for logical ``op``.
+
+    ``operators``: iterable of supported Operator members (or their string
+    values); None = every operator (or the op takes no operator).
+    """
     if op not in _REGISTRY:
         raise ValueError(f"unknown collective op {op!r}; expected one of {OPS}")
+    op_set = (None if operators is None else
+              frozenset(getattr(o, "value", o) for o in operators))
 
     def deco(fn):
         _REGISTRY[op][name] = Algorithm(
             op=op, name=name, fn=fn,
             supports=supports if supports is not None
-            else (lambda val, comm, **kw: True))
+            else (lambda val, comm, **kw: True),
+            operators=op_set)
         return fn
 
     return deco
@@ -190,6 +213,19 @@ def default_policy() -> PolicyTable:
 
 _ACTIVE_POLICY: list[PolicyTable] = [default_policy()]
 _OVERRIDES: dict[str, str] = {}
+_SELECTION_EPOCH = [0]
+
+
+def selection_epoch() -> int:
+    """Monotonic counter bumped whenever the selection inputs change (policy
+    table installed, per-op override set/cleared).  Callers that cache a
+    resolved selection (``repro.core.plans``) key their fast path on it so a
+    cache hit can legitimately skip :func:`select`."""
+    return _SELECTION_EPOCH[0]
+
+
+def _bump_epoch() -> None:
+    _SELECTION_EPOCH[0] += 1
 
 
 def active_policy() -> PolicyTable:
@@ -199,6 +235,7 @@ def active_policy() -> PolicyTable:
 def set_policy(table: PolicyTable | None) -> None:
     """Install ``table`` as the process-global policy (None = built-in)."""
     _ACTIVE_POLICY[0] = table if table is not None else default_policy()
+    _bump_epoch()
 
 
 def load_policy(path: str) -> PolicyTable:
@@ -218,13 +255,16 @@ def set_algorithm(op: str, name: str | None) -> None:
     payloads still fall back to ``xla_native``."""
     if name is None:
         _OVERRIDES.pop(op, None)
+        _bump_epoch()
         return
     get(op, name)  # validate eagerly
     _OVERRIDES[op] = name
+    _bump_epoch()
 
 
 def clear_algorithms() -> None:
     _OVERRIDES.clear()
+    _bump_epoch()
 
 
 @contextlib.contextmanager
@@ -242,6 +282,7 @@ def algorithm_override(**ops_to_names: str):
     finally:
         _OVERRIDES.clear()
         _OVERRIDES.update(saved)
+        _bump_epoch()
 
 
 # ---------------------------------------------------------------------------
@@ -268,9 +309,18 @@ def select(op_name: str, val, comm, algorithm: str | None = None,
 
     (First parameter is ``op_name`` because ``op=`` is a kernel kwarg —
     the reduction Operator — forwarded through ``**kw``.)
+
+    Operator eligibility is checked separately from payload eligibility so
+    an unsupported (algorithm, Operator) pair raises the uniform trace-time
+    error from :meth:`Algorithm.operator_error` — both when the caller named
+    the algorithm and when the policy fallback itself cannot honor the
+    operator (it must never silently compute the wrong reduction).
     """
+    red_op = kw.get("op")
     if algorithm is not None:
         algo = get(op_name, algorithm)
+        if not algo.supports_operator(red_op):
+            raise ValueError(algo.operator_error(red_op))
         if not algo.supports(val, comm, **kw):
             raise ValueError(
                 f"algorithm {algorithm!r} cannot handle this {op_name} call "
@@ -279,6 +329,10 @@ def select(op_name: str, val, comm, algorithm: str | None = None,
         return algo
     name = choose_name(op_name, payload_bytes(val), comm.size())
     algo = _REGISTRY[op_name].get(name)
-    if algo is not None and algo.supports(val, comm, **kw):
+    if algo is not None and algo.supports_operator(red_op) \
+            and algo.supports(val, comm, **kw):
         return algo
-    return get(op_name, DEFAULT_ALGORITHM)
+    fallback = get(op_name, DEFAULT_ALGORITHM)
+    if not fallback.supports_operator(red_op):
+        raise ValueError(fallback.operator_error(red_op))
+    return fallback

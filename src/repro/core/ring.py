@@ -10,12 +10,18 @@ scheduler can overlap chunk k's permute with chunk k±1's add — and, when the
 caller interleaves matmul flops between steps (see
 ``repro.distributed.overlap.collective_matmul``), comm hides under compute.
 
+Operator coverage: the accumulate-and-forward steps use the shared operator
+algebra (``repro.core.operators``), so ring allreduce/reduce_scatter honor
+the full six-operator surface (SUM/PROD/MIN/MAX/LAND/LOR) — identical
+results to the xla_native kernels, tested against the numpy oracle.
+
 Registered in the collective-algorithm registry as the ``ring`` entries for
 allreduce / allgather / reduce_scatter; pick them per call
 (``jmpi.allreduce(x, algorithm="ring")``), globally
 (``jmpi.set_algorithm("allreduce", "ring")``), or let the policy table route
-bandwidth-bound payloads here.  Correctness is tested against the XLA-native
-kernels and the numpy oracle.
+bandwidth-bound payloads here.  The back-compat public wrappers ride the
+persistent-plan path (``repro.core.plans``) — the ``ring`` choice frozen
+into a cached Plan.
 """
 
 from __future__ import annotations
@@ -23,10 +29,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import operators as op_lib
 from repro.core import registry
 from repro.core import token as token_lib
 from repro.core.comm import Communicator, resolve
-from repro.core.token import SUCCESS
+from repro.core.operators import Operator
 
 
 def _split(x, n):
@@ -51,47 +58,51 @@ def _dynamic_set(chunks, value, idx):
     return jax.lax.dynamic_update_index_in_dim(chunks, value, idx, axis=0)
 
 
-def _sum_only(val, comm, *, op=None, **kw):
-    from repro.core.collectives import Operator
-    return op is None or op is Operator.SUM
-
-
 # ===========================================================================
 # Registry kernels
 # ===========================================================================
 
-@registry.register("allreduce", "ring", supports=_sum_only)
+@registry.register("allreduce", "ring")
 def _ring_allreduce_kernel(val, tok, comm, *, op=None):
     """Bandwidth-optimal allreduce: 2·(n−1) chunk steps, 2·(n−1)/n · |x| bytes
-    per link — same wire cost as XLA's psum, but overlappable chunk-by-chunk."""
+    per link — same wire cost as XLA's psum, but overlappable chunk-by-chunk.
+    All six Operators: accumulate-and-forward uses the operator's combiner
+    with its identity element seeding the accumulator."""
+    op = Operator.SUM if op is None else op
+    combine, pre, post = op_lib.combiner(op)
     n = comm.size()
+    orig_dtype = val.dtype
+    work = pre(val) if pre is not None else val
     if n == 1:
-        return val, tok
-    orig_shape, orig_dtype = val.shape, val.dtype
-    flat = val.reshape(val.shape[0], -1) if val.ndim > 1 else val.reshape(-1, 1)
+        out = post(work, orig_dtype) if post is not None else work
+        return out, tok
+    orig_shape = work.shape
+    flat = work.reshape(work.shape[0], -1) if work.ndim > 1 \
+        else work.reshape(-1, 1)
     chunks, pad = _split(flat, n)  # (n, chunk, rest)
+    ident = op_lib.identity_scalar(op, chunks.dtype)
     rank = comm.rank()
     fwd = comm.ring_perm(+1)
 
-    # Phase 1: reduce-scatter ring. After n-1 steps, rank r holds the full sum
-    # of chunk (r+1) mod n.
+    # Phase 1: reduce-scatter ring. After n-1 steps, rank r holds the full
+    # reduction of chunk (r+1) mod n.
     def rs_step(i, carry):
         chunks, acc, tok = carry
         # which chunk to send at step i: (rank - i) mod n
         idx = (rank - i) % n
         send = jax.lax.dynamic_index_in_dim(chunks, idx, axis=0, keepdims=False)
-        send = send + acc
+        send = combine(send, acc)
         tok, send = token_lib.tie(tok, send)
         recv = jax.lax.ppermute(send, comm.axes, fwd)
         tok = token_lib.advance(tok, recv)
         return chunks, recv, tok
 
-    acc = jnp.zeros_like(chunks[0])
+    acc = jnp.full_like(chunks[0], ident)
     chunks, acc, tok = _unrolled(rs_step, n - 1, (chunks, acc, tok))
-    # acc now holds sum of chunk (rank+1)%n minus own contribution; add it.
+    # acc now holds the reduction of chunk (rank+1)%n minus own contribution.
     own_idx = (rank - (n - 1)) % n
     own = jax.lax.dynamic_index_in_dim(chunks, own_idx, axis=0, keepdims=False)
-    full_chunk = acc + own  # rank r owns reduced chunk (r+1)%n
+    full_chunk = combine(acc, own)  # rank r owns reduced chunk (r+1)%n
 
     # Phase 2: allgather ring: circulate the reduced chunks n-1 steps.
     def ag_step(i, carry):
@@ -111,7 +122,8 @@ def _ring_allreduce_kernel(val, tok, comm, *, op=None):
     flat_out = out_chunks.reshape(-1, flat.shape[-1])
     if pad:
         flat_out = flat_out[:flat.shape[0]]
-    out = flat_out.reshape(orig_shape).astype(orig_dtype)
+    out = flat_out.reshape(orig_shape)
+    out = post(out, orig_dtype) if post is not None else out.astype(orig_dtype)
     return out, tok
 
 
@@ -136,50 +148,80 @@ def _ring_allgather_kernel(val, tok, comm):
     return out, tok
 
 
-@registry.register("reduce_scatter", "ring", supports=_sum_only)
+@registry.register("reduce_scatter", "ring")
 def _ring_reduce_scatter_kernel(val, tok, comm, *, op=None):
     """Reduce-scatter as the ring's phase 1 plus one final alignment hop:
     n−1 accumulate-and-forward chunk steps leave rank r with reduced chunk
-    (r+1) mod n; a last forward permute homes chunk r on rank r."""
+    (r+1) mod n; a last forward permute homes chunk r on rank r.  Honors all
+    six Operators via the shared combiner algebra."""
+    op = Operator.SUM if op is None else op
+    combine, pre, post = op_lib.combiner(op)
     n = comm.size()
+    orig_dtype = val.dtype
+    work = pre(val) if pre is not None else val
     if n == 1:
-        return val, tok
+        out = post(work, orig_dtype) if post is not None else work
+        return out, tok
     rank = comm.rank()
     fwd = comm.ring_perm(+1)
-    chunks = val.reshape(n, val.shape[0] // n, *val.shape[1:])
+    chunks = work.reshape(n, work.shape[0] // n, *work.shape[1:])
+    ident = op_lib.identity_scalar(op, chunks.dtype)
 
     def rs_step(i, carry):
         acc, tok = carry
         idx = (rank - i) % n
         send = jax.lax.dynamic_index_in_dim(chunks, idx, axis=0, keepdims=False)
-        send = send + acc
+        send = combine(send, acc)
         tok, send = token_lib.tie(tok, send)
         recv = jax.lax.ppermute(send, comm.axes, fwd)
         tok = token_lib.advance(tok, recv)
         return recv, tok
 
-    acc = jnp.zeros_like(chunks[0])
+    acc = jnp.full_like(chunks[0], ident)
     acc, tok = _unrolled(rs_step, n - 1, (acc, tok))
     own_idx = (rank - (n - 1)) % n
     own = jax.lax.dynamic_index_in_dim(chunks, own_idx, axis=0, keepdims=False)
-    full_chunk = acc + own            # reduced chunk (rank+1) mod n
+    full_chunk = combine(acc, own)    # reduced chunk (rank+1) mod n
     tok, full_chunk = token_lib.tie(tok, full_chunk)
     out = jax.lax.ppermute(full_chunk, comm.axes, fwd)   # home chunk r → rank r
     tok = token_lib.advance(tok, out)
+    out = post(out, orig_dtype) if post is not None else out.astype(orig_dtype)
     return out, tok
 
 
 # ===========================================================================
-# Back-compat public wrappers (pre-registry API, used by benches/tests)
+# Back-compat public wrappers (pre-registry API, used by benches/tests) —
+# now persistent-plan clients: the ``ring`` choice is frozen into a cached
+# Plan, so hot loops re-start the same plan instead of re-dispatching.
 # ===========================================================================
 
 def ring_allreduce(x, *, comm: Communicator | None = None, token=None):
     """``jmpi.allreduce(x, algorithm="ring")`` under the original name."""
-    from repro.core import collectives
-    return collectives.allreduce(x, comm=comm, token=token, algorithm="ring")
+    from repro.core import plans
+    from repro.core import views as views_lib
+    from repro.core.p2p import wait
+    comm = resolve(comm)
+    val = views_lib.pack(x)
+    plan = plans.allreduce_init(jax.ShapeDtypeStruct(val.shape, val.dtype),
+                                comm=comm, algorithm="ring")
+    req = plan.start(val, token=token)
+    status, out = wait(req)
+    if token is not None:
+        return status, out, req.token
+    return status, out
 
 
 def ring_allgather(x, *, comm: Communicator | None = None, token=None):
     """``jmpi.allgather(x, algorithm="ring")`` under the original name."""
-    from repro.core import collectives
-    return collectives.allgather(x, comm=comm, token=token, algorithm="ring")
+    from repro.core import plans
+    from repro.core import views as views_lib
+    from repro.core.p2p import wait
+    comm = resolve(comm)
+    val = views_lib.pack(x)
+    plan = plans.allgather_init(jax.ShapeDtypeStruct(val.shape, val.dtype),
+                                comm=comm, algorithm="ring")
+    req = plan.start(val, token=token)
+    status, out = wait(req)
+    if token is not None:
+        return status, out, req.token
+    return status, out

@@ -24,6 +24,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import operators as op_lib
 from repro.core import registry
 from repro.core import token as token_lib
 
@@ -32,35 +33,12 @@ def _is_pow2(n: int) -> bool:
     return n >= 1 and (n & (n - 1)) == 0
 
 
-def _combine(op, operators):
-    """Elementwise combiner (and pre/post transforms) for an Operator."""
-    O = operators
-    if op is O.SUM:
-        return (lambda a, b: a + b), None, None
-    if op is O.PROD:
-        return (lambda a, b: a * b), None, None
-    if op is O.MIN:
-        return jnp.minimum, None, None
-    if op is O.MAX:
-        return jnp.maximum, None, None
-    if op is O.LAND:
-        return (jnp.minimum,
-                lambda v: (v != 0).astype(jnp.int32),
-                lambda v, dtype: v.astype(dtype))
-    if op is O.LOR:
-        return (jnp.maximum,
-                lambda v: (v != 0).astype(jnp.int32),
-                lambda v, dtype: v.astype(dtype))
-    raise ValueError(f"unsupported operator {op}")
-
-
 def recursive_doubling_allreduce(val, tok, comm, *, op):
     """MPI_Allreduce, recursive doubling: partner = rank XOR 2^k per round."""
-    from repro.core.collectives import Operator
     n = comm.size()
     # n == 1 still applies pre/post (LAND/LOR normalize to {0,1} like the
     # xla_native kernel); the exchange loop simply has zero rounds.
-    combine, pre, post = _combine(op, Operator)
+    combine, pre, post = op_lib.combiner(op)
     dtype = val.dtype
     cur = pre(val) if pre is not None else val
     k = 0

@@ -81,3 +81,12 @@ class View:
     @property
     def dtype(self):
         return jnp.asarray(self.array).dtype
+
+
+def pack(x):
+    """Materialize any jmpi payload: a View packs to its contiguous message,
+    anything NumPy-like becomes a jnp array (single helper shared by the
+    blocking, nonblocking and persistent dispatch paths)."""
+    if isinstance(x, View):
+        return x.pack()
+    return jnp.asarray(x)

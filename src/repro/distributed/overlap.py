@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 
 import repro.core as jmpi
-from repro.core import registry
 
 
 def collective_matmul_ag(x_shard, w_full, comm: jmpi.Communicator):
@@ -73,36 +72,38 @@ def collective_matmul_rs(x_full, w_shard, comm: jmpi.Communicator):
 
 
 # ---------------------------------------------------------------------------
-# Registry-aware entry points: the policy table decides whether the payload
-# is worth the ring-overlapped schedule at all.
+# Plan-routed entry points: a persistent plan freezes the policy's choice
+# for the payload signature once; ``ring`` plans take the overlapped matmul
+# schedule, anything else starts the plan's own frozen lowering.
 # ---------------------------------------------------------------------------
 
 def matmul_allgather(x_shard, w_full, comm: jmpi.Communicator):
     """y = allgather(x) @ w, with the collective-algorithm policy choosing
-    the schedule per payload: if the active policy routes this allgather to
-    the ``ring`` entry, use the ring-overlapped collective matmul (comm
-    hidden under the n partial matmuls); otherwise do the plain
-    gather-then-matmul, which XLA fuses best when the native allgather wins.
+    the schedule per payload: the allgather plan (cached per shape/dtype/
+    comm) freezes the policy's trace-time choice — if it froze ``ring``,
+    use the ring-overlapped collective matmul (comm hidden under the n
+    partial matmuls); otherwise start the plan's lowering and matmul the
+    gathered result, which XLA fuses best when the native allgather wins.
     """
-    n = comm.size()
-    # Same key the trace-time dispatcher uses: the per-shard payload handed
-    # to the collective (NOT the gathered size) — the decision here must
-    # agree with what a plain jmpi.allgather of x_shard would lower to.
-    nbytes = registry.payload_bytes(x_shard)
-    if registry.choose_name("allgather", nbytes, n) == "ring":
+    # Plan key = the per-shard payload handed to the collective (NOT the
+    # gathered size) — identical to what a plain jmpi.allgather would see.
+    plan = comm.allgather_init(
+        jax.ShapeDtypeStruct(x_shard.shape, x_shard.dtype))
+    if plan.algorithm == "ring":
         return collective_matmul_ag(x_shard, w_full, comm)
-    _, gathered = jmpi.allgather(x_shard, comm=comm)
+    _, gathered = jmpi.wait(plan.start(x_shard))
     return gathered @ w_full
 
 
 def matmul_reduce_scatter(x_full, w_shard, comm: jmpi.Communicator):
-    """y_shard = reduce_scatter(x @ w_partial), policy-routed like
+    """y_shard = reduce_scatter(x @ w_partial), plan-routed like
     :func:`matmul_allgather` (ring → overlapped accumulator schedule)."""
-    n = comm.size()
-    # Dispatcher key: the (m, p) partial product that reduce_scatter receives.
-    nbytes = (x_full.shape[0] * w_shard.shape[1] * x_full.dtype.itemsize)
-    if registry.choose_name("reduce_scatter", nbytes, n) == "ring":
+    # Plan key: the (m, p) partial product that reduce_scatter receives.
+    plan = comm.reduce_scatter_init(
+        jax.ShapeDtypeStruct((x_full.shape[0], w_shard.shape[1]),
+                             x_full.dtype))
+    if plan.algorithm == "ring":
         return collective_matmul_rs(x_full, w_shard, comm)
     partial = (x_full @ w_shard).astype(x_full.dtype)
-    _, out = jmpi.reduce_scatter(partial, comm=comm)
+    _, out = jmpi.wait(plan.start(partial))
     return out

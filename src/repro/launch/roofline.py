@@ -17,10 +17,8 @@ written.
 
 from __future__ import annotations
 
-import json
 import re
 
-import numpy as np
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

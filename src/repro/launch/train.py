@@ -11,7 +11,6 @@ checkpoints + resume-from-latest.
 
 import argparse
 import os
-import sys
 
 
 def parse_args():

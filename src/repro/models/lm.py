@@ -8,7 +8,6 @@ hybrid (zamba2: Mamba2 backbone + shared attention block), ssm (xlstm).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

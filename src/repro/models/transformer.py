@@ -17,7 +17,6 @@ Uniform stacks hold parameters with a leading layer axis and are traversed by
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

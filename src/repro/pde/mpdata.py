@@ -14,7 +14,6 @@ decomposes rows over the first axis and columns over the second.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

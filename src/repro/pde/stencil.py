@@ -10,13 +10,28 @@ paper's point.
 The decomposition layout is the communicator layout: decompose along axis 0,
 axis 1, or both, by building the mesh with the matching axis sizes
 (paper Fig. 3's layout study = benchmarks/bench_mpdata.py).
+
+Persistent plans: a PDE time loop re-exchanges the SAME strip signature
+every step, so the exchange rides ``comm.sendrecv_init`` plans — the
+(src → dst) pattern is validated and frozen once per (shape, dtype, comm)
+and the process-global plan cache serves every later step/trace
+(MPI_Send_init semantics; see ``repro.core.plans``).
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 import repro.core as jmpi
+
+
+def _planned_exchange(comm: jmpi.Communicator, strip, pairs):
+    """One persistent-plan hop: strip moves along the frozen pattern."""
+    plan = comm.sendrecv_init(jax.ShapeDtypeStruct(strip.shape, strip.dtype),
+                              pairs=pairs)
+    _, out = jmpi.wait(plan.start(strip))
+    return out
 
 
 def halo_exchange_2d(field, comm_rows: jmpi.Communicator | None,
@@ -34,10 +49,8 @@ def halo_exchange_2d(field, comm_rows: jmpi.Communicator | None,
     if comm_rows is not None and comm_rows.size() > 1:
         down = comm_rows.ring_perm(+1)
         up = comm_rows.ring_perm(-1)
-        _, top_halo = jmpi.sendrecv(field[-h:, :], pairs=down,
-                                    comm=comm_rows)              # from above
-        _, bot_halo = jmpi.sendrecv(field[:h, :], pairs=up,
-                                    comm=comm_rows)              # from below
+        top_halo = _planned_exchange(comm_rows, field[-h:, :], down)  # from above
+        bot_halo = _planned_exchange(comm_rows, field[:h, :], up)     # from below
     else:
         top_halo = field[-h:, :]
         bot_halo = field[:h, :]
@@ -47,10 +60,8 @@ def halo_exchange_2d(field, comm_rows: jmpi.Communicator | None,
     if comm_cols is not None and comm_cols.size() > 1:
         right = comm_cols.ring_perm(+1)
         left = comm_cols.ring_perm(-1)
-        _, left_halo = jmpi.sendrecv(field[:, -h:], pairs=right,
-                                     comm=comm_cols)
-        _, right_halo = jmpi.sendrecv(field[:, :h], pairs=left,
-                                      comm=comm_cols)
+        left_halo = _planned_exchange(comm_cols, field[:, -h:], right)
+        right_halo = _planned_exchange(comm_cols, field[:, :h], left)
     else:
         left_halo = field[:, -h:]
         right_halo = field[:, :h]
@@ -75,8 +86,9 @@ def global_sum(field, *comms: "jmpi.Communicator | None"):
     total = jnp.sum(field)
     for comm in comms:
         if comm is not None and comm.size() > 1:
-            _, total, _ = jmpi.allreduce(total, comm=comm,
-                                         token=jmpi.new_token())
+            plan = comm.allreduce_init(
+                jax.ShapeDtypeStruct(total.shape, total.dtype))
+            _, total = jmpi.wait(plan.start(total, token=jmpi.new_token()))
     return total
 
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, ShapeCell
+from repro.configs.base import ModelConfig
 from repro.models import lm as lm_lib
 
 

@@ -16,7 +16,6 @@ and donation set up so params/opt-state/caches update in place.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -293,6 +292,14 @@ def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
 
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
 
+        # Gradient sync rides persistent plans (MPI_Allreduce_init): the
+        # algorithm choice (grad_algo override or policy-by-size) is frozen
+        # once per payload signature and the plan cache serves every later
+        # step trace — no per-step registry/policy dispatch on the hot path.
+        def _grad_plan(g):
+            return comm.allreduce_init(jax.ShapeDtypeStruct(g.shape, g.dtype),
+                                       algorithm=grad_algo)
+
         if bucket:
             vec, spec = _flatten_bucket(grads)
             if bits:
@@ -302,7 +309,7 @@ def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
                     bits=bits, mean=True)
                 comp_state = _unflatten_bucket(nc.error, cspec)
             else:
-                _, rvec = jmpi.allreduce(vec, algorithm=grad_algo)
+                _, rvec = jmpi.wait(_grad_plan(vec).start(vec))
                 rvec = rvec / n
             grads = _unflatten_bucket(rvec, spec)
         else:
@@ -318,13 +325,16 @@ def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
                 grads = jax.tree.unflatten(tdef, out_flat)
                 comp_state = jax.tree.unflatten(tdef, new_c)
             else:
+                # per-leaf plans: same-shaped leaves share one cached plan
                 grads = jax.tree.unflatten(
-                    tdef, [jmpi.allreduce(g, algorithm=grad_algo)[1] / n
+                    tdef, [jmpi.wait(_grad_plan(g).start(g))[1] / n
                            for g in flat])
 
         grads, gnorm = optim.clip_by_global_norm(grads, run_cfg.grad_clip)
         new_params, new_opt = optim.update(params, grads, opt_state, run_cfg)
-        _, loss_mean = jmpi.allreduce(loss)
+        loss_plan = comm.allreduce_init(
+            jax.ShapeDtypeStruct(loss.shape, loss.dtype))
+        _, loss_mean = jmpi.wait(loss_plan.start(loss))
         return new_params, new_opt, comp_state, loss_mean / n
 
     pspec = jax.tree.map(lambda _: P(), jax.eval_shape(

@@ -5,7 +5,6 @@ layouts + conservation/positivity properties.  Run under 8 emulated devices.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,341 @@
+"""jmpi 2.0 cases — nonblocking collectives, persistent Plans, communicator
+methods, unified Request completion.  Device-count agnostic (run under 1, 2
+and 8 emulated devices via tests/test_plans_multidev.py, reusing the
+cases_registry machinery).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as jmpi
+from repro.core import ref, registry
+from tests.cases_registry import (N, OP_NAMES, _oracle_cmp, _tol, mesh1d,
+                                  rand, spmd_collective)
+
+
+def _sds(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# nonblocking collectives: every i* op vs the numpy oracle
+# ---------------------------------------------------------------------- #
+
+def case_icollectives_match_oracle():
+    """wait(i<collective>(x)) == oracle for every nonblocking collective."""
+    src = [rand((N * 2, 3), jnp.float32, seed=5 * i + 1) for i in range(N)]
+    np_src = [np.asarray(s, np.float64) for s in src]
+    tol = _tol(jnp.float32, "", "sum")
+
+    ops = {
+        "iallreduce": (lambda x: jmpi.wait(jmpi.iallreduce(x))[1],
+                       ref.allreduce(np_src, "sum")),
+        "ibcast": (lambda x: jmpi.wait(jmpi.ibcast(x, root=N - 1))[1],
+                   ref.bcast(np_src, root=N - 1)),
+        "iscatter": (lambda x: jmpi.wait(jmpi.iscatter(x, root=0))[1],
+                     ref.scatter(np_src, root=0)),
+        "igather": (lambda x: jmpi.wait(jmpi.igather(x, root=0))[1],
+                    ref.allgather(np_src)),
+        "iallgather": (lambda x: jmpi.wait(jmpi.iallgather(x))[1],
+                       ref.allgather(np_src)),
+        "ialltoall": (lambda x: jmpi.wait(jmpi.ialltoall(x))[1],
+                      ref.alltoall(np_src)),
+        "ireduce_scatter": (lambda x: jmpi.wait(jmpi.ireduce_scatter(x))[1],
+                            ref.reduce_scatter(np_src)),
+    }
+    for name, (fn, want) in ops.items():
+        got = spmd_collective(fn, src)
+        _oracle_cmp(got, want, **tol, err_msg=name)
+
+    # ibarrier: completes, and ops sequenced after it still agree
+    def barrier_then_sum(x):
+        req = jmpi.ibarrier()
+        st, _ = jmpi.wait(req)
+        assert st == jmpi.SUCCESS
+        return jmpi.wait(jmpi.iallreduce(x))[1]
+
+    got = spmd_collective(barrier_then_sum, src)
+    _oracle_cmp(got, ref.allreduce(np_src, "sum"), **tol, err_msg="ibarrier")
+
+
+def case_communicator_method_surface():
+    """Every v1.0 routine callable as a Communicator method, results equal
+    to the module-level wrappers; dup() is a distinct context with the same
+    group."""
+    src = [rand((N * 2, 3), jnp.float32, seed=9 * i + 2) for i in range(N)]
+
+    def f(x):
+        comm = jmpi.world()
+        dup = comm.dup()
+        assert dup is not comm and dup != comm and dup.axes == comm.axes
+        assert dup.size() == comm.size() == jmpi.size()
+        _, a = comm.allreduce(x)
+        _, a2 = jmpi.allreduce(x)
+        _, b = dup.bcast(x, root=0)
+        _, c = comm.allgather(x)
+        _, d = comm.alltoall(x[: N * (x.shape[0] // N)]) if x.shape[0] % N == 0 \
+            else (0, jnp.zeros_like(x))
+        _, e = comm.reduce_scatter(x)
+        _, g = comm.scatter(x, root=0)
+        _, h = comm.gather(x, root=0)
+        _, p = comm.sendrecv(x, pairs=comm.ring_perm(1))
+        assert comm.barrier() == jmpi.SUCCESS
+        return a - a2 + e.sum() * 0 + b.sum() * 0 + c.sum() * 0 \
+            + d.sum() * 0 + g.sum() * 0 + h.sum() * 0 + p.sum() * 0
+
+    got = spmd_collective(f, src)
+    for gvals in got:
+        np.testing.assert_allclose(gvals, 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------- #
+# unified Request model: mixed p2p + collective completion
+# ---------------------------------------------------------------------- #
+
+def case_mixed_waitall_p2p_and_collective():
+    """A p2p request and a nonblocking-collective request complete through
+    ONE waitall/testall call (the unified Request model)."""
+    src = [rand((4,), jnp.float32, seed=31 * i + 7) for i in range(N)]
+    np_src = [np.asarray(s, np.float64) for s in src]
+
+    def f(x):
+        comm = jmpi.world()
+        r1 = comm.isendrecv(x, pairs=comm.ring_perm(1), tag=4)
+        r2 = comm.iallreduce(x * 2, tag=4)
+        status, [shifted, summed] = jmpi.waitall([r1, r2], tag=4)
+        assert status == jmpi.SUCCESS
+        st, flag, [shifted2, summed2] = jmpi.testall([r1, r2])
+        return shifted + summed + (shifted2 - shifted) + (summed2 - summed) \
+            + jnp.where(flag, 0.0, jnp.nan).astype(x.dtype)
+
+    got = spmd_collective(f, src)
+    shift_want = ref.ppermute(np_src, [(i, (i + 1) % N) for i in range(N)])
+    sum_want = ref.allreduce([2 * s for s in np_src], "sum")
+    want = [sh + sm for sh, sm in zip(shift_want, sum_want)]
+    _oracle_cmp(got, want, rtol=1e-5, atol=1e-5)
+
+
+def case_testall_waitall_tag_validation():
+    """testall/waitall accept tag= (default ANY_TAG) and apply the same
+    trace-time mismatch validation as wait/waitany."""
+    src = [rand((3,), jnp.float32, seed=41 * i + 3) for i in range(N)]
+
+    def good(x):
+        comm = jmpi.world()
+        r1 = comm.isendrecv(x, pairs=comm.ring_perm(1), tag=7)
+        r2 = jmpi.iallreduce(x, tag=7)
+        st, flag, [a, b] = jmpi.testall([r1, r2], tag=7)
+        st2, [a2, b2] = jmpi.waitall([r1, r2], tag=jmpi.ANY_TAG)
+        return a + b + a2 * 0 + b2 * 0 + jnp.where(flag, 0.0, jnp.nan)
+
+    spmd_collective(good, src)  # must trace & run
+
+    def bad(x):
+        comm = jmpi.world()
+        r1 = comm.isendrecv(x, pairs=comm.ring_perm(1), tag=7)
+        _, _, [y] = jmpi.testall([r1], tag=8)
+        return y
+
+    try:
+        spmd_collective(bad, src)
+    except Exception as e:
+        assert "tag mismatch" in str(e)
+    else:
+        raise AssertionError("expected trace-time tag mismatch from testall")
+
+
+# ---------------------------------------------------------------------- #
+# persistent plans
+# ---------------------------------------------------------------------- #
+
+def case_plans_match_oracle():
+    """Every *_init plan's start/wait equals the oracle; a plan restarted
+    within one trace reuses the frozen lowering."""
+    src = [rand((N * 2, 3), jnp.float32, seed=3 * i + 11) for i in range(N)]
+    np_src = [np.asarray(s, np.float64) for s in src]
+    tol = _tol(jnp.float32, "", "sum")
+
+    plans = {
+        "allreduce": (lambda c, x: c.allreduce_init(_sds(x)),
+                      ref.allreduce(np_src, "sum")),
+        "bcast": (lambda c, x: c.bcast_init(_sds(x), root=N - 1),
+                  ref.bcast(np_src, root=N - 1)),
+        "scatter": (lambda c, x: c.scatter_init(_sds(x), root=0),
+                    ref.scatter(np_src, root=0)),
+        "gather": (lambda c, x: c.gather_init(_sds(x), root=0),
+                   ref.allgather(np_src)),
+        "allgather": (lambda c, x: c.allgather_init(_sds(x)),
+                      ref.allgather(np_src)),
+        "alltoall": (lambda c, x: c.alltoall_init(_sds(x)),
+                     ref.alltoall(np_src)),
+        "reduce_scatter": (lambda c, x: c.reduce_scatter_init(_sds(x)),
+                           ref.reduce_scatter(np_src)),
+    }
+    for name, (make, want) in plans.items():
+        def f(x, make=make):
+            comm = jmpi.world()
+            plan = make(comm, x)
+            _, out = jmpi.wait(plan.start(x))
+            return out
+
+        got = spmd_collective(f, src)
+        _oracle_cmp(got, want, **tol, err_msg=f"plan {name}")
+
+    # restart within one trace: two starts, both correct
+    def restart(x):
+        comm = jmpi.world()
+        plan = comm.allreduce_init(_sds(x))
+        _, once = jmpi.wait(plan.start(x))
+        _, twice = jmpi.wait(plan.start(once))
+        return twice
+
+    got = spmd_collective(restart, src)
+    want = ref.allreduce(ref.allreduce(np_src, "sum"), "sum")
+    _oracle_cmp(got, want, **tol, err_msg="plan restart")
+
+    # barrier plan: no payload, ops after it still sequence correctly
+    def barrier_plan(x):
+        comm = jmpi.world()
+        bp = comm.barrier_init()
+        jmpi.wait(bp.start())
+        return jmpi.wait(comm.allreduce_init(_sds(x)).start(x))[1]
+
+    got = spmd_collective(barrier_plan, src)
+    _oracle_cmp(got, ref.allreduce(np_src, "sum"), **tol,
+                err_msg="barrier plan")
+
+
+def case_plan_cache_hits_and_shape_misses():
+    """Same signature → SAME Plan object (cache hit); a new shape is a cache
+    miss building a new plan; starting a plan with the wrong shape is a
+    trace-time error."""
+    jmpi.plan_cache_clear()
+    src = [rand((6, 2), jnp.float32, seed=50 + i) for i in range(N)]
+
+    def f(x):
+        comm = jmpi.world()
+        p1 = comm.allreduce_init(_sds(x))
+        p2 = comm.allreduce_init(_sds(x))          # hit: identical signature
+        assert p1 is p2, "identical *_init must return the cached Plan"
+        small = x[:3]
+        p3 = comm.allreduce_init(_sds(small))      # miss: new shape
+        assert p3 is not p1
+        try:
+            p1.start(small)
+            raise AssertionError("plan.start must reject a mismatched shape")
+        except ValueError as e:
+            assert "frozen for" in str(e)
+        _, a = jmpi.wait(p1.start(x))
+        _, b = jmpi.wait(p3.start(small))
+        return a + jnp.pad(b, ((0, 3), (0, 0)))
+
+    spmd_collective(f, src)
+    stats = jmpi.plan_cache_stats()
+    assert stats["hits"] >= 1, stats          # p2 lookups
+    assert stats["misses"] >= 2, stats        # p1 and p3 builds
+    # re-trace with the same signatures: served fully from cache
+    before = jmpi.plan_cache_stats()
+    spmd_collective(f, src)
+    after = jmpi.plan_cache_stats()
+    assert after["misses"] == before["misses"], (before, after)
+    assert after["hits"] > before["hits"], (before, after)
+
+
+def case_plan_freezes_algorithm_choice():
+    """allreduce_init freezes the algorithm at init: an explicit ring plan
+    stays ring in the lowered HLO even when the active policy says native."""
+    if N < 2:
+        return  # single rank: every algorithm is the identity
+    mesh = mesh1d()
+    from jax.sharding import PartitionSpec as P
+
+    @jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))
+    def f(x):
+        comm = jmpi.world()
+        plan = comm.allreduce_init(
+            jax.ShapeDtypeStruct(x[0].shape, x[0].dtype), algorithm="ring")
+        assert plan.algorithm == "ring"
+        _, y = jmpi.wait(plan.start(x[0]))
+        return y[None]
+
+    x = jnp.zeros((N, 64), jnp.float32)
+    hlo = jax.jit(f).lower(x).as_text()
+    assert hlo.count("collective_permute") >= 2 * (N - 1), \
+        "ring plan must lower to the ppermute schedule"
+
+
+# ---------------------------------------------------------------------- #
+# operator-coverage bugfix: ring honors all six; unsupported pairs raise
+# the uniform trace-time error
+# ---------------------------------------------------------------------- #
+
+def case_ring_all_operators_match_oracle():
+    for op, name in OP_NAMES.items():
+        for dt in (jnp.float32, jnp.int32):
+            src = [rand((5, 2), dt, seed=17 * i + 1) for i in range(N)]
+            np_src = [np.asarray(s, np.float64) if dt != jnp.int32
+                      else np.asarray(s) for s in src]
+            want = ref.allreduce(np_src, name)
+            got = spmd_collective(
+                lambda x, o=op: jmpi.allreduce(x, o, algorithm="ring")[1],
+                src)
+            _oracle_cmp(got, want, **_tol(dt, "ring", name),
+                        err_msg=f"ring {name} {dt}")
+
+
+def case_unsupported_operator_uniform_error():
+    """(algorithm, Operator) pairs the lowering cannot honor raise the
+    uniform trace-time error naming both — explicit and fallback paths."""
+    src = [rand((4,), jnp.float32, seed=60 + i) for i in range(N)]
+
+    def explicit(x):
+        _, y = jmpi.allreduce(x, jmpi.Operator.LAND, algorithm="bf16_wire")
+        return y
+
+    try:
+        spmd_collective(explicit, src)
+    except Exception as e:
+        msg = str(e)
+        assert "bf16_wire" in msg and "LAND" in msg, msg
+    else:
+        raise AssertionError("expected uniform operator error (explicit)")
+
+    def fallback(x):  # policy path: xla_native reduce_scatter is SUM-only
+        _, y = jmpi.reduce_scatter(jnp.ones((N,), x.dtype) * x.sum(),
+                                   jmpi.Operator.PROD)
+        return y
+
+    try:
+        spmd_collective(fallback, src)
+    except Exception as e:
+        msg = str(e)
+        assert "xla_native" in msg and "PROD" in msg, msg
+    else:
+        raise AssertionError("expected uniform operator error (fallback)")
+
+    # ring CAN do PROD reduce_scatter now — explicit request must work
+    src2 = [rand((N * 2,), jnp.float32, seed=70 + i) for i in range(N)]
+    got = spmd_collective(
+        lambda x: jmpi.reduce_scatter(x, jmpi.Operator.PROD,
+                                      algorithm="ring")[1], src2)
+    stacked = np.stack([np.asarray(s, np.float64) for s in src2])
+    prod = np.prod(stacked, axis=0)
+    want = [prod[i * 2:(i + 1) * 2] for i in range(N)]
+    _oracle_cmp(got, want, rtol=1e-4, atol=1e-5, err_msg="ring prod rs")
+
+
+def case_registry_operator_declarations():
+    """Host-side: every registered algorithm either declares no operator
+    restriction or the uniform error message names algorithm + operator."""
+    from repro.core.operators import Operator
+    for op_name in ("allreduce", "reduce_scatter"):
+        for algo_name in registry.algorithms(op_name):
+            algo = registry.get(op_name, algo_name)
+            for red_op in Operator:
+                if algo.supports_operator(red_op):
+                    continue
+                msg = algo.operator_error(red_op)
+                assert algo_name in msg and red_op.name in msg

@@ -6,7 +6,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_tiny
 from repro.configs.base import RunConfig, ShapeCell

@@ -1,0 +1,35 @@
+"""Pytest wrappers for the jmpi 2.0 cases (nonblocking collectives,
+persistent plans, communicator methods, unified Request completion).
+
+Acceptance: every case passes for n ∈ {1, 2, 8} ranks.  The case module is
+device-count agnostic; each count runs it once in its own child process
+(cached transcript).  The 8-rank run is marked slow (quick lane covers
+1 and 2 ranks), mirroring tests/test_registry_multidev.py.
+"""
+
+import pytest
+
+from repro.testing import assert_case
+
+pytestmark = pytest.mark.multidev
+
+CASES = [
+    "case_icollectives_match_oracle",
+    "case_communicator_method_surface",
+    "case_mixed_waitall_p2p_and_collective",
+    "case_testall_waitall_tag_validation",
+    "case_plans_match_oracle",
+    "case_plan_cache_hits_and_shape_misses",
+    "case_plan_freezes_algorithm_choice",
+    "case_ring_all_operators_match_oracle",
+    "case_unsupported_operator_uniform_error",
+    "case_registry_operator_declarations",
+]
+
+N_RANKS = [1, 2, pytest.param(8, marks=pytest.mark.slow)]
+
+
+@pytest.mark.parametrize("n", N_RANKS)
+@pytest.mark.parametrize("case", CASES)
+def test_plans_case(case, n):
+    assert_case("tests.cases_plans", case, n_devices=n)

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_tiny
-from repro.configs.base import ModelConfig, RunConfig, ShapeCell
+from repro.configs.base import RunConfig, ShapeCell
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm as lm_lib
 from repro.serve.engine import Engine, ServeConfig
