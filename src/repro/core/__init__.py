@@ -30,6 +30,15 @@ Migration table (module function → communicator method)::
                                     ibarrier  -> Request
     (new, MPI-4)                    comm.<collective>_init(...) -> Plan;
                                     comm.sendrecv_init(...)    -> Plan
+    (new, topology)                 comm.cart_create(dims, periods) -> CartComm
+                                    with cart_coords/cart_rank/cart_shift/
+                                    cart_sub and the MPI-3 neighborhood
+                                    collectives neighbor_allgather /
+                                    neighbor_alltoall[v] (+ i*/_init forms)
+
+The complete reference table lives in docs/API.md; the layer diagram and
+dispatch walkthrough in docs/ARCHITECTURE.md; the paper-feature coverage
+map in docs/PAPER_MAP.md.
 
 Nonblocking collectives return the SAME ``Request`` type as isend/irecv, so
 mixed p2p + collective request lists complete through one unified
@@ -95,11 +104,18 @@ from repro.core.p2p import (ANY_TAG, Request, irecv, isend, isendrecv, recv,
                             waitall, waitany)
 from repro.core.plans import (Plan, allgather_init, allreduce_init,
                               alltoall_init, barrier_init, bcast_init,
-                              gather_init, plan_cache_clear, plan_cache_stats,
+                              gather_init, neighbor_allgather_init,
+                              neighbor_alltoall_init, neighbor_alltoallv_init,
+                              plan_cache_clear, plan_cache_stats,
                               reduce_scatter_init, scatter_init, sendrecv_init)
 from repro.core.registry import (PolicyRule, PolicyTable, algorithm_override,
                                  algorithms, clear_algorithms, load_policy,
                                  save_policy, set_algorithm, set_policy)
+# topology also registers the neighbor_* lowerings + hierarchical allreduce
+from repro.core.topology import (PROC_NULL, CartComm, cart_create,
+                                 ineighbor_allgather, ineighbor_alltoall,
+                                 ineighbor_alltoallv, neighbor_allgather,
+                                 neighbor_alltoall, neighbor_alltoallv)
 from repro.core.ring import ring_allgather, ring_allreduce
 from repro.core.token import (ERR_TOPOLOGY, ERR_TRUNCATE, SUCCESS, TokenContext,
                               ambient, new_token, reset_ambient, tie)
@@ -133,16 +149,20 @@ def wtime() -> float:
 RequestType = Request  # paper spells it mpi.RequestType in Listing 5
 
 __all__ = [
-    "Operator", "Communicator", "Request", "RequestType", "View", "Plan",
-    "HostBridge", "CompressionState", "TokenContext",
-    "SUCCESS", "ERR_TOPOLOGY", "ERR_TRUNCATE", "ANY_TAG",
+    "Operator", "Communicator", "CartComm", "Request", "RequestType", "View",
+    "Plan", "HostBridge", "CompressionState", "TokenContext",
+    "SUCCESS", "ERR_TOPOLOGY", "ERR_TRUNCATE", "ANY_TAG", "PROC_NULL",
     "allgather", "allreduce", "alltoall", "barrier", "bcast", "gather",
     "reduce_scatter", "scatter",
     "iallgather", "iallreduce", "ialltoall", "ibarrier", "ibcast", "igather",
     "ireduce_scatter", "iscatter",
+    "cart_create", "neighbor_allgather", "neighbor_alltoall",
+    "neighbor_alltoallv", "ineighbor_allgather", "ineighbor_alltoall",
+    "ineighbor_alltoallv",
     "allgather_init", "allreduce_init", "alltoall_init", "barrier_init",
     "bcast_init", "gather_init", "reduce_scatter_init", "scatter_init",
-    "sendrecv_init", "plan_cache_stats", "plan_cache_clear",
+    "sendrecv_init", "neighbor_allgather_init", "neighbor_alltoall_init",
+    "neighbor_alltoallv_init", "plan_cache_stats", "plan_cache_clear",
     "sendrecv", "send", "recv", "isend", "irecv",
     "isendrecv", "wait", "waitall", "waitany", "test", "testall", "testany",
     "ring_allreduce", "ring_allgather", "compressed_allreduce", "init_state",

@@ -133,7 +133,7 @@ def _alltoall_xla(val, tok, comm, *, split_axis=0, concat_axis=0):
 # the i* forms hand the Request to the unified wait/test machinery.
 # ===========================================================================
 
-def _issue(op_name, x, *, comm, token, algorithm, tag=0, **kw):
+def _issue(op_name, x, *, comm, token, algorithm, tag=0, unpack=None, **kw):
     comm = resolve(comm)
     tok, explicit = _tok_in(token)
     val = _pack(x)
@@ -143,7 +143,7 @@ def _issue(op_name, x, *, comm, token, algorithm, tag=0, **kw):
     new_tok = token_lib.advance(tok, out)
     if not explicit:
         token_lib.ambient().set(new_tok)
-    return Request(value=out, token=new_tok, tag=tag,
+    return Request(value=out, token=new_tok, tag=tag, unpack=unpack,
                    used_ambient=not explicit), explicit
 
 

@@ -63,6 +63,11 @@ class Communicator:
         return int(jax.lax.psum(1, self.axes))
 
     def axis_sizes(self) -> tuple[int, ...]:
+        """Per-axis extents of the group.
+
+        Returns:
+            One static Python int per mesh axis, in axis order.
+        """
         return tuple(int(jax.lax.psum(1, a)) for a in self.axes)
 
     # -- identity (traced; per-device) -------------------------------------
@@ -71,13 +76,29 @@ class Communicator:
         return jax.lax.axis_index(self.axes)
 
     def coords(self) -> tuple[jax.Array, ...]:
+        """This device's per-axis mesh coordinates.
+
+        Returns:
+            One traced int32 scalar per mesh axis (``rank()`` is their
+            row-major combination).
+        """
         return tuple(jax.lax.axis_index(a) for a in self.axes)
 
     # -- derived communicators ---------------------------------------------
     def split(self, axes: Sequence[str]) -> "Communicator":
         """Sub-communicator over a subset of this group's axes.
 
-        MPI ``Comm_split`` with color = coordinates on the dropped axes.
+        MPI ``Comm_split`` with color = coordinates on the dropped axes:
+        devices agreeing on every dropped axis form one group.
+
+        Args:
+            axes: the mesh axes the sub-communicator spans (must be a
+                subset of this group's axes; order defines rank order).
+        Returns:
+            A plain :class:`Communicator` inheriting this one's context
+            (re-derived splits of the same parent compare equal).
+        Raises:
+            ValueError: an axis is not part of this communicator.
         """
         axes = tuple(axes)
         missing = [a for a in axes if a not in self.axes]
@@ -89,19 +110,66 @@ class Communicator:
         return Communicator(axes, self.context)
 
     def dup(self) -> "Communicator":
-        """MPI_Comm_dup: same group, fresh communication context (distinct
-        identity — plans/caches keyed on the dup are independent)."""
+        """MPI_Comm_dup: same group, fresh communication context.
+
+        Returns:
+            A clone that hashes/compares distinct from the original, so
+            plans and caches keyed on the dup are independent.  Subclass
+            state (e.g. a :class:`~repro.core.topology.CartComm`'s
+            topology) is preserved.
+        """
         return dataclasses.replace(self, context=next(_DUP_CONTEXTS))
+
+    def cart_create(self, dims: Sequence[int],
+                    periods: Sequence[bool] | None = None,
+                    reorder: bool = False):
+        """Attach a Cartesian topology (MPI_Cart_create).
+
+        Args:
+            dims: grid extents, one per dimension; ``prod(dims)`` must
+                equal :meth:`size` and each dim must factor as a
+                consecutive run of this communicator's mesh axes.
+            periods: per-dim periodicity (default all False, as in MPI).
+            reorder: accepted and ignored (rank order is fixed by the mesh
+                under SPMD).
+        Returns:
+            A :class:`~repro.core.topology.CartComm` over the same group
+            with ``cart_coords``/``cart_rank``/``cart_shift``/``cart_sub``
+            and the neighborhood collectives.
+        Raises:
+            ValueError: ill-formed ``dims``/``periods`` or a grid that
+                does not factor the mesh axes.
+        """
+        from repro.core import topology
+        return topology.cart_create(dims, periods, reorder, comm=self)
 
     # -- permutation builders (static, for p2p) -----------------------------
     def ring_perm(self, shift: int = 1) -> list[tuple[int, int]]:
-        """src→dst pairs for a cyclic shift by ``shift`` (MPI_Cart_shift)."""
+        """Static src→dst pairs of a cyclic shift.
+
+        Args:
+            shift: ring displacement (positive = towards higher ranks).
+        Returns:
+            The full-group pair list for ``sendrecv``/``ppermute`` (the
+        periodic special case of
+        :meth:`~repro.core.topology.CartComm.cart_shift_perm`).
+        """
         n = self.size()
         return [(i, (i + shift) % n) for i in range(n)]
 
     def pairwise_perm(self, pairs: Sequence[tuple[int, int]],
                       bidirectional: bool = False) -> list[tuple[int, int]]:
-        """Explicit (src, dst) pairs; validates ranks and injectivity."""
+        """Validate explicit (src, dst) pairs as a p2p pattern.
+
+        Args:
+            pairs: static (src, dst) rank pairs.
+            bidirectional: also add every reversed pair.
+        Returns:
+            The validated pair list.
+        Raises:
+            ValueError: a rank out of range, or a src/dst repeated (one
+                message per rank per ppermute — split into multiple calls).
+        """
         n = self.size()
         perm = list(pairs)
         if bidirectional:
@@ -117,7 +185,17 @@ class Communicator:
         return perm
 
     def neighbor_perm(self, fn: Callable[[int], int | None]) -> list[tuple[int, int]]:
-        """Build a permutation from a dest-function evaluated per static rank."""
+        """Build a permutation from a dest-function evaluated per static rank.
+
+        Args:
+            fn: maps each static src rank to its dst rank, or None for "no
+                message from this rank".
+        Returns:
+            The validated (src, dst) pair list.
+        Raises:
+            ValueError: the resulting pattern is out of range or
+                non-injective.
+        """
         perm = []
         for src in range(self.size()):
             dst = fn(src)
@@ -132,75 +210,239 @@ class Communicator:
     # ======================================================================
 
     # -- blocking collectives (v1.0 surface) -------------------------------
+    # Shared conventions (documented once): ``x`` is an array/View with
+    # static shape; ``token=None`` threads the ambient ordering chain and
+    # an explicit token is returned back (``(status, value, token)``);
+    # ``algorithm`` forces a registry entry by name, else the active policy
+    # table chooses at trace time.
+
     def allreduce(self, x, op: Operator = Operator.SUM, *, token=None,
                   algorithm=None):
+        """Reduce ``x`` with ``op`` across the group (MPI_Allreduce).
+
+        Args:
+            x: payload array/View.
+            op: reduction :class:`Operator` (default SUM).
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+        Returns:
+            ``(status, value)`` — every rank holds the full reduction.
+        """
         from repro.core import collectives as c
         return c.allreduce(x, op, comm=self, token=token, algorithm=algorithm)
 
     def bcast(self, x, root: int = 0, *, token=None, algorithm=None):
+        """Broadcast ``root``'s value to every rank (MPI_Bcast).
+
+        Args:
+            x: payload array/View (contents ignored off-root).
+            root: static broadcasting rank.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+        Returns:
+            ``(status, value)`` — root's payload on every rank.
+        """
         from repro.core import collectives as c
         return c.bcast(x, root, comm=self, token=token, algorithm=algorithm)
 
     def scatter(self, x, root: int = 0, *, token=None, algorithm=None):
+        """Deal equal axis-0 chunks of ``root``'s buffer (MPI_Scatter).
+
+        Args:
+            x: payload whose axis 0 is divisible by the group size.
+            root: static scattering rank.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry forced on the underlying bcast.
+        Returns:
+            ``(status, chunk)`` — rank i's is the i-th chunk.
+        Raises:
+            ValueError: axis 0 not divisible by the group size.
+        """
         from repro.core import collectives as c
         return c.scatter(x, root, comm=self, token=token, algorithm=algorithm)
 
     def gather(self, x, root: int = 0, *, token=None, algorithm=None):
+        """Concatenate every rank's buffer, valid at ``root`` (MPI_Gather).
+
+        Args:
+            x: per-rank payload (identical static shape).
+            root: rank at which the result is contractually valid (the
+                SPMD lowering materializes it everywhere).
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+        Returns:
+            ``(status, stacked)`` — axis-0 concatenation in rank order.
+        """
         from repro.core import collectives as c
         return c.gather(x, root, comm=self, token=token, algorithm=algorithm)
 
     def allgather(self, x, *, token=None, algorithm=None):
+        """Concatenate every rank's buffer on every rank (MPI_Allgather).
+
+        Args:
+            x: per-rank payload (identical static shape).
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+        Returns:
+            ``(status, stacked)`` — axis-0 concatenation in rank order.
+        """
         from repro.core import collectives as c
         return c.allgather(x, comm=self, token=token, algorithm=algorithm)
 
     def alltoall(self, x, *, token=None, split_axis: int = 0,
                  concat_axis: int = 0, algorithm=None):
+        """Transpose chunks across ranks (MPI_Alltoall).
+
+        Args:
+            x: payload whose ``split_axis`` is divisible by the group size.
+            token: explicit ordering token; None uses the ambient chain.
+            split_axis: axis carved into per-destination chunks.
+            concat_axis: axis along which received chunks concatenate.
+            algorithm: registry entry to force; None → policy choice.
+        Returns:
+            ``(status, value)`` — chunk j from every rank, concatenated.
+        Raises:
+            ValueError: multi-axis communicator or non-divisible payload.
+        """
         from repro.core import collectives as c
         return c.alltoall(x, comm=self, token=token, split_axis=split_axis,
                           concat_axis=concat_axis, algorithm=algorithm)
 
     def reduce_scatter(self, x, op: Operator = Operator.SUM, *, token=None,
                        algorithm=None):
+        """Reduce then deal axis-0 chunks (MPI_Reduce_scatter_block).
+
+        Args:
+            x: payload whose axis 0 is divisible by the group size.
+            op: reduction :class:`Operator` (xla_native is SUM-only; other
+                operators need an algorithm that declares them).
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+        Returns:
+            ``(status, chunk)`` — this rank's reduced chunk.
+        Raises:
+            ValueError: non-divisible payload or an unsupported
+                (algorithm, Operator) pair.
+        """
         from repro.core import collectives as c
         return c.reduce_scatter(x, op, comm=self, token=token,
                                 algorithm=algorithm)
 
     def barrier(self, *, token=None):
+        """Synchronize the group (MPI_Barrier).
+
+        Args:
+            token: explicit ordering token; None uses the ambient chain.
+        Returns:
+            ``SUCCESS`` — or ``(SUCCESS, token)`` with an explicit token.
+            No jmpi op sequenced after the barrier can be scheduled before
+            every rank reaches it.
+        """
         from repro.core import collectives as c
         return c.barrier(comm=self, token=token)
 
     # -- nonblocking collectives (MPI-3 i* -> Request) ---------------------
+    # Same payload/token/algorithm conventions as the blocking forms; each
+    # returns a unified Request (``tag`` recorded for wait-side matching)
+    # completed via wait/waitall/waitany/test/testall/testany.
+
     def iallreduce(self, x, op: Operator = Operator.SUM, *, token=None,
                    algorithm=None, tag: int = 0):
+        """Nonblocking :meth:`allreduce` (MPI_Iallreduce).
+
+        Args:
+            x: payload array/View.
+            op: reduction :class:`Operator` (default SUM).
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+            tag: tag recorded on the Request.
+        Returns:
+            A unified :class:`Request`; complete via ``wait*``/``test*``.
+        """
         from repro.core import collectives as c
         return c.iallreduce(x, op, comm=self, token=token,
                             algorithm=algorithm, tag=tag)
 
     def ibcast(self, x, root: int = 0, *, token=None, algorithm=None,
                tag: int = 0):
+        """Nonblocking :meth:`bcast` (MPI_Ibcast).
+
+        Args:
+            x: payload array/View (contents ignored off-root).
+            root: static broadcasting rank.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+            tag: tag recorded on the Request.
+        Returns:
+            A unified :class:`Request`; complete via ``wait*``/``test*``.
+        """
         from repro.core import collectives as c
         return c.ibcast(x, root, comm=self, token=token, algorithm=algorithm,
                         tag=tag)
 
     def iscatter(self, x, root: int = 0, *, token=None, algorithm=None,
                  tag: int = 0):
+        """Nonblocking :meth:`scatter` (MPI_Iscatter).
+
+        Args:
+            x: payload whose axis 0 is divisible by the group size.
+            root: static scattering rank.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry forced on the underlying bcast.
+            tag: tag recorded on the Request.
+        Returns:
+            A unified :class:`Request` completing with this rank's chunk.
+        """
         from repro.core import collectives as c
         return c.iscatter(x, root, comm=self, token=token,
                           algorithm=algorithm, tag=tag)
 
     def igather(self, x, root: int = 0, *, token=None, algorithm=None,
                 tag: int = 0):
+        """Nonblocking :meth:`gather` (MPI_Igather).
+
+        Args:
+            x: per-rank payload (identical static shape).
+            root: rank at which the result is contractually valid.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+            tag: tag recorded on the Request.
+        Returns:
+            A unified :class:`Request` completing with the concatenation.
+        """
         from repro.core import collectives as c
         return c.igather(x, root, comm=self, token=token, algorithm=algorithm,
                          tag=tag)
 
     def iallgather(self, x, *, token=None, algorithm=None, tag: int = 0):
+        """Nonblocking :meth:`allgather` (MPI_Iallgather).
+
+        Args:
+            x: per-rank payload (identical static shape).
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+            tag: tag recorded on the Request.
+        Returns:
+            A unified :class:`Request` completing with the concatenation.
+        """
         from repro.core import collectives as c
         return c.iallgather(x, comm=self, token=token, algorithm=algorithm,
                             tag=tag)
 
     def ialltoall(self, x, *, token=None, split_axis: int = 0,
                   concat_axis: int = 0, algorithm=None, tag: int = 0):
+        """Nonblocking :meth:`alltoall` (MPI_Ialltoall).
+
+        Args:
+            x: payload whose ``split_axis`` is divisible by the group size.
+            token: explicit ordering token; None uses the ambient chain.
+            split_axis: axis carved into per-destination chunks.
+            concat_axis: axis along which received chunks concatenate.
+            algorithm: registry entry to force; None → policy choice.
+            tag: tag recorded on the Request.
+        Returns:
+            A unified :class:`Request`; complete via ``wait*``/``test*``.
+        """
         from repro.core import collectives as c
         return c.ialltoall(x, comm=self, token=token, split_axis=split_axis,
                            concat_axis=concat_axis, algorithm=algorithm,
@@ -208,77 +450,224 @@ class Communicator:
 
     def ireduce_scatter(self, x, op: Operator = Operator.SUM, *, token=None,
                         algorithm=None, tag: int = 0):
+        """Nonblocking :meth:`reduce_scatter` (MPI_Ireduce_scatter_block).
+
+        Args:
+            x: payload whose axis 0 is divisible by the group size.
+            op: reduction :class:`Operator`.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+            tag: tag recorded on the Request.
+        Returns:
+            A unified :class:`Request` completing with the reduced chunk.
+        """
         from repro.core import collectives as c
         return c.ireduce_scatter(x, op, comm=self, token=token,
                                  algorithm=algorithm, tag=tag)
 
     def ibarrier(self, *, token=None, tag: int = 0):
+        """Nonblocking :meth:`barrier` (MPI_Ibarrier).
+
+        Args:
+            token: explicit ordering token; None uses the ambient chain.
+            tag: tag recorded on the Request.
+        Returns:
+            A unified :class:`Request` whose completion point is the
+            synchronization.
+        """
         from repro.core import collectives as c
         return c.ibarrier(comm=self, token=token, tag=tag)
 
     # -- point-to-point ----------------------------------------------------
+    # Static topology (DESIGN.md §2): dest/source are static Python ranks,
+    # patterns are full (src, dst) pair lists; one fused ppermute per call.
+
     def send(self, x, dest: int, *, source: int, tag: int = 0, token=None):
+        """MPI_Send along a static (source → dest) edge.
+
+        Args:
+            x: payload array/View (the matched recv is the same fused
+                permute; the paired :meth:`recv` returns the payload).
+            dest: static destination rank.
+            source: static sending rank (SPMD traces both sides at once).
+            tag: message tag (validated at the wait side).
+            token: explicit ordering token; None uses the ambient chain.
+        Returns:
+            ``status`` (SUCCESS).
+        """
         from repro.core import p2p
         return p2p.send(x, dest, source=source, tag=tag, comm=self,
                         token=token)
 
     def recv(self, x, source: int, *, dest: int, tag: int = 0, token=None):
+        """MPI_Recv along a static (source → dest) edge.
+
+        Args:
+            x: the send-side value (the fused SPMD permute needs it
+                in-trace; ignored on non-source ranks).
+            source: static sending rank.
+            dest: static receiving rank.
+            tag: message tag.
+            token: explicit ordering token; None uses the ambient chain.
+        Returns:
+            ``(status, payload)`` — the received buffer on ``dest``.
+        """
         from repro.core import p2p
         return p2p.recv(x, source, dest=dest, tag=tag, comm=self, token=token)
 
     def sendrecv(self, x, pairs=None, *, perm=None, dest=None, source=None,
                  tag: int = 0, token=None, recv_into=None):
+        """Blocking fused exchange along a static (src → dst) pattern.
+
+        Args:
+            x: payload array/View (every listed src sends it).
+            pairs/perm: static (src, dst) pair list (aliases).
+            dest/source: single-edge shorthand when no pair list is given.
+            tag: message tag.
+            token: explicit ordering token; None uses the ambient chain.
+            recv_into: View to scatter the received message into
+                (ERR_TRUNCATE status when statically too small).
+        Returns:
+            ``(status, received)`` — plus the token when one was passed.
+        Raises:
+            ValueError: no pattern given, out-of-range ranks, or a
+                non-injective pattern.
+        """
         from repro.core import p2p
         return p2p.sendrecv(x, pairs, perm=perm, dest=dest, source=source,
                             tag=tag, comm=self, token=token,
                             recv_into=recv_into)
 
     def isend(self, x, dest: int, *, source: int, tag: int = 0, token=None):
+        """MPI_Isend: nonblocking :meth:`send`.
+
+        Args: as :meth:`send`.
+        Returns:
+            ``(status, Request)`` — complete via ``wait*``/``test*``.
+        """
         from repro.core import p2p
         return p2p.isend(x, dest, source=source, tag=tag, comm=self,
                          token=token)
 
     def irecv(self, x, source: int, *, dest: int, tag: int = 0, token=None):
+        """MPI_Irecv: nonblocking :meth:`recv`.
+
+        Args: as :meth:`recv`.
+        Returns:
+            ``(status, Request)`` — ``wait(request)`` yields the payload.
+        """
         from repro.core import p2p
         return p2p.irecv(x, source, dest=dest, tag=tag, comm=self,
                          token=token)
 
     def isendrecv(self, x, pairs=None, *, perm=None, dest=None, source=None,
                   tag: int = 0, token=None, recv_into=None):
+        """Nonblocking :meth:`sendrecv` (fused MPI_Isend + MPI_Irecv).
+
+        Args: as :meth:`sendrecv`.
+        Returns:
+            A unified :class:`Request`; complete via ``wait*``/``test*``.
+        """
         from repro.core import p2p
         return p2p.isendrecv(x, pairs, perm=perm, dest=dest, source=source,
                              tag=tag, comm=self, token=token,
                              recv_into=recv_into)
 
     # -- persistent plans (MPI-4 *_init -> Plan) ---------------------------
+    # ``shape_dtype`` is the payload signature (jax.ShapeDtypeStruct, a
+    # concrete array, or a (shape, dtype) pair); the registry's algorithm
+    # choice is resolved ONCE and frozen into a process-globally cached
+    # Plan — ``plan.start(x) -> Request``.
+
     def allreduce_init(self, shape_dtype, op: Operator = Operator.SUM, *,
                        algorithm=None):
+        """Persistent :meth:`allreduce` (MPI_Allreduce_init).
+
+        Args:
+            shape_dtype: payload signature the plan is frozen for.
+            op: reduction :class:`Operator`.
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`Plan`.
+        """
         from repro.core import plans
         return plans.allreduce_init(shape_dtype, op, comm=self,
                                     algorithm=algorithm)
 
     def bcast_init(self, shape_dtype, root: int = 0, *, algorithm=None):
+        """Persistent :meth:`bcast` (MPI_Bcast_init).
+
+        Args:
+            shape_dtype: payload signature the plan is frozen for.
+            root: static broadcasting rank.
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`Plan`.
+        """
         from repro.core import plans
         return plans.bcast_init(shape_dtype, root, comm=self,
                                 algorithm=algorithm)
 
     def scatter_init(self, shape_dtype, root: int = 0, *, algorithm=None):
+        """Persistent :meth:`scatter` (MPI_Scatter_init).
+
+        Args:
+            shape_dtype: full-buffer signature (axis 0 divisible by the
+                group size; the per-rank chunk slice is frozen in).
+            root: static scattering rank.
+            algorithm: registry entry frozen on the underlying bcast.
+        Returns:
+            A cached :class:`Plan`.
+        Raises:
+            ValueError: axis 0 not divisible by the group size.
+        """
         from repro.core import plans
         return plans.scatter_init(shape_dtype, root, comm=self,
                                   algorithm=algorithm)
 
     def gather_init(self, shape_dtype, root: int = 0, *, algorithm=None):
+        """Persistent :meth:`gather` (MPI_Gather_init; allgather lowering,
+        valid-at-root contract).
+
+        Args:
+            shape_dtype: per-rank payload signature.
+            root: rank at which the result is contractually valid.
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`Plan`.
+        """
         from repro.core import plans
         return plans.gather_init(shape_dtype, root, comm=self,
                                  algorithm=algorithm)
 
     def allgather_init(self, shape_dtype, *, algorithm=None):
+        """Persistent :meth:`allgather` (MPI_Allgather_init).
+
+        Args:
+            shape_dtype: per-rank payload signature.
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`Plan`.
+        """
         from repro.core import plans
         return plans.allgather_init(shape_dtype, comm=self,
                                     algorithm=algorithm)
 
     def alltoall_init(self, shape_dtype, *, split_axis: int = 0,
                       concat_axis: int = 0, algorithm=None):
+        """Persistent :meth:`alltoall` (MPI_Alltoall_init).
+
+        Args:
+            shape_dtype: payload signature (``split_axis`` divisible by
+                the group size).
+            split_axis: axis carved into per-destination chunks.
+            concat_axis: axis along which received chunks concatenate.
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`Plan`.
+        Raises:
+            ValueError: multi-axis communicator or non-divisible payload.
+        """
         from repro.core import plans
         return plans.alltoall_init(shape_dtype, comm=self,
                                    split_axis=split_axis,
@@ -287,16 +676,45 @@ class Communicator:
 
     def reduce_scatter_init(self, shape_dtype, op: Operator = Operator.SUM,
                             *, algorithm=None):
+        """Persistent :meth:`reduce_scatter` (MPI_Reduce_scatter_init).
+
+        Args:
+            shape_dtype: payload signature (axis 0 divisible by the group
+                size).
+            op: reduction :class:`Operator`.
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`Plan`.
+        Raises:
+            ValueError: non-divisible payload.
+        """
         from repro.core import plans
         return plans.reduce_scatter_init(shape_dtype, op, comm=self,
                                          algorithm=algorithm)
 
     def barrier_init(self):
+        """Persistent :meth:`barrier` (MPI_Barrier_init).
+
+        Returns:
+            A cached :class:`Plan` whose ``start()`` takes no payload.
+        """
         from repro.core import plans
         return plans.barrier_init(comm=self)
 
     def sendrecv_init(self, shape_dtype, pairs=None, *, perm=None, dest=None,
                       source=None):
+        """Persistent :meth:`sendrecv` (MPI_Send_init family).
+
+        Args:
+            shape_dtype: strip signature the plan is frozen for.
+            pairs/perm: static (src, dst) pattern (validated and frozen).
+            dest/source: single-edge shorthand.
+        Returns:
+            A cached :class:`Plan`; ``start(strip)`` is one token-tied
+            ppermute.
+        Raises:
+            ValueError: missing/invalid pattern.
+        """
         from repro.core import plans
         return plans.sendrecv_init(shape_dtype, pairs, perm=perm, dest=dest,
                                    source=source, comm=self)
@@ -310,10 +728,24 @@ _WORLD: list[Communicator | None] = [None]
 
 
 def set_world(comm: Communicator | None) -> None:
+    """Install ``comm`` as the ambient WORLD (None clears it).
+
+    Args:
+        comm: the communicator module-level jmpi calls default to; managed
+            by :func:`spmd` around each traced body.
+    """
     _WORLD[0] = comm
 
 
 def world() -> Communicator:
+    """The ambient WORLD communicator (MPI_COMM_WORLD analogue).
+
+    Returns:
+        The communicator installed by the enclosing :func:`spmd` trace.
+    Raises:
+        RuntimeError: no ambient communicator is installed (call jmpi ops
+            inside an spmd-wrapped function, or pass ``comm=`` explicitly).
+    """
     if _WORLD[0] is None:
         raise RuntimeError(
             "No ambient communicator: call jmpi ops inside a repro.core.spmd-"
@@ -322,6 +754,15 @@ def world() -> Communicator:
 
 
 def resolve(comm: Communicator | None) -> Communicator:
+    """``comm`` itself, or the ambient :func:`world` when None.
+
+    Args:
+        comm: an explicit communicator or None.
+    Returns:
+        A concrete :class:`Communicator`.
+    Raises:
+        RuntimeError: ``comm`` is None and no ambient WORLD is installed.
+    """
     return comm if comm is not None else world()
 
 

@@ -63,6 +63,13 @@ class CompressionState(NamedTuple):
 
 
 def init_state(like: jax.Array) -> CompressionState:
+    """Fresh error-feedback state for :func:`compressed_allreduce`.
+
+    Args:
+        like: array whose shape the residual accumulator mirrors.
+    Returns:
+        A zeroed :class:`CompressionState`.
+    """
     return CompressionState(error=jnp.zeros(like.shape, jnp.float32))
 
 

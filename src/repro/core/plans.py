@@ -48,7 +48,9 @@ from repro.core.p2p import Request
 __all__ = [
     "Plan", "collective_init", "allreduce_init", "bcast_init", "scatter_init",
     "gather_init", "allgather_init", "alltoall_init", "reduce_scatter_init",
-    "barrier_init", "sendrecv_init", "plan_cache_stats", "plan_cache_clear",
+    "barrier_init", "sendrecv_init", "neighbor_allgather_init",
+    "neighbor_alltoall_init", "neighbor_alltoallv_init",
+    "plan_cache_stats", "plan_cache_clear",
 ]
 
 
@@ -81,16 +83,33 @@ class Plan:
     dtype: Any
     comm: Communicator
     issue_fn: Callable[..., Any] = dataclasses.field(compare=False, repr=False)
+    # Optional payload adapters (vector ops, e.g. neighbor_alltoallv):
+    # ``pack_fn(x)`` replaces the default views.pack, ``unpack`` rides the
+    # Request and splits the completed flat buffer back into slot arrays.
+    pack_fn: Optional[Callable[..., Any]] = dataclasses.field(
+        default=None, compare=False, repr=False)
+    unpack: Any = dataclasses.field(default=None, compare=False, repr=False)
 
     def start(self, x=None, *, token=None, tag: int = 0) -> Request:
-        """Issue one instance of the planned op on payload ``x`` (omitted for
-        barrier plans): Request completes via the unified wait*/test*."""
+        """Issue one instance of the planned op (MPI_Start analogue).
+
+        Args:
+            x: the payload — array/View matching the frozen signature (slot
+                list for vector plans; omitted for barrier plans).
+            token: explicit ordering token; None uses the ambient chain.
+            tag: tag recorded on the returned Request.
+        Returns:
+            A unified :class:`Request`; complete via ``wait*``/``test*``.
+        Raises:
+            ValueError: payload shape/dtype does not match the frozen
+                signature (build a new plan with ``*_init``).
+        """
         tok = token if token is not None else token_lib.ambient().get()
         explicit = token is not None
         if self.collective == "barrier":
             val = None
         else:
-            val = _pack(x)
+            val = _pack(x) if self.pack_fn is None else self.pack_fn(x)
             if tuple(val.shape) != self.shape or \
                     jnp.dtype(val.dtype) != jnp.dtype(self.dtype):
                 raise ValueError(
@@ -104,10 +123,16 @@ class Plan:
         new_tok = token_lib.advance(tok, out)
         if not explicit:
             token_lib.ambient().set(new_tok)
-        return Request(value=out, token=new_tok, tag=tag,
+        return Request(value=out, token=new_tok, tag=tag, unpack=self.unpack,
                        used_ambient=not explicit)
 
     def describe(self) -> str:
+        """One-line human-readable summary (collective, algorithm, frozen
+        signature, axes).
+
+        Returns:
+            The description string.
+        """
         return (f"Plan({self.collective}, algorithm={self.algorithm}, "
                 f"shape={self.shape}, dtype={jnp.dtype(self.dtype).name}, "
                 f"axes={self.comm.axes})")
@@ -129,6 +154,8 @@ def plan_cache_stats() -> dict:
 
 
 def plan_cache_clear() -> None:
+    """Empty the process-global plan cache and zero the hit/miss stats
+    (tests and benchmarks isolating cache behaviour)."""
     _PLAN_CACHE.clear()
     _STATS["hits"] = 0
     _STATS["misses"] = 0
@@ -321,6 +348,116 @@ def barrier_init(*, comm: Communicator | None = None) -> Plan:
                     dtype=jnp.float32, comm=comm, issue_fn=issue)
 
     return _cached(key, build)
+
+
+# ---------------------------------------------------------------------------
+# Persistent neighborhood collectives (MPI_Neighbor_*_init): the halo-
+# exchange workhorses — topology + algorithm frozen once per signature.
+# ---------------------------------------------------------------------------
+
+def _require_cart(comm):
+    from repro.core.topology import _require_cart as req
+    return req(comm)
+
+
+def neighbor_allgather_init(shape_dtype, *, comm: Communicator | None = None,
+                            algorithm: Optional[str] = None) -> Plan:
+    """MPI_Neighbor_allgather_init analogue.
+
+    Args:
+        shape_dtype: per-rank payload signature.
+        comm: a :class:`~repro.core.topology.CartComm` (None = ambient).
+        algorithm: registry entry to freeze; None → policy choice.
+    Returns:
+        A cached :class:`Plan`; ``start(x)`` completes with
+        ``(2·ndims, *shape)``.
+    Raises:
+        TypeError: the communicator carries no Cartesian topology.
+    """
+    comm = _require_cart(resolve(comm))
+    return collective_init("neighbor_allgather", shape_dtype, comm=comm,
+                           algorithm=algorithm)
+
+
+def neighbor_alltoall_init(shape_dtype, *, comm: Communicator | None = None,
+                           algorithm: Optional[str] = None) -> Plan:
+    """MPI_Neighbor_alltoall_init analogue.
+
+    Args:
+        shape_dtype: the stacked ``(2·ndims, ...)`` send-slot signature.
+        comm: a :class:`~repro.core.topology.CartComm` (None = ambient).
+        algorithm: registry entry to freeze; None → policy choice.
+    Returns:
+        A cached :class:`Plan`; ``start(x)`` completes with the same shape.
+    Raises:
+        TypeError: no Cartesian topology; ValueError: axis 0 != 2·ndims.
+    """
+    comm = _require_cart(resolve(comm))
+    val = _as_struct(shape_dtype)
+    if len(val.shape) < 1 or val.shape[0] != 2 * comm.ndims:
+        raise ValueError(
+            f"neighbor_alltoall payload axis 0 must be 2*ndims = "
+            f"{2 * comm.ndims}, got shape {tuple(val.shape)}")
+    return collective_init("neighbor_alltoall", val, comm=comm,
+                           algorithm=algorithm)
+
+
+def neighbor_alltoallv_init(shape_dtypes, *, comm: Communicator | None = None,
+                            algorithm: Optional[str] = None) -> Plan:
+    """MPI_Neighbor_alltoallv_init analogue: vector per-slot signatures.
+
+    The slot shapes are static kwargs of the frozen kernel; ``start(xs)``
+    takes the slot *list* (packed to one flat buffer — the plan's frozen
+    signature) and the Request completes with the received slot list
+    (mirror-slot shapes, see :func:`repro.core.topology.recv_slot_shapes`).
+
+    Args:
+        shape_dtypes: sequence of 2·ndims per-slot signatures (shared
+            dtype; shapes may differ per slot).
+        comm: a :class:`~repro.core.topology.CartComm` (None = ambient).
+        algorithm: registry entry to freeze; None → policy choice.
+    Returns:
+        A cached :class:`Plan` with slot pack/unpack adapters attached.
+    Raises:
+        TypeError: no Cartesian topology; ValueError: wrong slot count or
+            mixed slot dtypes.
+    """
+    from repro.core import topology
+    comm = _require_cart(resolve(comm))
+    structs = [_as_struct(s) for s in shape_dtypes]
+    dtype = topology.check_slots(comm, structs)
+    shapes = tuple(tuple(s.shape) for s in structs)
+    total = sum(int(np.prod(s, dtype=int)) for s in shapes)
+    flat = jax.ShapeDtypeStruct((total,), dtype)
+    sig = ("neighbor_alltoallv", tuple(flat.shape), str(jnp.dtype(flat.dtype)),
+           comm, comm.size(), shapes)
+
+    def select():
+        return registry.select("neighbor_alltoallv", flat, comm,
+                               algorithm=algorithm, slot_shapes=shapes)
+
+    def build(algo):
+        fn = algo.fn
+
+        def issue(v, t):
+            return fn(v, t, comm, slot_shapes=shapes)
+
+        def pack_slots(xs):
+            packed, got = topology._pack_slots(comm, xs)
+            if got != shapes:
+                raise ValueError(
+                    f"plan neighbor_alltoallv/{algo.name} is frozen for "
+                    f"slot shapes {shapes}; got {got} — build a new plan "
+                    f"with *_init for the new signature")
+            return packed
+
+        return Plan(collective="neighbor_alltoallv", algorithm=algo.name,
+                    shape=tuple(flat.shape), dtype=jnp.dtype(flat.dtype),
+                    comm=comm, issue_fn=issue, pack_fn=pack_slots,
+                    unpack=topology._SlotUnpacker(
+                        topology.recv_slot_shapes(shapes)))
+
+    return _cached_selected(sig, algorithm, select, build)
 
 
 # ---------------------------------------------------------------------------

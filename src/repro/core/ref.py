@@ -65,3 +65,57 @@ def ppermute(shards, perm):
     for src, dst in perm:
         out[dst] = shards[src].copy()
     return out
+
+
+# ---------------------------------------------------------------------------
+# Cartesian-topology oracles: independent coordinate math (no shared helpers
+# with repro.core.topology), list-of-per-rank-payloads in, list out.
+# ---------------------------------------------------------------------------
+
+def _cart_neighbors(rank, dims, periods):
+    """2·ndims neighbour ranks of ``rank`` in MPI-3 slot order (None where a
+    non-periodic boundary has no neighbour)."""
+    strides = []
+    acc = 1
+    for d in reversed(dims):
+        strides.append(acc)
+        acc *= d
+    strides = list(reversed(strides))
+    coords = [(rank // s) % d for s, d in zip(strides, dims)]
+    out = []
+    for d in range(len(dims)):
+        for disp in (-1, +1):
+            c = coords[d] + disp
+            if periods[d]:
+                c %= dims[d]
+            elif not 0 <= c < dims[d]:
+                out.append(None)
+                continue
+            out.append(rank + (c - coords[d]) * strides[d])
+    return out
+
+
+def neighbor_allgather(shards, dims, periods):
+    """Per rank: stack of the 2·ndims neighbours' payloads (zeros at null
+    neighbours), MPI-3 slot order."""
+    out = []
+    for r in range(len(shards)):
+        slots = [np.zeros_like(shards[0]) if nb is None else shards[nb].copy()
+                 for nb in _cart_neighbors(r, dims, periods)]
+        out.append(np.stack(slots))
+    return out
+
+
+def neighbor_alltoall(shards, dims, periods):
+    """Per rank: slot k holds what neighbour k sent *to this rank* — i.e.
+    the neighbour's mirror slot (its +1 slot for our −1 neighbour and vice
+    versa); zeros at null neighbours."""
+    out = []
+    for r in range(len(shards)):
+        slots = []
+        for k, nb in enumerate(_cart_neighbors(r, dims, periods)):
+            mirror = k + 1 if k % 2 == 0 else k - 1
+            slots.append(np.zeros_like(shards[0][0]) if nb is None
+                         else shards[nb][mirror].copy())
+        out.append(np.stack(slots))
+    return out

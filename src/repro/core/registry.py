@@ -41,7 +41,8 @@ import dataclasses
 import json
 from typing import Any, Callable, Optional
 
-OPS = ("allreduce", "bcast", "allgather", "reduce_scatter", "alltoall")
+OPS = ("allreduce", "bcast", "allgather", "reduce_scatter", "alltoall",
+       "neighbor_allgather", "neighbor_alltoall", "neighbor_alltoallv")
 DEFAULT_ALGORITHM = "xla_native"
 
 
@@ -67,11 +68,28 @@ class Algorithm:
     operators: Optional[frozenset] = None
 
     def supports_operator(self, red_op) -> bool:
+        """True when this lowering honors reduction operator ``red_op``
+        (None declarations mean all operators / operator-free ops).
+
+        Args:
+            red_op: an :class:`~repro.core.operators.Operator` member, its
+                string value, or None.
+        Returns:
+            Whether the (algorithm, operator) pair is legal.
+        """
         if self.operators is None or red_op is None:
             return True
         return getattr(red_op, "value", red_op) in self.operators
 
     def operator_error(self, red_op) -> str:
+        """The uniform trace-time error message for an unsupported pair.
+
+        Args:
+            red_op: the rejected operator.
+        Returns:
+            A message naming the algorithm, the op, the operator and the
+            supported set.
+        """
         return (f"algorithm {self.name!r} for {self.op!r} does not support "
                 f"Operator.{getattr(red_op, 'name', red_op)}; supported "
                 f"operators: {sorted(self.operators)}")
@@ -113,6 +131,16 @@ def algorithms(op: str) -> list[str]:
 
 
 def get(op: str, name: str) -> Algorithm:
+    """Look up a registered lowering by name.
+
+    Args:
+        op: logical collective (one of :data:`OPS`).
+        name: registered algorithm name.
+    Returns:
+        The :class:`Algorithm` entry.
+    Raises:
+        ValueError: unknown ``op`` or unregistered ``name``.
+    """
     if op not in _REGISTRY:
         raise ValueError(f"unknown collective op {op!r}; expected one of {OPS}")
     if name not in _REGISTRY[op]:
@@ -138,6 +166,16 @@ class PolicyRule:
     ranks: Optional[int] = None       # None = any group size
 
     def matches(self, op: str, nbytes: int, n_ranks: int) -> bool:
+        """Whether this rule applies to one (op, payload, group) query.
+
+        Args:
+            op: logical collective name.
+            nbytes: static payload size in bytes.
+            n_ranks: communicator group size.
+        Returns:
+            True when op matches, the rank pin (if any) matches, and
+            ``nbytes`` falls within [min_bytes, max_bytes].
+        """
         if self.op != op:
             return False
         if self.ranks is not None and self.ranks != n_ranks:
@@ -155,6 +193,16 @@ class PolicyTable:
     default: dict[str, str] = dataclasses.field(default_factory=dict)
 
     def choose(self, op: str, nbytes: int, n_ranks: int) -> str:
+        """First matching rule's algorithm, else the per-op default.
+
+        Args:
+            op: logical collective name.
+            nbytes: static payload size in bytes.
+            n_ranks: communicator group size.
+        Returns:
+            The chosen algorithm name (eligibility NOT yet checked —
+            :func:`select` applies ``supports`` and falls back).
+        """
         for rule in self.rules:
             if rule.matches(op, nbytes, n_ranks):
                 return rule.algorithm
@@ -162,6 +210,11 @@ class PolicyTable:
 
     # -- serialization ----------------------------------------------------
     def to_json(self) -> str:
+        """Serialize the table (rules + defaults) to versioned JSON.
+
+        Returns:
+            The JSON text :meth:`from_json` round-trips.
+        """
         return json.dumps({
             "version": 1,
             "rules": [dataclasses.asdict(r) for r in self.rules],
@@ -170,30 +223,53 @@ class PolicyTable:
 
     @classmethod
     def from_json(cls, text: str) -> "PolicyTable":
+        """Parse a table from :meth:`to_json` output.
+
+        Args:
+            text: the JSON document.
+        Returns:
+            The reconstructed :class:`PolicyTable`.
+        """
         doc = json.loads(text)
         return cls(rules=[PolicyRule(**r) for r in doc.get("rules", [])],
                    default=dict(doc.get("default", {})))
 
     def save(self, path: str) -> None:
+        """Write the table as JSON to ``path``.
+
+        Args:
+            path: destination file.
+        """
         with open(path, "w") as f:
             f.write(self.to_json() + "\n")
 
     @classmethod
     def load(cls, path: str) -> "PolicyTable":
+        """Read a JSON table from ``path`` (without installing it).
+
+        Args:
+            path: source file.
+        Returns:
+            The parsed :class:`PolicyTable`.
+        """
         with open(path) as f:
             return cls.from_json(f.read())
 
     def describe(self) -> str:
-        """Human-readable policy table (what the bench sweep prints)."""
-        lines = [f"{'op':<16}{'bytes':<24}{'ranks':<8}algorithm",
-                 "-" * 60]
+        """Human-readable policy table (what the bench sweep prints).
+
+        Returns:
+            One line per rule plus the per-op default rows.
+        """
+        lines = [f"{'op':<20}{'bytes':<24}{'ranks':<8}algorithm",
+                 "-" * 64]
         for r in self.rules:
             hi = "inf" if r.max_bytes is None else str(r.max_bytes)
             rk = "any" if r.ranks is None else str(r.ranks)
-            lines.append(f"{r.op:<16}{f'[{r.min_bytes}, {hi}]':<24}"
+            lines.append(f"{r.op:<20}{f'[{r.min_bytes}, {hi}]':<24}"
                          f"{rk:<8}{r.algorithm}")
         for op in OPS:
-            lines.append(f"{op:<16}{'(default)':<24}{'any':<8}"
+            lines.append(f"{op:<20}{'(default)':<24}{'any':<8}"
                          f"{self.default.get(op, DEFAULT_ALGORITHM)}")
         return "\n".join(lines)
 
@@ -229,6 +305,11 @@ def _bump_epoch() -> None:
 
 
 def active_policy() -> PolicyTable:
+    """The process-global policy table currently consulted by selection.
+
+    Returns:
+        The installed :class:`PolicyTable` (built-in default if none).
+    """
     return _ACTIVE_POLICY[0]
 
 
@@ -246,6 +327,11 @@ def load_policy(path: str) -> PolicyTable:
 
 
 def save_policy(path: str) -> None:
+    """Write the active policy table to ``path`` as JSON.
+
+    Args:
+        path: destination file (loadable via :func:`load_policy`).
+    """
     active_policy().save(path)
 
 
@@ -263,6 +349,8 @@ def set_algorithm(op: str, name: str | None) -> None:
 
 
 def clear_algorithms() -> None:
+    """Drop every per-op override installed by :func:`set_algorithm`
+    (selection falls back to the active policy table)."""
     _OVERRIDES.clear()
     _bump_epoch()
 

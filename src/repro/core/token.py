@@ -83,6 +83,11 @@ _AMBIENT = TokenContext()
 
 
 def ambient() -> TokenContext:
+    """The process-global ambient token context jmpi ops default to.
+
+    Returns:
+        The live :class:`TokenContext` (per-trace; reset by ``spmd``).
+    """
     return _AMBIENT
 
 

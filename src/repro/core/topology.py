@@ -1,0 +1,959 @@
+"""Cartesian process topologies + MPI-3 neighborhood collectives.
+
+numba-mpi v1.0 stops at ``COMM_WORLD``; its headline applications (py-pde,
+PyMPDATA-MPI — paper §3) nevertheless *are* Cartesian domain decompositions,
+hand-computing neighbour ranks and issuing raw isend/irecv pairs.  This
+module supplies the MPI layer that exists to eliminate exactly that
+boilerplate:
+
+* :func:`cart_create` / :class:`CartComm` — ``MPI_Cart_create`` and the
+  query surface (``cart_coords`` / ``cart_rank`` / ``cart_shift`` /
+  ``cart_sub``), mapped onto jmpi's mesh-axis communicators.  A Cartesian
+  dimension is a consecutive run of mesh axes (row-major), so every derived
+  group is again a plain axis-subset communicator and all of jmpi 2.0
+  (collectives, plans, Requests) works on it unchanged.
+* MPI-3 **neighborhood collectives** — ``neighbor_allgather`` and
+  ``neighbor_alltoall[v]`` — registered as first-class collectives in the
+  algorithm registry with two lowerings each: ``xla_native`` (one
+  ``ppermute`` shift per (dimension, direction)) and ``ring`` (p2p-fused
+  unidirectional rings — both directions of a dimension travel the same
+  forward ring, the torus-network-friendly schedule).  Blocking,
+  nonblocking ``ineighbor_*`` (unified :class:`~repro.core.p2p.Request`)
+  and persistent ``neighbor_*_init`` plans all share the registry dispatch.
+* a node-aware two-level ``hierarchical`` allreduce lowering
+  (reduce-scatter intra-group, allreduce inter-group, allgather intra-group
+  — the classic SMP-aware schedule), selectable by the policy table.
+
+Null-rank semantics: at a non-periodic boundary MPI delivers from/to
+``MPI_PROC_NULL`` — the send vanishes and the receive buffer is left
+untouched.  Functional arrays have no "untouched", so jmpi defines the
+boundary slots as **zeros** (the ppermute convention for ranks absent from
+a permutation); :meth:`CartComm.cart_shift` reports :data:`PROC_NULL` for
+the missing neighbour exactly like MPI.
+
+Static-topology discipline (DESIGN.md §2): ``dims``/``periods`` are Python
+values, shift patterns are full (src, dst) lists built at trace time, and
+``reorder`` is accepted-but-ignored (rank order is fixed by the mesh under
+SPMD — there is no runtime rank renumbering to exploit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from repro.core import token as token_lib
+from repro.core import views as views_lib
+from repro.core.comm import Communicator, resolve
+from repro.core.operators import Operator
+from repro.core.p2p import Request
+
+__all__ = [
+    "PROC_NULL", "CartComm", "cart_create",
+    "neighbor_allgather", "neighbor_alltoall", "neighbor_alltoallv",
+    "ineighbor_allgather", "ineighbor_alltoall", "ineighbor_alltoallv",
+]
+
+#: MPI_PROC_NULL analogue: the "rank" reported by :meth:`CartComm.cart_shift`
+#: for the missing neighbour at a non-periodic boundary.
+PROC_NULL = -1
+
+
+# ---------------------------------------------------------------------------
+# dims ↔ mesh-axes factorization
+# ---------------------------------------------------------------------------
+
+def _strides(dims: tuple[int, ...]) -> tuple[int, ...]:
+    """Row-major strides of a dims grid (last dimension fastest)."""
+    out, acc = [], 1
+    for d in reversed(dims):
+        out.append(acc)
+        acc *= d
+    return tuple(reversed(out))
+
+
+def _unflatten(rank: int, dims: tuple[int, ...]) -> tuple[int, ...]:
+    """Static rank → row-major Cartesian coordinates."""
+    coords = []
+    for s in _strides(dims):
+        coords.append(rank // s)
+        rank %= s
+    return tuple(coords)
+
+
+def _flatten(coords: Sequence[int], dims: tuple[int, ...]) -> int:
+    """Row-major Cartesian coordinates → static rank."""
+    return sum(c * s for c, s in zip(coords, _strides(dims)))
+
+
+def _factor_axes(axes: tuple[str, ...], sizes: tuple[int, ...],
+                 dims: tuple[int, ...]) -> tuple[tuple[str, ...], ...]:
+    """Partition ``axes`` (in order) into one consecutive group per dim.
+
+    Row-major rank order over the communicator's axes must equal row-major
+    order over ``dims``, so each Cartesian dimension has to be a consecutive
+    run of mesh axes whose sizes multiply to the dim extent.  Among the
+    valid partitions the one with the fewest empty groups wins (degenerate
+    size-1 dims keep a size-1 mesh axis when one is available, so
+    :meth:`CartComm.cart_sub` can retain them).
+
+    Args:
+        axes: the communicator's mesh-axis names, in rank-major order.
+        sizes: the per-axis extents (same length as ``axes``).
+        dims: requested Cartesian grid extents.
+    Returns:
+        ``axis_map`` — for each dim, the tuple of mesh axes composing it.
+    Raises:
+        ValueError: no consecutive-run factorization exists (build the mesh
+            so its axis sizes factor the requested grid).
+    """
+    n_axes, n_dims = len(axes), len(dims)
+    best = None
+    for cuts in itertools.combinations_with_replacement(
+            range(n_axes + 1), n_dims - 1):
+        bounds = (0,) + cuts + (n_axes,)
+        groups = [tuple(range(bounds[i], bounds[i + 1]))
+                  for i in range(n_dims)]
+        if any(math.prod(sizes[j] for j in g) != dims[i]
+               for i, g in enumerate(groups)):
+            continue
+        score = sum(1 for g in groups if not g)
+        if best is None or score < best[0]:
+            best = (score, groups)
+    if best is None:
+        raise ValueError(
+            f"cart_create: dims {tuple(dims)} do not factor the "
+            f"communicator's axis sizes {tuple(sizes)} as consecutive runs "
+            f"(axes {tuple(axes)}); build the mesh so its axis sizes match "
+            f"the Cartesian grid (static topology, DESIGN.md §2)")
+    return tuple(tuple(axes[j] for j in g) for g in best[1])
+
+
+# ---------------------------------------------------------------------------
+# CartComm
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CartComm(Communicator):
+    """A communicator with an attached Cartesian topology (MPI_Cart_create).
+
+    Ranks are the parent communicator's ranks; coordinates are the row-major
+    unflattening of the rank over ``dims`` (dimension 0 slowest), which by
+    construction (see :func:`_factor_axes`) coincides with the mesh-axis
+    linearization.  ``axis_map[d]`` records which mesh axes compose
+    dimension ``d`` (empty for degenerate size-1 dims).
+
+    All :class:`Communicator` methods (collectives, p2p, plans, ``dup``,
+    ``split``) work unchanged; ``dup()`` keeps the topology (a fresh
+    communication context, MPI_Comm_dup), ``split()`` drops it (returns a
+    plain :class:`Communicator`, matching MPI_Comm_split).
+    """
+
+    dims: tuple[int, ...] = ()
+    periods: tuple[bool, ...] = ()
+    axis_map: tuple[tuple[str, ...], ...] = ()
+
+    # -- topology queries (static) ----------------------------------------
+    @property
+    def ndims(self) -> int:
+        """Number of Cartesian dimensions (MPI_Cartdim_get)."""
+        return len(self.dims)
+
+    @property
+    def neighbor_count(self) -> int:
+        """Slot count of the neighborhood collectives: 2·ndims, ordered
+        (dim-0 −1, dim-0 +1, dim-1 −1, dim-1 +1, …) — the MPI-3 Cartesian
+        neighbour order."""
+        return 2 * len(self.dims)
+
+    def cart_coords(self, rank: int | None = None):
+        """Cartesian coordinates (MPI_Cart_coords).
+
+        Args:
+            rank: a static Python rank → static ``tuple[int, ...]``; None →
+                the calling device's coordinates as traced int32 scalars
+                (valid only inside an spmd trace).
+        Returns:
+            Tuple of per-dimension coordinates (static ints or traced
+            arrays; degenerate dims are the static int 0).
+        Raises:
+            ValueError: static ``rank`` outside ``[0, size)``.
+        """
+        if rank is not None:
+            if not 0 <= rank < self.size():
+                raise ValueError(f"rank {rank} out of range for cart comm "
+                                 f"of size {self.size()}")
+            return _unflatten(int(rank), self.dims)
+        return tuple(jax.lax.axis_index(am) if am else 0
+                     for am in self.axis_map)
+
+    def cart_rank(self, coords: Sequence[int]) -> int:
+        """Static coordinates → static rank (MPI_Cart_rank).
+
+        Args:
+            coords: one integer per dimension.  Out-of-range entries wrap
+                on periodic dims (MPI semantics) and raise otherwise.
+        Returns:
+            The row-major rank as a Python int.
+        Raises:
+            ValueError: wrong arity, or an out-of-range coordinate on a
+                non-periodic dimension.
+        """
+        if len(coords) != self.ndims:
+            raise ValueError(f"expected {self.ndims} coords, got {coords!r}")
+        fixed = []
+        for c, n, p in zip(coords, self.dims, self.periods):
+            c = int(c)
+            if p:
+                c %= n
+            elif not 0 <= c < n:
+                raise ValueError(
+                    f"coordinate {c} out of range [0, {n}) on a "
+                    f"non-periodic dimension")
+            fixed.append(c)
+        return _flatten(fixed, self.dims)
+
+    def cart_shift(self, dim: int, disp: int = 1):
+        """Traced (source, dest) ranks for a shift (MPI_Cart_shift).
+
+        Args:
+            dim: dimension index to shift along.
+            disp: displacement (positive = towards higher coordinates).
+        Returns:
+            ``(source, dest)`` int32 scalars per device: the rank this
+            device would receive from / send to; :data:`PROC_NULL` where
+            the non-periodic boundary leaves no neighbour.
+        Raises:
+            IndexError: ``dim`` out of range.
+        """
+        n = self.dims[dim]
+        coords = self.cart_coords()
+        stride = _strides(self.dims)
+        base = sum(c * s for d, (c, s) in enumerate(zip(coords, stride))
+                   if d != dim)
+
+        def side(delta):
+            c = coords[dim] + delta
+            if self.periods[dim]:
+                return jnp.asarray(base + (c % n) * stride[dim], jnp.int32)
+            valid = (c >= 0) & (c < n)
+            cc = jnp.clip(c, 0, n - 1)
+            return jnp.where(valid, base + cc * stride[dim],
+                             PROC_NULL).astype(jnp.int32)
+
+        return side(-disp), side(+disp)
+
+    def cart_shift_perm(self, dim: int, disp: int = 1) -> list[tuple[int, int]]:
+        """Static (src, dst) pairs of a shift — the SPMD pattern form.
+
+        The whole-group counterpart of :meth:`cart_shift` (DESIGN.md §2:
+        communication patterns are static): every rank's send is one pair;
+        pairs whose destination falls off a non-periodic boundary are
+        dropped (their receivers get ppermute zeros — null semantics).
+
+        Args:
+            dim: dimension index to shift along.
+            disp: displacement (may be negative or exceed the extent).
+        Returns:
+            Injective pair list consumable by ``sendrecv``/``ppermute``.
+        """
+        pairs = []
+        for r in range(self.size()):
+            coords = list(_unflatten(r, self.dims))
+            c = coords[dim] + disp
+            if self.periods[dim]:
+                c %= self.dims[dim]
+            elif not 0 <= c < self.dims[dim]:
+                continue
+            coords[dim] = c
+            pairs.append((r, _flatten(coords, self.dims)))
+        return pairs
+
+    def neighbor_ranks(self, rank: int) -> list[int]:
+        """Static neighbour list of ``rank`` in MPI-3 slot order.
+
+        Args:
+            rank: static Python rank.
+        Returns:
+            ``2·ndims`` ranks — (dim-0 −1, dim-0 +1, dim-1 −1, …), with
+            :data:`PROC_NULL` where a non-periodic boundary has none.
+        """
+        out = []
+        coords = _unflatten(rank, self.dims)
+        for d in range(self.ndims):
+            for disp in (-1, +1):
+                c = coords[d] + disp
+                if self.periods[d]:
+                    c %= self.dims[d]
+                elif not 0 <= c < self.dims[d]:
+                    out.append(PROC_NULL)
+                    continue
+                cs = list(coords)
+                cs[d] = c
+                out.append(_flatten(cs, self.dims))
+        return out
+
+    def cart_sub(self, remain_dims: Sequence[bool]) -> "CartComm":
+        """Sub-grid communicator (MPI_Cart_sub).
+
+        Ranks sharing coordinates on every *dropped* dimension form one
+        group — obtained for free by keeping only the retained dims' mesh
+        axes (jmpi's ``Comm_split`` semantics).
+
+        Args:
+            remain_dims: one bool per dimension; True = keep.
+        Returns:
+            A :class:`CartComm` over the retained dims (topology, periods
+            and axis map sliced accordingly), inheriting this
+            communicator's context.
+        Raises:
+            ValueError: wrong arity, or every retained dim is degenerate
+                with no backing mesh axis (a group over zero axes cannot be
+                expressed — keep at least one non-degenerate dim).
+        """
+        remain = tuple(bool(b) for b in remain_dims)
+        if len(remain) != self.ndims:
+            raise ValueError(
+                f"expected {self.ndims} remain flags, got {remain!r}")
+        keep = [d for d in range(self.ndims) if remain[d]]
+        axes = tuple(a for d in keep for a in self.axis_map[d])
+        if not axes:
+            raise ValueError(
+                "cart_sub would retain only degenerate dims backed by no "
+                "mesh axis; keep at least one dimension that spans an axis")
+        return CartComm(
+            axes=axes, context=self.context,
+            dims=tuple(self.dims[d] for d in keep),
+            periods=tuple(self.periods[d] for d in keep),
+            axis_map=tuple(self.axis_map[d] for d in keep))
+
+    # -- neighborhood collectives (jmpi 2.0 method surface) ----------------
+    def neighbor_allgather(self, x, *, token=None, algorithm=None):
+        """Gather ``x`` from the 2·ndims Cartesian neighbours
+        (MPI_Neighbor_allgather).
+
+        Args:
+            x: payload array/View (identical static shape on every rank).
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force (``xla_native`` | ``ring``).
+        Returns:
+            ``(status, out)`` with ``out`` of shape ``(2·ndims, *x.shape)``
+            in MPI-3 slot order (zeros at null neighbours); plus the token
+            when one was passed explicitly.
+        """
+        return neighbor_allgather(x, comm=self, token=token,
+                                  algorithm=algorithm)
+
+    def neighbor_alltoall(self, x, *, token=None, algorithm=None):
+        """Per-neighbour exchange (MPI_Neighbor_alltoall).
+
+        Args:
+            x: ``(2·ndims, ...)`` stacked send slots — slot ``2d`` to the
+                −1 neighbour of dim ``d``, slot ``2d+1`` to the +1.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force (``xla_native`` | ``ring``).
+        Returns:
+            ``(status, out)`` — slot ``k`` of ``out`` holds what neighbour
+            ``k`` sent to *us* (zeros at null neighbours); plus the token
+            when one was passed explicitly.
+        """
+        return neighbor_alltoall(x, comm=self, token=token,
+                                 algorithm=algorithm)
+
+    def neighbor_alltoallv(self, xs, *, token=None, algorithm=None):
+        """Vector variant: per-neighbour payloads of distinct static shapes
+        (MPI_Neighbor_alltoallv).
+
+        Args:
+            xs: sequence of 2·ndims arrays/Views (one per slot, shared
+                dtype); the shape of slot ``k``'s *receive* is the static
+                shape of the mirror slot it was sent from.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force (``xla_native`` | ``ring``).
+        Returns:
+            ``(status, [recv_0, …])`` — list in slot order; plus the token
+            when one was passed explicitly.
+        """
+        return neighbor_alltoallv(xs, comm=self, token=token,
+                                  algorithm=algorithm)
+
+    def ineighbor_allgather(self, x, *, token=None, algorithm=None,
+                            tag: int = 0) -> Request:
+        """Nonblocking :meth:`neighbor_allgather`
+        (MPI_Ineighbor_allgather).
+
+        Args:
+            x: payload array/View.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force.
+            tag: tag recorded on the Request (for ``wait(..., tag=)``).
+        Returns:
+            A unified :class:`Request`; complete via ``wait*``/``test*``.
+        """
+        return ineighbor_allgather(x, comm=self, token=token,
+                                   algorithm=algorithm, tag=tag)
+
+    def ineighbor_alltoall(self, x, *, token=None, algorithm=None,
+                           tag: int = 0) -> Request:
+        """Nonblocking :meth:`neighbor_alltoall` (MPI_Ineighbor_alltoall).
+
+        Args:
+            x: ``(2·ndims, ...)`` stacked send slots.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force.
+            tag: tag recorded on the Request.
+        Returns:
+            A unified :class:`Request`; complete via ``wait*``/``test*``.
+        """
+        return ineighbor_alltoall(x, comm=self, token=token,
+                                  algorithm=algorithm, tag=tag)
+
+    def ineighbor_alltoallv(self, xs, *, token=None, algorithm=None,
+                            tag: int = 0) -> Request:
+        """Nonblocking :meth:`neighbor_alltoallv`
+        (MPI_Ineighbor_alltoallv).
+
+        Args:
+            xs: sequence of 2·ndims arrays/Views (shared dtype).
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force.
+            tag: tag recorded on the Request.
+        Returns:
+            A unified :class:`Request` whose completion value is the slot
+            list.
+        """
+        return ineighbor_alltoallv(xs, comm=self, token=token,
+                                   algorithm=algorithm, tag=tag)
+
+    def neighbor_allgather_init(self, shape_dtype, *, algorithm=None):
+        """Persistent :meth:`neighbor_allgather`
+        (MPI_Neighbor_allgather_init).
+
+        Args:
+            shape_dtype: payload signature (ShapeDtypeStruct / array /
+                ``(shape, dtype)``).
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`~repro.core.plans.Plan`;
+            ``plan.start(x) -> Request``.
+        """
+        from repro.core import plans
+        return plans.neighbor_allgather_init(shape_dtype, comm=self,
+                                             algorithm=algorithm)
+
+    def neighbor_alltoall_init(self, shape_dtype, *, algorithm=None):
+        """Persistent :meth:`neighbor_alltoall`
+        (MPI_Neighbor_alltoall_init).
+
+        Args:
+            shape_dtype: the stacked ``(2·ndims, ...)`` payload signature.
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`~repro.core.plans.Plan`;
+            ``plan.start(x) -> Request``.
+        """
+        from repro.core import plans
+        return plans.neighbor_alltoall_init(shape_dtype, comm=self,
+                                            algorithm=algorithm)
+
+    def neighbor_alltoallv_init(self, shape_dtypes, *, algorithm=None):
+        """Persistent :meth:`neighbor_alltoallv`
+        (MPI_Neighbor_alltoallv_init).
+
+        Args:
+            shape_dtypes: sequence of 2·ndims per-slot signatures (shared
+                dtype).
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`~repro.core.plans.Plan` whose ``start(xs)``
+            takes the slot list and whose Request completes with the
+            received slot list.
+        """
+        from repro.core import plans
+        return plans.neighbor_alltoallv_init(shape_dtypes, comm=self,
+                                             algorithm=algorithm)
+
+
+def cart_create(dims: Sequence[int],
+                periods: Sequence[bool] | None = None,
+                reorder: bool = False, *,
+                comm: Communicator | None = None) -> CartComm:
+    """Attach a Cartesian topology to ``comm`` (MPI_Cart_create).
+
+    Args:
+        dims: grid extents, one per dimension; their product must equal
+            ``comm.size()`` and each dim must factor as a consecutive run
+            of the comm's mesh axes (row-major rank order is shared).
+        periods: per-dim periodicity (default: all False, as in MPI).
+        reorder: accepted and ignored — under SPMD the rank order is fixed
+            by the mesh; there is no runtime renumbering to exploit.
+        comm: parent communicator (None = ambient WORLD).
+    Returns:
+        A :class:`CartComm` over the same group.
+    Raises:
+        ValueError: empty/ill-sized ``dims`` or ``periods``, or ``dims``
+            that do not factor the communicator's axis sizes.
+    """
+    del reorder
+    comm = resolve(comm)
+    dims = tuple(int(d) for d in dims)
+    if not dims or any(d < 1 for d in dims):
+        raise ValueError(f"dims must be positive and non-empty, got {dims}")
+    if math.prod(dims) != comm.size():
+        raise ValueError(f"prod(dims)={math.prod(dims)} != comm size "
+                         f"{comm.size()}")
+    periods = (tuple(bool(p) for p in periods) if periods is not None
+               else (False,) * len(dims))
+    if len(periods) != len(dims):
+        raise ValueError(f"periods arity {len(periods)} != dims arity "
+                         f"{len(dims)}")
+    axis_map = _factor_axes(comm.axes, comm.axis_sizes(), dims)
+    return CartComm(axes=comm.axes, context=comm.context, dims=dims,
+                    periods=periods, axis_map=axis_map)
+
+
+def _require_cart(comm) -> CartComm:
+    if not isinstance(comm, CartComm):
+        raise TypeError(
+            f"neighborhood collectives need a CartComm (got {type(comm).__name__}); "
+            f"attach a topology first: comm.cart_create(dims, periods)")
+    return comm
+
+
+# ---------------------------------------------------------------------------
+# Registered lowerings.  Kernel contract (repro.core.registry): payload is
+# packed and token-tied by the public op; thread the token through every hop.
+# ---------------------------------------------------------------------------
+
+def _is_cart(val, comm, **kw):
+    return isinstance(comm, CartComm)
+
+
+def _ring_fwd(cart: CartComm, dim: int) -> list[tuple[int, int]]:
+    """Full +1 ring pairs along ``dim`` including the wrap link — the ring
+    lowering's *transport* pattern.  Non-periodic semantics are restored by
+    masking boundary receives to zeros (the emulated/XLA transport is fully
+    connected, so using the wrap link costs nothing semantically)."""
+    pairs = []
+    for r in range(cart.size()):
+        coords = list(_unflatten(r, cart.dims))
+        coords[dim] = (coords[dim] + 1) % cart.dims[dim]
+        pairs.append((r, _flatten(coords, cart.dims)))
+    return pairs
+
+
+def _mask_boundary(cart: CartComm, dim: int, edge_coord, x):
+    """Zero ``x`` on devices whose coord along ``dim`` equals ``edge_coord``
+    (null-rank semantics for the ring lowering's masked wrap hop)."""
+    coord = cart.cart_coords()[dim]
+    return jnp.where(jnp.asarray(coord) == edge_coord, jnp.zeros_like(x), x)
+
+
+def _hop(cart: CartComm, perm, x, tok):
+    """One token-tied ppermute along a static pattern."""
+    tok, x = token_lib.tie(tok, x)
+    out = jax.lax.ppermute(x, cart.axes, perm)
+    tok = token_lib.advance(tok, out)
+    return out, tok
+
+
+def _dim_exchange_shifts(cart, d, send_minus, send_plus, tok):
+    """Both directions of dim ``d`` as two shift permutes (xla_native).
+
+    Returns (from_minus, from_plus, tok): what arrived from the −1 / +1
+    neighbour (zeros at non-periodic boundaries — the dropped perm pairs).
+    """
+    from_minus, tok = _hop(cart, cart.cart_shift_perm(d, +1), send_plus, tok)
+    from_plus, tok = _hop(cart, cart.cart_shift_perm(d, -1), send_minus, tok)
+    return from_minus, from_plus, tok
+
+
+def _dim_exchange_ring(cart, d, send_minus, send_plus, tok):
+    """Both directions of dim ``d`` over ONE forward ring (p2p-fused).
+
+    ``send_plus`` reaches the +1 neighbour in one forward hop; ``send_minus``
+    reaches the −1 neighbour by travelling the remaining n−1 forward hops —
+    every message moves the same way around the torus (unidirectional-link
+    schedule).  Non-periodic dims reuse the wrap link as transport and mask
+    the boundary receives to zeros.
+    """
+    n = cart.dims[d]
+    periodic = cart.periods[d]
+    if n == 1:
+        if periodic:  # self-neighbour: the exchange is a local swap
+            return send_plus, send_minus, tok
+        zeros = jnp.zeros_like(send_plus), jnp.zeros_like(send_minus)
+        return zeros[0], zeros[1], tok
+    fwd = _ring_fwd(cart, d)
+    from_minus, tok = _hop(cart, fwd, send_plus, tok)
+    if not periodic:
+        from_minus = _mask_boundary(cart, d, 0, from_minus)
+    cur = send_minus
+    for _ in range(n - 1):
+        cur, tok = _hop(cart, fwd, cur, tok)
+    from_plus = cur
+    if not periodic:
+        from_plus = _mask_boundary(cart, d, n - 1, from_plus)
+    return from_minus, from_plus, tok
+
+
+# -- neighbor_allgather -----------------------------------------------------
+
+@registry.register("neighbor_allgather", "xla_native", supports=_is_cart)
+def _neighbor_allgather_shifts(val, tok, comm):
+    """One ppermute shift per (dim, direction): 2·ndims hops of |x| each."""
+    slots = []
+    for d in range(comm.ndims):
+        fm, fp, tok = _dim_exchange_shifts(comm, d, val, val, tok)
+        slots += [fm, fp]
+    return jnp.stack(slots), tok
+
+
+@registry.register("neighbor_allgather", "ring", supports=_is_cart)
+def _neighbor_allgather_ring(val, tok, comm):
+    """Forward-ring lowering: circulate ``val`` n−1 hops per dim, plucking
+    the −1 neighbour's copy at hop 1 and the +1 neighbour's at hop n−1."""
+    slots = [None] * (2 * comm.ndims)
+    for d in range(comm.ndims):
+        n = comm.dims[d]
+        periodic = comm.periods[d]
+        if n == 1:
+            z = val if periodic else jnp.zeros_like(val)
+            slots[2 * d], slots[2 * d + 1] = z, z
+            continue
+        fwd = _ring_fwd(comm, d)
+        cur = val
+        for i in range(1, n):
+            cur, tok = _hop(comm, fwd, cur, tok)
+            if i == 1:
+                fm = cur if periodic else _mask_boundary(comm, d, 0, cur)
+                slots[2 * d] = fm
+            if i == n - 1:
+                fp = cur if periodic else _mask_boundary(comm, d, n - 1, cur)
+                slots[2 * d + 1] = fp
+    return jnp.stack(slots), tok
+
+
+# -- neighbor_alltoall ------------------------------------------------------
+
+def _natoa_supports(val, comm, **kw):
+    return (isinstance(comm, CartComm)
+            and val.ndim >= 1 and val.shape[0] == 2 * comm.ndims)
+
+
+@registry.register("neighbor_alltoall", "xla_native", supports=_natoa_supports)
+def _neighbor_alltoall_shifts(val, tok, comm):
+    """Per dim: slot 2d+1 rides the +1 shift (landing as the receiver's
+    from-minus slot), slot 2d rides the −1 shift."""
+    slots = []
+    for d in range(comm.ndims):
+        fm, fp, tok = _dim_exchange_shifts(comm, d, val[2 * d],
+                                           val[2 * d + 1], tok)
+        slots += [fm, fp]
+    return jnp.stack(slots), tok
+
+
+@registry.register("neighbor_alltoall", "ring", supports=_natoa_supports)
+def _neighbor_alltoall_ring(val, tok, comm):
+    """Forward-ring lowering (see :func:`_dim_exchange_ring`)."""
+    slots = []
+    for d in range(comm.ndims):
+        fm, fp, tok = _dim_exchange_ring(comm, d, val[2 * d],
+                                         val[2 * d + 1], tok)
+        slots += [fm, fp]
+    return jnp.stack(slots), tok
+
+
+# -- neighbor_alltoallv (flat-packed slots; shapes are static kwargs) -------
+
+def _slot_sizes(slot_shapes):
+    return [int(np.prod(s, dtype=int)) for s in slot_shapes]
+
+
+def _split_slots(flat, slot_shapes):
+    out, off = [], 0
+    for shp, n in zip(slot_shapes, _slot_sizes(slot_shapes)):
+        out.append(flat[off:off + n].reshape(shp))
+        off += n
+    return out
+
+
+def _mirror(k: int) -> int:
+    """Mirror slot: my −1 neighbour's +1 slot is addressed to me, and vice
+    versa — recv slot k has the static shape of send slot mirror(k)."""
+    return k + 1 if k % 2 == 0 else k - 1
+
+
+def _natoav_supports(val, comm, *, slot_shapes=(), **kw):
+    return (isinstance(comm, CartComm)
+            and len(slot_shapes) == 2 * comm.ndims
+            and val.size == sum(_slot_sizes(slot_shapes)))
+
+
+def _natoav_kernel(exchange):
+    def kernel(val, tok, comm, *, slot_shapes):
+        slots = _split_slots(val, slot_shapes)
+        recv = []
+        for d in range(comm.ndims):
+            fm, fp, tok = exchange(comm, d, slots[2 * d], slots[2 * d + 1],
+                                   tok)
+            recv += [fm, fp]
+        return jnp.concatenate([r.reshape(-1) for r in recv]), tok
+    return kernel
+
+
+registry.register("neighbor_alltoallv", "xla_native",
+                  supports=_natoav_supports)(
+    _natoav_kernel(_dim_exchange_shifts))
+registry.register("neighbor_alltoallv", "ring",
+                  supports=_natoav_supports)(
+    _natoav_kernel(_dim_exchange_ring))
+
+
+# ---------------------------------------------------------------------------
+# Node-aware two-level hierarchical allreduce (registry entry).
+# ---------------------------------------------------------------------------
+
+def _hier_supports(val, comm, *, op=None, **kw):
+    if len(comm.axes) < 2 or val.ndim < 1:
+        return False
+    intra = int(jax.lax.psum(1, comm.axes[-1]))
+    return intra > 0 and val.shape[0] % intra == 0
+
+
+@registry.register("allreduce", "hierarchical", supports=_hier_supports,
+                   operators=(Operator.SUM,))
+def _hierarchical_allreduce(val, tok, comm, *, op=None):
+    """Two-level node-aware allreduce: reduce-scatter inside the fast group
+    (last mesh axis — intra-node), allreduce the owned shard across groups
+    (remaining axes — inter-node), allgather the shards back inside the
+    group.  Only 1/intra of the payload crosses the slow inter-group links
+    — the classic SMP/SHARP-style schedule.  Groups come from
+    ``comm.split``; needs ≥2 mesh axes and axis-0 divisibility by the
+    intra-group size."""
+    intra = comm.split(comm.axes[-1:])
+    inter = comm.split(comm.axes[:-1])
+    shard = jax.lax.psum_scatter(val, intra.axes, scatter_dimension=0,
+                                 tiled=True)
+    shard = jax.lax.psum(shard, inter.axes)
+    out = jax.lax.all_gather(shard, intra.axes, axis=0, tiled=True)
+    return out, tok
+
+
+# ---------------------------------------------------------------------------
+# Public ops — blocking / nonblocking, sharing the collective dispatch path
+# (pack → registry.select → token tie → kernel → Request).
+# ---------------------------------------------------------------------------
+
+def ineighbor_allgather(x, *, comm: Communicator | None = None, token=None,
+                        algorithm: str | None = None, tag: int = 0) -> Request:
+    """MPI_Ineighbor_allgather: start gathering the 2·ndims neighbours'
+    payloads; complete via the unified ``wait*``/``test*``.
+
+    Args:
+        x: payload array/View.
+        comm: a :class:`CartComm` (None resolves the ambient WORLD, which
+            must carry a topology).
+        token: explicit ordering token; None uses the ambient chain.
+        algorithm: registry entry to force (``xla_native`` | ``ring``).
+        tag: tag recorded on the Request.
+    Returns:
+        :class:`Request` completing with ``(2·ndims, *x.shape)``.
+    Raises:
+        TypeError: the communicator has no Cartesian topology.
+    """
+    from repro.core import collectives as _coll
+    cart = _require_cart(resolve(comm))
+    req, _ = _coll._issue("neighbor_allgather", x, comm=cart, token=token,
+                          algorithm=algorithm, tag=tag)
+    return req
+
+
+def neighbor_allgather(x, *, comm: Communicator | None = None, token=None,
+                       algorithm: str | None = None):
+    """MPI_Neighbor_allgather: blocking form of
+    :func:`ineighbor_allgather`.
+
+    Args:
+        x: payload array/View.
+        comm: a :class:`CartComm` (None = ambient WORLD).
+        token: explicit ordering token; None uses the ambient chain.
+        algorithm: registry entry to force.
+    Returns:
+        ``(status, out)`` — or ``(status, out, token)`` with an explicit
+        token; ``out`` is ``(2·ndims, *x.shape)`` in MPI-3 slot order.
+    Raises:
+        TypeError: the communicator has no Cartesian topology.
+    """
+    from repro.core import collectives as _coll
+    explicit = token is not None
+    req = ineighbor_allgather(x, comm=comm, token=token, algorithm=algorithm)
+    return _coll._finish(req, explicit)
+
+
+def ineighbor_alltoall(x, *, comm: Communicator | None = None, token=None,
+                       algorithm: str | None = None, tag: int = 0) -> Request:
+    """MPI_Ineighbor_alltoall: start the per-neighbour exchange of the
+    stacked slots; complete via the unified ``wait*``/``test*``.
+
+    Args:
+        x: ``(2·ndims, ...)`` stacked send slots (slot 2d → −1 neighbour of
+            dim d, slot 2d+1 → +1 neighbour).
+        comm: a :class:`CartComm` (None = ambient WORLD).
+        token: explicit ordering token; None uses the ambient chain.
+        algorithm: registry entry to force (``xla_native`` | ``ring``).
+        tag: tag recorded on the Request.
+    Returns:
+        :class:`Request` completing with the same-shape received stack.
+    Raises:
+        TypeError: no Cartesian topology; ValueError: axis 0 != 2·ndims.
+    """
+    from repro.core import collectives as _coll
+    cart = _require_cart(resolve(comm))
+    val = views_lib.pack(x)
+    if val.ndim < 1 or val.shape[0] != cart.neighbor_count:
+        raise ValueError(
+            f"neighbor_alltoall payload axis 0 must be 2*ndims = "
+            f"{cart.neighbor_count}, got shape {tuple(val.shape)}")
+    req, _ = _coll._issue("neighbor_alltoall", val, comm=cart, token=token,
+                          algorithm=algorithm, tag=tag)
+    return req
+
+
+def neighbor_alltoall(x, *, comm: Communicator | None = None, token=None,
+                      algorithm: str | None = None):
+    """MPI_Neighbor_alltoall: blocking form of :func:`ineighbor_alltoall`.
+
+    Args:
+        x: ``(2·ndims, ...)`` stacked send slots.
+        comm: a :class:`CartComm` (None = ambient WORLD).
+        token: explicit ordering token; None uses the ambient chain.
+        algorithm: registry entry to force.
+    Returns:
+        ``(status, out)`` — or ``(status, out, token)`` with an explicit
+        token; slot ``k`` of ``out`` is what neighbour ``k`` sent here.
+    Raises:
+        TypeError / ValueError: as :func:`ineighbor_alltoall`.
+    """
+    from repro.core import collectives as _coll
+    explicit = token is not None
+    req = ineighbor_alltoall(x, comm=comm, token=token, algorithm=algorithm)
+    return _coll._finish(req, explicit)
+
+
+@dataclasses.dataclass
+class _SlotUnpacker:
+    """Splits the kernel's flat receive buffer back into per-slot arrays
+    (plugged into ``Request.unpack`` — applied at completion time)."""
+
+    shapes: tuple
+
+    def scatter_into(self, flat):
+        return _split_slots(flat, self.shapes)
+
+
+def recv_slot_shapes(slot_shapes) -> tuple:
+    """Receive-side slot shapes of a neighbor_alltoallv: slot ``k`` arrives
+    from neighbour ``k``, which sent its mirror slot — so the static shape
+    is ``slot_shapes[mirror(k)]``.
+
+    Args:
+        slot_shapes: send-side per-slot shapes, in slot order.
+    Returns:
+        The mirrored shape tuple (receive-side, same order).
+    """
+    return tuple(tuple(slot_shapes[_mirror(k)])
+                 for k in range(len(slot_shapes)))
+
+
+def check_slots(cart: CartComm, slots):
+    """Validate a neighbor_alltoallv slot list (shared by the direct path
+    and the persistent-plan path so the rules cannot drift).
+
+    Args:
+        cart: the Cartesian communicator the slots address.
+        slots: 2·ndims payloads — anything with ``.shape``/``.dtype``
+            (concrete arrays or ShapeDtypeStructs).
+    Returns:
+        The shared jnp dtype.
+    Raises:
+        ValueError: wrong slot count or mixed dtypes.
+    """
+    if len(slots) != cart.neighbor_count:
+        raise ValueError(f"neighbor_alltoallv needs 2*ndims = "
+                         f"{cart.neighbor_count} slots, got {len(slots)}")
+    dtypes = {jnp.dtype(s.dtype) for s in slots}
+    if len(dtypes) != 1:
+        raise ValueError(f"neighbor_alltoallv slots must share one dtype, "
+                         f"got {sorted(map(str, dtypes))}")
+    return next(iter(dtypes))
+
+
+def _pack_slots(cart: CartComm, xs):
+    slots = [views_lib.pack(x) for x in xs]
+    check_slots(cart, slots)
+    shapes = tuple(tuple(s.shape) for s in slots)
+    flat = jnp.concatenate([s.reshape(-1) for s in slots])
+    return flat, shapes
+
+
+def ineighbor_alltoallv(xs, *, comm: Communicator | None = None, token=None,
+                        algorithm: str | None = None, tag: int = 0) -> Request:
+    """MPI_Ineighbor_alltoallv: start the vector per-neighbour exchange;
+    complete via the unified ``wait*``/``test*``.
+
+    Args:
+        xs: sequence of 2·ndims arrays/Views (one per slot, shared dtype;
+            shapes may differ per slot but are identical across ranks —
+            static counts, the SPMD reading of the v-variant).
+        comm: a :class:`CartComm` (None = ambient WORLD).
+        token: explicit ordering token; None uses the ambient chain.
+        algorithm: registry entry to force (``xla_native`` | ``ring``).
+        tag: tag recorded on the Request.
+    Returns:
+        :class:`Request` whose completion value is the received slot list
+        (slot ``k`` shaped like the mirror slot, see
+        :func:`recv_slot_shapes`).
+    Raises:
+        TypeError: no Cartesian topology; ValueError: wrong slot count or
+            mixed dtypes.
+    """
+    from repro.core import collectives as _coll
+    cart = _require_cart(resolve(comm))
+    flat, shapes = _pack_slots(cart, xs)
+    req, _ = _coll._issue("neighbor_alltoallv", flat, comm=cart, token=token,
+                          algorithm=algorithm, tag=tag, slot_shapes=shapes,
+                          unpack=_SlotUnpacker(recv_slot_shapes(shapes)))
+    return req
+
+
+def neighbor_alltoallv(xs, *, comm: Communicator | None = None, token=None,
+                       algorithm: str | None = None):
+    """MPI_Neighbor_alltoallv: blocking form of
+    :func:`ineighbor_alltoallv`.
+
+    Args:
+        xs: sequence of 2·ndims arrays/Views (shared dtype).
+        comm: a :class:`CartComm` (None = ambient WORLD).
+        token: explicit ordering token; None uses the ambient chain.
+        algorithm: registry entry to force.
+    Returns:
+        ``(status, [recv_0, …])`` — or ``(status, values, token)`` with an
+        explicit token.
+    Raises:
+        TypeError / ValueError: as :func:`ineighbor_alltoallv`.
+    """
+    from repro.core.p2p import wait
+    explicit = token is not None
+    req = ineighbor_alltoallv(xs, comm=comm, token=token, algorithm=algorithm)
+    status, values = wait(req)
+    if explicit:
+        return status, values, req.token
+    return status, values

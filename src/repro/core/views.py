@@ -46,12 +46,24 @@ class View:
         self.index = _normalize_index(self.index)
 
     def pack(self):
-        """Contiguous message buffer (gather/slice; fused by XLA)."""
+        """Contiguous message buffer (gather/slice; fused by XLA).
+
+        Returns:
+            The selected slice as a dense jnp array.
+        """
         x = jnp.asarray(self.array)
         return x[self.index] if self.index else x
 
     def unpack(self, message):
-        """Enclosing array with ``message`` scattered into the view's slots."""
+        """Enclosing array with ``message`` scattered into the view's slots.
+
+        Args:
+            message: buffer shaped like the view's slice (cast to the
+                enclosing dtype).
+        Returns:
+            A new array equal to ``array`` outside the slice and
+            ``message`` inside it.
+        """
         x = jnp.asarray(self.array)
         if not self.index:
             return jnp.asarray(message).reshape(x.shape).astype(x.dtype)

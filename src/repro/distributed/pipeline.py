@@ -1,11 +1,15 @@
 """Pipeline parallelism over a mesh axis, built on jmpi point-to-point.
 
 GPipe-style schedule under SPMD: every stage holds its own layer slice; the
-activations travel stage→stage through ``jmpi.sendrecv`` ring permutations
-*inside* the jit program (JIT-resident communication — the paper's thesis
-applied to pipelining).  With M microbatches and P stages the steady-state
-rotation runs M+P−1 ticks; each tick every stage processes one microbatch
-and the boundary activations shift one hop.
+activations travel stage→stage through ``jmpi.sendrecv`` along a
+*non-periodic* 1-D Cartesian topology (``comm.cart_create((P,),
+periods=(False,))``) — the stage chain is a line, not a ring, and
+``cart_shift_perm`` expresses exactly that: the last stage's boundary send
+is dropped (null-rank semantics) instead of wrapping stale activations back
+to stage 0.  All communication is *inside* the jit program (JIT-resident —
+the paper's thesis applied to pipelining).  With M microbatches and P
+stages the steady-state rotation runs M+P−1 ticks; each tick every stage
+processes one microbatch and the boundary activations shift one hop.
 
 This is the alternative use of the multi-pod ``pod`` axis (DESIGN.md §7.5);
 correctness is asserted against the single-device stacked forward in
@@ -35,7 +39,10 @@ def pipeline_forward(x_microbatches, stage_fn: Callable, comm: jmpi.Communicator
     p = comm.size()
     m = x_microbatches.shape[0]
     rank = comm.rank()
-    fwd = comm.ring_perm(+1)
+    # stage chain as a non-periodic 1-D Cartesian topology: the +1 shift
+    # pattern drops the last stage's boundary send (PROC_NULL semantics)
+    cart = comm.cart_create((p,), periods=(False,))
+    fwd = cart.cart_shift_perm(0, +1)
     shape = x_microbatches.shape[1:]
 
     def tick(t, carry):

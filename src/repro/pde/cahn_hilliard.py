@@ -23,11 +23,11 @@ import repro.core as jmpi
 from repro.pde.stencil import global_sum, halo_exchange_2d, laplacian
 
 
-def _step(c, *, dt, dx, k, c0, comm_r, comm_c):
-    ch = halo_exchange_2d(c, comm_r, comm_c, halo=1)
+def _step(c, *, dt, dx, k, c0, cart):
+    ch = halo_exchange_2d(c, cart, halo=1)
     lap_c = laplacian(ch, dx)
     mu = c * c * c - c - lap_c
-    muh = halo_exchange_2d(mu, comm_r, comm_c, halo=1)
+    muh = halo_exchange_2d(mu, cart, halo=1)
     dc = laplacian(muh, dx) - k * (c - c0)
     return c + dt * dc
 
@@ -62,10 +62,8 @@ def make_solver(mesh, decomposition=(1, -1), *, dt=1e-3, dx=1.0, k=0.01,
     @jmpi.spmd(mesh, in_specs=P(axes[0], axes[1]), out_specs=out_specs)
     def run_block(c_local):
         world = jmpi.world()
-        comm_r = world.split([axes[0]]) if rows > 1 else None
-        comm_c = world.split([axes[1]]) if cols > 1 else None
-        step = functools.partial(_step, dt=dt, dx=dx, k=k, c0=c0,
-                                 comm_r=comm_r, comm_c=comm_c)
+        cart = world.cart_create((rows, cols), periods=(True, True))
+        step = functools.partial(_step, dt=dt, dx=dx, k=k, c0=c0, cart=cart)
         c = jax.lax.fori_loop(0, inner_steps, lambda i, c: step(c), c_local)
         if diagnostics:
             return c, global_sum(c, world)

@@ -82,9 +82,8 @@ def make_solver(mesh, *, courant=(0.2, 0.2), n_iters=2, inner_steps=50):
                out_specs=P(axes[0], axes[1]))
     def run_block(psi):
         world = jmpi.world()
-        comm_r = world.split([axes[0]]) if rows > 1 else None
-        comm_c = world.split([axes[1]]) if cols > 1 else None
-        exchange = lambda f: halo_exchange_2d(f, comm_r, comm_c, halo=1)
+        cart = world.cart_create((rows, cols), periods=(True, True))
+        exchange = lambda f: halo_exchange_2d(f, cart, halo=1)
         cx, cy = courant
         return jax.lax.fori_loop(
             0, inner_steps,

@@ -2,20 +2,26 @@
 
 py-pde and PyMPDATA-MPI both reduce their distributed needs to one
 primitive: exchange boundary strips with grid neighbours, then run the local
-stencil.  ``halo_exchange_2d`` implements exactly that with jmpi
-``sendrecv`` ring permutations over the mesh axes — JIT-resident, so the
-whole PDE step (stencil + communication) is one compiled block, which is the
-paper's point.
+stencil.  ``halo_exchange_2d`` implements exactly that — and, since the
+topology subsystem landed, it no longer computes neighbour ranks at all: the
+solver attaches a Cartesian topology once (``world.cart_create((rows,
+cols), periods=(True, True))``) and each decomposed axis is one MPI-3
+``neighbor_alltoall`` on the ``cart_sub`` sub-grid — the send-up/send-down
+strip pair is exactly the collective's slot layout, so what used to be two
+hand-rolled ``sendrecv`` ring permutations per axis is one first-class
+registry collective (``xla_native`` shifts or the p2p-fused ``ring``
+lowering, policy's choice).
 
-The decomposition layout is the communicator layout: decompose along axis 0,
+The decomposition layout is the Cartesian grid: decompose along axis 0,
 axis 1, or both, by building the mesh with the matching axis sizes
-(paper Fig. 3's layout study = benchmarks/bench_mpdata.py).
+(paper Fig. 3's layout study = benchmarks/bench_mpdata.py); degenerate
+(size-1) dims wrap locally, matching the periodic self-neighbour.
 
 Persistent plans: a PDE time loop re-exchanges the SAME strip signature
-every step, so the exchange rides ``comm.sendrecv_init`` plans — the
-(src → dst) pattern is validated and frozen once per (shape, dtype, comm)
-and the process-global plan cache serves every later step/trace
-(MPI_Send_init semantics; see ``repro.core.plans``).
+every step, so the exchange rides ``cart.neighbor_alltoall_init`` plans —
+topology and algorithm are validated and frozen once per (shape, dtype,
+comm) and the process-global plan cache serves every later step/trace
+(MPI_Neighbor_alltoall_init semantics; see ``repro.core.plans``).
 """
 
 from __future__ import annotations
@@ -26,45 +32,63 @@ import jax.numpy as jnp
 import repro.core as jmpi
 
 
-def _planned_exchange(comm: jmpi.Communicator, strip, pairs):
-    """One persistent-plan hop: strip moves along the frozen pattern."""
-    plan = comm.sendrecv_init(jax.ShapeDtypeStruct(strip.shape, strip.dtype),
-                              pairs=pairs)
-    _, out = jmpi.wait(plan.start(strip))
-    return out
+def _exchange_axis(sub: "jmpi.CartComm | None", lo_strip, hi_strip,
+                   algorithm=None):
+    """One decomposed axis as a persistent neighbor_alltoall.
+
+    Args:
+        sub: 1-D periodic CartComm along the axis (None = axis not
+            decomposed → periodic local wrap).
+        lo_strip: strip addressed to the −1 neighbour (the block's leading
+            rows/cols).
+        hi_strip: strip addressed to the +1 neighbour (trailing rows/cols).
+        algorithm: registry entry to freeze into the plan (None = policy).
+    Returns:
+        ``(from_minus, from_plus)`` — the halo strips received from the
+        −1 / +1 neighbours.
+    """
+    if sub is None:
+        return hi_strip, lo_strip  # periodic self-wrap
+    send = jnp.stack([lo_strip, hi_strip])
+    plan = sub.neighbor_alltoall_init(
+        jax.ShapeDtypeStruct(send.shape, send.dtype), algorithm=algorithm)
+    _, recv = jmpi.wait(plan.start(send))
+    return recv[0], recv[1]
 
 
-def halo_exchange_2d(field, comm_rows: jmpi.Communicator | None,
-                     comm_cols: jmpi.Communicator | None, halo: int = 1):
+def halo_exchange_2d(field, cart: "jmpi.CartComm", halo: int = 1, *,
+                     algorithm=None):
     """Pad ``field`` (local block) with periodic neighbour strips.
 
-    comm_rows: communicator along the row-decomposed axis (axis 0) — ranks
-    above/below; comm_cols: along axis 1 — ranks left/right.  Either may be
-    None (axis not decomposed → wrap locally).
-    Returns (n + 2·halo, m + 2·halo).
+    Args:
+        field: the local ``(n, m)`` block.
+        cart: 2-D periodic :class:`~repro.core.topology.CartComm` from
+            ``world.cart_create((rows, cols), periods=(True, True))`` —
+            dim 0 decomposes rows, dim 1 columns; size-1 dims wrap locally.
+        halo: strip width.
+        algorithm: neighbor-collective registry entry to freeze into the
+            exchange plans (None = the active policy's choice).
+    Returns:
+        The ``(n + 2·halo, m + 2·halo)`` padded block; the column phase
+        includes the fresh halo rows so corners resolve.
+    Raises:
+        ValueError: ``cart`` is not 2-dimensional.
     """
+    if cart.ndims != 2:
+        raise ValueError(f"halo_exchange_2d needs a 2-D CartComm, got "
+                         f"{cart.ndims}-D dims={cart.dims}")
     h = halo
+    sub_r = cart.cart_sub((True, False)) if cart.dims[0] > 1 else None
+    sub_c = cart.cart_sub((False, True)) if cart.dims[1] > 1 else None
 
-    # --- axis 0 (rows): send bottom strip down / top strip up -------------
-    if comm_rows is not None and comm_rows.size() > 1:
-        down = comm_rows.ring_perm(+1)
-        up = comm_rows.ring_perm(-1)
-        top_halo = _planned_exchange(comm_rows, field[-h:, :], down)  # from above
-        bot_halo = _planned_exchange(comm_rows, field[:h, :], up)     # from below
-    else:
-        top_halo = field[-h:, :]
-        bot_halo = field[:h, :]
+    # --- axis 0 (rows): top strip to the -1 neighbour, bottom to the +1 --
+    top_halo, bot_halo = _exchange_axis(sub_r, field[:h, :], field[-h:, :],
+                                        algorithm)
     field = jnp.concatenate([top_halo, field, bot_halo], axis=0)
 
     # --- axis 1 (cols): include the fresh halo rows so corners resolve ----
-    if comm_cols is not None and comm_cols.size() > 1:
-        right = comm_cols.ring_perm(+1)
-        left = comm_cols.ring_perm(-1)
-        left_halo = _planned_exchange(comm_cols, field[:, -h:], right)
-        right_halo = _planned_exchange(comm_cols, field[:, :h], left)
-    else:
-        left_halo = field[:, -h:]
-        right_halo = field[:, :h]
+    left_halo, right_halo = _exchange_axis(sub_c, field[:, :h], field[:, -h:],
+                                           algorithm)
     return jnp.concatenate([left_halo, field, right_halo], axis=1)
 
 
@@ -76,8 +100,14 @@ def global_sum(field, *comms: "jmpi.Communicator | None"):
     routes this through its latency-optimal small-payload entry
     (recursive_doubling under the built-in table) rather than the
     bandwidth schedule the field itself would get — the per-payload
-    selection the registry exists for.  ``comms``: one communicator per
-    decomposed axis (None entries skipped; no live comm → local sum).
+    selection the registry exists for.
+
+    Args:
+        field: the local block to sum.
+        comms: one communicator per decomposed axis (None entries skipped;
+            no live comm → local sum only).
+    Returns:
+        The scalar global sum (same value on every rank).
 
     Uses an explicit fresh token (control-flow safe): diagnostics typically
     run right after a ``fori_loop``/``scan`` time loop, and the ambient
@@ -93,7 +123,15 @@ def global_sum(field, *comms: "jmpi.Communicator | None"):
 
 
 def laplacian(c_halo, dx: float = 1.0, halo: int = 1):
-    """5-point Laplacian of the interior of a halo-padded block."""
+    """5-point Laplacian of the interior of a halo-padded block.
+
+    Args:
+        c_halo: halo-padded ``(n + 2·halo, m + 2·halo)`` block.
+        dx: grid spacing.
+        halo: pad width of the input.
+    Returns:
+        The ``(n, m)`` interior Laplacian.
+    """
     h = halo
     n = c_halo.shape[0] - 2 * h
     m = c_halo.shape[1] - 2 * h

@@ -32,9 +32,8 @@ def case_halo_exchange_matches_roll():
         @jmpi.spmd(mesh, in_specs=P("px", "py"), out_specs=P("px", "py"))
         def f(blk):
             world = jmpi.world()
-            cr = world.split(["px"]) if rows > 1 else None
-            cc = world.split(["py"]) if cols > 1 else None
-            h = halo_exchange_2d(blk, cr, cc, halo=1)
+            cart = world.cart_create((rows, cols), periods=(True, True))
+            h = halo_exchange_2d(blk, cart, halo=1)
             # interior of padded block must equal block; check neighbours by
             # reconstructing the shifted field
             up = h[0:blk.shape[0], 1:1 + blk.shape[1]]

@@ -1,0 +1,404 @@
+"""Cartesian-topology + neighborhood-collective cases — device-count
+agnostic (run under 1, 2 and 8 emulated devices via
+tests/test_topology_multidev.py).
+
+Covers the ISSUE-3 edge cases: periodic vs non-periodic ``cart_shift`` at
+boundaries (null-rank semantics), ``cart_sub`` on degenerate dims, both
+registered lowerings of every neighbor collective against the independent
+numpy oracle at n ∈ {1, 2, 8}, plans/i*-forms through the unified Request
+model, and the policy-selectable ``hierarchical`` allreduce.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+import repro.core as jmpi
+from repro.core import compat, ref, registry
+from tests.cases_registry import N, mesh1d, rand, spmd_collective
+
+NEIGHBOR_ALGOS = ("xla_native", "ring")
+
+
+def _sds(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _cart1d(periodic: bool):
+    return jmpi.world().cart_create((N,), periods=(periodic,))
+
+
+def mesh2d_split():
+    """A 2-axis mesh (2, N//2) for node/local two-level cases (N >= 4)."""
+    return compat.make_mesh((2, N // 2), ("node", "local"))
+
+
+def spmd2d(fn, shards):
+    """Run ``fn`` per device on a (2, N//2) mesh; returns per-rank outputs
+    in row-major rank order (rank = node * (N//2) + local)."""
+    mesh = mesh2d_split()
+
+    @jmpi.spmd(mesh, in_specs=P("node", "local"), out_specs=P("node", "local"))
+    def run(x):
+        return fn(x[0][0])[None, None]
+
+    rows = jnp.stack([jnp.stack(shards[i * (N // 2):(i + 1) * (N // 2)])
+                      for i in range(2)])
+    out = run(rows)
+    return [np.asarray(out[i][j]) for i in range(2) for j in range(N // 2)]
+
+
+# ---------------------------------------------------------------------- #
+# cart_create / coords / rank / shift statics + traced agreement
+# ---------------------------------------------------------------------- #
+
+def case_cart_create_round_trip():
+    """Static cart_coords/cart_rank invert each other for every rank, and
+    the traced per-device coords agree with the static unflattening."""
+    src = [rand((3,), jnp.float32, seed=i) for i in range(N)]
+
+    def f(x):
+        cart = _cart1d(True)
+        for r in range(N):
+            coords = cart.cart_coords(r)
+            assert cart.cart_rank(coords) == r, (r, coords)
+        assert cart.dims == (N,) and cart.ndims == 1
+        assert cart.neighbor_count == 2
+        (c0,) = cart.cart_coords()
+        return x * 0 + jnp.asarray(c0, x.dtype)
+
+    got = spmd_collective(f, src)
+    for r in range(N):
+        np.testing.assert_allclose(got[r], float(r), err_msg=f"rank {r}")
+
+
+def case_cart_create_validation():
+    """Size mismatches, arity mismatches and non-factoring grids are
+    trace-time ValueErrors (static topology discipline)."""
+    src = [rand((2,), jnp.float32, seed=i) for i in range(N)]
+
+    def bad(build):
+        def f(x):
+            build()
+            return x
+        try:
+            spmd_collective(f, src)
+        except Exception as e:
+            assert "ValueError" in type(e).__name__ or "dims" in str(e) \
+                or "periods" in str(e), e
+        else:
+            raise AssertionError(f"expected trace-time error from {build}")
+
+    bad(lambda: jmpi.world().cart_create((N + 1,)))          # wrong size
+    bad(lambda: jmpi.world().cart_create((N,), periods=()))  # arity
+    bad(lambda: jmpi.world().cart_create(()))                # empty dims
+    if N == 8:  # (4, 2) cannot split a single size-8 axis: 4 is no prefix
+        bad(lambda: jmpi.world().cart_create((4, 2)))
+
+
+def case_cart_shift_null_semantics():
+    """Periodic cart_shift wraps at the boundary; non-periodic reports
+    PROC_NULL — per rank, against the static neighbor_ranks oracle."""
+    src = [rand((2,), jnp.float32, seed=i) for i in range(N)]
+    for periodic in (True, False):
+        def f(x, periodic=periodic):
+            cart = _cart1d(periodic)
+            s, d = cart.cart_shift(0, 1)
+            return jnp.stack([s, d]).astype(x.dtype) + x[:2] * 0
+
+        got = spmd_collective(f, src)
+        for r in range(N):
+            if periodic:
+                want_src, want_dst = (r - 1) % N, (r + 1) % N
+            else:
+                want_src = (r - 1) if r > 0 else jmpi.PROC_NULL
+                want_dst = (r + 1) if r < N - 1 else jmpi.PROC_NULL
+            np.testing.assert_allclose(
+                got[r], [want_src, want_dst],
+                err_msg=f"rank {r} periodic={periodic}")
+
+    # the static pattern agrees: every in-range pair, boundary pair dropped
+    def g(x):
+        cart = _cart1d(False)
+        pairs = cart.cart_shift_perm(0, 1)
+        assert pairs == [(i, i + 1) for i in range(N - 1)], pairs
+        wrap = _cart1d(True).cart_shift_perm(0, 1)
+        assert wrap == [(i, (i + 1) % N) for i in range(N)], wrap
+        nbrs = cart.neighbor_ranks(0)
+        assert nbrs[0] == jmpi.PROC_NULL or N == 1, nbrs
+        return x
+
+    spmd_collective(g, src)
+
+
+# ---------------------------------------------------------------------- #
+# neighbor collectives vs the numpy oracle (both lowerings, both periods)
+# ---------------------------------------------------------------------- #
+
+def case_neighbor_allgather_matches_oracle():
+    src = [rand((3, 2), jnp.float32, seed=7 * i + 1) for i in range(N)]
+    np_src = [np.asarray(s) for s in src]
+    for periodic in (True, False):
+        want = ref.neighbor_allgather(np_src, (N,), (periodic,))
+        for algo in NEIGHBOR_ALGOS:
+            got = spmd_collective(
+                lambda x, a=algo, p=periodic: jmpi.wait(
+                    _cart1d(p).ineighbor_allgather(x, algorithm=a))[1], src)
+            for g, w in zip(got, want):
+                np.testing.assert_allclose(
+                    g, w, err_msg=f"allgather {algo} periodic={periodic}")
+
+
+def case_neighbor_alltoall_matches_oracle():
+    src = [rand((2, 3), jnp.float32, seed=11 * i + 3) for i in range(N)]
+    np_src = [np.asarray(s) for s in src]
+    for periodic in (True, False):
+        want = ref.neighbor_alltoall(np_src, (N,), (periodic,))
+        for algo in NEIGHBOR_ALGOS:
+            got = spmd_collective(
+                lambda x, a=algo, p=periodic: _cart1d(p).neighbor_alltoall(
+                    x, algorithm=a)[1], src)
+            for g, w in zip(got, want):
+                np.testing.assert_allclose(
+                    g, w, err_msg=f"alltoall {algo} periodic={periodic}")
+
+
+def case_neighbor_alltoall_2d_matches_oracle():
+    """2-D (2, N//2) grid: both lowerings vs the coordinate-math oracle."""
+    if N < 4:
+        return  # needs a genuine 2-D grid
+    dims = (2, N // 2)
+    src = [rand((4, 3), jnp.float32, seed=13 * i + 5) for i in range(N)]
+    np_src = [np.asarray(s) for s in src]
+    for periods in ((True, True), (False, True), (False, False)):
+        want = ref.neighbor_alltoall(np_src, dims, periods)
+        for algo in NEIGHBOR_ALGOS:
+            def f(x, a=algo, p=periods):
+                cart = jmpi.world().cart_create(dims, periods=p)
+                return cart.neighbor_alltoall(x, algorithm=a)[1]
+
+            got = spmd2d(f, src)
+            for g, w in zip(got, want):
+                np.testing.assert_allclose(
+                    g, w, err_msg=f"2d alltoall {algo} periods={periods}")
+
+
+def case_neighbor_alltoallv_ragged_slots():
+    """v-variant: per-slot shapes differ; receive shapes follow the mirror
+    slot; contents match the slot-wise oracle."""
+    lo = [rand((1, 4), jnp.float32, seed=17 * i + 1) for i in range(N)]
+    hi = [rand((2, 4), jnp.float32, seed=17 * i + 2) for i in range(N)]
+
+    def f(x):
+        cart = _cart1d(True)
+        st, out = cart.neighbor_alltoallv([x[:1], x[1:3]])
+        assert out[0].shape == (2, 4), out[0].shape   # mirror of slot 1
+        assert out[1].shape == (1, 4), out[1].shape   # mirror of slot 0
+        return jnp.concatenate([o.reshape(-1) for o in out])
+
+    src = [jnp.concatenate([a, b], axis=0) for a, b in zip(lo, hi)]
+    got = spmd_collective(f, src)
+    for r in range(N):
+        want = np.concatenate([
+            np.asarray(hi[(r - 1) % N]).ravel(),   # from -1: its hi slot
+            np.asarray(lo[(r + 1) % N]).ravel(),   # from +1: its lo slot
+        ])
+        np.testing.assert_allclose(got[r], want, err_msg=f"rank {r}")
+
+
+# ---------------------------------------------------------------------- #
+# jmpi 2.0 surface: i*-forms in mixed waitall, persistent plans
+# ---------------------------------------------------------------------- #
+
+def case_ineighbor_unified_requests():
+    """ineighbor_* Requests complete through the same waitall as p2p and
+    nonblocking-collective requests."""
+    src = [rand((2, 3), jnp.float32, seed=23 * i + 1) for i in range(N)]
+    np_src = [np.asarray(s) for s in src]
+
+    def f(x):
+        comm = jmpi.world()
+        cart = comm.cart_create((N,), periods=(True,))
+        r1 = cart.ineighbor_alltoall(x, tag=5)
+        r2 = comm.isendrecv(x, pairs=comm.ring_perm(1), tag=5)
+        r3 = comm.iallreduce(x, tag=5)
+        status, [na, shifted, summed] = jmpi.waitall([r1, r2, r3], tag=5)
+        assert status == jmpi.SUCCESS
+        return na + shifted * 0 + summed * 0
+
+    got = spmd_collective(f, src)
+    want = ref.neighbor_alltoall(np_src, (N,), (True,))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w)
+
+
+def case_neighbor_plans_cache_and_freeze():
+    """neighbor_*_init: same signature → same cached Plan; the algorithm is
+    frozen at init; a mismatched start is a trace-time error; the v-plan
+    round-trips ragged slots."""
+    jmpi.plan_cache_clear()
+    src = [rand((2, 3), jnp.float32, seed=31 * i + 7) for i in range(N)]
+    np_src = [np.asarray(s) for s in src]
+
+    def f(x):
+        cart = _cart1d(True)
+        p1 = cart.neighbor_alltoall_init(_sds(x), algorithm="ring")
+        p2 = cart.neighbor_alltoall_init(_sds(x), algorithm="ring")
+        assert p1 is p2, "identical *_init must return the cached Plan"
+        assert p1.algorithm == "ring"
+        try:
+            p1.start(x[:, :1])
+            raise AssertionError("plan.start must reject a mismatched shape")
+        except ValueError as e:
+            assert "frozen for" in str(e)
+        _, a = jmpi.wait(p1.start(x))
+        pg = cart.neighbor_allgather_init(_sds(x))
+        _, g = jmpi.wait(pg.start(x))
+        pv = cart.neighbor_alltoallv_init([_sds(x[:1]), _sds(x)])
+        _, vs = jmpi.wait(pv.start([x[:1], x]))
+        assert vs[0].shape == x.shape and vs[1].shape == x[:1].shape
+        return a + g.sum() * 0 + sum(v.sum() for v in vs) * 0
+
+    got = spmd_collective(f, src)
+    want = ref.neighbor_alltoall(np_src, (N,), (True,))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w)
+    stats = jmpi.plan_cache_stats()
+    assert stats["hits"] >= 1, stats
+    # re-trace: fully served from the plan cache (no new selections)
+    before = jmpi.plan_cache_stats()
+    spmd_collective(f, src)
+    after = jmpi.plan_cache_stats()
+    assert after["misses"] == before["misses"], (before, after)
+
+
+# ---------------------------------------------------------------------- #
+# cart_sub: groups, degenerate dims, all-degenerate error
+# ---------------------------------------------------------------------- #
+
+def case_cart_sub_groups_and_degenerate_dims():
+    """cart_sub groups rows/cols correctly (group-local allreduce) and a
+    degenerate dim backed by a size-1 mesh axis survives cart_sub; a sub
+    retaining only axis-less degenerate dims raises."""
+    if N >= 4:
+        dims = (2, N // 2)
+        src = [rand((2,), jnp.float32, seed=41 * i) for i in range(N)]
+
+        def f(x):
+            cart = jmpi.world().cart_create(dims, periods=(True, True))
+            rows = cart.cart_sub((True, False))   # groups sharing a column
+            cols = cart.cart_sub((False, True))   # groups sharing a row
+            assert rows.dims == (2,) and cols.dims == (N // 2,)
+            assert rows.periods == (True,)
+            _, col_sum = cols.allreduce(x)
+            return col_sum
+
+        got = spmd2d(f, src)
+        half = N // 2
+        for r in range(N):
+            row = r // half
+            want = np.sum([np.asarray(src[row * half + j])
+                           for j in range(half)], axis=0)
+            np.testing.assert_allclose(got[r], want, rtol=1e-6, atol=1e-6,
+                                       err_msg=f"rank {r}")
+
+    # degenerate trailing dim on a 1-axis mesh: (N, 1) has no axis for the
+    # second dim — cart_sub keeping only it must raise
+    src = [rand((2,), jnp.float32, seed=43 * i) for i in range(N)]
+
+    def g(x):
+        cart = jmpi.world().cart_create((N, 1), periods=(True, True))
+        if N > 1:  # dim 1 has no backing axis (the single axis feeds dim 0)
+            sub = cart.cart_sub((True, False))
+            assert sub.dims == (N,)
+            try:
+                cart.cart_sub((False, True))
+                raise AssertionError(
+                    "expected all-degenerate cart_sub to raise")
+            except ValueError as e:
+                assert "degenerate" in str(e)
+        # degenerate dim semantics still work without a backing axis
+        st, nb = cart.neighbor_allgather(x)
+        assert nb.shape == (4,) + x.shape
+        return x
+
+    spmd_collective(g, src)
+
+
+# ---------------------------------------------------------------------- #
+# hierarchical two-level allreduce: oracle + policy-table selection
+# ---------------------------------------------------------------------- #
+
+def case_hierarchical_allreduce_matches_oracle():
+    """reduce-scatter intra-group + allreduce inter-group == plain sum, and
+    the lowering is selectable via the policy table (falling back cleanly
+    on 1-axis comms)."""
+    if N < 4:
+        return  # needs >= 2 mesh axes with >= 2 devices each
+    src = [rand((N, 3), jnp.float32, seed=47 * i + 1) for i in range(N)]
+    np_src = [np.asarray(s, np.float64) for s in src]
+    want = ref.allreduce(np_src, "sum")
+
+    got = spmd2d(lambda x: jmpi.allreduce(x, algorithm="hierarchical")[1],
+                 src)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+
+    table = registry.PolicyTable(
+        rules=[registry.PolicyRule("allreduce", "hierarchical")])
+    registry.set_policy(table)
+    try:
+        def f(x):
+            plan = jmpi.world().allreduce_init(_sds(x))
+            assert plan.algorithm == "hierarchical", plan.algorithm
+            return jmpi.wait(plan.start(x))[1]
+
+        got = spmd2d(f, src)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+
+        # 1-axis comm: supports() rejects → silent xla_native fallback
+        def g1(x):
+            plan = jmpi.world().allreduce_init(_sds(x))
+            assert plan.algorithm == registry.DEFAULT_ALGORITHM, \
+                plan.algorithm
+            return jmpi.wait(plan.start(x))[1]
+
+        got = spmd_collective(g1, src)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+    finally:
+        registry.set_policy(None)
+
+
+# ---------------------------------------------------------------------- #
+# halo exchange rides the topology path end to end
+# ---------------------------------------------------------------------- #
+
+def case_halo_exchange_via_neighbor_plan():
+    """halo_exchange_2d on a CartComm equals the jnp.roll oracle under both
+    neighbor lowerings (plan path, corners included)."""
+    from repro.pde.stencil import halo_exchange_2d
+    n = 4 * N
+    x = jnp.arange(n * n, dtype=jnp.float32).reshape(n, n)
+    mesh = mesh1d()
+
+    def pad_oracle(a):
+        a = jnp.concatenate([a[-1:], a, a[:1]], axis=0)
+        return jnp.concatenate([a[:, -1:], a, a[:, :1]], axis=1)
+
+    for algo in NEIGHBOR_ALGOS:
+        @jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))
+        def f(blk, algo=algo):
+            cart = jmpi.world().cart_create((N, 1), periods=(True, True))
+            return halo_exchange_2d(blk, cart, halo=1, algorithm=algo)[1:-1]
+
+        got = np.asarray(f(x))  # interior rows of each padded block
+        want = np.asarray(pad_oracle(x))
+        for r in range(N):
+            rows = slice(r * (n // N), (r + 1) * (n // N))
+            np.testing.assert_allclose(
+                got[rows], want[1:-1][rows], err_msg=f"{algo} rank {r}")

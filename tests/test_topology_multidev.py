@@ -1,0 +1,38 @@
+"""Pytest wrappers for the Cartesian-topology + neighborhood-collective
+cases (cart_create/coords/rank/shift/sub, neighbor collectives vs the numpy
+oracle under both lowerings, plans/i*-forms, hierarchical allreduce).
+
+Acceptance (ISSUE 3): every case passes for n ∈ {1, 2, 8} ranks.  The case
+module is device-count agnostic; each count runs it once in its own child
+process (cached transcript).  The 8-rank run is marked slow (quick lane
+covers 1 and 2 ranks), mirroring tests/test_plans_multidev.py.
+"""
+
+import pytest
+
+from repro.testing import assert_case
+
+pytestmark = pytest.mark.multidev
+
+CASES = [
+    "case_cart_create_round_trip",
+    "case_cart_create_validation",
+    "case_cart_shift_null_semantics",
+    "case_cart_sub_groups_and_degenerate_dims",
+    "case_halo_exchange_via_neighbor_plan",
+    "case_hierarchical_allreduce_matches_oracle",
+    "case_ineighbor_unified_requests",
+    "case_neighbor_allgather_matches_oracle",
+    "case_neighbor_alltoall_2d_matches_oracle",
+    "case_neighbor_alltoall_matches_oracle",
+    "case_neighbor_alltoallv_ragged_slots",
+    "case_neighbor_plans_cache_and_freeze",
+]
+
+N_RANKS = [1, 2, pytest.param(8, marks=pytest.mark.slow)]
+
+
+@pytest.mark.parametrize("n", N_RANKS)
+@pytest.mark.parametrize("case", CASES)
+def test_topology_case(case, n):
+    assert_case("tests.cases_topology", case, n_devices=n)
