@@ -1,100 +1,41 @@
-"""jmpi collective microbenchmarks (8 emulated ranks).
+"""Legacy entry point for the ``collectives`` suite (8 emulated ranks).
 
-Per op × payload size: µs/call of the JIT-resident collective (whole timed
-loop compiled — chained calls per dispatch to amortize dispatch cost)
-plus the host round-trip equivalent for allreduce (the Listing-2 cost).
-Derived column reports effective GB/s through the emulated transport.
+The timing loops moved to ``repro.bench.suites.collectives`` (blocking +
+nonblocking + persistent + neighborhood cases, plan-cache and policy
+invariants); this wrapper keeps the historical flags working:
 
-``--sweep-algorithms``: sweep every registered collective algorithm over the
-payload grid, print the per-cell winners (crossover points) and the derived
-size-aware policy table (``repro.launch.collective_tuner``); ``--emit-policy
-PATH`` additionally writes the JSON table that ``jmpi.load_policy`` consumes.
+  (no flag)            run the suite in-process, print rows
+  --persistent         persistent-plan cases + plan-cache reuse invariant
+  --sweep-algorithms   full tuner sweep + derived policy table
+                       (``repro.launch.collective_tuner`` — a tuning tool,
+                       not a suite; unchanged)
+  --emit-policy PATH   with --sweep-algorithms: write the JSON policy table
 
-``--persistent``: measure persistent-plan reuse (jmpi 2.0) vs ad-hoc
-dispatch — trace time of a K-call chain with per-call registry/policy
-dispatch vs one frozen ``allreduce_init`` plan restarted K times, runtime of
-both (same lowering → should match), and the plan-cache hit/miss counters
-proving the second trace re-used the cached Plan instead of re-selecting.
+plus the shared suite flags (``--quick --repeats --warmup --sizes --cases
+--json``).  Prefer ``python -m repro.bench --suite collectives``.
 """
 
 from __future__ import annotations
 
-import argparse
 import os
 import sys
 
-# Process-global and read at backend init: emulate 8 devices when the caller
-# (benchmarks/run.py child_env, CI) has not already pinned a device count.
-if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                               + os.environ.get("XLA_FLAGS", "")).strip()
-
-# Self-contained invocation (`python benchmarks/bench_collectives.py`):
-# make src/ importable without requiring the caller to export PYTHONPATH.
 _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                     "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
-import timeit            # noqa: E402
+from repro.bench.suites import SUITES  # noqa: E402  (import-light)
 
-import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-from jax.sharding import PartitionSpec as P  # noqa: E402
-
-import repro.core as jmpi                    # noqa: E402
-from repro.core import compat                # noqa: E402
-
-INNER = 50
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        f"{SUITES['collectives'].n_devices} "
+        + os.environ.get("XLA_FLAGS", "")).strip()
 
 
-def timed_loop(mesh, op, numel):
-    @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
-    def f(x):
-        def body(i, acc):
-            if op == "allreduce":
-                _, y = jmpi.allreduce(acc)
-            elif op == "ring_allreduce":
-                _, y = jmpi.ring_allreduce(acc)
-            elif op == "allgather":
-                _, g = jmpi.allgather(acc)
-                y = g.reshape(jmpi.size(), -1).sum(0)
-            elif op == "alltoall":
-                _, y = jmpi.alltoall(acc)
-            elif op == "bcast":
-                _, y = jmpi.bcast(acc, root=0)
-            elif op == "compressed8":
-                st = jmpi.init_state(acc)
-                _, y, _ = jmpi.compressed_allreduce(acc, st, bits=8)
-            else:
-                raise ValueError(op)
-            return y / jnp.maximum(jnp.abs(y).max(), 1.0)
-
-        return jax.lax.fori_loop(0, INNER, body, x)
-
-    x = jnp.ones((numel,), jnp.float32)
-    f(x).block_until_ready()
-    t = min(timeit.repeat(lambda: f(x).block_until_ready(), number=1,
-                          repeat=5))
-    return t / INNER
-
-
-def micro():
-    mesh = compat.make_mesh((len(jax.devices()),), ("ranks",))
-    n = mesh.devices.size
-    for numel in (1024, 65536, 1048576):
-        nbytes = numel * 4
-        for op in ("allreduce", "ring_allreduce", "allgather", "alltoall",
-                   "bcast", "compressed8"):
-            if op == "alltoall" and numel % n:
-                continue
-            t = timed_loop(mesh, op, numel)
-            wire = 2 * (n - 1) / n * nbytes if "allreduce" in op else nbytes
-            print(f"coll_{op}_{numel},{t*1e6:.2f},"
-                  f"bytes={nbytes} eff_GBps={wire/t/1e9:.2f}")
-
-
-def sweep_algorithms(emit_policy: str | None):
+def _sweep_algorithms(emit_policy: str | None) -> int:
+    import jax
     from repro.launch import collective_tuner
 
     mesh = collective_tuner.tune_mesh(len(jax.devices()))
@@ -112,94 +53,25 @@ def sweep_algorithms(emit_policy: str | None):
     if emit_policy:
         table.save(emit_policy)
         print(f"\npolicy table written to {emit_policy}")
+    return 0
 
 
-def persistent(numel: int = 65536, k: int = 24):
-    """Plan-reuse measurement: ad-hoc dispatch vs persistent plans.
+def main(argv: list[str] | None = None) -> int:
+    import argparse
 
-    Both programs chain ``k`` allreduces (unrolled, so the ad-hoc variant
-    pays ``k`` registry/policy dispatches per trace while the plan variant
-    dispatches once and restarts).  Identical math → identical HLO shape;
-    the delta is trace-time dispatch cost, and the plan-cache counters show
-    the second trace serving its *_init straight from the cache.
-    """
-    mesh = compat.make_mesh((len(jax.devices()),), ("ranks",))
-    n = mesh.devices.size
-    x = jnp.ones((numel,), jnp.float32)
-
-    def adhoc_fn():
-        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
-        def f(x):
-            acc = x
-            for _ in range(k):
-                _, acc = jmpi.allreduce(acc)
-                acc = acc / n
-            return acc
-        return f
-
-    def plan_fn():
-        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
-        def f(x):
-            comm = jmpi.world()
-            plan = comm.allreduce_init(
-                jax.ShapeDtypeStruct(x.shape, x.dtype))
-            acc = x
-            for _ in range(k):
-                acc = jmpi.wait(plan.start(acc))[1] / n
-            return acc
-        return f
-
-    def trace_ms(build):
-        t0 = timeit.default_timer()
-        build().lower(x)
-        return (timeit.default_timer() - t0) * 1e3
-
-    jmpi.plan_cache_clear()
-    adhoc_t1, adhoc_t2 = trace_ms(adhoc_fn), trace_ms(adhoc_fn)
-    s0 = jmpi.plan_cache_stats()
-    plan_t1 = trace_ms(plan_fn)
-    s1 = jmpi.plan_cache_stats()
-    plan_t2 = trace_ms(plan_fn)          # second trace: *_init is a cache hit
-    s2 = jmpi.plan_cache_stats()
-
-    print(f"persistent_adhoc_trace_ms,{adhoc_t1:.1f},second={adhoc_t2:.1f} "
-          f"k={k} numel={numel}")
-    print(f"persistent_plan_trace_ms,{plan_t1:.1f},second={plan_t2:.1f} "
-          f"k={k} numel={numel}")
-    print(f"persistent_plan_cache,{s2['hits']},misses={s2['misses']} "
-          f"first_trace=+{s1['misses'] - s0['misses']}miss "
-          f"second_trace=+{s2['hits'] - s1['hits']}hit")
-    assert s2["misses"] == s1["misses"] and s2["hits"] > s1["hits"], \
-        "second trace must re-use the cached Plan (no new misses)"
-    print("# plan reuse OK: second trace served allreduce_init from the "
-          "plan cache (0 new selections); ad-hoc re-dispatched "
-          f"{k}x per trace")
-
-    fa, fp = adhoc_fn(), plan_fn()
-    ya = fa(x).block_until_ready()
-    yp = fp(x).block_until_ready()
-    assert jnp.allclose(ya, yp), "plan and ad-hoc paths must agree"
-    ta = min(timeit.repeat(lambda: fa(x).block_until_ready(), number=1,
-                           repeat=5)) / k
-    tp = min(timeit.repeat(lambda: fp(x).block_until_ready(), number=1,
-                           repeat=5)) / k
-    print(f"persistent_adhoc_run_us,{ta*1e6:.2f},per-call numel={numel}")
-    print(f"persistent_plan_run_us,{tp*1e6:.2f},per-call numel={numel}")
-
-
-def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(add_help=False)
     ap.add_argument("--sweep-algorithms", action="store_true")
-    ap.add_argument("--emit-policy", default=None)
+    ap.add_argument("--emit-policy", default=None, metavar="PATH")
     ap.add_argument("--persistent", action="store_true")
-    args = ap.parse_args()
+    args, rest = ap.parse_known_args(
+        sys.argv[1:] if argv is None else argv)
     if args.sweep_algorithms:
-        sweep_algorithms(args.emit_policy)
-    elif args.persistent:
-        persistent()
-    else:
-        micro()
+        return _sweep_algorithms(args.emit_policy)
+    if args.persistent:
+        rest = rest + ["--cases", "persistent,adhoc"]
+    from repro.bench.cli import legacy_main
+    return legacy_main("collectives", rest)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,156 +1,43 @@
-"""Paper Fig. 2: Cahn–Hilliard strong scaling (runtime vs rank count).
+"""Legacy entry point for the ``halo`` suite (paper Fig. 2, 8 ranks).
 
-512² grid (the paper's Listing 7 size), fixed step count, N ∈ {1,2,4,8}
-emulated ranks (decomposition [N,1]).  Host-device emulation runs shards on
-real CPU threads, so the scaling trend is measurable (modulo the single-core
-container this runs in — the CSV reports raw seconds; Fig. 2's t ∝ 1/N needs
-multi-core hosts and is asserted as a trend only when cores allow).
+The timing loops moved to ``repro.bench.suites.halo`` — Cahn-Hilliard
+strong scaling over sub-meshes n ∈ {1,2,4,8} plus the halo-exchange
+lowering sweep (neighborhood collectives vs the persistent-``sendrecv``
+p2p baseline).  Historical flags:
 
-This module runs under ONE device count; benchmarks.run spawns it once per N.
+  (no flag)    full suite (scaling + sweep)
+  --neighbor   only the halo-exchange lowering sweep cases
 
-``--neighbor``: halo-exchange microbenchmark sweeping the MPI-3
-neighborhood-collective lowerings (``xla_native`` shifts vs the p2p-fused
-``ring``) against a hand-built p2p baseline (persistent ``sendrecv_init``
-plans along ``cart_shift_perm`` patterns — what pde/stencil.py did before
-the topology subsystem).  Prints µs/step per variant and a no-regression
-check of the neighbor path vs the p2p baseline.
+plus the shared suite flags (``--quick --repeats --warmup --cases
+--json``).  Prefer ``python -m repro.bench --suite halo``.
 """
 
 from __future__ import annotations
 
-import argparse
 import os
 import sys
-import timeit
-
-# --neighbor runs standalone too: emulate 8 devices unless already pinned
-# (process-global, must be set before jax initializes its backend).
-if "--neighbor" in sys.argv and \
-        "xla_force_host_platform_device_count" not in os.environ.get(
-            "XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                               + os.environ.get("XLA_FLAGS", "")).strip()
 
 _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                     "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
-import jax                                    # noqa: E402
-import jax.numpy as jnp                       # noqa: E402
-import numpy as np                            # noqa: E402
-from jax.sharding import PartitionSpec as P   # noqa: E402
+from repro.bench.suites import SUITES  # noqa: E402  (import-light)
 
-import repro.core as jmpi                     # noqa: E402
-from repro.core import compat                 # noqa: E402
-from repro.pde import cahn_hilliard as ch     # noqa: E402
-from repro.pde.stencil import halo_exchange_2d, laplacian  # noqa: E402
-
-GRID = 256
-STEPS = 100
-NEIGHBOR_STEPS = 50
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={SUITES['halo'].n_devices} "
+        + os.environ.get("XLA_FLAGS", "")).strip()
 
 
-def main():
-    n_dev = len(jax.devices())
-    rows = min(2, n_dev)
-    cols = n_dev // rows
-    mesh = compat.make_mesh((rows, cols), ("px", "py"))
-    rng = np.random.default_rng(0)
-    c0 = jnp.asarray(0.5 + 0.01 * rng.standard_normal((GRID, GRID)),
-                     jnp.float32)
-    run = ch.make_solver(mesh, (rows, cols), inner_steps=STEPS)
-    out = run(c0)  # compile + warm
-    assert bool(jnp.isfinite(out).all())
-    t = min(timeit.repeat(lambda: run(c0).block_until_ready(),
-                          number=1, repeat=3))
-    per_step_us = t / STEPS * 1e6
-    print(f"cahn_hilliard_n{n_dev},{per_step_us:.1f},"
-          f"grid={GRID} steps={STEPS} decomp={rows}x{cols} total_s={t:.3f}")
-
-
-# ---------------------------------------------------------------------------
-# --neighbor: neighborhood-collective halo exchange vs the p2p baseline
-# ---------------------------------------------------------------------------
-
-def p2p_exchange_2d(field, cart, h: int = 1):
-    """The pre-topology halo exchange: two persistent ``sendrecv_init``
-    plans per decomposed axis, patterns from ``cart_shift_perm`` — the p2p
-    baseline the ``--neighbor`` sweep compares against (kept in the bench,
-    not in pde/: the solver rides the neighbor_alltoall plan)."""
-    def ax(d, lo, hi):
-        if cart.dims[d] == 1:
-            return hi, lo
-        dn = cart.sendrecv_init(jax.ShapeDtypeStruct(hi.shape, hi.dtype),
-                                pairs=cart.cart_shift_perm(d, +1))
-        up = cart.sendrecv_init(jax.ShapeDtypeStruct(lo.shape, lo.dtype),
-                                pairs=cart.cart_shift_perm(d, -1))
-        return jmpi.wait(dn.start(hi))[1], jmpi.wait(up.start(lo))[1]
-
-    lead, trail = ax(0, field[:h, :], field[-h:, :])
-    field = jnp.concatenate([lead, field, trail], axis=0)
-    lead, trail = ax(1, field[:, :h], field[:, -h:])
-    return jnp.concatenate([lead, field, trail], axis=1)
-
-
-def _make_loop(mesh, rows, cols, exchange, steps):
-    @jmpi.spmd(mesh, in_specs=P("px", "py"), out_specs=P("px", "py"))
-    def run(c):
-        cart = jmpi.world().cart_create((rows, cols), periods=(True, True))
-
-        def body(i, f):
-            fh = exchange(f, cart)
-            return f + 1e-3 * laplacian(fh)
-
-        return jax.lax.fori_loop(0, steps, body, c)
-
-    return run
-
-
-def neighbor_sweep(grid: int = 128, steps: int = NEIGHBOR_STEPS):
-    n_dev = len(jax.devices())
-    rows = min(2, n_dev)
-    cols = n_dev // rows
-    mesh = compat.make_mesh((rows, cols), ("px", "py"))
-    rng = np.random.default_rng(0)
-    c0 = jnp.asarray(0.5 + 0.01 * rng.standard_normal((grid, grid)),
-                     jnp.float32)
-
-    variants = [
-        ("neighbor/xla_native",
-         lambda f, cart: halo_exchange_2d(f, cart, algorithm="xla_native")),
-        ("neighbor/ring",
-         lambda f, cart: halo_exchange_2d(f, cart, algorithm="ring")),
-        ("p2p_baseline", p2p_exchange_2d),
-    ]
-    results = {}
-    print(f"halo exchange sweep: grid={grid} steps={steps} "
-          f"decomp={rows}x{cols} ranks={n_dev}")
-    print(f"{'variant':<24}{'us_per_step':>12}")
-    for name, exchange in variants:
-        run = _make_loop(mesh, rows, cols, exchange, steps)
-        out = run(c0)
-        assert bool(jnp.isfinite(out).all()), name
-        t = min(timeit.repeat(lambda: run(c0).block_until_ready(),
-                              number=1, repeat=5))
-        results[name] = t / steps * 1e6
-        print(f"{name:<24}{results[name]:>12.1f}")
-
-    best_neighbor = min(results["neighbor/xla_native"],
-                        results["neighbor/ring"])
-    ratio = best_neighbor / results["p2p_baseline"]
-    verdict = ("no regression" if ratio <= 1.25
-               else "WARN: neighbor slower than p2p baseline")
-    print(f"neighbor_vs_p2p ratio={ratio:.2f} ({verdict})")
+def main(argv: list[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--neighbor" in argv:
+        argv.remove("--neighbor")
+        argv += ["--cases", "halo_"]
+    from repro.bench.cli import legacy_main
+    return legacy_main("halo", argv)
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--neighbor", action="store_true",
-                    help="sweep neighborhood-collective lowerings vs the "
-                         "p2p halo baseline")
-    args = ap.parse_args()
-    if args.neighbor:
-        neighbor_sweep()
-    else:
-        main()
+    sys.exit(main())

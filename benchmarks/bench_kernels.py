@@ -1,73 +1,30 @@
-"""Kernel-structure benchmarks (single device).
+"""Legacy entry point for the ``kernels`` suite (single device).
 
-Interpret-mode Pallas timings are meaningless (Python loop per grid step),
-so this measures the XLA-native *twins* that share the kernels' algorithmic
-structure against their naive counterparts — the blockwise-vs-naive
-attention memory/latency trade and the chunked-vs-sequential SSD scan —
-plus the roofline-relevant derived quantities (achieved bytes, VMEM tile
-sizes) that the §Perf analysis cites.
+The timing loops moved to ``repro.bench.suites.kernels`` (blockwise vs
+naive attention, chunked vs sequential SSD scan).  Accepts the shared
+suite flags (``--quick --repeats --warmup --cases --json``).  Prefer
+``python -m repro.bench --suite kernels``.
 """
 
 from __future__ import annotations
 
-import timeit
+import os
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
-from repro.models.attention import _sdpa, blockwise_sdpa, causal_mask
-from repro.models.ssm import ssd_chunked
-from repro.kernels.mamba2_ssd.ref import ssd_scan_ref
+from repro.bench.suites import SUITES  # noqa: E402  (import-light)
 
-REPEAT = 3
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={SUITES['kernels'].n_devices} "
+        + os.environ.get("XLA_FLAGS", "")).strip()
 
-
-def t_min(f):
-    f()  # warm/compile
-    return min(timeit.repeat(f, number=1, repeat=REPEAT))
-
-
-def main():
-    rng = np.random.default_rng(0)
-
-    # --- attention: naive O(S²) memory vs blockwise ---------------------
-    b, s, h, kh, d = 1, 2048, 4, 2, 64
-    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.bfloat16)
-    k = jnp.asarray(rng.standard_normal((b, s, kh, d)), jnp.bfloat16)
-    v = jnp.asarray(rng.standard_normal((b, s, kh, d)), jnp.bfloat16)
-
-    naive = jax.jit(lambda q, k, v: _sdpa(
-        q, k, v, causal_mask(s)[None, None, None], kh))
-    block = jax.jit(lambda q, k, v: blockwise_sdpa(q, k, v, kh, q_block=512,
-                                                   kv_block=512))
-    tn = t_min(lambda: naive(q, k, v).block_until_ready())
-    tb = t_min(lambda: block(q, k, v).block_until_ready())
-    err = float(jnp.abs(naive(q, k, v).astype(jnp.float32)
-                        - block(q, k, v).astype(jnp.float32)).max())
-    print(f"attn_naive_s{s},{tn*1e6:.0f},scores_mem="
-          f"{b*h*s*s*4/2**20:.0f}MiB")
-    print(f"attn_blockwise_s{s},{tb*1e6:.0f},"
-          f"tile_mem={b*h*512*512*4/2**20:.0f}MiB err={err:.1e}")
-
-    # --- SSD: chunked (matmul) vs sequential scan ------------------------
-    b, H, s, P, N = 1, 8, 2048, 32, 64
-    x = jnp.asarray(rng.standard_normal((b, s, H, P)) * 0.5, jnp.float32)
-    dt = jnp.abs(jnp.asarray(rng.standard_normal((b, s, H)) * 0.3,
-                             jnp.float32)) + 0.01
-    B = jnp.asarray(rng.standard_normal((b, s, N)) * 0.5, jnp.float32)
-    C = jnp.asarray(rng.standard_normal((b, s, N)) * 0.5, jnp.float32)
-    A = -jnp.abs(jnp.asarray(rng.uniform(0.5, 2.0, H), jnp.float32))
-    D = jnp.zeros((H,), jnp.float32)
-
-    chunked = jax.jit(lambda: ssd_chunked(x, dt, A, B, C, chunk=64)[0])
-    seq = jax.jit(lambda: ssd_scan_ref(jnp.moveaxis(x, 2, 1),
-                                       jnp.moveaxis(dt, 2, 1), B, C, A, D)[0])
-    tc = t_min(lambda: chunked().block_until_ready())
-    ts = t_min(lambda: seq().block_until_ready())
-    print(f"ssd_chunked_s{s},{tc*1e6:.0f},chunk=64")
-    print(f"ssd_sequential_s{s},{ts*1e6:.0f},speedup_chunked={ts/tc:.2f}x")
+from repro.bench.cli import legacy_main  # noqa: E402
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(legacy_main("kernels"))

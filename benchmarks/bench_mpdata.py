@@ -1,54 +1,30 @@
-"""Paper Fig. 3: MPDATA decomposition-layout study.
+"""Legacy entry point for the ``mpdata`` suite (paper Fig. 3, 8 ranks).
 
-Same 256² advection problem, 8 ranks, decomposed along dim 0 (8×1),
-dim 1 (1×8), or both (2×4) — PyMPDATA-MPI exposes exactly this choice.
-Reports per-step time per layout (+ a correctness check: all layouts agree
-with the single-device oracle bitwise-tolerance).
+The timing loops moved to ``repro.bench.suites.mpdata`` (decomposition
+layouts 8x1 / 1x8 / 2x4 + single-device oracle invariant).  Accepts the
+shared suite flags (``--quick --repeats --warmup --cases --json``).
+Prefer ``python -m repro.bench --suite mpdata``.
 """
 
 from __future__ import annotations
 
-import timeit
+import os
+import sys
 
-import jax
-from repro.core import compat
-import jax.numpy as jnp
-import numpy as np
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
-from repro.pde import mpdata
+from repro.bench.suites import SUITES  # noqa: E402  (import-light)
 
-GRID = 256
-STEPS = 50
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={SUITES['mpdata'].n_devices} "
+        + os.environ.get("XLA_FLAGS", "")).strip()
 
-
-def main():
-    n_dev = len(jax.devices())
-    rng = np.random.default_rng(0)
-    x = np.arange(GRID)
-    psi0 = jnp.asarray(
-        np.exp(-((x - 96) ** 2)[:, None] / 512 - ((x - 128) ** 2)[None, :] / 512)
-        + 0.01, jnp.float32)
-
-    want = psi0
-    for _ in range(5):
-        want = mpdata.reference_step(want)
-
-    layouts = [(n_dev, 1), (1, n_dev)]
-    if n_dev >= 4:
-        layouts.append((2, n_dev // 2))
-    for rows, cols in layouts:
-        mesh = compat.make_mesh((rows, cols), ("px", "py"))
-        run = mpdata.make_solver(mesh, inner_steps=STEPS)
-        check = mpdata.make_solver(mesh, inner_steps=5)
-        got = check(psi0)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   atol=1e-5, rtol=1e-4)
-        run(psi0).block_until_ready()  # warm
-        t = min(timeit.repeat(lambda: run(psi0).block_until_ready(),
-                              number=1, repeat=3))
-        print(f"mpdata_{rows}x{cols},{t / STEPS * 1e6:.1f},"
-              f"grid={GRID} steps={STEPS} total_s={t:.3f}")
+from repro.bench.cli import legacy_main  # noqa: E402
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(legacy_main("mpdata"))

@@ -1,200 +1,32 @@
-"""Paper Listings 1–4 / Fig. 1: the π benchmark.
+"""Legacy entry point for the ``pi`` suite (paper Listings 1-4 / Fig. 1,
+4 ranks).
 
-Row 1  (Listing 1): JIT speedup of the compute kernel — jax.jit vs the pure
-        CPython loop (paper reports ~100×).
-Rows 2+ (Fig. 1): speedup of JIT-resident communication (jmpi: the whole
-        N_TIMES loop, compute *and* allreduce, in ONE compiled program) over
-        the host round-trip baseline (hostbridge: one dispatch + host
-        reduction per iteration — the mpi4py failure mode of Listing 2),
-        swept over communication frequency N_TIMES/n_intervals.
-
-Run via benchmarks.run (spawns this module under 4 emulated devices, the
-paper's worker count).  Output: name,us_per_call,derived CSV rows.
+The timing loops moved to ``repro.bench.suites.pi`` (JIT speedup,
+JIT-resident vs round-trip vs hostbridge over communication frequency,
+π-accuracy invariant).  Accepts the shared suite flags (``--quick
+--repeats --warmup --cases --json``).  Prefer
+``python -m repro.bench --suite pi``.
 """
 
 from __future__ import annotations
 
-import math
-import time
-import timeit
+import os
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
-import repro.core as jmpi
-from repro.core import compat
+from repro.bench.suites import SUITES  # noqa: E402  (import-light)
 
-N_TIMES = 200          # paper uses 10000; scaled to CPU-emulated devices
-RTOL = 1e-3
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={SUITES['pi'].n_devices} "
+        + os.environ.get("XLA_FLAGS", "")).strip()
 
-
-# --------------------------------------------------------------------- #
-# Listing 1: get_pi_part, JIT on vs off
-# --------------------------------------------------------------------- #
-
-def get_pi_part_python(n_intervals=100000, rank=0, size=1):
-    h = 1.0 / n_intervals
-    partial_sum = 0.0
-    for i in range(rank + 1, n_intervals, size):
-        x = h * (i - 0.5)
-        partial_sum += 4.0 / (1.0 + x * x)
-    return h * partial_sum
-
-
-@jax.jit
-def get_pi_part(n_intervals_arr, rank=0, size=1):
-    n = n_intervals_arr          # static-shaped grid, masked to n intervals
-    idx = jnp.arange(rank + 1, MAX_INTERVALS, size)
-    h = 1.0 / n
-    x = h * (idx - 0.5)
-    vals = jnp.where(idx < n, 4.0 / (1.0 + x * x), 0.0)
-    return h * jnp.sum(vals)
-
-
-MAX_INTERVALS = 100000
-
-
-def bench_jit_speedup():
-    n = MAX_INTERVALS
-    t_py = min(timeit.repeat(lambda: get_pi_part_python(n), number=1,
-                             repeat=3))
-    narr = jnp.float64(n) if jax.config.jax_enable_x64 else jnp.float32(n)
-    get_pi_part(narr).block_until_ready()
-    t_jit = min(timeit.repeat(
-        lambda: get_pi_part(narr).block_until_ready(), number=1, repeat=5))
-    assert abs(float(get_pi_part(narr)) - math.pi) < 1e-2
-    return [("pi_jit_speedup_x", t_py / t_jit,
-             f"tpy={t_py*1e6:.0f}us tjit={t_jit*1e6:.0f}us")]
-
-
-# --------------------------------------------------------------------- #
-# Listing 3 analogue: whole loop inside one compiled block (jmpi)
-# --------------------------------------------------------------------- #
-
-def make_pi_jmpi(mesh, n_intervals):
-    @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
-    def pi_loop(dummy):
-        rank = jmpi.rank()
-        size = jmpi.size()
-        h = 1.0 / n_intervals
-        idx = jnp.arange(0, n_intervals // size + 1)
-
-        def one(i, acc):
-            gidx = rank + 1 + idx * size
-            x = h * (gidx - 0.5)
-            part = h * jnp.sum(jnp.where(gidx < n_intervals + 1,
-                                         4.0 / (1.0 + x * x), 0.0))
-            status, pi = jmpi.allreduce(part + 0.0 * acc)
-            return pi
-
-        pi = jax.lax.fori_loop(0, N_TIMES, one, 0.0 * dummy)
-        return pi
-
-    return pi_loop
-
-
-# --------------------------------------------------------------------- #
-# Listing 2 analogue: per-iteration dispatch + host reduction (hostbridge)
-# --------------------------------------------------------------------- #
-
-def make_pi_hostbridge(mesh, n_intervals):
-    import numpy as np
-    n_dev = mesh.devices.size
-
-    @jax.jit
-    def part_all_ranks(dummy):
-        # one dispatch computes every rank's partial (sharded over ranks)
-        ranks = jnp.arange(n_dev)
-        h = 1.0 / n_intervals
-        idx = jnp.arange(0, n_intervals // n_dev + 1)
-        gidx = ranks[:, None] + 1 + idx[None, :] * n_dev
-        x = h * (gidx - 0.5)
-        parts = h * jnp.sum(jnp.where(gidx < n_intervals + 1,
-                                      4.0 / (1.0 + x * x), 0.0), axis=1)
-        return parts + 0.0 * dummy
-
-    bridge = jmpi.HostBridge(mesh)
-
-    def pi_loop():
-        pi = 0.0
-        for _ in range(N_TIMES):
-            parts = part_all_ranks(jnp.float32(pi * 0.0))
-            parts.block_until_ready()            # leave the compiled block
-            pi = float(np.sum(np.asarray(parts)))  # host-side "MPI" reduce
-        return pi
-
-    return pi_loop
-
-
-def make_pi_roundtrip(mesh, n_intervals):
-    """Same psum-based allreduce as the jmpi path, but ONE JIT DISPATCH PER
-    ITERATION with a host synchronization between dispatches — the paper's
-    'leave the compiled block every call' pattern with the communication
-    mechanism held fixed.  t_roundtrip/t_jmpi therefore isolates exactly the
-    round-trip overhead the paper measures (Fig. 1), independent of how fast
-    the emulated transport is."""
-    from jax.sharding import PartitionSpec as P
-
-    @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
-    def one(acc):
-        rank = jmpi.rank()
-        size = jmpi.size()
-        h = 1.0 / n_intervals
-        idx = jnp.arange(0, n_intervals // size + 1)
-        gidx = rank + 1 + idx * size
-        x = h * (gidx - 0.5)
-        part = h * jnp.sum(jnp.where(gidx < n_intervals + 1,
-                                     4.0 / (1.0 + x * x), 0.0))
-        status, pi = jmpi.allreduce(part + 0.0 * acc)
-        return pi
-
-    def loop():
-        pi = jnp.float32(0.0)
-        for _ in range(N_TIMES):
-            pi = one(pi * 0.0)
-            pi.block_until_ready()        # the host round-trip
-        return float(pi)
-
-    return loop
-
-
-def bench_speedup_sweep():
-    mesh = compat.make_mesh((len(jax.devices()),), ("ranks",))
-    rows = []
-    for x in (1, 4, 16):
-        n_intervals = max(64, N_TIMES // x)
-        f_jmpi = make_pi_jmpi(mesh, n_intervals)
-        pi = float(f_jmpi(jnp.float32(0.0)))
-        assert abs(pi - math.pi) / math.pi < RTOL, pi
-        t_jmpi = min(timeit.repeat(
-            lambda: f_jmpi(jnp.float32(0.0)).block_until_ready(),
-            number=1, repeat=5))
-
-        f_rt = make_pi_roundtrip(mesh, n_intervals)
-        pi_rt = f_rt()
-        assert abs(pi_rt - math.pi) / math.pi < RTOL, pi_rt
-        t_rt = min(timeit.repeat(f_rt, number=1, repeat=3))
-        rows.append((f"pi_jitresident_speedup_x{x}", t_rt / t_jmpi,
-                     f"n_intervals={n_intervals} tjmpi={t_jmpi*1e3:.1f}ms "
-                     f"troundtrip={t_rt*1e3:.1f}ms (same collectives)"))
-
-        f_host = make_pi_hostbridge(mesh, n_intervals)
-        pi_h = f_host()
-        assert abs(pi_h - math.pi) / math.pi < RTOL, pi_h
-        t_host = min(timeit.repeat(f_host, number=1, repeat=3))
-        rows.append((f"pi_vs_hostnumpy_x{x}", t_host / t_jmpi,
-                     f"thostnumpy={t_host*1e3:.1f}ms (emulated-transport "
-                     f"caveat: see EXPERIMENTS.md)"))
-    return rows
-
-
-def main():
-    rows = bench_jit_speedup() + bench_speedup_sweep()
-    for name, val, derived in rows:
-        print(f"{name},{val:.4g},{derived}")
+from repro.bench.cli import legacy_main  # noqa: E402
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(legacy_main("pi"))

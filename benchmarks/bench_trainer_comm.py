@@ -1,113 +1,30 @@
-"""Trainer comm-backend comparison (the paper's claim at trainer scale).
+"""Legacy entry point for the ``trainer`` suite (8 emulated DP ranks).
 
-Same tiny LM, same data, 8 emulated DP ranks:
-
-  jmpi       — whole train step (fwd/bwd + explicit in-program gradient
-               allreduce + optimizer) in ONE compiled block,
-  jmpi+int8  — ditto with compressed gradient allreduce,
-  hostbridge — per-step host round-trip gradient mean between two compiled
-               fragments (mpi4py analogue, paper Listing 2).
-
-Reports ms/step; derived column = speedup vs hostbridge.
+The timing loops moved to ``repro.bench.suites.trainer`` (jmpi /
+int8-compressed / round-trip / hostbridge backends, ms per step).
+Accepts the shared suite flags (``--quick --repeats --warmup --cases
+--json``).  Prefer ``python -m repro.bench --suite trainer``.
 """
 
 from __future__ import annotations
 
-import timeit
+import os
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
-import repro.core as jmpi
-from repro.core import compat
-from repro.configs import get_tiny
-from repro.configs.base import RunConfig
-from repro.launch.specs import synth_batch
-from repro.models import lm as lm_lib
-from repro.train import optim
-from repro.train.trainer import build_jmpi_train_step
+from repro.bench.suites import SUITES  # noqa: E402  (import-light)
 
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={SUITES['trainer'].n_devices} "
+        + os.environ.get("XLA_FLAGS", "")).strip()
 
-def main():
-    cfg = get_tiny("yi-6b")
-    mesh = compat.make_mesh((len(jax.devices()),), ("data",))
-    n = mesh.devices.size
-    batch = synth_batch(cfg, batch=8 * n, seq=64, kind="train")
-
-    results = {}
-    for mode, bits in (("jmpi", 0), ("jmpi_int8", 8)):
-        rc = RunConfig(learning_rate=1e-3, grad_compression_bits=bits)
-        params = lm_lib.init_params(cfg, jax.random.PRNGKey(0))
-        opt = optim.init(params, rc)
-        comp = jax.tree.map(lambda p: jmpi.init_state(p), params)
-        step = build_jmpi_train_step(cfg, rc, mesh, None)
-        params, opt, comp, loss = step(params, opt, comp, batch)  # compile
-
-        def one(params=params, opt=opt, comp=comp):
-            p, o, c, l = step(params, opt, comp, batch)
-            l.block_until_ready()
-
-        results[mode] = min(timeit.repeat(one, number=1, repeat=5))
-
-    # hostbridge: grads computed per-rank in one dispatch, reduced on host,
-    # applied in a second dispatch — the round-trip every step.
-    rc = RunConfig(learning_rate=1e-3)
-    params = lm_lib.init_params(cfg, jax.random.PRNGKey(0))
-    opt = optim.init(params, rc)
-
-    from jax.sharding import PartitionSpec as P
-
-    # --- roundtrip: SAME in-program psum allreduce, but the step is split
-    # into two dispatches with a host synchronization between them (grads+
-    # reduce | optimizer) — the communication mechanism held fixed, so
-    # t_roundtrip/t_jmpi isolates the leave-the-compiled-block cost.
-    grad_reduce_fn = jax.jit(compat.shard_map(
-        lambda p, b: jax.tree.map(
-            lambda g: jax.lax.pmean(g, "data"),
-            jax.grad(lambda pp: lm_lib.train_loss(pp, cfg, b)[0])(p)),
-        mesh=mesh, in_specs=(P(), P("data")), out_specs=P(),
-        check_vma=False))
-    apply_fn = jax.jit(lambda p, g, o: optim.update(p, g, o, rc))
-
-    def roundtrip_step(params, opt):
-        g = grad_reduce_fn(params, batch)
-        jax.block_until_ready(g)          # leave the compiled block
-        out = apply_fn(params, g, opt)
-        jax.block_until_ready(out)
-        return out
-
-    params, opt = roundtrip_step(params, opt)  # compile
-    results["roundtrip"] = min(timeit.repeat(
-        lambda: roundtrip_step(params, opt), number=1, repeat=5))
-
-    # --- hostbridge: per-rank grads to host, numpy reduction, re-upload —
-    # the full mpi4py pattern (different transport: see EXPERIMENTS.md
-    # emulation caveat).
-    grad_fn = jax.jit(compat.shard_map(
-        lambda p, b: jax.tree.map(
-            lambda g: g[None],
-            jax.grad(lambda pp: lm_lib.train_loss(pp, cfg, b)[0])(p)),
-        mesh=mesh, in_specs=(P(), P("data")), out_specs=P("data"),
-        check_vma=False))
-
-    def host_step(params, opt):
-        gstack = grad_fn(params, batch)
-        jax.block_until_ready(gstack)
-        gmean = jax.tree.map(lambda g: jnp.asarray(np.asarray(g).mean(0)),
-                             gstack)
-        return apply_fn(params, gmean, opt)
-
-    params, opt = host_step(params, opt)  # compile
-    results["hostbridge"] = min(timeit.repeat(
-        lambda: jax.block_until_ready(host_step(params, opt)),
-        number=1, repeat=5))
-
-    base = results["roundtrip"]
-    for mode, t in results.items():
-        print(f"trainer_{mode},{t*1e3:.2f},speedup_vs_roundtrip="
-              f"{base/t:.2f}x")
+from repro.bench.cli import legacy_main  # noqa: E402
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(legacy_main("trainer"))

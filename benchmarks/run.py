@@ -1,93 +1,37 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Benchmark harness — drives every registered suite (paper tables/figures).
 
-Prints ``name,us_per_call,derived`` CSV rows (plus section headers on
-stderr-ish comment lines).  Emulated-device counts are process-global, so
-each module runs in a child process with XLA_FLAGS set there (the main
-process stays at 1 device).
+Thin front-end over ``python -m repro.bench`` (the unified OMB-style
+subsystem in ``src/repro/bench/``): one child process per suite with the
+right emulated device count, one schema artifact ``BENCH_<suite>.json`` per
+suite at the repo root.  Suite ↔ paper map:
 
-  bench_pi            paper Listing 1 + Fig. 1 (JIT speedup; jmpi-vs-roundtrip
-                      speedup over communication frequency)      [4 ranks]
-  bench_halo          paper Fig. 2 (Cahn–Hilliard strong scaling) [1,2,4,8]
-  bench_mpdata        paper Fig. 3 (decomposition layouts)        [8 ranks]
-  bench_collectives   jmpi op microbenchmarks                     [8 ranks]
-  bench_trainer_comm  trainer backends: jmpi vs hostbridge        [8 ranks]
-  bench_kernels       kernel-structure twins (blockwise/chunked)  [1 rank]
+  pi           paper Listings 1-4 + Fig. 1 (JIT speedup; JIT-resident vs
+               round-trip communication)                       [4 ranks]
+  halo         paper Fig. 2 (Cahn-Hilliard strong scaling, sub-meshes
+               n=1,2,4,8) + halo-exchange lowering sweep        [8 ranks]
+  mpdata       paper Fig. 3 (decomposition layouts)             [8 ranks]
+  p2p          OMB-style latency/bandwidth pair                 [2 ranks]
+  collectives  collective microbenchmarks incl. nonblocking,
+               persistent plans, neighborhood                   [8 ranks]
+  trainer      trainer comm backends: jmpi vs hostbridge        [8 ranks]
+  kernels      kernel-structure twins (blockwise/chunked)       [1 rank]
+
+Gate the artifacts against the committed baselines with
+``python -m repro.bench.compare`` (see docs/BENCHMARKS.md).
 """
 
 from __future__ import annotations
 
-import json
 import os
-import subprocess
 import sys
 
-from repro.testing import child_env
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
-
-MODULES = [
-    ("benchmarks.bench_pi", 4, ()),
-    ("benchmarks.bench_halo", 1, ()),
-    ("benchmarks.bench_halo", 2, ()),
-    ("benchmarks.bench_halo", 4, ()),
-    ("benchmarks.bench_halo", 8, ()),
-    ("benchmarks.bench_mpdata", 8, ()),
-    ("benchmarks.bench_collectives", 8, ()),
-    ("benchmarks.bench_collectives", 8, ("--persistent",)),
-    ("benchmarks.bench_trainer_comm", 8, ()),
-    ("benchmarks.bench_kernels", 1, ()),
-]
-
-#: CSV rows from these modules are also written to BENCH_collectives.json at
-#: the repo root — one machine-readable artifact per run so the collective
-#: perf trajectory (incl. persistent-plan reuse) is recorded PR over PR.
-ARTIFACT_MODULE = "benchmarks.bench_collectives"
-ARTIFACT_PATH = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_collectives.json")
-
-
-def _parse_rows(stdout: str) -> list[dict]:
-    rows = []
-    for line in stdout.splitlines():
-        if line.startswith("#") or "," not in line:
-            continue
-        name, value, *rest = line.split(",")
-        try:
-            value = float(value)
-        except ValueError:
-            continue
-        # "value" (not us_per_call): persistent-mode rows carry trace ms
-        # and cache counters in this column, not only per-call microseconds.
-        rows.append({"name": name, "value": value,
-                     "derived": ",".join(rest)})
-    return rows
-
-
-def main() -> None:
-    print("name,us_per_call,derived")
-    failures = []
-    artifact_rows: list[dict] = []
-    for mod, n_dev, extra in MODULES:
-        print(f"# {mod} (n_devices={n_dev}{' ' + ' '.join(extra) if extra else ''})",
-              flush=True)
-        proc = subprocess.run(
-            [sys.executable, "-m", mod, *extra], env=child_env(n_dev),
-            capture_output=True, text=True, timeout=3600)
-        sys.stdout.write(proc.stdout)
-        if proc.returncode != 0:
-            failures.append(mod)
-            sys.stdout.write(f"# FAILED {mod}\n{proc.stderr[-2000:]}\n")
-        elif mod == ARTIFACT_MODULE:
-            artifact_rows.extend(_parse_rows(proc.stdout))
-        sys.stdout.flush()
-    if artifact_rows:
-        with open(ARTIFACT_PATH, "w") as f:
-            json.dump({"version": 1, "module": ARTIFACT_MODULE,
-                       "rows": artifact_rows}, f, indent=1)
-            f.write("\n")
-        print(f"# wrote {len(artifact_rows)} rows to {ARTIFACT_PATH}")
-    if failures:
-        raise SystemExit(f"benchmark failures: {failures}")
+from repro.bench.cli import main  # noqa: E402
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

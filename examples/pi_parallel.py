@@ -2,10 +2,11 @@
 
     PYTHONPATH=src python examples/pi_parallel.py
 
-Spawns 4 emulated ranks (the paper's worker count), runs the whole
-compute+communicate loop inside one compiled block (pi_numba_mpi analogue),
-the host round-trip variant (pi_mpi4py analogue), and prints the speedup
-table that paper Fig. 1 plots.
+Spawns 4 emulated ranks (the paper's worker count), runs the ``pi``
+benchmark suite (``repro.bench.suites.pi``) in-process — the whole
+compute+communicate loop inside one compiled block (pi_numba_mpi
+analogue) against the host round-trip variant (pi_mpi4py analogue) — and
+prints the speedup table that paper Fig. 1 plots.
 """
 
 import os
@@ -16,19 +17,33 @@ if "XLA_FLAGS" not in os.environ:
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
-from benchmarks import bench_pi  # noqa: E402
+from repro.bench.core import BenchConfig          # noqa: E402
+from repro.bench.cli import run_suite_inprocess   # noqa: E402
 
 
 def main():
     print("rank-parallel π (4 emulated ranks)\n")
-    rows = bench_pi.bench_jit_speedup()
+    doc = run_suite_inprocess("pi", BenchConfig(quick=True, repeats=3),
+                              echo=lambda _line: None)
+    rows = {(r["name"], r["size"]): r for r in doc["rows"]}
+
+    jit = next(r for (name, _), r in rows.items()
+               if name == "pi_jit_speedup")
     print(f"JIT speedup of get_pi_part (paper Listing 1 ~100x): "
-          f"{rows[0][1]:.1f}x   [{rows[0][2]}]\n")
+          f"{jit['value']:.1f}x\n")
+
     print("JIT-resident comm vs host round-trip (paper Fig. 1):")
-    print(f"{'N_TIMES/n_intervals':>20s} {'speedup':>9s}   detail")
-    for name, val, derived in bench_pi.bench_speedup_sweep():
-        x = name.split('x')[-1]
-        print(f"{x:>20s} {val:9.2f}   {derived}")
+    print(f"{'N_TIMES/n_intervals':>20s} {'speedup':>9s}   "
+          f"{'t_jmpi':>9s} {'t_roundtrip':>12s}")
+    for (name, x), r in sorted(rows.items(), key=lambda kv: kv[0][1]):
+        if name != "pi_jitresident_speedup":
+            continue
+        t_jmpi = rows[("pi_jmpi", x)]["value"]
+        t_rt = rows[("pi_roundtrip", x)]["value"]
+        print(f"{x:>20d} {r['value']:8.2f}x   {t_jmpi:7.1f}ms "
+              f"{t_rt:10.1f}ms")
+    assert doc["invariants"]["pi_accurate"], "π estimate drifted"
+    print("\nπ accuracy invariant: OK")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""repro.bench — the unified OMB-style benchmark subsystem.
+
+One engine (:mod:`repro.bench.core`), one schema
+(:mod:`repro.bench.schema`), one CLI (``python -m repro.bench``) and one
+regression gate (``python -m repro.bench.compare``) replace the six ad-hoc
+timing scripts that used to live under ``benchmarks/``.  The methodology —
+warmup + repeat control, per-size sweeps, robust statistics, trace vs
+steady-state separation — follows OMB-Py (Alnaasan et al. 2021), which the
+paper's own per-size send/recv timing loop mirrors.
+
+This package root stays import-light (no jax): suite modules under
+:mod:`repro.bench.suites` are only imported in the child process that runs
+them with the right emulated device count.  See docs/BENCHMARKS.md.
+"""
+
+from repro.bench.core import BenchConfig, Case, free_row, run_case
+from repro.bench.schema import SCHEMA, assert_valid, load, make_doc, validate
+from repro.bench.stats import iqr, median, min_of_k, quantile, summarize
+from repro.bench.suites import SUITES, SuiteSpec
+
+__all__ = [
+    "BenchConfig", "Case", "free_row", "run_case",
+    "SCHEMA", "assert_valid", "load", "make_doc", "validate",
+    "iqr", "median", "min_of_k", "quantile", "summarize",
+    "SUITES", "SuiteSpec",
+]

@@ -1,0 +1,224 @@
+"""``python -m repro.bench`` — the unified benchmark CLI.
+
+Parent/child split: emulated device counts are process-global (XLA reads
+``--xla_force_host_platform_device_count`` once, at backend init), so the
+parent process never imports a suite; it spawns one child per requested
+suite with the right count pinned, streams the child's human-readable rows,
+and collects the child's schema artifact into ``BENCH_<suite>.json``.
+
+Examples::
+
+    python -m repro.bench --list
+    python -m repro.bench --suite p2p --quick --json out.json
+    python -m repro.bench --suite p2p,collectives --quick --out-dir bench-out
+    python -m repro.bench                      # every suite, full grids
+
+Gate the artifacts with ``python -m repro.bench.compare`` (see
+docs/BENCHMARKS.md for the baseline-update workflow).
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import subprocess
+import sys
+import tempfile
+
+from repro.bench import schema
+from repro.bench.core import BenchConfig, effective_sizes, format_row, \
+    run_case
+from repro.bench.suites import SUITES, resolve
+
+CHILD_TIMEOUT_S = 3600
+
+
+def repo_root() -> str:
+    """The repository root (src/repro/bench → three levels up)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.bench",
+        description="unified OMB-style benchmark runner")
+    ap.add_argument("--suite", default=None,
+                    help="comma-separated suite names (default: all; "
+                         "see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered suites and exit")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grids/steps (CI lane, smoke tests)")
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timed steady-state samples per cell (default 5)")
+    ap.add_argument("--warmup", type=int, default=1,
+                    help="discarded calls before sampling (default 1)")
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated size override for sweepable cases")
+    ap.add_argument("--cases", default=None,
+                    help="only run cases whose name contains one of these "
+                         "comma-separated substrings")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="artifact path (single suite only)")
+    ap.add_argument("--out-dir", default=None, metavar="DIR",
+                    help="directory for BENCH_<suite>.json artifacts "
+                         "(default: repo root)")
+    ap.add_argument("--in-child", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: run in-process
+    return ap
+
+
+def _config_from_args(args: argparse.Namespace) -> BenchConfig:
+    sizes = tuple(int(s) for s in args.sizes.split(",")) if args.sizes \
+        else None
+    cases = tuple(c.strip() for c in args.cases.split(",") if c.strip()) \
+        if args.cases else None
+    return BenchConfig(quick=args.quick, repeats=args.repeats,
+                       warmup=args.warmup, sizes=sizes, cases=cases)
+
+
+def run_suite_inprocess(name: str, cfg: BenchConfig,
+                        echo=print) -> dict:
+    """Run one suite in this process and return its artifact document.
+
+    The caller is responsible for the device count (the CLI child and the
+    legacy ``benchmarks/bench_*.py`` wrappers pin XLA_FLAGS before jax is
+    imported).
+
+    Args:
+        name: registered suite name.
+        cfg: the effective configuration.
+        echo: sink for human-readable progress rows.
+    Returns:
+        A schema-valid artifact dict.
+    """
+    spec = SUITES[name]
+    mod = importlib.import_module(spec.module)
+    rows: list[dict] = []
+    for case in mod.build(cfg):
+        if not cfg.wants(case.name):
+            continue
+        for size in effective_sizes(case, cfg):
+            if case.size_ok is not None and not case.size_ok(size):
+                echo(f"# skip {case.name}[{size}]: size rejected by case")
+                continue
+            row = run_case(case, size, cfg)
+            rows.append(row)
+            echo(format_row(row))
+    invariants: dict = {}
+    if hasattr(mod, "extras"):
+        extra_rows, invariants = mod.extras(cfg, rows)
+        for row in extra_rows:
+            rows.append(row)
+            echo(format_row(row))
+        for key, ok in invariants.items():
+            echo(f"# invariant {key}: {'OK' if ok else 'FAILED'}")
+    doc = schema.make_doc(spec.name, rows, invariants, cfg.to_dict())
+    return doc
+
+
+def _child_argv(spec, args: argparse.Namespace, emit_path: str) -> list[str]:
+    argv = [sys.executable, "-m", "repro.bench", "--suite", spec.name,
+            "--in-child", "--json", emit_path,
+            "--repeats", str(args.repeats), "--warmup", str(args.warmup)]
+    if args.quick:
+        argv.append("--quick")
+    if args.sizes:
+        argv += ["--sizes", args.sizes]
+    if args.cases:
+        argv += ["--cases", args.cases]
+    return argv
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI entry point; returns the process exit code."""
+    args = _build_parser().parse_args(argv)
+    if args.list:
+        for spec in SUITES.values():
+            print(f"{spec.name:<14}n_devices={spec.n_devices:<3} "
+                  f"{spec.description}")
+        return 0
+
+    specs = resolve(args.suite)
+    cfg = _config_from_args(args)
+
+    if args.in_child:
+        # Child mode: one suite, devices already pinned by the parent env.
+        assert len(specs) == 1 and args.json, "--in-child needs one " \
+            "--suite and a --json path"
+        doc = run_suite_inprocess(specs[0].name, cfg)
+        schema.dump(doc, args.json)
+        return 0
+
+    if args.json and len(specs) != 1:
+        raise SystemExit("--json needs exactly one --suite "
+                         "(use --out-dir for multi-suite runs)")
+
+    from repro.testing import child_env
+
+    out_dir = args.out_dir or repo_root()
+    os.makedirs(out_dir, exist_ok=True)
+    failures: list[str] = []
+    written: list[str] = []
+    for spec in specs:
+        print(f"# suite {spec.name} (n_devices={spec.n_devices}"
+              f"{' quick' if args.quick else ''})", flush=True)
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+            emit_path = f.name
+        try:
+            proc = subprocess.run(
+                _child_argv(spec, args, emit_path),
+                env=child_env(spec.n_devices), capture_output=True,
+                text=True, timeout=CHILD_TIMEOUT_S)
+            sys.stdout.write(proc.stdout)
+            if proc.returncode != 0:
+                failures.append(spec.name)
+                sys.stdout.write(
+                    f"# FAILED {spec.name}\n{proc.stderr[-2000:]}\n")
+                continue
+            dest = args.json or os.path.join(out_dir,
+                                             f"BENCH_{spec.name}.json")
+            schema.dump(schema.load(emit_path), dest)
+            written.append(dest)
+            print(f"# wrote {dest}", flush=True)
+        finally:
+            if os.path.exists(emit_path):
+                os.unlink(emit_path)
+    if failures:
+        print(f"# suite failures: {failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def legacy_main(suite_name: str, argv: list[str] | None = None) -> int:
+    """Entry point for the thin ``benchmarks/bench_*.py`` wrappers.
+
+    Runs the suite in-process (the wrapper pinned XLA_FLAGS before any jax
+    import) with the shared CLI flags, printing rows to stdout.
+
+    Args:
+        suite_name: registered suite name.
+        argv: CLI args (default ``sys.argv[1:]``).
+    Returns:
+        Process exit code (0 = all invariants held).
+    """
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--sizes", default=None)
+    ap.add_argument("--cases", default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    cfg = _config_from_args(args)
+    doc = run_suite_inprocess(suite_name, cfg)
+    if args.json:
+        schema.dump(doc, args.json)
+        print(f"# wrote {args.json}")
+    bad = [k for k, ok in doc["invariants"].items() if not ok]
+    if bad:
+        print(f"# invariant failures: {bad}", file=sys.stderr)
+        return 1
+    return 0

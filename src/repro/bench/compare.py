@@ -1,0 +1,296 @@
+"""``python -m repro.bench.compare`` — the perf regression gate.
+
+Compares current ``BENCH_<suite>.json`` artifacts against the committed
+baselines in ``benchmarks/baselines/`` and fails (exit 1) when a suite's
+median regresses beyond a noise-calibrated threshold:
+
+* **suite-median gate** (``--threshold``, default 1.75): per-row ratios
+  (current median / baseline median) are collected and the suite fails
+  when their *median* exceeds the threshold.  Calibration data from the
+  CPU container this gate was built on: back-to-back identical quick runs
+  show *individual* collective rows swinging 0.3x–4.3x (bursty shared
+  cores), while the per-suite median of ratios stays near 0.9 — so the
+  suite median separates noise from a genuine uniform slowdown (an
+  injected 2x moves it to exactly 2.0);
+* **per-row hard cap** (``--row-cap``, default 3x the threshold): a single
+  row regressing catastrophically fails even when the suite median holds —
+  sized above the measured worst-case single-row noise (4.3x);
+* **min-runtime floor** (``--floor-us``, default 30): rows whose baseline
+  median is below the floor are reported but never gated — timer jitter
+  dominates there;
+* only rows with a **time unit** (us/ms/s) gate; ratio/counter rows are
+  reported context.
+
+Modes::
+
+    python -m repro.bench.compare                     # gate vs baselines
+    python -m repro.bench.compare --smoke             # schema + invariants
+    python -m repro.bench.compare --update-baselines  # intentional change
+
+``--smoke`` replaces the old grep-based CI assertions: it validates every
+current artifact against the schema and requires every recorded invariant
+(plan-cache reuse, policy-table derivation, oracle agreement) to be true —
+an exit code, not a string match.
+
+The baseline-update workflow (for intentional perf changes) is documented
+in docs/BENCHMARKS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro.bench import schema
+
+DEFAULT_THRESHOLD = 1.75
+DEFAULT_FLOOR_US = 30.0
+
+
+def find_artifacts(current: str | None) -> list[str]:
+    """Locate current artifacts.
+
+    Args:
+        current: a directory, a single file, or None (= repo root).
+    Returns:
+        Sorted list of ``BENCH_*.json`` paths (or the single file).
+    """
+    if current and os.path.isfile(current):
+        return [current]
+    from repro.bench.cli import repo_root
+    root = current or repo_root()
+    return sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+
+
+def baseline_path(baselines_dir: str, suite: str) -> str:
+    """The committed baseline file for ``suite``."""
+    return os.path.join(baselines_dir, f"{suite}.json")
+
+
+def default_baselines_dir() -> str:
+    """``benchmarks/baselines`` under the repo root."""
+    from repro.bench.cli import repo_root
+    return os.path.join(repo_root(), "benchmarks", "baselines")
+
+
+def gated_rows(doc: dict) -> dict:
+    """Index a document's gate-able rows.
+
+    Args:
+        doc: a schema-valid artifact.
+    Returns:
+        ``{(name, size): value_in_us}`` for every time-unit row that has
+        not opted out via ``"gate": false`` (reported-only extras rows).
+    """
+    out = {}
+    for row in doc["rows"]:
+        factor = schema.TIME_UNITS.get(row["unit"])
+        if factor is not None and row.get("gate", True):
+            out[(row["name"], row["size"])] = float(row["value"]) * factor
+    return out
+
+
+def compare_docs(current: dict, baseline: dict,
+                 threshold: float = DEFAULT_THRESHOLD,
+                 floor_us: float = DEFAULT_FLOOR_US,
+                 row_cap: float | None = None
+                 ) -> tuple[list[str], list[str]]:
+    """Gate one current artifact against its baseline.
+
+    The primary gate is the suite-level median of per-row ratios (see the
+    module docstring for the noise calibration); a per-row hard cap
+    catches catastrophic single-row regressions.
+
+    Args:
+        current: the just-measured artifact.
+        baseline: the committed artifact for the same suite.
+        threshold: max allowed suite-median ratio.
+        floor_us: baseline medians below this are reported, never gated.
+        row_cap: max allowed single-row ratio (None = 3x ``threshold``).
+    Returns:
+        ``(failures, report)`` — failure strings (empty = pass) and
+        human-readable per-row report lines.
+    """
+    from repro.bench.stats import median as _median
+
+    row_cap = row_cap if row_cap is not None else 3.0 * threshold
+    failures: list[str] = []
+    report: list[str] = []
+    suite = current.get("suite")
+    if suite != baseline.get("suite"):
+        failures.append(f"suite mismatch: current={suite!r} "
+                        f"baseline={baseline.get('suite')!r}")
+        return failures, report
+    for key in ("device_count", "quick", "policy_hash"):
+        cur, base = current["env"].get(key), baseline["env"].get(key)
+        if cur != base:
+            report.append(f"  note: env.{key} differs "
+                          f"(current={cur!r} baseline={base!r})")
+    cur_rows, base_rows = gated_rows(current), gated_rows(baseline)
+    ratios: list[float] = []
+    for key in sorted(base_rows, key=str):
+        name = key[0] if not key[1] else f"{key[0]}[{key[1]}]"
+        base_us = base_rows[key]
+        if key not in cur_rows:
+            failures.append(f"{suite}: row {name} present in baseline but "
+                            f"missing from current run")
+            continue
+        cur_us = cur_rows[key]
+        ratio = cur_us / base_us if base_us > 0 else float("inf")
+        line = (f"  {name:<40} base={base_us:10.1f}us "
+                f"cur={cur_us:10.1f}us ratio={ratio:5.2f}")
+        if base_us < floor_us:
+            report.append(line + "  (below floor, not gated)")
+            continue
+        ratios.append(ratio)
+        if ratio > row_cap:
+            failures.append(
+                f"{suite}: {name} regressed {ratio:.2f}x "
+                f"({base_us:.1f}us -> {cur_us:.1f}us, "
+                f"row cap {row_cap:.2f}x)")
+            report.append(line + "  REGRESSED (row cap)")
+        elif ratio > threshold:
+            report.append(line + "  above threshold (suite-median gated)")
+        else:
+            report.append(line)
+    if ratios:
+        suite_ratio = _median(ratios)
+        report.append(f"  suite median ratio over {len(ratios)} gated "
+                      f"row(s): {suite_ratio:.2f} "
+                      f"(threshold {threshold:.2f})")
+        if suite_ratio > threshold:
+            failures.append(
+                f"{suite}: suite median ratio {suite_ratio:.2f}x exceeds "
+                f"threshold {threshold:.2f}x "
+                f"({len(ratios)} gated rows)")
+    for key in sorted(set(cur_rows) - set(base_rows), key=str):
+        name = key[0] if not key[1] else f"{key[0]}[{key[1]}]"
+        report.append(f"  {name:<40} new row (no baseline); add it with "
+                      f"--update-baselines")
+    return failures, report
+
+
+def smoke_check(paths: list[str]) -> list[str]:
+    """Schema + invariant validation of current artifacts (no baselines).
+
+    Args:
+        paths: artifact files to check.
+    Returns:
+        Failure strings; empty means every artifact is schema-valid, has
+        at least one row, and every recorded invariant is true.
+    """
+    failures = []
+    if not paths:
+        failures.append("no BENCH_*.json artifacts found")
+    for path in paths:
+        try:
+            doc = schema.load(path)
+        except (ValueError, OSError, json.JSONDecodeError) as e:
+            failures.append(f"{path}: {e}")
+            continue
+        if not doc["rows"]:
+            failures.append(f"{path}: artifact has no rows")
+        for key, ok in doc["invariants"].items():
+            if not ok:
+                failures.append(f"{path}: invariant {key!r} is false")
+    return failures
+
+
+def update_baselines(paths: list[str], baselines_dir: str) -> list[str]:
+    """Adopt the current artifacts as the new committed baselines.
+
+    Args:
+        paths: current artifact files.
+        baselines_dir: destination directory.
+    Returns:
+        The written baseline paths.
+    """
+    os.makedirs(baselines_dir, exist_ok=True)
+    written = []
+    for path in paths:
+        doc = schema.load(path)
+        dest = baseline_path(baselines_dir, doc["suite"])
+        schema.dump(doc, dest)
+        written.append(dest)
+    return written
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI entry point; returns the process exit code."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.bench.compare",
+        description="benchmark regression gate over BENCH_*.json artifacts")
+    ap.add_argument("--current", default=None,
+                    help="artifact file or directory (default: repo root)")
+    ap.add_argument("--baselines", default=None,
+                    help="baseline directory (default benchmarks/baselines)")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help=f"max suite-median current/baseline ratio "
+                         f"(default {DEFAULT_THRESHOLD})")
+    ap.add_argument("--row-cap", type=float, default=None,
+                    help="max single-row ratio (default 3x the threshold)")
+    ap.add_argument("--floor-us", type=float, default=DEFAULT_FLOOR_US,
+                    help=f"baseline medians below this many us are not "
+                         f"gated (default {DEFAULT_FLOOR_US})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="schema + invariant validation only (no baselines)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="adopt the current artifacts as baselines")
+    args = ap.parse_args(argv)
+
+    paths = find_artifacts(args.current)
+    baselines_dir = args.baselines or default_baselines_dir()
+
+    if args.smoke:
+        failures = smoke_check(paths)
+        for f in failures:
+            print(f"SMOKE FAIL: {f}")
+        if not failures:
+            print(f"smoke OK: {len(paths)} artifact(s) schema-valid, all "
+                  f"invariants hold")
+        return 1 if failures else 0
+
+    if args.update_baselines:
+        for dest in update_baselines(paths, baselines_dir):
+            print(f"baseline updated: {dest}")
+        return 0
+
+    if not paths:
+        print("no current BENCH_*.json artifacts found", file=sys.stderr)
+        return 1
+    all_failures: list[str] = []
+    compared = 0
+    for path in paths:
+        try:
+            current = schema.load(path)
+        except ValueError as e:
+            all_failures.append(str(e))
+            continue
+        base_file = baseline_path(baselines_dir, current["suite"])
+        if not os.path.exists(base_file):
+            print(f"# {current['suite']}: no committed baseline "
+                  f"({base_file}); run --update-baselines to add one")
+            continue
+        baseline = schema.load(base_file)
+        failures, report = compare_docs(current, baseline,
+                                        threshold=args.threshold,
+                                        floor_us=args.floor_us,
+                                        row_cap=args.row_cap)
+        compared += 1
+        print(f"# {current['suite']} vs {base_file}")
+        for line in report:
+            print(line)
+        all_failures.extend(failures)
+    for f in all_failures:
+        print(f"REGRESSION: {f}")
+    if not all_failures:
+        print(f"compare OK: {compared} suite(s) within "
+              f"{args.threshold:.2f}x of baseline")
+    return 1 if all_failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

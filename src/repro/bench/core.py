@@ -1,0 +1,202 @@
+"""Benchmark engine: ``Case`` definitions and the measurement loop.
+
+This replaces the copy-pasted ``timeit.repeat`` loops of the old
+``benchmarks/bench_*.py`` scripts with one engine applying the OMB-style
+methodology everywhere:
+
+* **setup / trace / steady-state separation** — ``Case.build(size)`` does
+  arbitrary setup (solvers, params) outside the clock; the *first* call of
+  the returned thunk is timed separately as ``trace_ms`` (jit trace +
+  compile + first run — where the plan cache earns its keep), then
+  ``warmup`` discarded calls, then ``repeats`` timed steady-state samples.
+* **amortized inner loops** — a thunk may chain ``Case.inner`` operations
+  per call (e.g. a ``fori_loop`` of 50 collectives) so per-call dispatch
+  cost is amortized; the engine divides samples by ``inner``.
+* **robust statistics** — each row carries the full
+  :func:`repro.bench.stats.summarize` block; the headline ``value`` is the
+  median per-call cost in ``Case.unit``.
+
+Suites (``repro.bench.suites``) build lists of cases; the runner in
+:mod:`repro.bench.cli` drives them in a child process with the right
+emulated device count and emits the :mod:`repro.bench.schema` artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+from repro.bench import stats as stats_lib
+from repro.bench.schema import TIME_UNITS
+
+
+@dataclasses.dataclass
+class BenchConfig:
+    """Effective run configuration shared by every case of a suite run.
+
+    Attributes:
+        quick: reduced grids/steps for CI and smoke runs (suites decide
+            what shrinks; the schema records the flag).
+        repeats: timed steady-state samples per (case, size).
+        warmup: discarded calls between the trace call and the samples.
+        sizes: when set, overrides the size grid of every sweepable case.
+        cases: when set, only cases whose name contains one of these
+            substrings run.
+    """
+
+    quick: bool = False
+    repeats: int = 5
+    warmup: int = 1
+    sizes: tuple[int, ...] | None = None
+    cases: tuple[str, ...] | None = None
+
+    def to_dict(self) -> dict:
+        """The ``config`` block recorded in the artifact."""
+        return {
+            "quick": self.quick,
+            "repeats": self.repeats,
+            "warmup": self.warmup,
+            "sizes": list(self.sizes) if self.sizes else None,
+            "cases": list(self.cases) if self.cases else None,
+        }
+
+    def wants(self, case_name: str) -> bool:
+        """Whether the ``cases`` filter admits ``case_name``."""
+        if not self.cases:
+            return True
+        return any(sub in case_name for sub in self.cases)
+
+
+@dataclasses.dataclass
+class Case:
+    """One benchmark case: a named, size-swept, self-contained measurement.
+
+    Attributes:
+        name: row name (stable across runs — the compare-gate key is
+            ``(name, size)``).
+        build: ``build(size) -> thunk``; the thunk performs ``inner``
+            operations and blocks until they are done.  Setup happens in
+            ``build`` (unclocked); the thunk's first call is the traced
+            one.
+        sizes: the size grid (elements, grid points, steps — case-defined).
+        inner: operations per thunk call; samples are divided by it.
+        unit: unit of the headline value (``us``/``ms``/``s`` gate-able
+            time units, or a reported-only unit).
+        nbytes: optional ``size -> payload bytes`` for the row's ``bytes``
+            field and bandwidth-style derived values.
+        derived: optional ``(size, seconds_per_call) -> dict`` of extra
+            reported scalars.
+        sweepable: whether a CLI ``--sizes`` override applies to this case.
+        size_ok: optional predicate; sizes it rejects are skipped (with a
+            note) instead of crashing the suite — e.g. alltoall payloads
+            must divide by the rank count, which a ``--sizes`` override
+            cannot know.
+    """
+
+    name: str
+    build: Callable[[int], Callable[[], Any]]
+    sizes: tuple[int, ...] = (0,)
+    inner: int = 1
+    unit: str = "us"
+    nbytes: Callable[[int], int] | None = None
+    derived: Callable[[int, float], dict] | None = None
+    sweepable: bool = False
+    size_ok: Callable[[int], bool] | None = None
+
+
+def _now() -> float:
+    return time.perf_counter()
+
+
+def run_case(case: Case, size: int, cfg: BenchConfig) -> dict:
+    """Measure one (case, size) cell and return its artifact row.
+
+    Args:
+        case: the case definition.
+        size: one entry of the case's size grid.
+        cfg: the effective run configuration.
+    Returns:
+        A schema-valid row dict (name/size/bytes/unit/value/trace_ms/
+        stats/derived).
+    """
+    thunk = case.build(size)
+
+    t0 = _now()
+    thunk()                                   # trace + compile + first run
+    trace_ms = (_now() - t0) * 1e3
+
+    for _ in range(cfg.warmup):
+        thunk()
+
+    samples_s = []
+    for _ in range(max(1, cfg.repeats)):
+        t0 = _now()
+        thunk()
+        samples_s.append((_now() - t0) / max(1, case.inner))
+
+    unit_s = TIME_UNITS.get(case.unit, 1.0) * 1e-6
+    per_call = [s / unit_s for s in samples_s]
+    summary = stats_lib.summarize(per_call)
+    sec_med = stats_lib.median(samples_s)
+
+    row = {
+        "name": case.name,
+        "size": int(size),
+        "bytes": int(case.nbytes(size)) if case.nbytes else None,
+        "unit": case.unit,
+        "value": summary["median"],
+        "trace_ms": trace_ms,
+        "stats": summary,
+        "derived": dict(case.derived(size, sec_med)) if case.derived
+                   else None,
+    }
+    return row
+
+
+def free_row(name: str, value: float, unit: str = "x", size: int = 0,
+             derived: dict | None = None) -> dict:
+    """A reported-only row (ratio/counter/one-shot timing) for suite
+    ``extras`` hooks.
+
+    The row carries ``"gate": false`` so the compare checker never gates
+    it, even when ``unit`` is a time unit (trace-time measurements, sweep
+    cells): only steady-state :class:`Case` rows enter the regression
+    gate.
+
+    Args:
+        name: row name.
+        value: the headline scalar.
+        unit: a :data:`repro.bench.schema.FREE_UNITS` unit (default
+            ratio) or a time unit for reported-only timings.
+        size: optional size key (0 when not size-swept).
+        derived: optional extra scalars.
+    Returns:
+        A schema-valid row dict with no stats/trace block.
+    """
+    return {"name": name, "size": int(size), "bytes": None, "unit": unit,
+            "value": float(value), "trace_ms": None, "stats": None,
+            "derived": derived, "gate": False}
+
+
+def effective_sizes(case: Case, cfg: BenchConfig) -> Sequence[int]:
+    """The size grid actually run: the CLI override for sweepable cases,
+    the case's own grid otherwise."""
+    if case.sweepable and cfg.sizes:
+        return cfg.sizes
+    return case.sizes
+
+
+def format_row(row: dict) -> str:
+    """One human-readable CSV-ish line per row (CLI/stdout rendering)."""
+    key = row["name"] if not row["size"] else f"{row['name']}[{row['size']}]"
+    parts = [key, f"{row['value']:.4g}", row["unit"]]
+    st = row.get("stats")
+    if st:
+        parts.append(f"min={st['min']:.4g}")
+        parts.append(f"iqr={st['iqr']:.3g}")
+    if row.get("trace_ms") is not None:
+        parts.append(f"trace_ms={row['trace_ms']:.1f}")
+    for k, v in (row.get("derived") or {}).items():
+        parts.append(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}")
+    return ",".join(parts)

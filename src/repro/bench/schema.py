@@ -1,0 +1,212 @@
+"""Machine-readable benchmark artifact schema (``BENCH_<suite>.json``).
+
+One artifact per suite per run.  The document is versioned and carries an
+environment fingerprint (jax version, device count, active policy-table
+hash, quick/full mode) so the compare gate can refuse or annotate
+apples-to-oranges comparisons, plus per-row robust statistics and the
+trace/steady-state split.
+
+Document shape (``SCHEMA`` tag ``repro.bench/v2``; v1 was the bespoke
+``benchmarks/run.py`` emitter this module replaces)::
+
+    {
+      "schema": "repro.bench/v2",
+      "suite": "p2p",
+      "env": {"jax": "...", "python": "...", "platform": "cpu",
+              "device_count": 2, "policy_hash": "...", "quick": true},
+      "config": {"repeats": 5, "warmup": 1, "sizes": null, "cases": null},
+      "rows": [
+        {"name": "p2p_latency", "size": 1024, "bytes": 4096,
+         "unit": "us", "value": 123.4,          # headline = median/call
+         "trace_ms": 87.0,                      # first call: trace+compile
+         "stats": {"n": 5, "min": ..., "median": ..., "iqr": ...},
+         "derived": {"GBps": 0.033}},           # free-form floats
+        ...
+      ],
+      "invariants": {"plan_reuse": true, ...}   # machine-checked booleans
+    }
+
+``unit`` is the unit of ``value`` and ``stats``: a time unit (``us``,
+``ms``, ``s`` — gated by the compare checker, lower is better) or a
+unit-less derived quantity (``x`` for ratios, ``count`` — reported, never
+gated).  A row may additionally carry ``"gate": false`` to opt out of the
+regression gate even with a time unit (reported-only rows from suite
+``extras`` hooks: trace-time measurements, single-shot sweep cells).
+Validation is hand-rolled (no jsonschema dependency in the container).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import sys
+
+SCHEMA = "repro.bench/v2"
+
+#: units the compare gate treats as "time per call, lower is better",
+#: with the factor converting a value into microseconds.
+TIME_UNITS = {"us": 1.0, "ms": 1e3, "s": 1e6}
+
+#: reported-only units (ratios, counters) — never gated.
+FREE_UNITS = ("x", "count", "B")
+
+
+def policy_hash() -> str:
+    """Short stable hash of the active collective policy table.
+
+    Part of the env fingerprint: two artifacts measured under different
+    policy tables are not comparing the same lowerings.
+    """
+    from repro.core import registry
+    text = registry.active_policy().to_json()
+    return hashlib.sha256(text.encode()).hexdigest()[:12]
+
+
+def env_fingerprint(quick: bool) -> dict:
+    """The environment block of an artifact (imports jax lazily).
+
+    Args:
+        quick: whether the run used the reduced quick-mode grids.
+    Returns:
+        Dict with jax/python versions, backend platform, device count and
+        the active policy-table hash.
+    """
+    import jax
+    return {
+        "jax": jax.__version__,
+        "python": "%d.%d.%d" % sys.version_info[:3],
+        "platform": jax.default_backend(),
+        "device_count": len(jax.devices()),
+        "policy_hash": policy_hash(),
+        "quick": bool(quick),
+    }
+
+
+def make_doc(suite: str, rows: list[dict], invariants: dict,
+             config: dict, env: dict | None = None) -> dict:
+    """Assemble a schema-valid artifact document.
+
+    Args:
+        suite: registered suite name.
+        rows: row dicts (see module docstring).
+        invariants: machine-checked boolean facts from the suite run.
+        config: the effective run configuration (repeats, warmup, ...).
+        env: environment block; None computes :func:`env_fingerprint`.
+    Returns:
+        The artifact dict (validate with :func:`validate`).
+    """
+    return {
+        "schema": SCHEMA,
+        "suite": suite,
+        "env": env if env is not None else env_fingerprint(
+            bool(config.get("quick", False))),
+        "config": config,
+        "rows": rows,
+        "invariants": {k: bool(v) for k, v in invariants.items()},
+    }
+
+
+def _check_row(i: int, row: object, problems: list[str]) -> None:
+    if not isinstance(row, dict):
+        problems.append(f"rows[{i}]: not an object")
+        return
+    where = f"rows[{i}]"
+    name = row.get("name")
+    if not isinstance(name, str) or not name:
+        problems.append(f"{where}: missing/empty 'name'")
+    else:
+        where = f"rows[{i}] ({name})"
+    if not isinstance(row.get("size"), int):
+        problems.append(f"{where}: 'size' must be an int")
+    unit = row.get("unit")
+    if unit not in TIME_UNITS and unit not in FREE_UNITS:
+        problems.append(f"{where}: unknown unit {unit!r}")
+    if not isinstance(row.get("value"), (int, float)):
+        problems.append(f"{where}: 'value' must be a number")
+    if row.get("bytes") is not None and not isinstance(row["bytes"], int):
+        problems.append(f"{where}: 'bytes' must be int or null")
+    if "gate" in row and not isinstance(row["gate"], bool):
+        problems.append(f"{where}: 'gate' must be a boolean when present")
+    if row.get("trace_ms") is not None and \
+            not isinstance(row["trace_ms"], (int, float)):
+        problems.append(f"{where}: 'trace_ms' must be a number or null")
+    stats = row.get("stats")
+    if stats is not None:
+        if not isinstance(stats, dict):
+            problems.append(f"{where}: 'stats' must be an object or null")
+        else:
+            for key in ("n", "min", "median", "iqr"):
+                if not isinstance(stats.get(key), (int, float)):
+                    problems.append(f"{where}: stats.{key} missing")
+    derived = row.get("derived")
+    if derived is not None:
+        if not isinstance(derived, dict) or any(
+                not isinstance(v, (int, float, str))
+                for v in derived.values()):
+            problems.append(f"{where}: 'derived' must map to scalars")
+
+
+def validate(doc: object) -> list[str]:
+    """Validate an artifact document against the schema.
+
+    Args:
+        doc: the parsed JSON document.
+    Returns:
+        A list of human-readable problems; empty means schema-valid.
+    """
+    problems: list[str] = []
+    if not isinstance(doc, dict):
+        return ["artifact is not a JSON object"]
+    if doc.get("schema") != SCHEMA:
+        problems.append(f"schema tag {doc.get('schema')!r} != {SCHEMA!r}")
+    if not isinstance(doc.get("suite"), str) or not doc.get("suite"):
+        problems.append("missing 'suite'")
+    env = doc.get("env")
+    if not isinstance(env, dict):
+        problems.append("missing 'env' block")
+    else:
+        for key in ("jax", "python", "platform", "device_count",
+                    "policy_hash", "quick"):
+            if key not in env:
+                problems.append(f"env.{key} missing")
+    if not isinstance(doc.get("config"), dict):
+        problems.append("missing 'config' block")
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        problems.append("'rows' must be a list")
+    else:
+        for i, row in enumerate(rows):
+            _check_row(i, row, problems)
+    inv = doc.get("invariants")
+    if not isinstance(inv, dict) or any(
+            not isinstance(v, bool) for v in inv.values()):
+        problems.append("'invariants' must map names to booleans")
+    return problems
+
+
+def assert_valid(doc: object, origin: str = "artifact") -> None:
+    """Raise ``ValueError`` listing every schema problem of ``doc``."""
+    problems = validate(doc)
+    if problems:
+        raise ValueError(f"{origin} is not schema-valid:\n  "
+                         + "\n  ".join(problems))
+
+
+def dump(doc: dict, path: str) -> None:
+    """Validate then write ``doc`` to ``path`` as indented JSON."""
+    assert_valid(doc, origin=path)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False)
+        f.write("\n")
+
+
+def load(path: str) -> dict:
+    """Read and validate an artifact from ``path``.
+
+    Raises:
+        ValueError: when the file is not schema-valid.
+    """
+    with open(path) as f:
+        doc = json.load(f)
+    assert_valid(doc, origin=path)
+    return doc

@@ -1,0 +1,93 @@
+"""Robust statistics for benchmark samples.
+
+Wall-clock samples from a shared CPU runner are contaminated by one-sided
+noise (scheduler preemption, GC, turbo transitions): the distribution has a
+hard lower bound near the "true" cost and a long right tail.  The helpers
+here are the standard OMB/MatlabMPI-style summaries for that shape —
+**median** (headline, tail-robust), **IQR** (spread, outlier-robust) and
+**min-of-k** (best-case floor, the classic ``timeit`` reduction) — computed
+without numpy so the compare gate stays importable host-side.
+
+All quantile math uses linear interpolation on sorted samples, matching
+``numpy.quantile``'s default method (the test suite checks this against
+numpy oracles).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def quantile(samples: Sequence[float], q: float) -> float:
+    """Linear-interpolated quantile of ``samples`` (numpy's default method).
+
+    Args:
+        samples: non-empty sequence of values.
+        q: quantile in [0, 1].
+    Returns:
+        The interpolated quantile value.
+    Raises:
+        ValueError: on an empty sequence or ``q`` outside [0, 1].
+    """
+    if not samples:
+        raise ValueError("quantile of empty sequence")
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile {q} outside [0, 1]")
+    xs = sorted(samples)
+    pos = q * (len(xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def median(samples: Sequence[float]) -> float:
+    """Median (0.5 quantile, linear interpolation)."""
+    return quantile(samples, 0.5)
+
+
+def iqr(samples: Sequence[float]) -> float:
+    """Interquartile range: q75 − q25."""
+    return quantile(samples, 0.75) - quantile(samples, 0.25)
+
+
+def min_of_k(samples: Sequence[float], k: int | None = None) -> float:
+    """Minimum of the first ``k`` samples (all samples when ``k`` is None).
+
+    Args:
+        samples: non-empty sequence of values.
+        k: how many leading samples to consider.
+    Returns:
+        The smallest considered sample.
+    Raises:
+        ValueError: on an empty sequence or non-positive ``k``.
+    """
+    if not samples:
+        raise ValueError("min_of_k of empty sequence")
+    if k is not None:
+        if k <= 0:
+            raise ValueError(f"min_of_k needs k >= 1, got {k}")
+        samples = list(samples)[:k]
+    return min(samples)
+
+
+def summarize(samples: Sequence[float]) -> dict:
+    """Full robust summary of a sample set.
+
+    Args:
+        samples: non-empty sequence of per-call values (any unit).
+    Returns:
+        Dict with ``n``, ``min``, ``max``, ``mean``, ``median``, ``p25``,
+        ``p75`` and ``iqr`` — the stats block of a benchmark row.
+    """
+    xs = sorted(samples)
+    return {
+        "n": len(xs),
+        "min": xs[0],
+        "max": xs[-1],
+        "mean": sum(xs) / len(xs),
+        "median": median(xs),
+        "p25": quantile(xs, 0.25),
+        "p75": quantile(xs, 0.75),
+        "iqr": iqr(xs),
+    }

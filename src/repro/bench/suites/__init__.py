@@ -1,0 +1,87 @@
+"""Registered benchmark suites (name → module, device count).
+
+This table is intentionally import-light: suite modules import jax and the
+model/PDE stacks, so they are only imported inside the child process that
+runs them (`repro.bench.cli` spawns one child per suite with
+``--xla_force_host_platform_device_count`` pinned to ``n_devices``).
+
+A suite module provides::
+
+    def build(cfg: BenchConfig) -> list[Case]          # required
+    def extras(cfg, rows) -> (extra_rows, invariants)  # optional
+
+``extras`` runs after every case, sees the measured rows, and returns
+free-form reported rows (speedup ratios, cache counters) plus the
+machine-checked boolean ``invariants`` that ``repro.bench.compare --smoke``
+gates on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SuiteSpec:
+    """Registry entry for one suite.
+
+    Attributes:
+        name: CLI name (``--suite name``) and artifact key
+            (``BENCH_<name>.json``).
+        module: import path of the suite module (child-process only).
+        n_devices: emulated device count the suite runs under.
+        description: one-line summary for ``--list``.
+    """
+
+    name: str
+    module: str
+    n_devices: int
+    description: str
+
+
+_ALL = [
+    SuiteSpec("p2p", "repro.bench.suites.p2p", 2,
+              "OMB-style point-to-point latency + windowed bandwidth sweep "
+              "(paper Listing 5 pattern, 2 ranks)"),
+    SuiteSpec("collectives", "repro.bench.suites.collectives", 8,
+              "collective microbenchmarks: blocking, nonblocking, "
+              "persistent plans, neighborhood (8 ranks)"),
+    SuiteSpec("halo", "repro.bench.suites.halo", 8,
+              "Cahn-Hilliard strong scaling (paper Fig. 2) + halo-exchange "
+              "lowering sweep"),
+    SuiteSpec("mpdata", "repro.bench.suites.mpdata", 8,
+              "MPDATA decomposition layouts (paper Fig. 3)"),
+    SuiteSpec("pi", "repro.bench.suites.pi", 4,
+              "pi benchmark: JIT speedup + JIT-resident vs round-trip "
+              "communication (paper Listings 1-4 / Fig. 1)"),
+    SuiteSpec("trainer", "repro.bench.suites.trainer", 8,
+              "trainer comm backends: jmpi / int8-compressed / round-trip "
+              "/ hostbridge (ms per step)"),
+    SuiteSpec("kernels", "repro.bench.suites.kernels", 1,
+              "kernel-structure twins: blockwise attention, chunked SSD "
+              "(single device)"),
+]
+
+SUITES: dict[str, SuiteSpec] = {s.name: s for s in _ALL}
+
+
+def resolve(names: str | None) -> list[SuiteSpec]:
+    """Resolve a CLI ``--suite`` value to specs.
+
+    Args:
+        names: comma-separated suite names, ``"all"``, or None (= all).
+    Returns:
+        The matching specs in registry order.
+    Raises:
+        SystemExit: naming an unknown suite (message lists known ones).
+    """
+    if names in (None, "", "all"):
+        return list(_ALL)
+    specs = []
+    for name in names.split(","):
+        name = name.strip()
+        if name not in SUITES:
+            raise SystemExit(
+                f"unknown suite {name!r}; known: {', '.join(SUITES)}")
+        specs.append(SUITES[name])
+    return specs

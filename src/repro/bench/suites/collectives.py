@@ -1,0 +1,291 @@
+"""Collective microbenchmark suite (8 ranks).
+
+Per op × payload size, µs/call of the JIT-resident collective (the whole
+chained loop is ONE compiled program, amortizing dispatch):
+
+* blocking ops — ``allreduce``, ``ring_allreduce``, ``allgather``,
+  ``alltoall``, ``bcast``, ``compressed8`` (the int8-wire allreduce);
+* nonblocking — ``iallreduce`` completed through the unified ``wait``;
+* persistent — a frozen ``allreduce_init`` plan restarted per step, next
+  to the ad-hoc chain it replaces (same lowering, same HLO);
+* neighborhood — ``neighbor_alltoall`` on a periodic 2×4 Cartesian grid.
+
+``extras`` adds the plan-cache reuse measurement (trace-time of the ad-hoc
+vs plan program, cache hit/miss counters → the ``plan_reuse`` invariant)
+and a mini algorithm sweep driving the tuner's policy derivation (the
+``policy_derived`` invariant) — the two facts the CI smoke gate checks via
+``repro.bench.compare --smoke`` instead of grepping stdout.
+"""
+
+from __future__ import annotations
+
+import timeit
+
+from repro.bench.core import BenchConfig, Case, free_row
+
+FULL_SIZES = (1024, 65536, 1048576)
+QUICK_SIZES = (1024, 65536)
+OPS = ("allreduce", "ring_allreduce", "allgather", "alltoall", "bcast",
+       "compressed8", "iallreduce")
+PLAN_CHAIN = 24
+
+
+def _inner(cfg: BenchConfig) -> int:
+    return 10 if cfg.quick else 50
+
+
+def _mesh1d():
+    import jax
+    from repro.core import compat
+    return compat.make_mesh((len(jax.devices()),), ("ranks",))
+
+
+def _op_build(op: str, inner: int):
+    def build(size: int):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        import repro.core as jmpi
+
+        mesh = _mesh1d()
+
+        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+        def f(x):
+            def body(i, acc):
+                if op == "allreduce":
+                    _, y = jmpi.allreduce(acc)
+                elif op == "ring_allreduce":
+                    _, y = jmpi.ring_allreduce(acc)
+                elif op == "allgather":
+                    _, g = jmpi.allgather(acc)
+                    y = g.reshape(jmpi.size(), -1).sum(0)
+                elif op == "alltoall":
+                    _, y = jmpi.alltoall(acc)
+                elif op == "bcast":
+                    _, y = jmpi.bcast(acc, root=0)
+                elif op == "compressed8":
+                    st = jmpi.init_state(acc)
+                    _, y, _ = jmpi.compressed_allreduce(acc, st, bits=8)
+                elif op == "iallreduce":
+                    _, y = jmpi.wait(jmpi.iallreduce(acc))
+                else:
+                    raise ValueError(op)
+                return y / jnp.maximum(jnp.abs(y).max(), 1.0)
+
+            return jax.lax.fori_loop(0, inner, body, x)
+
+        x = jnp.ones((size,), jnp.float32)
+        return lambda: f(x).block_until_ready()
+
+    return build
+
+
+def _persistent_build(adhoc: bool, chain: int):
+    """K chained allreduces per call: per-call registry dispatch (ad-hoc)
+    vs one frozen plan restarted K times (persistent)."""
+    def build(size: int):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        import repro.core as jmpi
+
+        mesh = _mesh1d()
+        n = mesh.devices.size
+
+        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+        def f(x):
+            acc = x
+            if adhoc:
+                for _ in range(chain):
+                    _, acc = jmpi.allreduce(acc)
+                    acc = acc / n
+            else:
+                comm = jmpi.world()
+                plan = comm.allreduce_init(
+                    jax.ShapeDtypeStruct(x.shape, x.dtype))
+                for _ in range(chain):
+                    acc = jmpi.wait(plan.start(acc))[1] / n
+            return acc
+
+        x = jnp.ones((size,), jnp.float32)
+        return lambda: f(x).block_until_ready()
+
+    return build
+
+
+def _neighbor_build(inner: int):
+    def build(size: int):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        import repro.core as jmpi
+        from repro.core import compat
+
+        n_dev = len(jax.devices())
+        rows = min(2, n_dev)
+        mesh = compat.make_mesh((rows, n_dev // rows), ("px", "py"))
+
+        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+        def f(x):
+            cart = jmpi.world().cart_create(mesh.devices.shape,
+                                            periods=(True, True))
+
+            def body(i, acc):
+                _, out = cart.neighbor_alltoall(acc)
+                return out / jnp.maximum(jnp.abs(out).max(), 1.0) + acc * 0
+
+            return jax.lax.fori_loop(0, inner, body, x)
+
+        x = jnp.ones((4, size), jnp.float32)  # 2·ndims stacked slots
+        return lambda: f(x).block_until_ready()
+
+    return build
+
+
+def build(cfg: BenchConfig) -> list[Case]:
+    """Build the collective cases for ``cfg``."""
+    sizes = QUICK_SIZES if cfg.quick else FULL_SIZES
+    inner = _inner(cfg)
+    nbytes = lambda size: size * 4  # noqa: E731 - float32 payload
+
+    def gbps(op: str):
+        def derived(size, sec, _op=op):
+            import jax
+            n = len(jax.devices())
+            wire = size * 4 * (2 * (n - 1) / n if "allreduce" in _op else 1)
+            return {"eff_GBps": wire / sec / 1e9}
+        return derived
+
+    def divisible(size: int) -> bool:
+        import jax
+        return size % len(jax.devices()) == 0
+
+    cases = [
+        Case(name=f"coll_{op}", build=_op_build(op, inner), sizes=sizes,
+             inner=inner, unit="us", nbytes=nbytes, derived=gbps(op),
+             sweepable=True,
+             size_ok=divisible if op == "alltoall" else None)
+        for op in OPS
+    ]
+    chain = 8 if cfg.quick else PLAN_CHAIN
+    cases += [
+        Case(name="coll_allreduce_adhoc_chain",
+             build=_persistent_build(adhoc=True, chain=chain),
+             sizes=(65536,), inner=chain, unit="us", nbytes=nbytes),
+        Case(name="coll_allreduce_persistent",
+             build=_persistent_build(adhoc=False, chain=chain),
+             sizes=(65536,), inner=chain, unit="us", nbytes=nbytes),
+        Case(name="coll_neighbor_alltoall", build=_neighbor_build(inner),
+             sizes=QUICK_SIZES if cfg.quick else (1024, 65536, 262144),
+             inner=inner, unit="us", nbytes=lambda s: 4 * s * 4,
+             sweepable=True),
+    ]
+    return cases
+
+
+def _plan_reuse_rows(cfg: BenchConfig) -> tuple[list[dict], bool]:
+    """Trace-time + plan-cache measurement backing the ``plan_reuse``
+    invariant: the second trace of the plan program must serve its
+    ``allreduce_init`` from the cache (no new misses, new hits)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    import repro.core as jmpi
+    from repro.core import compat
+
+    chain = 8 if cfg.quick else PLAN_CHAIN
+    size = 65536
+    x = jnp.ones((size,), jnp.float32)
+
+    mesh = compat.make_mesh((len(jax.devices()),), ("ranks",))
+    n = mesh.devices.size
+
+    def adhoc_fn():
+        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+        def f(x):
+            acc = x
+            for _ in range(chain):
+                _, acc = jmpi.allreduce(acc)
+                acc = acc / n
+            return acc
+        return f
+
+    def plan_fn():
+        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+        def f(x):
+            comm = jmpi.world()
+            plan = comm.allreduce_init(
+                jax.ShapeDtypeStruct(x.shape, x.dtype))
+            acc = x
+            for _ in range(chain):
+                acc = jmpi.wait(plan.start(acc))[1] / n
+            return acc
+        return f
+
+    def lower_ms(build):
+        t0 = timeit.default_timer()
+        build().lower(x)
+        return (timeit.default_timer() - t0) * 1e3
+
+    jmpi.plan_cache_clear()
+    adhoc_t1, adhoc_t2 = lower_ms(adhoc_fn), lower_ms(adhoc_fn)
+    s0 = jmpi.plan_cache_stats()
+    plan_t1 = lower_ms(plan_fn)
+    s1 = jmpi.plan_cache_stats()
+    plan_t2 = lower_ms(plan_fn)           # second trace: *_init cache hit
+    s2 = jmpi.plan_cache_stats()
+
+    reuse_ok = s2["misses"] == s1["misses"] and s2["hits"] > s1["hits"]
+    rows = [
+        free_row("persistent_adhoc_trace_ms", adhoc_t1, unit="ms",
+                 size=size, derived={"second_ms": adhoc_t2,
+                                     "chain": float(chain)}),
+        free_row("persistent_plan_trace_ms", plan_t1, unit="ms",
+                 size=size, derived={"second_ms": plan_t2,
+                                     "chain": float(chain)}),
+        free_row("persistent_plan_cache_hits", s2["hits"], unit="count",
+                 size=size,
+                 derived={"misses": float(s2["misses"]),
+                          "first_trace_misses":
+                              float(s1["misses"] - s0["misses"]),
+                          "second_trace_hits":
+                              float(s2["hits"] - s1["hits"])}),
+    ]
+    return rows, reuse_ok
+
+
+def _policy_sweep_rows(cfg: BenchConfig) -> tuple[list[dict], bool]:
+    """Mini algorithm sweep → derived policy table (``policy_derived``)."""
+    from repro.core import registry
+    from repro.launch import collective_tuner
+
+    mesh = collective_tuner.tune_mesh()
+    sizes = (4096,) if cfg.quick else (1024, 65536)
+    records = collective_tuner.sweep(
+        mesh, sizes=sizes, ops=("allreduce",),
+        inner=5 if cfg.quick else 20)
+    rows = [
+        free_row(f"sweep_allreduce_{r['algorithm']}", r["us_per_call"],
+                 unit="us", size=r["numel"])
+        for r in records
+    ]
+    table = collective_tuner.build_policy(records)
+    derived_ok = isinstance(table, registry.PolicyTable) and \
+        bool(table.describe().strip())
+    return rows, derived_ok
+
+
+def extras(cfg: BenchConfig, rows: list[dict]
+           ) -> tuple[list[dict], dict]:
+    """Post-case hook: plan-cache reuse + policy derivation invariants."""
+    extra_rows: list[dict] = []
+    invariants: dict = {}
+    if cfg.wants("persistent"):
+        reuse_rows, reuse_ok = _plan_reuse_rows(cfg)
+        extra_rows += reuse_rows
+        invariants["plan_reuse"] = reuse_ok
+    if cfg.wants("sweep"):
+        sweep_rows, derived_ok = _policy_sweep_rows(cfg)
+        extra_rows += sweep_rows
+        invariants["policy_derived"] = derived_ok
+    return extra_rows, invariants

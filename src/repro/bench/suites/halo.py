@@ -1,0 +1,172 @@
+"""Halo suite: Cahn–Hilliard strong scaling + halo-exchange lowering sweep.
+
+Paper Fig. 2 (strong scaling): the 2-D Cahn–Hilliard solver at a fixed
+grid, decomposed over n ∈ {1, 2, 4, 8} ranks — run in ONE 8-device child
+via sub-meshes over the first n emulated devices (``case size`` = rank
+count, value = µs/step).
+
+Halo-exchange sweep (the PR-3 measurement, now a registered case set): the
+MPI-3 neighborhood-collective lowerings (``xla_native`` ppermute shifts vs
+the p2p-fused ``ring``) against the hand-built persistent-``sendrecv_init``
+baseline the topology subsystem replaced (``case size`` = grid points per
+side).
+
+``extras`` derives the ``halo_neighbor_vs_p2p`` ratio row (best neighbor
+lowering over the p2p baseline — the PR-3 result was 0.54x).  The ratio is
+reported, not an invariant: wall-clock ratios on a shared CPU runner are a
+compare-gate concern (thresholded), not a boolean fact.
+"""
+
+from __future__ import annotations
+
+from repro.bench.core import BenchConfig, Case, free_row
+
+SCALING_RANKS = (1, 2, 4, 8)
+
+
+def _grid_steps(cfg: BenchConfig) -> tuple[int, int]:
+    return (64, 10) if cfg.quick else (256, 100)
+
+
+def _sweep_grid_steps(cfg: BenchConfig) -> tuple[int, int]:
+    return (64, 10) if cfg.quick else (128, 50)
+
+
+def _decomp(n: int) -> tuple[int, int]:
+    rows = min(2, n)
+    return rows, n // rows
+
+
+def _scaling_build(steps: int, grid: int):
+    def build(n_ranks: int):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core import compat
+        from repro.pde import cahn_hilliard as ch
+
+        n = min(n_ranks, len(jax.devices()))
+        rows, cols = _decomp(n)
+        mesh = compat.make_mesh((rows, cols), ("px", "py"))
+        rng = np.random.default_rng(0)
+        c0 = jnp.asarray(0.5 + 0.01 * rng.standard_normal((grid, grid)),
+                         jnp.float32)
+        run = ch.make_solver(mesh, (rows, cols), inner_steps=steps)
+
+        # correctness check on the first (trace) call only: a full-grid
+        # isfinite reduction + host sync must not pollute the timed
+        # steady-state samples
+        checked: list[bool] = []
+
+        def thunk():
+            out = run(c0)
+            out.block_until_ready()
+            if not checked:
+                assert bool(jnp.isfinite(out).all())
+                checked.append(True)
+            return out
+
+        return thunk
+
+    return build
+
+
+def _p2p_exchange_2d(field, cart, h: int = 1):
+    """The pre-topology halo exchange: persistent ``sendrecv_init`` plans
+    along ``cart_shift_perm`` patterns — the baseline the neighborhood
+    collectives are swept against."""
+    import jax
+    import jax.numpy as jnp
+    import repro.core as jmpi
+
+    def ax(d, lo, hi):
+        if cart.dims[d] == 1:
+            return hi, lo
+        dn = cart.sendrecv_init(jax.ShapeDtypeStruct(hi.shape, hi.dtype),
+                                pairs=cart.cart_shift_perm(d, +1))
+        up = cart.sendrecv_init(jax.ShapeDtypeStruct(lo.shape, lo.dtype),
+                                pairs=cart.cart_shift_perm(d, -1))
+        return jmpi.wait(dn.start(hi))[1], jmpi.wait(up.start(lo))[1]
+
+    lead, trail = ax(0, field[:h, :], field[-h:, :])
+    field = jnp.concatenate([lead, field, trail], axis=0)
+    lead, trail = ax(1, field[:, :h], field[:, -h:])
+    return jnp.concatenate([lead, field, trail], axis=1)
+
+
+def _sweep_build(variant: str, steps: int):
+    def build(grid: int):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+        import repro.core as jmpi
+        from repro.core import compat
+        from repro.pde.stencil import halo_exchange_2d, laplacian
+
+        n_dev = len(jax.devices())
+        rows, cols = _decomp(n_dev)
+        mesh = compat.make_mesh((rows, cols), ("px", "py"))
+        rng = np.random.default_rng(0)
+        c0 = jnp.asarray(0.5 + 0.01 * rng.standard_normal((grid, grid)),
+                         jnp.float32)
+
+        if variant == "p2p_baseline":
+            exchange = _p2p_exchange_2d
+        else:
+            exchange = lambda f, cart: halo_exchange_2d(  # noqa: E731
+                f, cart, algorithm=variant)
+
+        @jmpi.spmd(mesh, in_specs=P("px", "py"), out_specs=P("px", "py"))
+        def run(c):
+            cart = jmpi.world().cart_create((rows, cols),
+                                            periods=(True, True))
+
+            def body(i, f):
+                fh = exchange(f, cart)
+                return f + 1e-3 * laplacian(fh)
+
+            return jax.lax.fori_loop(0, steps, body, c)
+
+        checked: list[bool] = []
+
+        def thunk():
+            out = run(c0)
+            out.block_until_ready()
+            if not checked:
+                assert bool(jnp.isfinite(out).all()), variant
+                checked.append(True)
+            return out
+
+        return thunk
+
+    return build
+
+
+def build(cfg: BenchConfig) -> list[Case]:
+    """Build the scaling + sweep cases for ``cfg``."""
+    grid, steps = _grid_steps(cfg)
+    sweep_grid, sweep_steps = _sweep_grid_steps(cfg)
+    ranks = (1, 8) if cfg.quick else SCALING_RANKS
+    cases = [
+        Case(name="cahn_hilliard", build=_scaling_build(steps, grid),
+             sizes=ranks, inner=steps, unit="us"),
+    ]
+    for variant in ("xla_native", "ring", "p2p_baseline"):
+        cases.append(Case(
+            name=f"halo_{variant}", build=_sweep_build(variant, sweep_steps),
+            sizes=(sweep_grid,), inner=sweep_steps, unit="us"))
+    return cases
+
+
+def extras(cfg: BenchConfig, rows: list[dict]) -> tuple[list[dict], dict]:
+    """Derive the neighbor-vs-p2p ratio row."""
+    by_name = {r["name"]: r["value"] for r in rows}
+    extra: list[dict] = []
+    if "halo_p2p_baseline" in by_name and "halo_xla_native" in by_name:
+        best = min(by_name["halo_xla_native"],
+                   by_name.get("halo_ring", float("inf")))
+        ratio = best / by_name["halo_p2p_baseline"]
+        extra.append(free_row("halo_neighbor_vs_p2p", ratio,
+                              derived={"best_us": best}))
+    return extra, {}

@@ -1,0 +1,101 @@
+"""Kernel-structure suite (single device).
+
+Interpret-mode Pallas timings are meaningless (Python loop per grid step),
+so this measures the XLA-native *twins* sharing the kernels' algorithmic
+structure against their naive counterparts — the blockwise-vs-naive
+attention memory/latency trade and the chunked-vs-sequential SSD scan.
+``case size`` = sequence length.
+"""
+
+from __future__ import annotations
+
+from repro.bench.core import BenchConfig, Case, free_row
+
+ATTN_BLOCK = 512
+
+
+def _seqs(cfg: BenchConfig) -> tuple[int, ...]:
+    return (512,) if cfg.quick else (2048,)
+
+
+def _attn_build(blockwise: bool):
+    def build(s: int):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.models.attention import _sdpa, blockwise_sdpa, causal_mask
+
+        b, h, kh, d = 1, 4, 2, 64
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.bfloat16)
+        k = jnp.asarray(rng.standard_normal((b, s, kh, d)), jnp.bfloat16)
+        v = jnp.asarray(rng.standard_normal((b, s, kh, d)), jnp.bfloat16)
+        block = min(ATTN_BLOCK, s)
+        if blockwise:
+            f = jax.jit(lambda q, k, v: blockwise_sdpa(
+                q, k, v, kh, q_block=block, kv_block=block))
+        else:
+            f = jax.jit(lambda q, k, v: _sdpa(
+                q, k, v, causal_mask(s)[None, None, None], kh))
+        return lambda: f(q, k, v).block_until_ready()
+
+    return build
+
+
+def _ssd_build(chunked: bool):
+    def build(s: int):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.models.ssm import ssd_chunked
+        from repro.kernels.mamba2_ssd.ref import ssd_scan_ref
+
+        b, H, P, N = 1, 8, 32, 64
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((b, s, H, P)) * 0.5, jnp.float32)
+        dt = jnp.abs(jnp.asarray(rng.standard_normal((b, s, H)) * 0.3,
+                                 jnp.float32)) + 0.01
+        B = jnp.asarray(rng.standard_normal((b, s, N)) * 0.5, jnp.float32)
+        C = jnp.asarray(rng.standard_normal((b, s, N)) * 0.5, jnp.float32)
+        A = -jnp.abs(jnp.asarray(rng.uniform(0.5, 2.0, H), jnp.float32))
+        D = jnp.zeros((H,), jnp.float32)
+        if chunked:
+            f = jax.jit(lambda: ssd_chunked(x, dt, A, B, C, chunk=64)[0])
+        else:
+            f = jax.jit(lambda: ssd_scan_ref(
+                jnp.moveaxis(x, 2, 1), jnp.moveaxis(dt, 2, 1),
+                B, C, A, D)[0])
+        return lambda: f().block_until_ready()
+
+    return build
+
+
+def build(cfg: BenchConfig) -> list[Case]:
+    """Build the kernel-twin cases for ``cfg``."""
+    seqs = _seqs(cfg)
+    return [
+        Case(name="attn_naive", build=_attn_build(blockwise=False),
+             sizes=seqs, unit="us"),
+        Case(name="attn_blockwise", build=_attn_build(blockwise=True),
+             sizes=seqs, unit="us"),
+        Case(name="ssd_sequential", build=_ssd_build(chunked=False),
+             sizes=seqs, unit="us"),
+        Case(name="ssd_chunked", build=_ssd_build(chunked=True),
+             sizes=seqs, unit="us"),
+    ]
+
+
+def extras(cfg: BenchConfig, rows: list[dict]) -> tuple[list[dict], dict]:
+    """Structure-win ratio rows (naive/blockwise, sequential/chunked)."""
+    extra: list[dict] = []
+    for s in _seqs(cfg):
+        vals = {r["name"]: r["value"] for r in rows if r["size"] == s}
+        if vals.get("attn_blockwise") and vals.get("attn_naive"):
+            extra.append(free_row("attn_blockwise_speedup",
+                                  vals["attn_naive"] /
+                                  vals["attn_blockwise"], size=s))
+        if vals.get("ssd_chunked") and vals.get("ssd_sequential"):
+            extra.append(free_row("ssd_chunked_speedup",
+                                  vals["ssd_sequential"] /
+                                  vals["ssd_chunked"], size=s))
+    return extra, {}

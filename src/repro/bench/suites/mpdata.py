@@ -1,0 +1,89 @@
+"""MPDATA decomposition-layout suite (paper Fig. 3, 8 ranks).
+
+The same 2-D advection problem decomposed along dim 0 (8×1), dim 1 (1×8)
+or both (2×4) — PyMPDATA-MPI exposes exactly this choice; the per-layout
+µs/step rows reproduce the paper's layout study.  ``case size`` = grid
+points per side.
+
+``extras`` re-runs the first layout for 5 steps against the single-device
+``reference_step`` oracle → the ``mpdata_oracle`` invariant (layouts must
+agree with the un-decomposed solver, not just be fast).
+"""
+
+from __future__ import annotations
+
+from repro.bench.core import BenchConfig, Case, free_row
+
+
+def _grid_steps(cfg: BenchConfig) -> tuple[int, int]:
+    return (64, 10) if cfg.quick else (256, 50)
+
+
+def _psi0(grid: int):
+    import jax.numpy as jnp
+    import numpy as np
+
+    x = np.arange(grid)
+    cx, cy, w = 0.375 * grid, 0.5 * grid, grid * grid / 128.0
+    return jnp.asarray(
+        np.exp(-((x - cx) ** 2)[:, None] / w - ((x - cy) ** 2)[None, :] / w)
+        + 0.01, jnp.float32)
+
+
+def _layouts():
+    import jax
+    n = len(jax.devices())
+    layouts = [(n, 1), (1, n)]
+    if n >= 4:
+        layouts.append((2, n // 2))
+    return layouts
+
+
+def _layout_build(rows: int, cols: int, steps: int):
+    def build(grid: int):
+        from repro.core import compat
+        from repro.pde import mpdata
+
+        mesh = compat.make_mesh((rows, cols), ("px", "py"))
+        run = mpdata.make_solver(mesh, inner_steps=steps)
+        psi0 = _psi0(grid)
+        return lambda: run(psi0).block_until_ready()
+
+    return build
+
+
+def build(cfg: BenchConfig) -> list[Case]:
+    """One case per decomposition layout (names are device-count free so
+    baseline keys stay stable: run.py always drives this at 8 ranks)."""
+    grid, steps = _grid_steps(cfg)
+    return [
+        Case(name=f"mpdata_{rows}x{cols}",
+             build=_layout_build(rows, cols, steps),
+             sizes=(grid,), inner=steps, unit="us")
+        for rows, cols in _layouts()
+    ]
+
+
+def extras(cfg: BenchConfig, rows: list[dict]) -> tuple[list[dict], dict]:
+    """Oracle agreement: 5 decomposed steps vs ``reference_step``."""
+    import numpy as np
+    from repro.core import compat
+    from repro.pde import mpdata
+
+    grid, _ = _grid_steps(cfg)
+    psi0 = _psi0(grid)
+    want = psi0
+    for _ in range(5):
+        want = mpdata.reference_step(want)
+
+    layouts = _layouts() if not cfg.quick else _layouts()[:1]
+    ok = True
+    worst = 0.0
+    for rows_, cols_ in layouts:
+        mesh = compat.make_mesh((rows_, cols_), ("px", "py"))
+        got = mpdata.make_solver(mesh, inner_steps=5)(psi0)
+        err = float(np.abs(np.asarray(got) - np.asarray(want)).max())
+        worst = max(worst, err)
+        ok = ok and err < 1e-4
+    return ([free_row("mpdata_oracle_err", worst, unit="x", size=grid)],
+            {"mpdata_oracle": ok})

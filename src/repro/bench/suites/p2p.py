@@ -1,0 +1,106 @@
+"""OMB-style point-to-point suite (2 ranks): latency + windowed bandwidth.
+
+Reproduces the paper's per-size send/recv timing-loop format (its Listing-5
+exchange pattern, the OMB-Py ``osu_latency``/``osu_bw`` pair) on the
+JIT-resident transport:
+
+* ``p2p_latency`` — a tagged two-rank exchange (``sendrecv`` with pairs
+  ``0↔1``) chained ``INNER`` times inside ONE compiled program; the row
+  value is µs per exchange (both directions in flight, the SPMD analogue
+  of a ping-pong round).
+* ``p2p_bandwidth`` — OMB window pattern: ``WINDOW`` nonblocking exchanges
+  issued back-to-back, completed with one ``waitall``, per inner step;
+  derived column reports the effective per-direction GB/s.
+
+Sizes are float32 element counts; ``bytes`` records the per-message
+payload.  Both cases honor a CLI ``--sizes`` override.
+"""
+
+from __future__ import annotations
+
+from repro.bench.core import BenchConfig, Case
+
+FULL_SIZES = (256, 4096, 65536, 262144, 1048576)
+QUICK_SIZES = (1024, 65536)
+WINDOW = 8
+
+
+def _inner(cfg: BenchConfig) -> int:
+    return 10 if cfg.quick else 40
+
+
+def _mesh():
+    import jax
+    from repro.core import compat
+    return compat.make_mesh((min(2, len(jax.devices())),), ("ranks",))
+
+
+def _latency_build(inner: int):
+    def build(size: int):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        import repro.core as jmpi
+
+        mesh = _mesh()
+
+        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+        def f(x):
+            def body(i, acc):
+                _, y = jmpi.sendrecv(acc, pairs=[(0, 1), (1, 0)], tag=5)
+                return y
+
+            return jax.lax.fori_loop(0, inner, body, x)
+
+        x = jnp.ones((size,), jnp.float32)
+        return lambda: f(x).block_until_ready()
+
+    return build
+
+
+def _bandwidth_build(inner: int, window: int):
+    def build(size: int):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        import repro.core as jmpi
+
+        mesh = _mesh()
+
+        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+        def f(x):
+            def body(i, acc):
+                reqs = [jmpi.isendrecv(acc, pairs=[(0, 1), (1, 0)], tag=j)
+                        for j in range(window)]
+                _, outs = jmpi.waitall(reqs)
+                return outs[-1]
+
+            return jax.lax.fori_loop(0, inner, body, x)
+
+        x = jnp.ones((size,), jnp.float32)
+        return lambda: f(x).block_until_ready()
+
+    return build
+
+
+def build(cfg: BenchConfig) -> list[Case]:
+    """Build the p2p cases for ``cfg`` (quick mode shrinks grid + inner)."""
+    sizes = QUICK_SIZES if cfg.quick else FULL_SIZES
+    inner = _inner(cfg)
+    nbytes = lambda size: size * 4  # noqa: E731 - float32 payload
+
+    def bw_derived(size: int, sec_per_call: float) -> dict:
+        return {"GBps_per_dir": WINDOW * size * 4 / sec_per_call / 1e9,
+                "window": float(WINDOW)}
+
+    def lat_derived(size: int, sec_per_call: float) -> dict:
+        return {"msgs_per_s": 2.0 / sec_per_call}
+
+    return [
+        Case(name="p2p_latency", build=_latency_build(inner),
+             sizes=sizes, inner=inner, unit="us", nbytes=nbytes,
+             derived=lat_derived, sweepable=True),
+        Case(name="p2p_bandwidth", build=_bandwidth_build(inner, WINDOW),
+             sizes=sizes, inner=inner, unit="us", nbytes=nbytes,
+             derived=bw_derived, sweepable=True),
+    ]

@@ -1,0 +1,253 @@
+"""π suite (paper Listings 1–4 / Fig. 1, 4 ranks).
+
+* ``pi_python`` / ``pi_jit`` — Listing 1: the compute kernel with and
+  without JIT (the paper's ~100× speedup headline).
+* ``pi_jmpi`` — Listing 3: the whole N_TIMES loop, compute *and*
+  allreduce, in ONE compiled program.
+* ``pi_roundtrip`` — the same psum allreduce but one jit dispatch per
+  iteration with a host sync in between: the paper's
+  leave-the-compiled-block-every-call pattern with the communication
+  mechanism held fixed, so roundtrip/jmpi isolates exactly the Fig. 1
+  overhead.
+* ``pi_hostbridge`` — Listing 2: per-iteration dispatch + host numpy
+  reduction (the mpi4py failure mode; different transport, see the
+  emulated-transport caveat in docs/BENCHMARKS.md).
+
+``case size`` = the communication-frequency divisor ``x``
+(``n_intervals = N_TIMES / x`` — higher x = more communication-bound).
+``extras`` emits the Fig. 1 speedup ratios and the π-accuracy invariant.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.bench.core import BenchConfig, Case, free_row
+
+MAX_INTERVALS = 100000
+RTOL = 1e-3
+
+_ACCURACY: dict[str, bool] = {}
+
+
+def _n_times(cfg: BenchConfig) -> int:
+    return 40 if cfg.quick else 200
+
+
+def _factors(cfg: BenchConfig) -> tuple[int, ...]:
+    return (1, 4) if cfg.quick else (1, 4, 16)
+
+
+def _mesh():
+    import jax
+    from repro.core import compat
+    return compat.make_mesh((len(jax.devices()),), ("ranks",))
+
+
+def _pi_part_python(n_intervals: int, rank: int = 0, size: int = 1) -> float:
+    h = 1.0 / n_intervals
+    partial_sum = 0.0
+    for i in range(rank + 1, n_intervals, size):
+        x = h * (i - 0.5)
+        partial_sum += 4.0 / (1.0 + x * x)
+    return h * partial_sum
+
+
+def _python_build(n_intervals: int):
+    def build(size: int):
+        def thunk():
+            pi = _pi_part_python(n_intervals)
+            assert abs(pi - math.pi) < 1e-2
+            return pi
+
+        return thunk
+
+    return build
+
+
+def _jit_build(n_intervals: int):
+    def build(size: int):
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def get_pi_part(n):
+            idx = jnp.arange(1, MAX_INTERVALS)
+            h = 1.0 / n
+            x = h * (idx - 0.5)
+            vals = jnp.where(idx < n, 4.0 / (1.0 + x * x), 0.0)
+            return h * jnp.sum(vals)
+
+        narr = jnp.float32(n_intervals)
+
+        def thunk():
+            out = get_pi_part(narr)
+            out.block_until_ready()
+            return out
+
+        out = thunk()
+        assert abs(float(out) - math.pi) < 1e-2
+        _ACCURACY["pi_jit"] = True
+        return thunk
+
+    return build
+
+
+def _jmpi_build(n_times: int):
+    def build(x_factor: int):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        import repro.core as jmpi
+
+        mesh = _mesh()
+        n_intervals = max(64, n_times // x_factor)
+
+        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+        def pi_loop(dummy):
+            rank = jmpi.rank()
+            size = jmpi.size()
+            h = 1.0 / n_intervals
+            idx = jnp.arange(0, n_intervals // size + 1)
+
+            def one(i, acc):
+                gidx = rank + 1 + idx * size
+                xs = h * (gidx - 0.5)
+                part = h * jnp.sum(jnp.where(gidx < n_intervals + 1,
+                                             4.0 / (1.0 + xs * xs), 0.0))
+                _, pi = jmpi.allreduce(part + 0.0 * acc)
+                return pi
+
+            return jax.lax.fori_loop(0, n_times, one, 0.0 * dummy)
+
+        z = jnp.float32(0.0)
+        pi = float(pi_loop(z))
+        assert abs(pi - math.pi) / math.pi < RTOL, pi
+        _ACCURACY[f"pi_jmpi_x{x_factor}"] = True
+        return lambda: pi_loop(z).block_until_ready()
+
+    return build
+
+
+def _roundtrip_build(n_times: int):
+    def build(x_factor: int):
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        import repro.core as jmpi
+
+        mesh = _mesh()
+        n_intervals = max(64, n_times // x_factor)
+
+        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+        def one(acc):
+            rank = jmpi.rank()
+            size = jmpi.size()
+            h = 1.0 / n_intervals
+            idx = jnp.arange(0, n_intervals // size + 1)
+            gidx = rank + 1 + idx * size
+            xs = h * (gidx - 0.5)
+            part = h * jnp.sum(jnp.where(gidx < n_intervals + 1,
+                                         4.0 / (1.0 + xs * xs), 0.0))
+            _, pi = jmpi.allreduce(part + 0.0 * acc)
+            return pi
+
+        def thunk():
+            pi = jnp.float32(0.0)
+            for _ in range(n_times):
+                pi = one(pi * 0.0)
+                pi.block_until_ready()        # the host round-trip
+            return float(pi)
+
+        pi = thunk()
+        assert abs(pi - math.pi) / math.pi < RTOL, pi
+        _ACCURACY[f"pi_roundtrip_x{x_factor}"] = True
+        return thunk
+
+    return build
+
+
+def _hostbridge_build(n_times: int):
+    def build(x_factor: int):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        mesh = _mesh()
+        n_dev = mesh.devices.size
+        n_intervals = max(64, n_times // x_factor)
+
+        @jax.jit
+        def part_all_ranks(dummy):
+            ranks = jnp.arange(n_dev)
+            h = 1.0 / n_intervals
+            idx = jnp.arange(0, n_intervals // n_dev + 1)
+            gidx = ranks[:, None] + 1 + idx[None, :] * n_dev
+            xs = h * (gidx - 0.5)
+            parts = h * jnp.sum(jnp.where(gidx < n_intervals + 1,
+                                          4.0 / (1.0 + xs * xs), 0.0),
+                                axis=1)
+            return parts + 0.0 * dummy
+
+        def thunk():
+            pi = 0.0
+            for _ in range(n_times):
+                parts = part_all_ranks(jnp.float32(pi * 0.0))
+                parts.block_until_ready()        # leave the compiled block
+                pi = float(np.sum(np.asarray(parts)))
+            return pi
+
+        pi = thunk()
+        assert abs(pi - math.pi) / math.pi < RTOL, pi
+        _ACCURACY[f"pi_hostbridge_x{x_factor}"] = True
+        return thunk
+
+    return build
+
+
+def build(cfg: BenchConfig) -> list[Case]:
+    """Build the π cases for ``cfg``."""
+    _ACCURACY.clear()
+    n_times = _n_times(cfg)
+    n_intervals = 20000 if cfg.quick else MAX_INTERVALS
+    factors = _factors(cfg)
+    return [
+        Case(name="pi_python", build=_python_build(n_intervals),
+             sizes=(n_intervals,), unit="ms"),
+        Case(name="pi_jit", build=_jit_build(n_intervals),
+             sizes=(n_intervals,), unit="us"),
+        Case(name="pi_jmpi", build=_jmpi_build(n_times), sizes=factors,
+             unit="ms"),
+        Case(name="pi_roundtrip", build=_roundtrip_build(n_times),
+             sizes=factors, unit="ms"),
+        Case(name="pi_hostbridge", build=_hostbridge_build(n_times),
+             sizes=factors, unit="ms"),
+    ]
+
+
+def extras(cfg: BenchConfig, rows: list[dict]) -> tuple[list[dict], dict]:
+    """Fig. 1 speedup ratios + the π-accuracy invariant."""
+    from repro.bench.schema import TIME_UNITS
+
+    def us(name: str, size: int) -> float | None:
+        for r in rows:
+            if r["name"] == name and r["size"] == size:
+                return r["value"] * TIME_UNITS[r["unit"]]
+        return None
+
+    extra: list[dict] = []
+    n_intervals = 20000 if cfg.quick else MAX_INTERVALS
+    t_py, t_jit = us("pi_python", n_intervals), us("pi_jit", n_intervals)
+    if t_py and t_jit:
+        extra.append(free_row("pi_jit_speedup", t_py / t_jit,
+                              size=n_intervals))
+    for x in _factors(cfg):
+        t_jmpi, t_rt = us("pi_jmpi", x), us("pi_roundtrip", x)
+        t_host = us("pi_hostbridge", x)
+        if t_jmpi and t_rt:
+            extra.append(free_row("pi_jitresident_speedup", t_rt / t_jmpi,
+                                  size=x))
+        if t_jmpi and t_host:
+            extra.append(free_row("pi_vs_hostbridge_speedup",
+                                  t_host / t_jmpi, size=x))
+    return extra, {"pi_accurate": all(_ACCURACY.values())
+                   and bool(_ACCURACY)}

@@ -1,0 +1,155 @@
+"""Trainer comm-backend suite (the paper's claim at trainer scale, 8 DP
+ranks).
+
+Same tiny LM, same data:
+
+* ``trainer_jmpi`` — whole train step (fwd/bwd + in-program gradient
+  allreduce + optimizer) in ONE compiled block;
+* ``trainer_jmpi_int8`` — ditto with the compressed gradient allreduce;
+* ``trainer_roundtrip`` — the SAME in-program psum reduce, but the step
+  split into two dispatches with a host sync between them (mechanism held
+  fixed → isolates the leave-the-compiled-block cost);
+* ``trainer_hostbridge`` — per-rank grads to host, numpy reduction,
+  re-upload (the full mpi4py pattern).
+
+Rows are ms/step (``case size`` = sequence length); ``extras`` emits the
+speedup-vs-roundtrip ratios.
+"""
+
+from __future__ import annotations
+
+from repro.bench.core import BenchConfig, Case, free_row
+
+
+def _seq(cfg: BenchConfig) -> int:
+    return 32 if cfg.quick else 64
+
+
+def _setup(cfg: BenchConfig, seq: int):
+    import jax
+    from repro.core import compat
+    from repro.configs import get_tiny
+    from repro.launch.specs import synth_batch
+
+    model_cfg = get_tiny("yi-6b")
+    mesh = compat.make_mesh((len(jax.devices()),), ("data",))
+    n = mesh.devices.size
+    batch = synth_batch(model_cfg, batch=(4 if cfg.quick else 8) * n,
+                        seq=seq, kind="train")
+    return model_cfg, mesh, batch
+
+
+def _jmpi_build(cfg: BenchConfig, bits: int):
+    def build(seq: int):
+        import jax
+        import repro.core as jmpi
+        from repro.configs.base import RunConfig
+        from repro.models import lm as lm_lib
+        from repro.train import optim
+        from repro.train.trainer import build_jmpi_train_step
+
+        model_cfg, mesh, batch = _setup(cfg, seq)
+        rc = RunConfig(learning_rate=1e-3, grad_compression_bits=bits)
+        params = lm_lib.init_params(model_cfg, jax.random.PRNGKey(0))
+        opt = optim.init(params, rc)
+        comp = jax.tree.map(lambda p: jmpi.init_state(p), params)
+        step = build_jmpi_train_step(model_cfg, rc, mesh, None)
+
+        def thunk():
+            _p, _o, _c, loss = step(params, opt, comp, batch)
+            loss.block_until_ready()
+
+        return thunk
+
+    return build
+
+
+def _split_builds(cfg: BenchConfig):
+    """Build the roundtrip and hostbridge thunk factories (they share the
+    grad/apply jit fragments)."""
+
+    def make(kind: str):
+        def build(seq: int):
+            import jax
+            import jax.numpy as jnp
+            import numpy as np
+            from jax.sharding import PartitionSpec as P
+            from repro.core import compat
+            from repro.configs.base import RunConfig
+            from repro.models import lm as lm_lib
+            from repro.train import optim
+
+            model_cfg, mesh, batch = _setup(cfg, seq)
+            rc = RunConfig(learning_rate=1e-3)
+            params = lm_lib.init_params(model_cfg, jax.random.PRNGKey(0))
+            opt = optim.init(params, rc)
+            apply_fn = jax.jit(lambda p, g, o: optim.update(p, g, o, rc))
+
+            if kind == "roundtrip":
+                grad_fn = jax.jit(compat.shard_map(
+                    lambda p, b: jax.tree.map(
+                        lambda g: jax.lax.pmean(g, "data"),
+                        jax.grad(lambda pp: lm_lib.train_loss(
+                            pp, model_cfg, b)[0])(p)),
+                    mesh=mesh, in_specs=(P(), P("data")), out_specs=P(),
+                    check_vma=False))
+
+                def thunk():
+                    g = grad_fn(params, batch)
+                    jax.block_until_ready(g)   # leave the compiled block
+                    out = apply_fn(params, g, opt)
+                    jax.block_until_ready(out)
+            else:
+                grad_fn = jax.jit(compat.shard_map(
+                    lambda p, b: jax.tree.map(
+                        lambda g: g[None],
+                        jax.grad(lambda pp: lm_lib.train_loss(
+                            pp, model_cfg, b)[0])(p)),
+                    mesh=mesh, in_specs=(P(), P("data")),
+                    out_specs=P("data"), check_vma=False))
+
+                def thunk():
+                    gstack = grad_fn(params, batch)
+                    jax.block_until_ready(gstack)
+                    gmean = jax.tree.map(
+                        lambda g: jnp.asarray(np.asarray(g).mean(0)),
+                        gstack)
+                    out = apply_fn(params, gmean, opt)
+                    jax.block_until_ready(out)
+
+            return thunk
+
+        return build
+
+    return make("roundtrip"), make("hostbridge")
+
+
+def build(cfg: BenchConfig) -> list[Case]:
+    """Build the trainer-backend cases for ``cfg``."""
+    seq = _seq(cfg)
+    roundtrip, hostbridge = _split_builds(cfg)
+    return [
+        Case(name="trainer_jmpi", build=_jmpi_build(cfg, bits=0),
+             sizes=(seq,), unit="ms"),
+        Case(name="trainer_jmpi_int8", build=_jmpi_build(cfg, bits=8),
+             sizes=(seq,), unit="ms"),
+        Case(name="trainer_roundtrip", build=roundtrip, sizes=(seq,),
+             unit="ms"),
+        Case(name="trainer_hostbridge", build=hostbridge, sizes=(seq,),
+             unit="ms"),
+    ]
+
+
+def extras(cfg: BenchConfig, rows: list[dict]) -> tuple[list[dict], dict]:
+    """Speedup-vs-roundtrip ratio rows."""
+    seq = _seq(cfg)
+    by_name = {r["name"]: r["value"] for r in rows if r["size"] == seq}
+    extra: list[dict] = []
+    base = by_name.get("trainer_roundtrip")
+    if base:
+        for name in ("trainer_jmpi", "trainer_jmpi_int8",
+                     "trainer_hostbridge"):
+            if by_name.get(name):
+                extra.append(free_row(f"{name}_speedup_vs_roundtrip",
+                                      base / by_name[name], size=seq))
+    return extra, {}

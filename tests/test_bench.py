@@ -1,0 +1,339 @@
+"""Bench-core unit tests (host-side, no emulated devices, no jax).
+
+Covers the three pure layers of ``repro.bench``:
+
+1. statistics helpers against numpy oracles;
+2. artifact schema: round-trip, validator rejections;
+3. the compare gate: pass/fail/threshold edges, unit conversion, the
+   min-runtime noise floor, missing rows, smoke mode and the
+   ``--update-baselines`` workflow (end-to-end through the CLI ``main``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.bench import schema, stats
+from repro.bench.compare import (DEFAULT_THRESHOLD, compare_docs,
+                                 main as compare_main, smoke_check,
+                                 update_baselines)
+
+# ---------------------------------------------------------------------- #
+# stats vs numpy oracles
+# ---------------------------------------------------------------------- #
+
+SAMPLE_SETS = [
+    [3.0],
+    [1.0, 2.0],
+    [5.0, 1.0, 4.0, 2.0, 3.0],
+    list(np.random.default_rng(0).lognormal(0, 1, 17)),
+    list(np.random.default_rng(1).uniform(10, 20, 100)),
+]
+
+
+@pytest.mark.parametrize("xs", SAMPLE_SETS, ids=range(len(SAMPLE_SETS)))
+def test_stats_match_numpy(xs):
+    assert stats.median(xs) == pytest.approx(np.median(xs))
+    for q in (0.0, 0.25, 0.5, 0.75, 0.9, 1.0):
+        assert stats.quantile(xs, q) == pytest.approx(
+            np.quantile(xs, q), rel=1e-12)
+    want_iqr = np.quantile(xs, 0.75) - np.quantile(xs, 0.25)
+    assert stats.iqr(xs) == pytest.approx(want_iqr, rel=1e-12)
+    assert stats.min_of_k(xs) == min(xs)
+    assert stats.min_of_k(xs, k=1) == xs[0]
+    assert stats.min_of_k(xs, k=3) == min(xs[:3])
+
+
+def test_summarize_block():
+    xs = [4.0, 1.0, 3.0, 2.0]
+    s = stats.summarize(xs)
+    assert s["n"] == 4 and s["min"] == 1.0 and s["max"] == 4.0
+    assert s["mean"] == pytest.approx(2.5)
+    assert s["median"] == pytest.approx(np.median(xs))
+    assert s["iqr"] == pytest.approx(
+        np.quantile(xs, 0.75) - np.quantile(xs, 0.25))
+
+
+def test_stats_errors():
+    with pytest.raises(ValueError):
+        stats.median([])
+    with pytest.raises(ValueError):
+        stats.quantile([1.0], 1.5)
+    with pytest.raises(ValueError):
+        stats.min_of_k([1.0], k=0)
+    with pytest.raises(ValueError):
+        stats.min_of_k([])
+
+
+# ---------------------------------------------------------------------- #
+# schema round-trip + validation
+# ---------------------------------------------------------------------- #
+
+def _env(device_count=2, quick=True, policy_hash="abc"):
+    return {"jax": "0.0", "python": "3.10.0", "platform": "cpu",
+            "device_count": device_count, "policy_hash": policy_hash,
+            "quick": quick}
+
+
+def _row(name, value, size=0, unit="us", stats_block=True):
+    block = None
+    if stats_block:
+        block = {"n": 3, "min": value, "max": value, "mean": value,
+                 "median": value, "p25": value, "p75": value, "iqr": 0.0}
+    return {"name": name, "size": size, "bytes": None, "unit": unit,
+            "value": value, "trace_ms": 1.0, "stats": block,
+            "derived": None}
+
+
+def _doc(suite="p2p", rows=None, invariants=None, **env_kw):
+    rows = rows if rows is not None else [_row("lat", 100.0, size=1024)]
+    return schema.make_doc(suite, rows, invariants or {},
+                           {"quick": True, "repeats": 3, "warmup": 1},
+                           env=_env(**env_kw))
+
+
+def test_schema_roundtrip(tmp_path):
+    doc = _doc(invariants={"ok": True})
+    assert schema.validate(doc) == []
+    path = str(tmp_path / "BENCH_p2p.json")
+    schema.dump(doc, path)
+    loaded = schema.load(path)
+    assert loaded == json.loads(json.dumps(doc))  # JSON-stable
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d.pop("suite"), "suite"),
+    (lambda d: d.update(schema="bogus/v9"), "schema tag"),
+    (lambda d: d["env"].pop("policy_hash"), "policy_hash"),
+    (lambda d: d["rows"][0].update(unit="parsecs"), "unknown unit"),
+    (lambda d: d["rows"][0].update(value="fast"), "number"),
+    (lambda d: d["rows"][0]["stats"].pop("median"), "stats.median"),
+    (lambda d: d["rows"][0].update(size="big"), "size"),
+    (lambda d: d.update(invariants={"ok": "yes"}), "invariants"),
+    (lambda d: d.update(rows="nope"), "rows"),
+    (lambda d: d["rows"][0].update(gate="yes"), "gate"),
+])
+def test_schema_rejects(mutate, needle):
+    doc = _doc()
+    mutate(doc)
+    problems = schema.validate(doc)
+    assert problems and any(needle in p for p in problems), problems
+
+
+def test_dump_refuses_invalid(tmp_path):
+    doc = _doc()
+    doc.pop("suite")
+    with pytest.raises(ValueError):
+        schema.dump(doc, str(tmp_path / "bad.json"))
+
+
+# ---------------------------------------------------------------------- #
+# compare gate
+# ---------------------------------------------------------------------- #
+
+def test_compare_identical_passes():
+    failures, _ = compare_docs(_doc(), _doc())
+    assert failures == []
+
+
+def test_compare_2x_slowdown_fails():
+    base = _doc()
+    cur = _doc(rows=[_row("lat", 200.0, size=1024)])
+    failures, report = compare_docs(cur, base)
+    assert len(failures) == 1
+    assert "suite median ratio 2.00x" in failures[0]
+    assert any("above threshold" in line for line in report)
+
+
+def test_compare_suite_median_vs_row_cap():
+    """One noisy row among many doesn't fail the suite-median gate; a
+    catastrophic single row trips the row cap even when the median holds."""
+    names = ["a", "b", "c"]
+    base = _doc(rows=[_row(n, 100.0, size=1) for n in names])
+    noisy = _doc(rows=[_row("a", 100.0, size=1), _row("b", 100.0, size=1),
+                       _row("c", 400.0, size=1)])     # 4x: noise-band
+    failures, report = compare_docs(noisy, base)
+    assert failures == []
+    assert any("above threshold" in line for line in report)
+    capped = _doc(rows=[_row("a", 100.0, size=1), _row("b", 100.0, size=1),
+                        _row("c", 600.0, size=1)])    # 6x > 3*1.75 cap
+    failures, report = compare_docs(capped, base)
+    assert len(failures) == 1 and "row cap" in failures[0]
+    assert any("REGRESSED (row cap)" in line for line in report)
+    # uniform 2x: every ratio 2.0 -> suite median 2.0 -> fail
+    uniform = _doc(rows=[_row(n, 200.0, size=1) for n in names])
+    failures, _ = compare_docs(uniform, base)
+    assert failures and "suite median ratio 2.00x" in failures[0]
+
+
+def test_compare_threshold_edge():
+    base = _doc(rows=[_row("lat", 100.0, size=1024)])
+    at = _doc(rows=[_row("lat", 100.0 * DEFAULT_THRESHOLD, size=1024)])
+    above = _doc(rows=[_row("lat", 100.0 * DEFAULT_THRESHOLD + 0.1,
+                            size=1024)])
+    assert compare_docs(at, base)[0] == []        # ratio == threshold: pass
+    assert compare_docs(above, base)[0] != []     # just above: fail
+    # custom threshold overrides the default
+    assert compare_docs(at, base, threshold=1.2)[0] != []
+
+
+def test_compare_floor_skips_noise():
+    base = _doc(rows=[_row("tiny", 5.0, size=8)])      # < 30us floor
+    cur = _doc(rows=[_row("tiny", 500.0, size=8)])     # 100x "regression"
+    failures, report = compare_docs(cur, base)
+    assert failures == []
+    assert any("below floor" in line for line in report)
+    # raising the floor above a real row's baseline un-gates it too
+    base2 = _doc(rows=[_row("lat", 100.0, size=1024)])
+    cur2 = _doc(rows=[_row("lat", 300.0, size=1024)])
+    assert compare_docs(cur2, base2)[0] != []
+    assert compare_docs(cur2, base2, floor_us=200.0)[0] == []
+
+
+def test_compare_unit_conversion():
+    base = _doc(rows=[_row("step", 1.0, size=64, unit="ms")])
+    cur = _doc(rows=[_row("step", 2.0, size=64, unit="ms")])
+    failures, _ = compare_docs(cur, base)
+    assert failures and "2.00x" in failures[0]
+
+
+def test_compare_respects_gate_flag():
+    """Time-unit rows with gate:false (extras trace/sweep rows) are never
+    gated and never trigger missing-row failures."""
+    trace = _row("trace_ms", 100.0, size=1, unit="ms", stats_block=False)
+    trace["gate"] = False
+    base = _doc(rows=[_row("lat", 100.0, size=1), trace])
+    slow_trace = json.loads(json.dumps(trace))
+    slow_trace["value"] = 1000.0      # 10x trace "regression": reported only
+    cur = _doc(rows=[_row("lat", 100.0, size=1), slow_trace])
+    assert compare_docs(cur, base)[0] == []
+    # disappearing gate:false row is not a missing-row failure either
+    cur2 = _doc(rows=[_row("lat", 100.0, size=1)])
+    assert compare_docs(cur2, base)[0] == []
+
+
+def test_compare_ignores_free_units():
+    base = _doc(rows=[_row("speedup", 10.0, size=1, unit="x")])
+    cur = _doc(rows=[_row("speedup", 1.0, size=1, unit="x")])
+    assert compare_docs(cur, base)[0] == []
+
+
+def test_compare_missing_row_fails_new_row_passes():
+    base = _doc(rows=[_row("lat", 100.0, size=1024)])
+    cur_missing = _doc(rows=[_row("other", 100.0, size=1024)])
+    failures, _ = compare_docs(cur_missing, base)
+    assert failures and "missing" in failures[0]
+    cur_extra = _doc(rows=[_row("lat", 100.0, size=1024),
+                           _row("new", 5000.0, size=4)])
+    failures, report = compare_docs(cur_extra, base)
+    assert failures == []
+    assert any("new row" in line for line in report)
+
+
+def test_compare_suite_mismatch():
+    failures, _ = compare_docs(_doc(suite="p2p"), _doc(suite="halo"))
+    assert failures and "suite mismatch" in failures[0]
+
+
+def test_compare_env_mismatch_noted():
+    base = _doc(device_count=8, policy_hash="aaa")
+    cur = _doc(device_count=2, policy_hash="bbb")
+    failures, report = compare_docs(cur, base)
+    assert failures == []
+    assert sum("env." in line for line in report) == 2
+
+
+# ---------------------------------------------------------------------- #
+# smoke mode + update-baselines + CLI main
+# ---------------------------------------------------------------------- #
+
+def _write(doc, path):
+    with open(path, "w") as f:
+        json.dump(doc, f)
+
+
+def test_smoke_check(tmp_path):
+    good = str(tmp_path / "BENCH_p2p.json")
+    _write(_doc(invariants={"plan_reuse": True}), good)
+    assert smoke_check([good]) == []
+
+    bad_inv = str(tmp_path / "BENCH_halo.json")
+    _write(_doc(suite="halo", invariants={"oracle": False}), bad_inv)
+    assert any("invariant" in f for f in smoke_check([bad_inv]))
+
+    empty = str(tmp_path / "BENCH_empty.json")
+    _write(_doc(suite="empty", rows=[]), empty)
+    assert any("no rows" in f for f in smoke_check([empty]))
+
+    invalid = str(tmp_path / "BENCH_bad.json")
+    doc = _doc()
+    doc.pop("env")
+    _write(doc, invalid)
+    assert any("env" in f for f in smoke_check([invalid]))
+
+    assert smoke_check([]) != []   # nothing found is a failure
+
+
+def test_update_and_compare_cli_end_to_end(tmp_path, capsys):
+    cur_dir = tmp_path / "cur"
+    base_dir = tmp_path / "baselines"
+    cur_dir.mkdir()
+    doc = _doc(invariants={"plan_reuse": True})
+    schema.dump(doc, str(cur_dir / "BENCH_p2p.json"))
+
+    # no baseline yet: compare reports it but passes
+    rc = compare_main(["--current", str(cur_dir),
+                       "--baselines", str(base_dir)])
+    assert rc == 0
+    assert "no committed baseline" in capsys.readouterr().out
+
+    # adopt, then compare: pass
+    assert compare_main(["--current", str(cur_dir), "--baselines",
+                         str(base_dir), "--update-baselines"]) == 0
+    assert (base_dir / "p2p.json").exists()
+    assert compare_main(["--current", str(cur_dir),
+                         "--baselines", str(base_dir)]) == 0
+    assert "compare OK" in capsys.readouterr().out
+
+    # inject a 2x slowdown into every timed row: gate must fail
+    slow = json.loads(json.dumps(doc))
+    for row in slow["rows"]:
+        if row["unit"] in schema.TIME_UNITS:
+            row["value"] *= 2.0
+    schema.dump(slow, str(cur_dir / "BENCH_p2p.json"))
+    rc = compare_main(["--current", str(cur_dir),
+                       "--baselines", str(base_dir)])
+    assert rc == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+    # smoke mode only needs the current artifacts
+    assert compare_main(["--current", str(cur_dir), "--smoke"]) == 0
+    bad = json.loads(json.dumps(doc))
+    bad["invariants"] = {"plan_reuse": False}
+    schema.dump(bad, str(cur_dir / "BENCH_p2p.json"))
+    assert compare_main(["--current", str(cur_dir), "--smoke"]) == 1
+
+
+def test_update_baselines_helper(tmp_path):
+    cur = str(tmp_path / "BENCH_kernels.json")
+    schema.dump(_doc(suite="kernels"), cur)
+    written = update_baselines([cur], str(tmp_path / "b"))
+    assert written == [str(tmp_path / "b" / "kernels.json")]
+    assert schema.load(written[0])["suite"] == "kernels"
+
+
+def test_committed_baselines_are_schema_valid():
+    """Every committed baseline must parse under the current schema."""
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    base_dir = os.path.join(here, "benchmarks", "baselines")
+    names = [n for n in sorted(os.listdir(base_dir))
+             if n.endswith(".json")]
+    assert names, "no committed baselines found"
+    for name in names:
+        doc = schema.load(os.path.join(base_dir, name))
+        assert doc["suite"] == name[:-5]
+        assert doc["rows"]

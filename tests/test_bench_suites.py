@@ -1,0 +1,155 @@
+"""Suite smoke runs through the real CLI (one child process per suite).
+
+Every registered suite executes at tiny sizes (``--quick --repeats 1``)
+via ``python -m repro.bench`` — exactly the path CI's perf-gate uses — and
+must produce a schema-valid artifact.  One CLI child per suite is cached
+for the whole test process (same trick as ``repro.testing.module_results``)
+so parametrized assertions don't re-pay the run.
+
+The acceptance path is covered explicitly: the p2p artifact round-trips
+through ``repro.bench.compare`` (pass against a self-captured baseline,
+fail on an injected 2x slowdown at the default threshold) and the fresh
+run is gated against the *committed* ``benchmarks/baselines`` with a
+load-tolerant threshold (the tight default applies on the dedicated CI
+runner, not under a parallel test suite).
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from repro.bench import schema
+from repro.bench.compare import compare_docs, main as compare_main
+from repro.bench.suites import SUITES
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+SUITE_TIMEOUT = 900
+
+
+def _env() -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (SRC, env.get("PYTHONPATH", "")) if p)
+    # the CLI parent pins the per-suite device count itself; a leaked
+    # count here would fight it
+    env.pop("XLA_FLAGS", None)
+    return env
+
+
+@functools.lru_cache(maxsize=None)
+def run_suite_cli(name: str):
+    """Run one suite via the CLI (cached); returns (proc, artifact|None)."""
+    fd, out = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    os.unlink(out)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.bench", "--suite", name, "--quick",
+         "--repeats", "1", "--warmup", "0", "--json", out],
+        env=_env(), capture_output=True, text=True, timeout=SUITE_TIMEOUT,
+        cwd=REPO)
+    doc = None
+    if os.path.exists(out):
+        with open(out) as f:
+            doc = json.load(f)
+        os.unlink(out)
+    return proc, doc
+
+
+@pytest.mark.parametrize("name", sorted(SUITES))
+def test_suite_smoke(name):
+    proc, doc = run_suite_cli(name)
+    assert proc.returncode == 0, (
+        f"suite {name} failed:\n{proc.stdout}\n{proc.stderr}")
+    assert doc is not None, f"suite {name} wrote no artifact"
+    problems = schema.validate(doc)
+    assert not problems, f"suite {name} artifact invalid: {problems}"
+    assert doc["suite"] == name and doc["rows"]
+    assert doc["env"]["device_count"] == SUITES[name].n_devices
+    bad = [k for k, ok in doc["invariants"].items() if not ok]
+    assert not bad, f"suite {name} invariant failures: {bad}\n{proc.stdout}"
+
+
+def test_collectives_smoke_invariants():
+    """The CI schema-smoke replacement for the old grep checks: the
+    collectives artifact must carry both machine-checked invariants."""
+    _, doc = run_suite_cli("collectives")
+    assert doc is not None
+    assert doc["invariants"].get("plan_reuse") is True
+    assert doc["invariants"].get("policy_derived") is True
+    names = {r["name"] for r in doc["rows"]}
+    assert "persistent_plan_cache_hits" in names
+    assert any(n.startswith("sweep_allreduce_") for n in names)
+
+
+def test_p2p_acceptance_artifact(tmp_path):
+    """ISSUE-4 acceptance: `--suite p2p --quick --json out.json` produces a
+    schema-valid artifact; compare passes against a baseline captured from
+    it and fails once a 2x slowdown is injected (default threshold)."""
+    proc, doc = run_suite_cli("p2p")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    schema.assert_valid(doc)
+    names = {r["name"] for r in doc["rows"]}
+    assert {"p2p_latency", "p2p_bandwidth"} <= names
+
+    cur_dir, base_dir = tmp_path / "cur", tmp_path / "base"
+    cur_dir.mkdir()
+    schema.dump(doc, str(cur_dir / "BENCH_p2p.json"))
+    assert compare_main(["--current", str(cur_dir), "--baselines",
+                         str(base_dir), "--update-baselines"]) == 0
+    assert compare_main(["--current", str(cur_dir),
+                         "--baselines", str(base_dir)]) == 0
+
+    slow = json.loads(json.dumps(doc))
+    for row in slow["rows"]:
+        if row["unit"] in schema.TIME_UNITS:
+            row["value"] *= 2.0
+    schema.dump(slow, str(cur_dir / "BENCH_p2p.json"))
+    assert compare_main(["--current", str(cur_dir),
+                         "--baselines", str(base_dir)]) == 1
+
+
+def test_p2p_vs_committed_baselines():
+    """A fresh quick run gates green against the committed baselines.
+
+    Threshold 4x / floor 50us: this runs with --repeats 1 inside a loaded
+    test process, so it checks baseline compatibility (keys, units, env
+    handling), while the tight DEFAULT_THRESHOLD gate runs on the
+    dedicated CI perf-gate runner with full repeats.
+    """
+    _, doc = run_suite_cli("p2p")
+    base_path = os.path.join(REPO, "benchmarks", "baselines", "p2p.json")
+    assert os.path.exists(base_path), "committed p2p baseline missing"
+    baseline = schema.load(base_path)
+    failures, report = compare_docs(doc, baseline, threshold=4.0,
+                                    floor_us=50.0)
+    assert failures == [], "\n".join(failures + report)
+
+
+def test_cli_list_and_errors():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.bench", "--list"],
+        env=_env(), capture_output=True, text=True, timeout=120, cwd=REPO)
+    assert out.returncode == 0
+    for name in SUITES:
+        assert name in out.stdout
+
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.bench", "--suite", "nope"],
+        env=_env(), capture_output=True, text=True, timeout=120, cwd=REPO)
+    assert bad.returncode != 0
+    assert "unknown suite" in bad.stderr + bad.stdout
+
+    multi = subprocess.run(
+        [sys.executable, "-m", "repro.bench", "--suite", "p2p,kernels",
+         "--json", "x.json"],
+        env=_env(), capture_output=True, text=True, timeout=120, cwd=REPO)
+    assert multi.returncode != 0
+    assert "--out-dir" in multi.stderr + multi.stdout
