@@ -19,7 +19,12 @@ median regresses beyond a noise-calibrated threshold:
   median is below the floor are reported but never gated — timer jitter
   dominates there;
 * only rows with a **time unit** (us/ms/s) gate; ratio/counter rows are
-  reported context.
+  reported context;
+* **stale-baseline detection**: when the current run carries gated rows
+  the committed baseline predates (a suite grew new cases), the gate
+  fails with ONE readable message naming the rows and the
+  ``--update-baselines`` fix, instead of silently passing them or
+  emitting a per-row wall.
 
 Modes::
 
@@ -166,10 +171,20 @@ def compare_docs(current: dict, baseline: dict,
                 f"{suite}: suite median ratio {suite_ratio:.2f}x exceeds "
                 f"threshold {threshold:.2f}x "
                 f"({len(ratios)} gated rows)")
-    for key in sorted(set(cur_rows) - set(base_rows), key=str):
+    new_keys = sorted(set(cur_rows) - set(base_rows), key=str)
+    for key in new_keys:
         name = key[0] if not key[1] else f"{key[0]}[{key[1]}]"
-        report.append(f"  {name:<40} new row (no baseline); add it with "
-                      f"--update-baselines")
+        report.append(f"  {name:<40} new row (no baseline)")
+    if new_keys:
+        # Stale baseline: the suite grew rows the committed baseline
+        # predates.  ONE readable failure naming the rows and the fix —
+        # not a per-row wall — so CI tells the author exactly what to do.
+        names = sorted({k[0] for k in new_keys})
+        failures.append(
+            f"{suite}: committed baseline predates {len(new_keys)} new "
+            f"row(s) ({', '.join(names)}); refresh it with `python -m "
+            f"repro.bench.compare --update-baselines` after a clean run "
+            f"(workflow: docs/BENCHMARKS.md)")
     return failures, report
 
 

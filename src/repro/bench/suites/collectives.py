@@ -8,7 +8,9 @@ chained loop is ONE compiled program, amortizing dispatch):
 * nonblocking — ``iallreduce`` completed through the unified ``wait``;
 * persistent — a frozen ``allreduce_init`` plan restarted per step, next
   to the ad-hoc chain it replaces (same lowering, same HLO);
-* neighborhood — ``neighbor_alltoall`` on a periodic 2×4 Cartesian grid.
+* neighborhood — ``neighbor_alltoall`` on a periodic 2×4 Cartesian grid;
+* v-variants — ``allgatherv``/``alltoallv`` with ragged static counts
+  (padded-buffer SPMD form, ISSUE 5).
 
 ``extras`` adds the plan-cache reuse measurement (trace-time of the ad-hoc
 vs plan program, cache hit/miss counters → the ``plan_reuse`` invariant)
@@ -113,6 +115,51 @@ def _persistent_build(adhoc: bool, chain: int):
     return build
 
 
+def _vvariant_build(op: str, inner: int):
+    """Ragged v-variant cases (ISSUE 5): allgatherv over per-rank counts
+    alternating c and 2c, alltoallv over a (s+d)-parity counts matrix —
+    the padded-buffer SPMD form, chained ``inner`` times per call."""
+    def build(size: int):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        import repro.core as jmpi
+
+        mesh = _mesh1d()
+        n = mesh.devices.size
+        c = max(size // (2 * n), 1)
+
+        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+        def f(x):
+            comm = jmpi.world()
+            if op == "allgatherv":
+                counts = tuple(c * ((r % 2) + 1) for r in range(n))
+                maxc = max(counts)
+
+                def body(i, acc):
+                    _, full = comm.allgatherv(acc, counts)
+                    return full[:maxc] / jnp.maximum(
+                        jnp.abs(full).max(), 1.0)
+
+                return jax.lax.fori_loop(0, inner, body, x)
+            counts = tuple(tuple(c * (((s + d) % 2) + 1) for d in range(n))
+                           for s in range(n))
+
+            def body(i, acc):
+                _, out = comm.alltoallv(acc, counts)
+                return out / jnp.maximum(jnp.abs(out).max(), 1.0) + acc * 0
+
+            return jax.lax.fori_loop(0, inner, body, x)
+
+        if op == "allgatherv":
+            x = jnp.ones((2 * c,), jnp.float32)
+        else:
+            x = jnp.ones((n, 2 * c), jnp.float32)
+        return lambda: f(x).block_until_ready()
+
+    return build
+
+
 def _neighbor_build(inner: int):
     def build(size: int):
         import jax
@@ -178,6 +225,18 @@ def build(cfg: BenchConfig) -> list[Case]:
         Case(name="coll_neighbor_alltoall", build=_neighbor_build(inner),
              sizes=QUICK_SIZES if cfg.quick else (1024, 65536, 262144),
              inner=inner, unit="us", nbytes=lambda s: 4 * s * 4,
+             sweepable=True),
+        # v-variant ragged collectives (ISSUE 5): per-rank wire volume is
+        # ~1.5·size/n rows average (counts alternate c and 2c)
+        Case(name="coll_allgatherv", build=_vvariant_build("allgatherv",
+                                                           inner),
+             sizes=QUICK_SIZES if cfg.quick else (1024, 65536, 262144),
+             inner=inner, unit="us", nbytes=lambda s: s * 3,
+             sweepable=True),
+        Case(name="coll_alltoallv", build=_vvariant_build("alltoallv",
+                                                          inner),
+             sizes=QUICK_SIZES if cfg.quick else (1024, 65536, 262144),
+             inner=inner, unit="us", nbytes=lambda s: s * 3,
              sweepable=True),
     ]
     return cases

@@ -11,12 +11,21 @@ JIT-resident transport:
 * ``p2p_bandwidth`` — OMB window pattern: ``WINDOW`` nonblocking exchanges
   issued back-to-back, completed with one ``waitall``, per inner step;
   derived column reports the effective per-direction GB/s.
+* ``p2p_noncontig_vector`` / ``p2p_noncontig_subarray`` — the paper's
+  §2.3 non-contiguous-view comparison: the same exchange with the payload
+  described by a derived datatype (strided columns / interior block of a
+  halo-padded tile), packed on send and scattered on receive through
+  ``recv_into`` — against the contiguous ``p2p_latency`` row these
+  measure the pack/unpack prologue XLA fuses into the transfer.
 
 Sizes are float32 element counts; ``bytes`` records the per-message
-payload.  Both cases honor a CLI ``--sizes`` override.
+payload.  All cases honor a CLI ``--sizes`` override (the noncontig
+cases skip non-square sizes — their tiles are ``side × side``).
 """
 
 from __future__ import annotations
+
+import math
 
 from repro.bench.core import BenchConfig, Case
 
@@ -83,11 +92,48 @@ def _bandwidth_build(inner: int, window: int):
     return build
 
 
+def _noncontig_build(kind: str, inner: int):
+    def build(size: int):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        import repro.core as jmpi
+
+        mesh = _mesh()
+        side = math.isqrt(size)
+
+        @jmpi.spmd(mesh, in_specs=P(), out_specs=P())
+        def f(x):
+            def body(i, buf):
+                if kind == "vector":
+                    # every second column of a (side, 2·side) buffer
+                    view = jmpi.View(buf, (slice(None),
+                                           slice(0, 2 * side, 2)))
+                else:
+                    # interior block of a halo-padded (side+2)² tile
+                    view = jmpi.View(buf, (slice(1, side + 1),
+                                           slice(1, side + 1)))
+                req = jmpi.isendrecv(view, pairs=[(0, 1), (1, 0)], tag=5,
+                                     recv_into=view)
+                _, out = jmpi.wait(req)
+                return out
+
+            return jax.lax.fori_loop(0, inner, body, x)
+
+        shape = ((side, 2 * side) if kind == "vector"
+                 else (side + 2, side + 2))
+        x = jnp.ones(shape, jnp.float32)
+        return lambda: f(x).block_until_ready()
+
+    return build
+
+
 def build(cfg: BenchConfig) -> list[Case]:
     """Build the p2p cases for ``cfg`` (quick mode shrinks grid + inner)."""
     sizes = QUICK_SIZES if cfg.quick else FULL_SIZES
     inner = _inner(cfg)
     nbytes = lambda size: size * 4  # noqa: E731 - float32 payload
+    square = lambda size: math.isqrt(size) ** 2 == size  # noqa: E731
 
     def bw_derived(size: int, sec_per_call: float) -> dict:
         return {"GBps_per_dir": WINDOW * size * 4 / sec_per_call / 1e9,
@@ -103,4 +149,12 @@ def build(cfg: BenchConfig) -> list[Case]:
         Case(name="p2p_bandwidth", build=_bandwidth_build(inner, WINDOW),
              sizes=sizes, inner=inner, unit="us", nbytes=nbytes,
              derived=bw_derived, sweepable=True),
+        Case(name="p2p_noncontig_vector",
+             build=_noncontig_build("vector", inner),
+             sizes=sizes, inner=inner, unit="us", nbytes=nbytes,
+             derived=lat_derived, sweepable=True, size_ok=square),
+        Case(name="p2p_noncontig_subarray",
+             build=_noncontig_build("subarray", inner),
+             sizes=sizes, inner=inner, unit="us", nbytes=nbytes,
+             derived=lat_derived, sweepable=True, size_ok=square),
     ]

@@ -35,6 +35,13 @@ Migration table (module function → communicator method)::
                                     cart_sub and the MPI-3 neighborhood
                                     collectives neighbor_allgather /
                                     neighbor_alltoall[v] (+ i*/_init forms)
+    (new, v-variants)               comm.scatterv/gatherv/allgatherv/
+                                    alltoallv with static counts
+                                    (+ i*/_init forms)
+    (new, datatypes)                jmpi.contiguous/vector/subarray/indexed/
+                                    slots/pytree — MPI derived-datatype
+                                    algebra; every op accepts
+                                    (payload, datatype) or dt.bind(buf)
 
 The complete reference table lives in docs/API.md; the layer diagram and
 dispatch walkthrough in docs/ARCHITECTURE.md; the paper-feature coverage
@@ -98,16 +105,24 @@ from repro.core.collectives import (Operator, allgather, allreduce, alltoall,
 from repro.core.comm import Communicator, resolve, set_world, spmd, world
 from repro.core.compression import (CompressionState, compressed_allreduce,
                                     init_state, wire_bytes_per_rank)
+from repro.core import datatypes
+from repro.core.datatypes import (Datatype, contiguous, face, indexed,
+                                  pytree, slots, subarray, vector)
 from repro.core.hostbridge import HostBridge
 from repro.core.p2p import (ANY_TAG, Request, irecv, isend, isendrecv, recv,
                             send, sendrecv, test, testall, testany, wait,
                             waitall, waitany)
-from repro.core.plans import (Plan, allgather_init, allreduce_init,
-                              alltoall_init, barrier_init, bcast_init,
-                              gather_init, neighbor_allgather_init,
+from repro.core.plans import (Plan, allgather_init, allgatherv_init,
+                              allreduce_init, alltoall_init, alltoallv_init,
+                              barrier_init, bcast_init, gather_init,
+                              gatherv_init, neighbor_allgather_init,
                               neighbor_alltoall_init, neighbor_alltoallv_init,
                               plan_cache_clear, plan_cache_stats,
-                              reduce_scatter_init, scatter_init, sendrecv_init)
+                              reduce_scatter_init, scatter_init,
+                              scatterv_init, sendrecv_init)
+from repro.core.vcollectives import (allgatherv, alltoallv, gatherv,
+                                     iallgatherv, ialltoallv, igatherv,
+                                     iscatterv, scatterv)
 from repro.core.registry import (PolicyRule, PolicyTable, algorithm_override,
                                  algorithms, clear_algorithms, load_policy,
                                  save_policy, set_algorithm, set_policy)
@@ -154,15 +169,20 @@ __all__ = [
     "SUCCESS", "ERR_TOPOLOGY", "ERR_TRUNCATE", "ANY_TAG", "PROC_NULL",
     "allgather", "allreduce", "alltoall", "barrier", "bcast", "gather",
     "reduce_scatter", "scatter",
+    "scatterv", "gatherv", "allgatherv", "alltoallv",
     "iallgather", "iallreduce", "ialltoall", "ibarrier", "ibcast", "igather",
     "ireduce_scatter", "iscatter",
+    "iscatterv", "igatherv", "iallgatherv", "ialltoallv",
     "cart_create", "neighbor_allgather", "neighbor_alltoall",
     "neighbor_alltoallv", "ineighbor_allgather", "ineighbor_alltoall",
     "ineighbor_alltoallv",
     "allgather_init", "allreduce_init", "alltoall_init", "barrier_init",
     "bcast_init", "gather_init", "reduce_scatter_init", "scatter_init",
+    "scatterv_init", "gatherv_init", "allgatherv_init", "alltoallv_init",
     "sendrecv_init", "neighbor_allgather_init", "neighbor_alltoall_init",
     "neighbor_alltoallv_init", "plan_cache_stats", "plan_cache_clear",
+    "datatypes", "Datatype", "contiguous", "vector", "subarray", "indexed",
+    "face", "slots", "pytree",
     "sendrecv", "send", "recv", "isend", "irecv",
     "isendrecv", "wait", "waitall", "waitany", "test", "testall", "testany",
     "ring_allreduce", "ring_allgather", "compressed_allreduce", "init_state",

@@ -33,9 +33,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import datatypes as datatypes_lib
 from repro.core import registry
 from repro.core import token as token_lib
-from repro.core import views as views_lib
 from repro.core.comm import Communicator, resolve
 from repro.core.operators import Operator
 from repro.core.p2p import Request
@@ -61,7 +61,7 @@ def _tok_out(explicit, new_token, status, value):
     return status, value
 
 
-_pack = views_lib.pack
+_pack = datatypes_lib.pack_payload
 
 
 # ===========================================================================
@@ -133,17 +133,18 @@ def _alltoall_xla(val, tok, comm, *, split_axis=0, concat_axis=0):
 # the i* forms hand the Request to the unified wait/test machinery.
 # ===========================================================================
 
-def _issue(op_name, x, *, comm, token, algorithm, tag=0, unpack=None, **kw):
+def _issue(op_name, x, *, comm, token, algorithm, tag=0, datatype=None,
+           recv=None, **kw):
     comm = resolve(comm)
     tok, explicit = _tok_in(token)
-    val = _pack(x)
+    val = _pack(x, datatype)
     algo = registry.select(op_name, val, comm, algorithm=algorithm, **kw)
     tok, val = token_lib.tie(tok, val)
     out, tok = algo.fn(val, tok, comm, **kw)
     new_tok = token_lib.advance(tok, out)
     if not explicit:
         token_lib.ambient().set(new_tok)
-    return Request(value=out, token=new_tok, tag=tag, unpack=unpack,
+    return Request(value=out, token=new_tok, tag=tag, recv=recv,
                    used_ambient=not explicit), explicit
 
 
@@ -164,28 +165,31 @@ def _finish(req, explicit):
 
 def iallreduce(x, op: Operator = Operator.SUM, *,
                comm: Communicator | None = None, token=None,
-               algorithm: str | None = None, tag: int = 0) -> Request:
+               algorithm: str | None = None, tag: int = 0,
+               datatype=None) -> Request:
     """MPI_Iallreduce: start a nonblocking allreduce, complete via wait*/test*."""
     req, _ = _issue("allreduce", x, comm=comm, token=token,
-                    algorithm=algorithm, tag=tag, op=op)
+                    algorithm=algorithm, tag=tag, datatype=datatype, op=op)
     return req
 
 
 def ibcast(x, root: int = 0, *, comm: Communicator | None = None, token=None,
-           algorithm: str | None = None, tag: int = 0) -> Request:
+           algorithm: str | None = None, tag: int = 0,
+           datatype=None) -> Request:
     """MPI_Ibcast: root's value lands on every rank at completion."""
     req, _ = _issue("bcast", x, comm=comm, token=token, algorithm=algorithm,
-                    tag=tag, root=root)
+                    tag=tag, datatype=datatype, root=root)
     return req
 
 
 def iscatter(x, root: int = 0, *, comm: Communicator | None = None,
-             token=None, algorithm: str | None = None, tag: int = 0) -> Request:
+             token=None, algorithm: str | None = None, tag: int = 0,
+             datatype=None) -> Request:
     """MPI_Iscatter: rank i's Request completes with the i-th equal chunk
     (axis 0) of root's buffer.  Lowered as bcast + static per-rank slice;
     XLA's partitioner elides the unused chunks on real meshes."""
     comm = resolve(comm)
-    val = _pack(x)
+    val = _pack(x, datatype)
     n = comm.size()
     if val.shape[0] % n:
         raise ValueError(f"scatter payload axis0={val.shape[0]} not divisible "
@@ -203,32 +207,36 @@ def iscatter(x, root: int = 0, *, comm: Communicator | None = None,
 
 
 def iallgather(x, *, comm: Communicator | None = None, token=None,
-               algorithm: str | None = None, tag: int = 0) -> Request:
+               algorithm: str | None = None, tag: int = 0,
+               datatype=None) -> Request:
     """MPI_Iallgather: completes with every rank's buffer concatenated
     along axis 0."""
     req, _ = _issue("allgather", x, comm=comm, token=token,
-                    algorithm=algorithm, tag=tag)
+                    algorithm=algorithm, tag=tag, datatype=datatype)
     return req
 
 
 def igather(x, root: int = 0, *, comm: Communicator | None = None, token=None,
-            algorithm: str | None = None, tag: int = 0) -> Request:
+            algorithm: str | None = None, tag: int = 0,
+            datatype=None) -> Request:
     """MPI_Igather: the concatenation is *valid at root*. SPMD lowering uses
     all_gather (every rank materializes the result; contents identical), the
     root-only contract is preserved at the API level."""
     del root  # root-only validity is a contract, not a dataflow difference
-    return iallgather(x, comm=comm, token=token, algorithm=algorithm, tag=tag)
+    return iallgather(x, comm=comm, token=token, algorithm=algorithm, tag=tag,
+                      datatype=datatype)
 
 
 def ialltoall(x, *, comm: Communicator | None = None, token=None,
               split_axis: int = 0, concat_axis: int = 0,
-              algorithm: str | None = None, tag: int = 0) -> Request:
+              algorithm: str | None = None, tag: int = 0,
+              datatype=None) -> Request:
     """MPI_Ialltoall: completes with chunk j from every rank, concatenated."""
     comm = resolve(comm)
     if len(comm.axes) != 1:
         raise ValueError("alltoall currently requires a single-axis "
                          "communicator (split the comm first)")
-    val = _pack(x)
+    val = _pack(x, datatype)
     n = comm.size()
     if val.shape[split_axis] % n:
         raise ValueError(f"alltoall axis {split_axis} size {val.shape[split_axis]}"
@@ -241,10 +249,11 @@ def ialltoall(x, *, comm: Communicator | None = None, token=None,
 
 def ireduce_scatter(x, op: Operator = Operator.SUM, *,
                     comm: Communicator | None = None, token=None,
-                    algorithm: str | None = None, tag: int = 0) -> Request:
+                    algorithm: str | None = None, tag: int = 0,
+                    datatype=None) -> Request:
     """MPI_Ireduce_scatter_block: completes with this rank's reduced chunk."""
     comm = resolve(comm)
-    val = _pack(x)
+    val = _pack(x, datatype)
     n = comm.size()
     if val.shape[0] % n:
         raise ValueError(f"reduce_scatter axis0={val.shape[0]} not divisible "
@@ -275,70 +284,75 @@ def ibarrier(*, comm: Communicator | None = None, token=None,
 
 def allreduce(x, op: Operator = Operator.SUM, *,
               comm: Communicator | None = None, token=None,
-              algorithm: str | None = None):
+              algorithm: str | None = None, datatype=None):
     """MPI_Allreduce.  ``algorithm``: force a registry entry by name
     (xla_native | ring | recursive_doubling | bf16_wire); default is the
-    active policy's size-aware choice."""
+    active policy's size-aware choice.  ``datatype``: pack ``x`` through an
+    explicit derived datatype (see ``repro.core.datatypes``)."""
     req, explicit = _issue("allreduce", x, comm=comm, token=token,
-                           algorithm=algorithm, op=op)
+                           algorithm=algorithm, datatype=datatype, op=op)
     return _finish(req, explicit)
 
 
 def bcast(x, root: int = 0, *, comm: Communicator | None = None, token=None,
-          algorithm: str | None = None):
+          algorithm: str | None = None, datatype=None):
     """MPI_Bcast: root's value lands on every rank (xla_native | tree)."""
     req, explicit = _issue("bcast", x, comm=comm, token=token,
-                           algorithm=algorithm, root=root)
+                           algorithm=algorithm, datatype=datatype, root=root)
     return _finish(req, explicit)
 
 
 def scatter(x, root: int = 0, *, comm: Communicator | None = None, token=None,
-            algorithm: str | None = None):
+            algorithm: str | None = None, datatype=None):
     """MPI_Scatter: rank i receives the i-th equal chunk (axis 0) of root's
     buffer.  The underlying bcast follows the same algorithm selection as
     :func:`bcast`."""
     explicit = token is not None
-    req = iscatter(x, root, comm=comm, token=token, algorithm=algorithm)
+    req = iscatter(x, root, comm=comm, token=token, algorithm=algorithm,
+                   datatype=datatype)
     return _finish(req, explicit)
 
 
 def allgather(x, *, comm: Communicator | None = None, token=None,
-              algorithm: str | None = None):
+              algorithm: str | None = None, datatype=None):
     """MPI_Allgather: concatenate every rank's buffer along axis 0
     (xla_native | ring)."""
     req, explicit = _issue("allgather", x, comm=comm, token=token,
-                           algorithm=algorithm)
+                           algorithm=algorithm, datatype=datatype)
     return _finish(req, explicit)
 
 
 def gather(x, root: int = 0, *, comm: Communicator | None = None, token=None,
-           algorithm: str | None = None):
+           algorithm: str | None = None, datatype=None):
     """MPI_Gather: the concatenation is *valid at root* (see igather)."""
     del root  # root-only validity is a contract, not a dataflow difference
-    return allgather(x, comm=comm, token=token, algorithm=algorithm)
+    return allgather(x, comm=comm, token=token, algorithm=algorithm,
+                     datatype=datatype)
 
 
 def alltoall(x, *, comm: Communicator | None = None, token=None,
              split_axis: int = 0, concat_axis: int = 0,
-             algorithm: str | None = None):
+             algorithm: str | None = None, datatype=None):
     """MPI_Alltoall: rank j receives chunk j from every rank, concatenated
     (xla_native | pairwise).  Payload axis ``split_axis`` must be divisible
     by comm size."""
     explicit = token is not None
     req = ialltoall(x, comm=comm, token=token, split_axis=split_axis,
-                    concat_axis=concat_axis, algorithm=algorithm)
+                    concat_axis=concat_axis, algorithm=algorithm,
+                    datatype=datatype)
     return _finish(req, explicit)
 
 
 def reduce_scatter(x, op: Operator = Operator.SUM, *,
                    comm: Communicator | None = None, token=None,
-                   algorithm: str | None = None):
+                   algorithm: str | None = None, datatype=None):
     """MPI_Reduce_scatter_block along axis 0 (xla_native | ring).  The
     xla_native lowering (psum_scatter) is SUM-only; other Operators require
     an algorithm that declares them (e.g. ``ring``) — an unsupported pair
     raises the registry's uniform trace-time error."""
     explicit = token is not None
-    req = ireduce_scatter(x, op, comm=comm, token=token, algorithm=algorithm)
+    req = ireduce_scatter(x, op, comm=comm, token=token, algorithm=algorithm,
+                          datatype=datatype)
     return _finish(req, explicit)
 
 

@@ -210,14 +210,15 @@ class Communicator:
     # ======================================================================
 
     # -- blocking collectives (v1.0 surface) -------------------------------
-    # Shared conventions (documented once): ``x`` is an array/View with
-    # static shape; ``token=None`` threads the ambient ordering chain and
-    # an explicit token is returned back (``(status, value, token)``);
-    # ``algorithm`` forces a registry entry by name, else the active policy
-    # table chooses at trace time.
+    # Shared conventions (documented once): ``x`` is an array/View/bound
+    # datatype with static shape; ``datatype=`` packs ``x`` through an
+    # explicit derived datatype (repro.core.datatypes); ``token=None``
+    # threads the ambient ordering chain and an explicit token is returned
+    # back (``(status, value, token)``); ``algorithm`` forces a registry
+    # entry by name, else the active policy table chooses at trace time.
 
     def allreduce(self, x, op: Operator = Operator.SUM, *, token=None,
-                  algorithm=None):
+                  algorithm=None, datatype=None):
         """Reduce ``x`` with ``op`` across the group (MPI_Allreduce).
 
         Args:
@@ -229,9 +230,11 @@ class Communicator:
             ``(status, value)`` — every rank holds the full reduction.
         """
         from repro.core import collectives as c
-        return c.allreduce(x, op, comm=self, token=token, algorithm=algorithm)
+        return c.allreduce(x, op, comm=self, token=token, algorithm=algorithm,
+                           datatype=datatype)
 
-    def bcast(self, x, root: int = 0, *, token=None, algorithm=None):
+    def bcast(self, x, root: int = 0, *, token=None, algorithm=None,
+              datatype=None):
         """Broadcast ``root``'s value to every rank (MPI_Bcast).
 
         Args:
@@ -243,9 +246,11 @@ class Communicator:
             ``(status, value)`` — root's payload on every rank.
         """
         from repro.core import collectives as c
-        return c.bcast(x, root, comm=self, token=token, algorithm=algorithm)
+        return c.bcast(x, root, comm=self, token=token, algorithm=algorithm,
+                       datatype=datatype)
 
-    def scatter(self, x, root: int = 0, *, token=None, algorithm=None):
+    def scatter(self, x, root: int = 0, *, token=None, algorithm=None,
+                datatype=None):
         """Deal equal axis-0 chunks of ``root``'s buffer (MPI_Scatter).
 
         Args:
@@ -259,9 +264,11 @@ class Communicator:
             ValueError: axis 0 not divisible by the group size.
         """
         from repro.core import collectives as c
-        return c.scatter(x, root, comm=self, token=token, algorithm=algorithm)
+        return c.scatter(x, root, comm=self, token=token, algorithm=algorithm,
+                         datatype=datatype)
 
-    def gather(self, x, root: int = 0, *, token=None, algorithm=None):
+    def gather(self, x, root: int = 0, *, token=None, algorithm=None,
+               datatype=None):
         """Concatenate every rank's buffer, valid at ``root`` (MPI_Gather).
 
         Args:
@@ -274,9 +281,10 @@ class Communicator:
             ``(status, stacked)`` — axis-0 concatenation in rank order.
         """
         from repro.core import collectives as c
-        return c.gather(x, root, comm=self, token=token, algorithm=algorithm)
+        return c.gather(x, root, comm=self, token=token, algorithm=algorithm,
+                        datatype=datatype)
 
-    def allgather(self, x, *, token=None, algorithm=None):
+    def allgather(self, x, *, token=None, algorithm=None, datatype=None):
         """Concatenate every rank's buffer on every rank (MPI_Allgather).
 
         Args:
@@ -287,10 +295,11 @@ class Communicator:
             ``(status, stacked)`` — axis-0 concatenation in rank order.
         """
         from repro.core import collectives as c
-        return c.allgather(x, comm=self, token=token, algorithm=algorithm)
+        return c.allgather(x, comm=self, token=token, algorithm=algorithm,
+                           datatype=datatype)
 
     def alltoall(self, x, *, token=None, split_axis: int = 0,
-                 concat_axis: int = 0, algorithm=None):
+                 concat_axis: int = 0, algorithm=None, datatype=None):
         """Transpose chunks across ranks (MPI_Alltoall).
 
         Args:
@@ -306,10 +315,11 @@ class Communicator:
         """
         from repro.core import collectives as c
         return c.alltoall(x, comm=self, token=token, split_axis=split_axis,
-                          concat_axis=concat_axis, algorithm=algorithm)
+                          concat_axis=concat_axis, algorithm=algorithm,
+                          datatype=datatype)
 
     def reduce_scatter(self, x, op: Operator = Operator.SUM, *, token=None,
-                       algorithm=None):
+                       algorithm=None, datatype=None):
         """Reduce then deal axis-0 chunks (MPI_Reduce_scatter_block).
 
         Args:
@@ -326,7 +336,88 @@ class Communicator:
         """
         from repro.core import collectives as c
         return c.reduce_scatter(x, op, comm=self, token=token,
-                                algorithm=algorithm)
+                                algorithm=algorithm, datatype=datatype)
+
+    def scatterv(self, x, counts, root: int = 0, *, token=None,
+                 algorithm=None, datatype=None):
+        """Deal ragged axis-0 chunks of ``root``'s buffer (MPI_Scatterv).
+
+        Args:
+            x: root's ``(sum(counts), ...)`` buffer.
+            counts: static per-rank row counts (padded-buffer SPMD form).
+            root: static scattering rank.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+            datatype: optional derived datatype packing ``x``.
+        Returns:
+            ``(status, chunk)`` — ``(max(counts), ...)`` with this rank's
+            ``counts[rank]`` valid rows, zeros beyond.
+        Raises:
+            ValueError: bad counts or a payload/counts mismatch.
+        """
+        from repro.core import vcollectives as v
+        return v.scatterv(x, counts, root, comm=self, token=token,
+                          algorithm=algorithm, datatype=datatype)
+
+    def gatherv(self, x, counts, root: int = 0, *, token=None,
+                algorithm=None, datatype=None):
+        """Gather ragged per-rank prefixes, valid at ``root`` (MPI_Gatherv).
+
+        Args:
+            x: local ``(max(counts), ...)`` padded buffer.
+            counts: static per-rank row counts.
+            root: rank at which the result is contractually valid.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+            datatype: optional derived datatype packing ``x``.
+        Returns:
+            ``(status, stacked)`` — the ``(sum(counts), ...)``
+            concatenation of valid prefixes in rank order.
+        Raises:
+            ValueError: bad counts or a payload/counts mismatch.
+        """
+        from repro.core import vcollectives as v
+        return v.gatherv(x, counts, root, comm=self, token=token,
+                         algorithm=algorithm, datatype=datatype)
+
+    def allgatherv(self, x, counts, *, token=None, algorithm=None,
+                   datatype=None):
+        """Ragged allgather on every rank (MPI_Allgatherv).
+
+        Args:
+            x: local ``(max(counts), ...)`` padded buffer.
+            counts: static per-rank row counts.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+            datatype: optional derived datatype packing ``x``.
+        Returns:
+            ``(status, stacked)`` — ``(sum(counts), ...)`` on every rank.
+        Raises:
+            ValueError: bad counts or a payload/counts mismatch.
+        """
+        from repro.core import vcollectives as v
+        return v.allgatherv(x, counts, comm=self, token=token,
+                            algorithm=algorithm, datatype=datatype)
+
+    def alltoallv(self, x, counts, *, token=None, algorithm=None,
+                  datatype=None):
+        """Ragged all-to-all exchange (MPI_Alltoallv).
+
+        Args:
+            x: ``(n, max(counts), ...)`` stacked per-destination slots.
+            counts: static n×n matrix ``counts[src][dst]``.
+            token: explicit ordering token; None uses the ambient chain.
+            algorithm: registry entry to force; None → policy choice.
+            datatype: optional derived datatype packing ``x``.
+        Returns:
+            ``(status, out)`` — slot ``s`` holds rank ``s``'s rows for
+            this rank (``counts[s][rank]`` valid, zeros beyond).
+        Raises:
+            ValueError: bad counts matrix or a payload/counts mismatch.
+        """
+        from repro.core import vcollectives as v
+        return v.alltoallv(x, counts, comm=self, token=token,
+                           algorithm=algorithm, datatype=datatype)
 
     def barrier(self, *, token=None):
         """Synchronize the group (MPI_Barrier).
@@ -347,7 +438,7 @@ class Communicator:
     # completed via wait/waitall/waitany/test/testall/testany.
 
     def iallreduce(self, x, op: Operator = Operator.SUM, *, token=None,
-                   algorithm=None, tag: int = 0):
+                   algorithm=None, tag: int = 0, datatype=None):
         """Nonblocking :meth:`allreduce` (MPI_Iallreduce).
 
         Args:
@@ -361,10 +452,10 @@ class Communicator:
         """
         from repro.core import collectives as c
         return c.iallreduce(x, op, comm=self, token=token,
-                            algorithm=algorithm, tag=tag)
+                            algorithm=algorithm, tag=tag, datatype=datatype)
 
     def ibcast(self, x, root: int = 0, *, token=None, algorithm=None,
-               tag: int = 0):
+               tag: int = 0, datatype=None):
         """Nonblocking :meth:`bcast` (MPI_Ibcast).
 
         Args:
@@ -378,10 +469,10 @@ class Communicator:
         """
         from repro.core import collectives as c
         return c.ibcast(x, root, comm=self, token=token, algorithm=algorithm,
-                        tag=tag)
+                        tag=tag, datatype=datatype)
 
     def iscatter(self, x, root: int = 0, *, token=None, algorithm=None,
-                 tag: int = 0):
+                 tag: int = 0, datatype=None):
         """Nonblocking :meth:`scatter` (MPI_Iscatter).
 
         Args:
@@ -395,10 +486,10 @@ class Communicator:
         """
         from repro.core import collectives as c
         return c.iscatter(x, root, comm=self, token=token,
-                          algorithm=algorithm, tag=tag)
+                          algorithm=algorithm, tag=tag, datatype=datatype)
 
     def igather(self, x, root: int = 0, *, token=None, algorithm=None,
-                tag: int = 0):
+                tag: int = 0, datatype=None):
         """Nonblocking :meth:`gather` (MPI_Igather).
 
         Args:
@@ -412,9 +503,10 @@ class Communicator:
         """
         from repro.core import collectives as c
         return c.igather(x, root, comm=self, token=token, algorithm=algorithm,
-                         tag=tag)
+                         tag=tag, datatype=datatype)
 
-    def iallgather(self, x, *, token=None, algorithm=None, tag: int = 0):
+    def iallgather(self, x, *, token=None, algorithm=None, tag: int = 0,
+                   datatype=None):
         """Nonblocking :meth:`allgather` (MPI_Iallgather).
 
         Args:
@@ -427,10 +519,11 @@ class Communicator:
         """
         from repro.core import collectives as c
         return c.iallgather(x, comm=self, token=token, algorithm=algorithm,
-                            tag=tag)
+                            tag=tag, datatype=datatype)
 
     def ialltoall(self, x, *, token=None, split_axis: int = 0,
-                  concat_axis: int = 0, algorithm=None, tag: int = 0):
+                  concat_axis: int = 0, algorithm=None, tag: int = 0,
+                  datatype=None):
         """Nonblocking :meth:`alltoall` (MPI_Ialltoall).
 
         Args:
@@ -446,10 +539,10 @@ class Communicator:
         from repro.core import collectives as c
         return c.ialltoall(x, comm=self, token=token, split_axis=split_axis,
                            concat_axis=concat_axis, algorithm=algorithm,
-                           tag=tag)
+                           tag=tag, datatype=datatype)
 
     def ireduce_scatter(self, x, op: Operator = Operator.SUM, *, token=None,
-                        algorithm=None, tag: int = 0):
+                        algorithm=None, tag: int = 0, datatype=None):
         """Nonblocking :meth:`reduce_scatter` (MPI_Ireduce_scatter_block).
 
         Args:
@@ -463,7 +556,56 @@ class Communicator:
         """
         from repro.core import collectives as c
         return c.ireduce_scatter(x, op, comm=self, token=token,
-                                 algorithm=algorithm, tag=tag)
+                                 algorithm=algorithm, tag=tag,
+                                 datatype=datatype)
+
+    def iscatterv(self, x, counts, root: int = 0, *, token=None,
+                  algorithm=None, tag: int = 0, datatype=None):
+        """Nonblocking :meth:`scatterv` (MPI_Iscatterv).
+
+        Args: as :meth:`scatterv`, plus ``tag`` recorded on the Request.
+        Returns:
+            A unified :class:`Request`; complete via ``wait*``/``test*``.
+        """
+        from repro.core import vcollectives as v
+        return v.iscatterv(x, counts, root, comm=self, token=token,
+                           algorithm=algorithm, tag=tag, datatype=datatype)
+
+    def igatherv(self, x, counts, root: int = 0, *, token=None,
+                 algorithm=None, tag: int = 0, datatype=None):
+        """Nonblocking :meth:`gatherv` (MPI_Igatherv).
+
+        Args: as :meth:`gatherv`, plus ``tag`` recorded on the Request.
+        Returns:
+            A unified :class:`Request`; complete via ``wait*``/``test*``.
+        """
+        from repro.core import vcollectives as v
+        return v.igatherv(x, counts, root, comm=self, token=token,
+                          algorithm=algorithm, tag=tag, datatype=datatype)
+
+    def iallgatherv(self, x, counts, *, token=None, algorithm=None,
+                    tag: int = 0, datatype=None):
+        """Nonblocking :meth:`allgatherv` (MPI_Iallgatherv).
+
+        Args: as :meth:`allgatherv`, plus ``tag`` recorded on the Request.
+        Returns:
+            A unified :class:`Request`; complete via ``wait*``/``test*``.
+        """
+        from repro.core import vcollectives as v
+        return v.iallgatherv(x, counts, comm=self, token=token,
+                             algorithm=algorithm, tag=tag, datatype=datatype)
+
+    def ialltoallv(self, x, counts, *, token=None, algorithm=None,
+                   tag: int = 0, datatype=None):
+        """Nonblocking :meth:`alltoallv` (MPI_Ialltoallv).
+
+        Args: as :meth:`alltoallv`, plus ``tag`` recorded on the Request.
+        Returns:
+            A unified :class:`Request`; complete via ``wait*``/``test*``.
+        """
+        from repro.core import vcollectives as v
+        return v.ialltoallv(x, counts, comm=self, token=token,
+                            algorithm=algorithm, tag=tag, datatype=datatype)
 
     def ibarrier(self, *, token=None, tag: int = 0):
         """Nonblocking :meth:`barrier` (MPI_Ibarrier).
@@ -482,7 +624,8 @@ class Communicator:
     # Static topology (DESIGN.md §2): dest/source are static Python ranks,
     # patterns are full (src, dst) pair lists; one fused ppermute per call.
 
-    def send(self, x, dest: int, *, source: int, tag: int = 0, token=None):
+    def send(self, x, dest: int, *, source: int, tag: int = 0, token=None,
+             datatype=None):
         """MPI_Send along a static (source → dest) edge.
 
         Args:
@@ -492,14 +635,16 @@ class Communicator:
             source: static sending rank (SPMD traces both sides at once).
             tag: message tag (validated at the wait side).
             token: explicit ordering token; None uses the ambient chain.
+            datatype: optional derived datatype packing ``x``.
         Returns:
             ``status`` (SUCCESS).
         """
         from repro.core import p2p
         return p2p.send(x, dest, source=source, tag=tag, comm=self,
-                        token=token)
+                        token=token, datatype=datatype)
 
-    def recv(self, x, source: int, *, dest: int, tag: int = 0, token=None):
+    def recv(self, x, source: int, *, dest: int, tag: int = 0, token=None,
+             datatype=None, recv_into=None):
         """MPI_Recv along a static (source → dest) edge.
 
         Args:
@@ -509,14 +654,19 @@ class Communicator:
             dest: static receiving rank.
             tag: message tag.
             token: explicit ordering token; None uses the ambient chain.
+            datatype: optional derived datatype packing ``x``.
+            recv_into: View / bound datatype the received message
+                scatters into (ERR_TRUNCATE status when statically too
+                small).
         Returns:
             ``(status, payload)`` — the received buffer on ``dest``.
         """
         from repro.core import p2p
-        return p2p.recv(x, source, dest=dest, tag=tag, comm=self, token=token)
+        return p2p.recv(x, source, dest=dest, tag=tag, comm=self, token=token,
+                        datatype=datatype, recv_into=recv_into)
 
     def sendrecv(self, x, pairs=None, *, perm=None, dest=None, source=None,
-                 tag: int = 0, token=None, recv_into=None):
+                 tag: int = 0, token=None, datatype=None, recv_into=None):
         """Blocking fused exchange along a static (src → dst) pattern.
 
         Args:
@@ -525,8 +675,10 @@ class Communicator:
             dest/source: single-edge shorthand when no pair list is given.
             tag: message tag.
             token: explicit ordering token; None uses the ambient chain.
-            recv_into: View to scatter the received message into
-                (ERR_TRUNCATE status when statically too small).
+            datatype: optional derived datatype packing ``x``.
+            recv_into: View / bound datatype to scatter the received
+                message into (ERR_TRUNCATE status when statically too
+                small).
         Returns:
             ``(status, received)`` — plus the token when one was passed.
         Raises:
@@ -536,9 +688,10 @@ class Communicator:
         from repro.core import p2p
         return p2p.sendrecv(x, pairs, perm=perm, dest=dest, source=source,
                             tag=tag, comm=self, token=token,
-                            recv_into=recv_into)
+                            datatype=datatype, recv_into=recv_into)
 
-    def isend(self, x, dest: int, *, source: int, tag: int = 0, token=None):
+    def isend(self, x, dest: int, *, source: int, tag: int = 0, token=None,
+              datatype=None):
         """MPI_Isend: nonblocking :meth:`send`.
 
         Args: as :meth:`send`.
@@ -547,9 +700,10 @@ class Communicator:
         """
         from repro.core import p2p
         return p2p.isend(x, dest, source=source, tag=tag, comm=self,
-                         token=token)
+                         token=token, datatype=datatype)
 
-    def irecv(self, x, source: int, *, dest: int, tag: int = 0, token=None):
+    def irecv(self, x, source: int, *, dest: int, tag: int = 0, token=None,
+              datatype=None, recv_into=None):
         """MPI_Irecv: nonblocking :meth:`recv`.
 
         Args: as :meth:`recv`.
@@ -558,10 +712,11 @@ class Communicator:
         """
         from repro.core import p2p
         return p2p.irecv(x, source, dest=dest, tag=tag, comm=self,
-                         token=token)
+                         token=token, datatype=datatype,
+                         recv_into=recv_into)
 
     def isendrecv(self, x, pairs=None, *, perm=None, dest=None, source=None,
-                  tag: int = 0, token=None, recv_into=None):
+                  tag: int = 0, token=None, datatype=None, recv_into=None):
         """Nonblocking :meth:`sendrecv` (fused MPI_Isend + MPI_Irecv).
 
         Args: as :meth:`sendrecv`.
@@ -571,7 +726,7 @@ class Communicator:
         from repro.core import p2p
         return p2p.isendrecv(x, pairs, perm=perm, dest=dest, source=source,
                              tag=tag, comm=self, token=token,
-                             recv_into=recv_into)
+                             datatype=datatype, recv_into=recv_into)
 
     # -- persistent plans (MPI-4 *_init -> Plan) ---------------------------
     # ``shape_dtype`` is the payload signature (jax.ShapeDtypeStruct, a
@@ -692,6 +847,75 @@ class Communicator:
         return plans.reduce_scatter_init(shape_dtype, op, comm=self,
                                          algorithm=algorithm)
 
+    def scatterv_init(self, shape_dtype, counts, root: int = 0, *,
+                      algorithm=None):
+        """Persistent :meth:`scatterv` (MPI_Scatterv_init).
+
+        Args:
+            shape_dtype: root's full ``(sum(counts), ...)`` signature.
+            counts: static per-rank row counts (frozen into the plan).
+            root: static scattering rank.
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`Plan`.
+        Raises:
+            ValueError: bad counts or a signature/counts mismatch.
+        """
+        from repro.core import plans
+        return plans.scatterv_init(shape_dtype, counts, root, comm=self,
+                                   algorithm=algorithm)
+
+    def gatherv_init(self, shape_dtype, counts, root: int = 0, *,
+                     algorithm=None):
+        """Persistent :meth:`gatherv` (MPI_Gatherv_init).
+
+        Args:
+            shape_dtype: the local padded ``(max(counts), ...)`` signature.
+            counts: static per-rank row counts (frozen into the plan).
+            root: rank at which the result is contractually valid.
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`Plan`.
+        Raises:
+            ValueError: bad counts or a signature/counts mismatch.
+        """
+        from repro.core import plans
+        return plans.gatherv_init(shape_dtype, counts, root, comm=self,
+                                  algorithm=algorithm)
+
+    def allgatherv_init(self, shape_dtype, counts, *, algorithm=None):
+        """Persistent :meth:`allgatherv` (MPI_Allgatherv_init).
+
+        Args:
+            shape_dtype: the local padded ``(max(counts), ...)`` signature.
+            counts: static per-rank row counts (frozen into the plan).
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`Plan`.
+        Raises:
+            ValueError: bad counts or a signature/counts mismatch.
+        """
+        from repro.core import plans
+        return plans.allgatherv_init(shape_dtype, counts, comm=self,
+                                     algorithm=algorithm)
+
+    def alltoallv_init(self, shape_dtype, counts, *, algorithm=None):
+        """Persistent :meth:`alltoallv` (MPI_Alltoallv_init).
+
+        Args:
+            shape_dtype: the ``(n, max(counts), ...)`` stacked-slot
+                signature.
+            counts: static n×n matrix ``counts[src][dst]`` (frozen).
+            algorithm: registry entry to freeze; None → policy choice.
+        Returns:
+            A cached :class:`Plan`.
+        Raises:
+            ValueError: bad counts matrix or a signature/counts mismatch.
+        """
+        from repro.core import plans
+        return plans.alltoallv_init(shape_dtype, counts, comm=self,
+                                    algorithm=algorithm)
+
     def barrier_init(self):
         """Persistent :meth:`barrier` (MPI_Barrier_init).
 
@@ -702,13 +926,16 @@ class Communicator:
         return plans.barrier_init(comm=self)
 
     def sendrecv_init(self, shape_dtype, pairs=None, *, perm=None, dest=None,
-                      source=None):
+                      source=None, recv_into=None):
         """Persistent :meth:`sendrecv` (MPI_Send_init family).
 
         Args:
             shape_dtype: strip signature the plan is frozen for.
             pairs/perm: static (src, dst) pattern (validated and frozen).
             dest/source: single-edge shorthand.
+            recv_into: View / bound datatype the received message scatters
+                into at completion (ERR_TRUNCATE status frozen at init
+                when statically too small).
         Returns:
             A cached :class:`Plan`; ``start(strip)`` is one token-tied
             ppermute.
@@ -717,7 +944,8 @@ class Communicator:
         """
         from repro.core import plans
         return plans.sendrecv_init(shape_dtype, pairs, perm=perm, dest=dest,
-                                   source=source, comm=self)
+                                   source=source, comm=self,
+                                   recv_into=recv_into)
 
 
 # --------------------------------------------------------------------------

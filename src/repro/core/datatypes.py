@@ -1,0 +1,932 @@
+"""MPI derived-datatype algebra for jmpi payloads (paper §2.3, Listing 6).
+
+The paper's usability claim — numba-mpi is "built around Numpy arrays
+including handling of non-contiguous views over array slices" — is an MPI
+*datatype* story: `MPI_Type_vector`, `MPI_Type_create_subarray` and friends
+let a call site describe a non-contiguous region once and have the library
+pack/unpack it at the transfer boundary.  This module is that layer for
+jmpi: a :class:`Datatype` describes a typed memory layout and provides
+trace-time ``pack``/``unpack`` lowerings (gathers/scatters XLA fuses into
+the transfer's prologue/epilogue — the functional-array equivalent of MPI's
+zero-copy datatype engine).
+
+Constructors (mirroring the MPI type constructors):
+
+* :func:`contiguous` — ``MPI_Type_contiguous``: a dense run of elements;
+* :func:`vector` — ``MPI_Type_vector``: equally-spaced, equally-sized
+  blocks of a flat buffer (strided columns, interleaved channels);
+* :func:`subarray` — ``MPI_Type_create_subarray``: a rectangular block of
+  an n-d array (halo faces, tile interiors); :func:`face` is the halo-slab
+  special case;
+* :func:`indexed` — ``MPI_Type_indexed``: ragged blocks of a flat buffer
+  at arbitrary displacements (the v-variant payload layout);
+* :class:`Slots` — the indexed layout over a *list* of per-slot arrays
+  (what ``neighbor_alltoallv`` and the classic v-collectives carry);
+* :func:`pytree` — beyond MPI: one datatype for a whole pytree of arrays
+  (gradient trees), packing every leaf into one wire vector.
+
+Uniform payload pipeline
+------------------------
+Every jmpi op accepts ``(payload, datatype)``: either pass ``datatype=`` to
+the op, or hand the op a **bound** payload — ``dt.bind(x)`` — which works
+anywhere an array is accepted (communicator methods, ``plan.start``,
+``recv_into=``).  The single entry points are :func:`pack_payload` (send
+side) and :func:`recv_adapter` (receive side); the blocking, nonblocking
+and persistent paths all flow through them, so pack/unpack rules cannot
+drift between paths.  ``views.View`` is sugar over :func:`subarray`
+(see ``repro.core.views``).
+
+Receive semantics are MPI's: completing a transfer into a bound datatype
+writes the first ``min(message, extent)`` elements (row-major over the
+datatype's layout); a statically larger message truncates —
+``ERR_TRUNCATE`` on the request status — and a smaller one leaves the
+remaining slots' prior contents in place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _prod(shape) -> int:
+    return int(np.prod(shape, dtype=int))
+
+
+# ---------------------------------------------------------------------------
+# Base + bound adapter
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Datatype:
+    """Base class: a typed memory layout with pack/unpack lowerings.
+
+    Subclasses define ``packed_shape`` (shape of the contiguous message),
+    ``pack(buf)`` and ``unpack(message, into=...)``; everything else
+    (``count``, ``bind``, truncation-aware ``scatter_into``, signature
+    helpers) is shared.  ``dtype`` is the element dtype when statically
+    known (None = inherit the buffer's).
+    """
+
+    dtype: Any = None
+
+    # -- layout interface (subclass responsibility) ------------------------
+    @property
+    def packed_shape(self) -> tuple:
+        """Static shape of the packed contiguous message."""
+        raise NotImplementedError
+
+    def pack(self, buf):
+        """Materialize the described region of ``buf`` as one contiguous
+        message (the send-side lowering; XLA fuses it into the transfer).
+
+        Args:
+            buf: the enclosing payload this datatype describes.
+        Returns:
+            A jnp array of :attr:`packed_shape`.
+        """
+        raise NotImplementedError
+
+    def unpack(self, message, into=None):
+        """Scatter a packed ``message`` back through the layout.
+
+        Args:
+            message: buffer shaped like (or reshapable to)
+                :attr:`packed_shape`.
+            into: the enclosing payload to write into.  Datatypes that
+                fully cover their extent (contiguous, Slots, pytree) accept
+                ``into=None`` and rebuild the payload from the message
+                alone; sparse layouts (vector, subarray, indexed) require
+                it.
+        Returns:
+            The payload with the message's elements in the described slots
+            (equal to ``into`` elsewhere).
+        """
+        raise NotImplementedError
+
+    # -- shared surface ----------------------------------------------------
+    @property
+    def covers_extent(self) -> bool:
+        """True when the layout fully covers its extent, so a received
+        message alone rebuilds the payload (no target buffer needed) —
+        Slots and Pytree; sparse layouts (vector/subarray/indexed and the
+        shape-erasing contiguous) must be bound to a buffer first."""
+        return False
+
+    @property
+    def count(self) -> int:
+        """Packed element count (the datatype's transfer size)."""
+        return _prod(self.packed_shape)
+
+    def struct(self, dtype=None) -> jax.ShapeDtypeStruct:
+        """Signature of the packed message (for ``*_init`` plans).
+
+        Args:
+            dtype: element dtype override (required when the datatype has
+                no static dtype of its own).
+        Returns:
+            ``jax.ShapeDtypeStruct(packed_shape, dtype)``.
+        Raises:
+            ValueError: no dtype available from either source.
+        """
+        dt = dtype if dtype is not None else self.dtype
+        if dt is None:
+            raise ValueError(f"{type(self).__name__} has no static dtype; "
+                             f"pass dtype= to struct()")
+        return jax.ShapeDtypeStruct(tuple(self.packed_shape), jnp.dtype(dt))
+
+    def bind(self, buf) -> "Bound":
+        """Attach this layout to a concrete payload.
+
+        The returned :class:`Bound` value is accepted anywhere jmpi takes a
+        payload (``pack`` protocol) or a receive target (``scatter_into``
+        protocol) — the universal ``(payload, datatype)`` form.
+
+        Args:
+            buf: the enclosing array (or slot list / pytree).
+        Returns:
+            The :class:`Bound` adapter.
+        """
+        return Bound(datatype=self, buf=buf)
+
+    def scatter_into(self, buf, message):
+        """MPI-recv write of ``message`` into ``buf`` through this layout.
+
+        The first ``min(message.size, count)`` elements land (row-major
+        over the layout); a longer message's tail is dropped (the
+        ERR_TRUNCATE condition — reported by the request's status, not
+        here) and a shorter one leaves the remaining slots untouched.
+        One uniform signature across the whole hierarchy: fully-covering
+        layouts (Slots, Pytree) override this accepting ``buf=None``.
+
+        Args:
+            buf: the enclosing payload (None allowed only when
+                :attr:`covers_extent`).
+            message: the received contiguous buffer.
+        Returns:
+            The updated payload.
+        """
+        cur = self.pack(buf)
+        m = jnp.ravel(jnp.asarray(message))[:cur.size]
+        if m.size < cur.size:
+            flat = jnp.concatenate([m.astype(cur.dtype),
+                                    cur.reshape(-1)[m.size:]])
+        else:
+            flat = m.astype(cur.dtype)
+        return self.unpack(flat.reshape(cur.shape), into=buf)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bound:
+    """A (datatype, payload) pair — the uniform jmpi payload value.
+
+    Send side: ``pack()`` materializes the contiguous message (the duck
+    type :func:`pack_payload` recognizes).  Receive side: pass it as
+    ``recv_into=`` — ``scatter_into(message)`` applies the datatype's
+    MPI-recv truncation semantics to the bound buffer.
+    """
+
+    datatype: Datatype
+    buf: Any
+
+    def pack(self):
+        """The bound payload's contiguous message (send-side lowering)."""
+        return self.datatype.pack(self.buf)
+
+    def scatter_into(self, message):
+        """Write a received ``message`` into the bound buffer (MPI-recv
+        semantics: leading elements land, extra slots keep prior contents).
+
+        Args:
+            message: the received contiguous buffer.
+        Returns:
+            The updated enclosing payload.
+        """
+        return self.datatype.scatter_into(self.buf, message)
+
+    @property
+    def count(self) -> int:
+        """Packed element count of the bound datatype."""
+        return self.datatype.count
+
+    @property
+    def shape(self) -> tuple:
+        """Shape of the packed message."""
+        return tuple(self.datatype.packed_shape)
+
+
+# ---------------------------------------------------------------------------
+# Contiguous
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Contiguous(Datatype):
+    """``MPI_Type_contiguous``: a dense run of ``n`` elements."""
+
+    n: int = 0
+
+    @property
+    def packed_shape(self) -> tuple:
+        """``(n,)``."""
+        return (self.n,)
+
+    def pack(self, buf):
+        """Flatten ``buf`` (must hold exactly ``n`` elements).
+
+        Args:
+            buf: payload with ``buf.size == n``.
+        Returns:
+            The ``(n,)`` message.
+        Raises:
+            ValueError: element-count mismatch.
+        """
+        x = jnp.asarray(buf)
+        if _prod(x.shape) != self.n:
+            raise ValueError(f"contiguous({self.n}) cannot pack a payload "
+                             f"of shape {tuple(x.shape)} "
+                             f"({_prod(x.shape)} elements)")
+        return x.reshape(self.n)
+
+    def unpack(self, message, into=None):
+        """Reshape the message back to the payload's shape.
+
+        Args:
+            message: the ``(n,)`` (or reshapable) message.
+            into: optional payload supplying shape/dtype (None → the flat
+                ``(n,)`` vector itself).
+        Returns:
+            The reconstructed payload.
+        """
+        m = jnp.asarray(message).reshape(self.n)
+        if into is None:
+            return m if self.dtype is None else m.astype(self.dtype)
+        x = jnp.asarray(into)
+        return m.reshape(x.shape).astype(x.dtype)
+
+
+def contiguous(n: int, dtype=None) -> Contiguous:
+    """``MPI_Type_contiguous(n)``: a dense run of ``n`` elements.
+
+    Args:
+        n: element count.
+        dtype: optional static element dtype.
+    Returns:
+        The :class:`Contiguous` datatype.
+    """
+    return Contiguous(dtype=None if dtype is None else jnp.dtype(dtype),
+                      n=int(n))
+
+
+# ---------------------------------------------------------------------------
+# Vector (equally-spaced blocks of a flat buffer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Vector(Datatype):
+    """``MPI_Type_vector``: ``n_blocks`` blocks of ``blocklen`` elements,
+    the starts ``stride`` elements apart, over a flat (raveled) buffer."""
+
+    n_blocks: int = 0
+    blocklen: int = 1
+    stride: int = 1
+
+    def __post_init__(self):
+        if self.blocklen > self.stride:
+            raise ValueError(f"vector blocklen {self.blocklen} exceeds "
+                             f"stride {self.stride} (blocks would overlap)")
+
+    @property
+    def extent(self) -> int:
+        """Minimum flat-buffer length the layout spans."""
+        if self.n_blocks == 0:
+            return 0
+        return (self.n_blocks - 1) * self.stride + self.blocklen
+
+    @property
+    def packed_shape(self) -> tuple:
+        """``(n_blocks * blocklen,)``."""
+        return (self.n_blocks * self.blocklen,)
+
+    def _indices(self) -> np.ndarray:
+        starts = np.arange(self.n_blocks) * self.stride
+        return (starts[:, None] + np.arange(self.blocklen)).reshape(-1)
+
+    def pack(self, buf):
+        """Gather the strided blocks from the raveled buffer.
+
+        Args:
+            buf: payload with at least :attr:`extent` elements.
+        Returns:
+            The ``(n_blocks·blocklen,)`` message.
+        Raises:
+            ValueError: the buffer is too short for the layout.
+        """
+        flat = jnp.asarray(buf).reshape(-1)
+        if flat.shape[0] < self.extent:
+            raise ValueError(f"vector extent {self.extent} exceeds buffer "
+                             f"size {flat.shape[0]}")
+        return flat[self._indices()]
+
+    def unpack(self, message, into=None):
+        """Scatter the message back into the strided blocks of ``into``.
+
+        Args:
+            message: the packed message.
+            into: the enclosing buffer (required — the layout is sparse).
+        Returns:
+            ``into`` with the blocks replaced.
+        Raises:
+            ValueError: ``into`` is None.
+        """
+        if into is None:
+            raise ValueError("vector.unpack needs into= (sparse layout)")
+        x = jnp.asarray(into)
+        flat = x.reshape(-1)
+        m = jnp.asarray(message).reshape(self.packed_shape).astype(x.dtype)
+        return flat.at[self._indices()].set(m).reshape(x.shape)
+
+
+def vector(n_blocks: int, blocklen: int, stride: int, dtype=None) -> Vector:
+    """``MPI_Type_vector(count, blocklen, stride)`` over a flat buffer.
+
+    Args:
+        n_blocks: number of blocks.
+        blocklen: elements per block.
+        stride: elements between block starts (``>= blocklen``).
+        dtype: optional static element dtype.
+    Returns:
+        The :class:`Vector` datatype.
+    Raises:
+        ValueError: overlapping blocks (``blocklen > stride``).
+    """
+    return Vector(dtype=None if dtype is None else jnp.dtype(dtype),
+                  n_blocks=int(n_blocks), blocklen=int(blocklen),
+                  stride=int(stride))
+
+
+# ---------------------------------------------------------------------------
+# Subarray (rectangular block of an n-d array; general slices)
+# ---------------------------------------------------------------------------
+
+def _norm_slice(s: slice, dim: int) -> tuple[int, int, int]:
+    start, stop, step = s.indices(dim)
+    return (start, stop, step)
+
+
+def _slice_len(start: int, stop: int, step: int) -> int:
+    return len(range(start, stop, step))
+
+
+@dataclasses.dataclass(frozen=True)
+class Subarray(Datatype):
+    """``MPI_Type_create_subarray`` generalized to arbitrary static slices
+    (including negative steps) with optional squeezed (integer-indexed)
+    axes — the layout behind ``views.View``.
+
+    ``index`` holds one resolved ``(start, stop, step)`` triple per array
+    dimension; ``squeeze`` lists dimensions that integer indices removed
+    from the packed message.
+    """
+
+    full_shape: tuple = ()
+    index: tuple = ()
+    squeeze: tuple = ()
+
+    @property
+    def sub_shape(self) -> tuple:
+        """Per-dimension selected lengths (before squeezing)."""
+        return tuple(_slice_len(*tr) for tr in self.index)
+
+    @property
+    def packed_shape(self) -> tuple:
+        """The selected block's shape with squeezed axes removed."""
+        return tuple(n for d, n in enumerate(self.sub_shape)
+                     if d not in self.squeeze)
+
+    def _slices(self) -> tuple:
+        return tuple(slice(start, (None if (step < 0 and stop < 0) else stop),
+                           step)
+                     for (start, stop, step) in self.index)
+
+    def pack(self, buf):
+        """Slice the described block out of ``buf``.
+
+        Args:
+            buf: array of :attr:`full_shape`.
+        Returns:
+            The dense block, squeezed axes removed.
+        Raises:
+            ValueError: the buffer's shape is not :attr:`full_shape`.
+        """
+        x = jnp.asarray(buf)
+        if tuple(x.shape) != tuple(self.full_shape):
+            raise ValueError(f"subarray of {tuple(self.full_shape)} cannot "
+                             f"pack a payload of shape {tuple(x.shape)}")
+        out = x[self._slices()]
+        if self.squeeze:
+            out = out.reshape(self.packed_shape)
+        return out
+
+    def unpack(self, message, into=None):
+        """Write the block back into ``into`` at its described position.
+
+        Args:
+            message: the dense block (packed shape).
+            into: the enclosing array (required — the layout is sparse).
+        Returns:
+            ``into`` with the block replaced.
+        Raises:
+            ValueError: ``into`` is None.
+        """
+        if into is None:
+            raise ValueError("subarray.unpack needs into= (sparse layout)")
+        x = jnp.asarray(into)
+        m = jnp.asarray(message).reshape(self.sub_shape).astype(x.dtype)
+        return x.at[self._slices()].set(m)
+
+
+def subarray(full_shape, sub_shape, starts, dtype=None) -> Subarray:
+    """``MPI_Type_create_subarray``: a unit-stride rectangular block.
+
+    Args:
+        full_shape: shape of the enclosing array.
+        sub_shape: shape of the block (same arity).
+        starts: per-dimension block offsets (same arity).
+    Returns:
+        The :class:`Subarray` datatype.
+    Raises:
+        ValueError: arity mismatch or a block that exceeds the array.
+    """
+    full = tuple(int(d) for d in full_shape)
+    sub = tuple(int(d) for d in sub_shape)
+    off = tuple(int(d) for d in starts)
+    if not (len(full) == len(sub) == len(off)):
+        raise ValueError(f"subarray arity mismatch: full={full} sub={sub} "
+                         f"starts={off}")
+    for d, (n, m, s) in enumerate(zip(full, sub, off)):
+        if s < 0 or m < 0 or s + m > n:
+            raise ValueError(f"subarray dim {d}: block [{s}, {s + m}) "
+                             f"outside array extent {n}")
+    return Subarray(dtype=None if dtype is None else jnp.dtype(dtype),
+                    full_shape=full,
+                    index=tuple((s, s + m, 1) for s, m in zip(off, sub)))
+
+
+def subarray_of(full_shape, index) -> Subarray:
+    """Build a :class:`Subarray` from a NumPy-style index expression.
+
+    Accepts what ``views.View`` accepts — a tuple of slices (any step,
+    including negative) and integers (negative allowed; the dimension is
+    squeezed out of the packed message).  Trailing unindexed dimensions
+    are kept whole.
+
+    Args:
+        full_shape: shape of the enclosing array.
+        index: tuple of slices/ints (or a single slice/int).
+    Returns:
+        The resolved :class:`Subarray`.
+    Raises:
+        TypeError: an index element is not a slice or int (``Ellipsis``,
+            ``None``/newaxis and array indices are named explicitly).
+        IndexError: too many indices or an integer out of range.
+    """
+    full = tuple(int(d) for d in full_shape)
+    if not isinstance(index, tuple):
+        index = (index,)
+    if len(index) > len(full):
+        raise IndexError(f"too many indices ({len(index)}) for shape {full}")
+    triples, squeeze = [], []
+    for d, dim in enumerate(full):
+        if d >= len(index):
+            triples.append((0, dim, 1))
+            continue
+        e = index[d]
+        if e is Ellipsis:
+            raise TypeError(
+                "View/subarray indices do not support Ellipsis (...); "
+                "spell out the per-dimension slices")
+        if e is None:
+            raise TypeError(
+                "View/subarray indices do not support None/newaxis; the "
+                "payload layout must keep the array's dimensionality")
+        if isinstance(e, (np.ndarray, jnp.ndarray, list)):
+            raise TypeError(
+                "View/subarray indices do not support array/fancy indices; "
+                "use repro.core.datatypes.indexed for ragged selections")
+        if isinstance(e, slice):
+            triples.append(_norm_slice(e, dim))
+        elif isinstance(e, (int, np.integer)):
+            i = int(e)
+            if i < 0:
+                i += dim
+            if not 0 <= i < dim:
+                raise IndexError(f"index {int(e)} out of range for dim {d} "
+                                 f"of extent {dim}")
+            triples.append((i, i + 1, 1))
+            squeeze.append(d)
+        else:
+            raise TypeError(f"View index elements must be slice/int, "
+                            f"got {e!r}")
+    return Subarray(full_shape=full, index=tuple(triples),
+                    squeeze=tuple(squeeze))
+
+
+def face(full_shape, axis: int, side: str, width: int = 1,
+         dtype=None) -> Subarray:
+    """The halo-slab subarray: a boundary face of an n-d block.
+
+    Args:
+        full_shape: shape of the local block.
+        axis: decomposed axis the face is perpendicular to.
+        side: ``"lo"`` (leading ``width`` slabs) or ``"hi"`` (trailing).
+        width: slab thickness (halo width).
+    Returns:
+        The :class:`Subarray` selecting the face.
+    Raises:
+        ValueError: bad side, or the face is thicker than the block.
+    """
+    full = tuple(int(d) for d in full_shape)
+    if side not in ("lo", "hi"):
+        raise ValueError(f"face side must be 'lo' or 'hi', got {side!r}")
+    if not 0 <= axis < len(full):
+        raise ValueError(f"face axis {axis} out of range for {full}")
+    if width > full[axis]:
+        raise ValueError(f"face width {width} exceeds extent {full[axis]} "
+                         f"of axis {axis}")
+    sub = tuple(width if d == axis else n for d, n in enumerate(full))
+    starts = tuple((full[axis] - width if side == "hi" else 0)
+                   if d == axis else 0 for d in range(len(full)))
+    return subarray(full, sub, starts, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Indexed (ragged blocks of a flat buffer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Indexed(Datatype):
+    """``MPI_Type_indexed``: ragged blocks at arbitrary displacements over
+    a flat (raveled) buffer — the layout v-variant payloads live in."""
+
+    blocklengths: tuple = ()
+    displacements: tuple = ()
+
+    def __post_init__(self):
+        if len(self.blocklengths) != len(self.displacements):
+            raise ValueError(
+                f"indexed needs matching blocklengths/displacements, got "
+                f"{len(self.blocklengths)} vs {len(self.displacements)}")
+
+    @property
+    def extent(self) -> int:
+        """Minimum flat-buffer length the layout spans."""
+        ends = [d + l for d, l in zip(self.displacements, self.blocklengths)]
+        return max(ends, default=0)
+
+    @property
+    def packed_shape(self) -> tuple:
+        """``(sum(blocklengths),)``."""
+        return (sum(self.blocklengths),)
+
+    def _indices(self) -> np.ndarray:
+        if not self.blocklengths:
+            return np.zeros((0,), dtype=int)
+        return np.concatenate([np.arange(l) + d for l, d in
+                               zip(self.blocklengths, self.displacements)])
+
+    def pack(self, buf):
+        """Gather the ragged blocks from the raveled buffer.
+
+        Args:
+            buf: payload with at least :attr:`extent` elements.
+        Returns:
+            The concatenated ``(sum(blocklengths),)`` message.
+        Raises:
+            ValueError: the buffer is too short for the layout.
+        """
+        flat = jnp.asarray(buf).reshape(-1)
+        if flat.shape[0] < self.extent:
+            raise ValueError(f"indexed extent {self.extent} exceeds buffer "
+                             f"size {flat.shape[0]}")
+        return flat[self._indices()]
+
+    def unpack(self, message, into=None):
+        """Scatter the message back into the ragged blocks of ``into``.
+
+        Args:
+            message: the packed message.
+            into: the enclosing buffer (required — the layout is sparse).
+        Returns:
+            ``into`` with the blocks replaced.
+        Raises:
+            ValueError: ``into`` is None.
+        """
+        if into is None:
+            raise ValueError("indexed.unpack needs into= (sparse layout)")
+        x = jnp.asarray(into)
+        m = jnp.asarray(message).reshape(self.packed_shape).astype(x.dtype)
+        return x.reshape(-1).at[self._indices()].set(m).reshape(x.shape)
+
+
+def indexed(blocklengths, displacements, dtype=None) -> Indexed:
+    """``MPI_Type_indexed``: ragged blocks at static displacements.
+
+    Args:
+        blocklengths: per-block element counts.
+        displacements: per-block flat-buffer offsets.
+        dtype: optional static element dtype.
+    Returns:
+        The :class:`Indexed` datatype.
+    Raises:
+        ValueError: mismatched arities or overlapping blocks.
+    """
+    ls = tuple(int(l) for l in blocklengths)
+    ds = tuple(int(d) for d in displacements)
+    spans = sorted(zip(ds, ls))
+    for (d0, l0), (d1, _) in zip(spans, spans[1:]):
+        if d0 + l0 > d1:
+            raise ValueError(f"indexed blocks overlap: [{d0}, {d0 + l0}) "
+                             f"and [{d1}, ...)")
+    return Indexed(dtype=None if dtype is None else jnp.dtype(dtype),
+                   blocklengths=ls, displacements=ds)
+
+
+# ---------------------------------------------------------------------------
+# Slots (the indexed layout over a list of per-slot arrays)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Slots(Datatype):
+    """The :func:`indexed` layout applied to a *list* of per-slot arrays —
+    what ``neighbor_alltoallv`` (and any ragged multi-destination payload)
+    carries.  ``pack`` concatenates the raveled slots into one wire vector;
+    ``unpack`` splits it back into the slot list.  Fully covering, so it
+    doubles as a receive adapter (``scatter_into(message)`` with no bound
+    buffer)."""
+
+    shapes: tuple = ()
+
+    @property
+    def packed_shape(self) -> tuple:
+        """``(sum of slot sizes,)``."""
+        return (sum(_prod(s) for s in self.shapes),)
+
+    def pack(self, xs):
+        """Concatenate the raveled slots (shape-checked) into one vector.
+
+        Args:
+            xs: sequence of slot arrays matching :attr:`shapes`.
+        Returns:
+            The flat wire vector.
+        Raises:
+            ValueError: slot count or a slot shape differs from the
+                declared layout.
+        """
+        from repro.core.views import pack as _pack_one
+        slots = [_pack_one(x) for x in xs]
+        got = tuple(tuple(s.shape) for s in slots)
+        if got != tuple(tuple(s) for s in self.shapes):
+            raise ValueError(f"slot datatype is frozen for shapes "
+                             f"{tuple(self.shapes)}; got {got}")
+        if not slots:
+            return jnp.zeros((0,), self.dtype or jnp.float32)
+        return jnp.concatenate([s.reshape(-1) for s in slots])
+
+    def unpack(self, message, into=None):
+        """Split the wire vector back into the slot list.
+
+        Args:
+            message: the flat wire vector.
+            into: ignored (the layout fully covers its extent).
+        Returns:
+            List of slot arrays in declared order.
+        """
+        del into
+        flat = jnp.asarray(message).reshape(-1)
+        out, off = [], 0
+        for shp in self.shapes:
+            n = _prod(shp)
+            out.append(flat[off:off + n].reshape(shp))
+            off += n
+        return out
+
+    @property
+    def covers_extent(self) -> bool:
+        """True: the slot list rebuilds from the wire vector alone."""
+        return True
+
+    def scatter_into(self, buf, message):
+        """Rebuild the slot list from the completed wire vector (fully
+        covering — ``buf`` may be None and is ignored).
+
+        Args:
+            buf: ignored (no target buffer needed).
+            message: the received flat vector.
+        Returns:
+            The slot list.
+        """
+        del buf
+        return self.unpack(message)
+
+
+def slots(shapes, dtype=None) -> Slots:
+    """The :class:`Slots` datatype for a list of per-slot arrays.
+
+    Args:
+        shapes: per-slot static shapes, in slot order.
+        dtype: optional shared element dtype.
+    Returns:
+        The :class:`Slots` datatype.
+    """
+    return Slots(dtype=None if dtype is None else jnp.dtype(dtype),
+                 shapes=tuple(tuple(int(d) for d in s) for s in shapes))
+
+
+# ---------------------------------------------------------------------------
+# Pytree (one datatype for a whole tree of arrays)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Pytree(Datatype):
+    """One wire vector for a whole pytree of arrays (beyond MPI: the
+    gradient-sync datatype).  Leaves pack in flatten order, each through
+    its own leaf datatype, cast to ``wire_dtype`` on the wire and back to
+    the leaf dtype on unpack.  Fully covering → usable as a receive
+    adapter directly."""
+
+    treedef: Any = None
+    leaf_shapes: tuple = ()
+    leaf_dtypes: tuple = ()
+
+    @property
+    def wire_dtype(self):
+        """Dtype every leaf is cast to on the wire (``dtype`` field)."""
+        return self.dtype
+
+    @property
+    def packed_shape(self) -> tuple:
+        """``(total leaf elements,)``."""
+        return (sum(_prod(s) for s in self.leaf_shapes),)
+
+    def pack(self, tree):
+        """Flatten the tree into one ``wire_dtype`` vector.
+
+        Args:
+            tree: pytree matching the frozen treedef/leaf signatures.
+        Returns:
+            The flat wire vector.
+        Raises:
+            ValueError: leaf count/shape mismatch with the frozen layout.
+        """
+        leaves, tdef = jax.tree_util.tree_flatten(tree)
+        if tdef != self.treedef:
+            raise ValueError(f"pytree datatype is frozen for {self.treedef}; "
+                             f"got {tdef}")
+        got = tuple(tuple(l.shape) for l in leaves)
+        if got != self.leaf_shapes:
+            raise ValueError(f"pytree datatype is frozen for leaf shapes "
+                             f"{self.leaf_shapes}; got {got}")
+        if not leaves:
+            return jnp.zeros((0,), self.wire_dtype)
+        return jnp.concatenate(
+            [jnp.asarray(l).reshape(-1).astype(self.wire_dtype)
+             for l in leaves])
+
+    def unpack(self, message, into=None):
+        """Rebuild the pytree from the wire vector (leaf dtypes restored).
+
+        Args:
+            message: the flat wire vector.
+            into: ignored (fully-covering layout).
+        Returns:
+            The reconstructed pytree.
+        """
+        del into
+        flat = jnp.asarray(message).reshape(-1)
+        leaves, off = [], 0
+        for shp, dt in zip(self.leaf_shapes, self.leaf_dtypes):
+            n = _prod(shp)
+            leaves.append(flat[off:off + n].reshape(shp).astype(dt))
+            off += n
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    @property
+    def covers_extent(self) -> bool:
+        """True: the tree rebuilds from the wire vector alone."""
+        return True
+
+    def scatter_into(self, buf, message):
+        """Rebuild the tree from the completed wire vector (fully
+        covering — ``buf`` may be None and is ignored).
+
+        Args:
+            buf: ignored (no target buffer needed).
+            message: the received flat vector.
+        Returns:
+            The reconstructed pytree.
+        """
+        del buf
+        return self.unpack(message)
+
+
+def pytree(tree, wire_dtype=None) -> Pytree:
+    """One datatype for a whole pytree of arrays (gradient buckets).
+
+    Args:
+        tree: a pytree of arrays or ShapeDtypeStructs supplying the static
+            leaf signatures.
+        wire_dtype: dtype leaves are cast to on the wire (default: the
+            jnp promotion of all leaf dtypes).
+    Returns:
+        The :class:`Pytree` datatype; ``pack(tree)`` → one flat vector,
+        ``unpack(vec)`` → the tree with original leaf dtypes.
+    """
+    leaves, tdef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(int(d) for d in l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    if wire_dtype is None:
+        wire_dtype = (jnp.result_type(*dtypes) if dtypes else jnp.float32)
+    return Pytree(dtype=jnp.dtype(wire_dtype), treedef=tdef,
+                  leaf_shapes=shapes, leaf_dtypes=dtypes)
+
+
+# ---------------------------------------------------------------------------
+# The shared payload pipeline (blocking / nonblocking / persistent paths)
+# ---------------------------------------------------------------------------
+
+def pack_payload(x, datatype: Optional[Datatype] = None):
+    """THE send-side entry point: materialize any jmpi payload.
+
+    Resolution order: an explicit ``datatype`` packs ``x`` through it; a
+    payload carrying its own ``pack()`` (a :class:`Bound` value or a
+    ``views.View``) packs itself; anything NumPy-like becomes a jnp array.
+    Every dispatch path (blocking, i*, ``plan.start``) calls this one
+    function, so pack rules cannot drift between paths.
+
+    Args:
+        x: the payload (array, View, Bound, slot list/pytree with a
+            datatype).
+        datatype: optional explicit layout.
+    Returns:
+        The contiguous jnp message.
+    """
+    if datatype is not None:
+        return datatype.pack(x)
+    if hasattr(x, "pack") and callable(x.pack):
+        return x.pack()
+    return jnp.asarray(x)
+
+
+def recv_adapter(obj):
+    """THE receive-side entry point: normalize a ``recv_into`` target.
+
+    Accepts a ``views.View``, a :class:`Bound` value (``dt.bind(buf)``),
+    or a fully-covering :class:`Datatype` (``covers_extent`` —
+    Slots/Pytree, which need no target buffer) — returns an adapter with
+    the single-argument ``scatter_into(message)`` protocol (and a
+    ``count`` for the static ERR_TRUNCATE check), or None.
+
+    Args:
+        obj: the receive target (or None).
+    Returns:
+        The adapter, or None when ``obj`` is None.
+    Raises:
+        TypeError: ``obj`` has no usable receive protocol, or is a sparse
+            (non-covering) datatype passed without a buffer.
+    """
+    if obj is None:
+        return None
+    if isinstance(obj, Datatype):
+        if not obj.covers_extent:
+            raise TypeError(
+                f"{type(obj).__name__} is a sparse layout; bind it to a "
+                f"buffer first: dt.bind(buf)")
+        return obj.bind(None)
+    if hasattr(obj, "scatter_into"):
+        return obj
+    raise TypeError(f"recv target {type(obj).__name__} has no "
+                    f"scatter_into protocol; pass a View or dt.bind(buf)")
+
+
+def adapter_count(adapter) -> Optional[int]:
+    """Static packed element count of a receive adapter (for the
+    trace-time ERR_TRUNCATE check), or None when it is not statically
+    known without packing.
+
+    Args:
+        adapter: a normalized receive adapter.
+    Returns:
+        The element count, or None.
+    """
+    if adapter is None:
+        return None
+    count = getattr(adapter, "count", None)
+    if count is not None:
+        return int(count)
+    if hasattr(adapter, "pack"):
+        return _prod(adapter.pack().shape)
+    return None

@@ -23,8 +23,8 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import datatypes as datatypes_lib
 from repro.core import token as token_lib
-from repro.core import views as views_lib
 from repro.core.comm import Communicator, resolve
 from repro.core.token import ERR_TRUNCATE, SUCCESS
 
@@ -49,22 +49,18 @@ class Request:
     value: Any
     token: jax.Array
     tag: int = 0
-    unpack: Any = None  # View to scatter the payload back into, if any
+    recv: Any = None  # receive adapter (View / bound datatype) to scatter into
     used_ambient: bool = True
     status: int = SUCCESS
 
     def _materialize(self):
         token, value = token_lib.tie(self.token, self.value)
-        if self.unpack is not None:
-            value = self.unpack.scatter_into(value)
+        if self.recv is not None:
+            value = self.recv.scatter_into(value)
         return token, value
 
 
-def _payload(x):
-    """Accept raw arrays, NumPy-likes (lists/scalars) or Views."""
-    if isinstance(x, views_lib.View):
-        return x.pack(), x
-    return jnp.asarray(x), None
+_payload = datatypes_lib.pack_payload
 
 
 def _resolve_perm(comm: Communicator, pairs=None, perm=None, dest=None,
@@ -85,21 +81,30 @@ def _resolve_perm(comm: Communicator, pairs=None, perm=None, dest=None,
 
 def isendrecv(x, pairs=None, *, perm=None, dest=None, source=None, tag: int = 0,
               comm: Communicator | None = None, token=None,
-              recv_into: views_lib.View | None = None) -> Request:
+              datatype=None, recv_into=None) -> Request:
     """Start a non-blocking exchange along a static (src→dst) pattern.
 
     Fuses MPI_Isend + MPI_Irecv: each listed src sends, each listed dst
     receives; ranks absent from the pattern receive zeros (discardable).
+
+    Payloads are ``(x, datatype)`` uniform: ``datatype=`` packs ``x``
+    through an explicit :class:`~repro.core.datatypes.Datatype`, or ``x``
+    may be a View / ``dt.bind(buf)`` value packing itself.  ``recv_into``
+    is the receive-side counterpart — a View, a bound datatype, or a
+    fully-covering datatype — whose layout the received message scatters
+    into at completion (ERR_TRUNCATE status when statically too small).
     """
     comm = resolve(comm)
     tok = token if token is not None else token_lib.ambient().get()
-    payload, _ = _payload(x)
+    payload = _payload(x, datatype)
+    recv = datatypes_lib.recv_adapter(recv_into)
     p = _resolve_perm(comm, pairs, perm, dest, source)
     status = SUCCESS
-    if recv_into is not None and recv_into.pack().size < payload.size:
-        # Message statically larger than the receive view: MPI_ERR_TRUNCATE.
+    rcount = datatypes_lib.adapter_count(recv)
+    if rcount is not None and rcount < payload.size:
+        # Message statically larger than the receive layout: MPI_ERR_TRUNCATE.
         # The transfer still happens (shapes are static under SPMD); the
-        # receive view keeps the leading elements and the status reports it.
+        # receive layout keeps the leading elements and the status reports it.
         status = ERR_TRUNCATE
     # Token-tie the payload so this ppermute cannot be hoisted over earlier
     # jmpi ops (MPI non-overtaking order), then transfer.
@@ -108,28 +113,32 @@ def isendrecv(x, pairs=None, *, perm=None, dest=None, source=None, tag: int = 0,
     new_tok = token_lib.advance(tok, out)
     if token is None:
         token_lib.ambient().set(new_tok)
-    return Request(value=out, token=new_tok, tag=tag, unpack=recv_into,
+    return Request(value=out, token=new_tok, tag=tag, recv=recv,
                    used_ambient=token is None, status=status)
 
 
 def isend(x, dest: int, *, source: int, tag: int = 0,
-          comm: Communicator | None = None, token=None) -> tuple[int, Request]:
+          comm: Communicator | None = None, token=None,
+          datatype=None) -> tuple[int, Request]:
     """MPI_Isend analogue (static source & dest ranks). Returns (status, req)."""
-    req = isendrecv(x, dest=dest, source=source, tag=tag, comm=comm, token=token)
+    req = isendrecv(x, dest=dest, source=source, tag=tag, comm=comm,
+                    token=token, datatype=datatype)
     return SUCCESS, req
 
 
 def irecv(x, source: int, *, dest: int, tag: int = 0,
-          comm: Communicator | None = None, token=None) -> tuple[int, Request]:
+          comm: Communicator | None = None, token=None, datatype=None,
+          recv_into=None) -> tuple[int, Request]:
     """MPI_Irecv analogue: (status, request); wait(request) -> payload.
 
     Under SPMD the matching isend *is* the transfer (one fused permute), so
     irecv issues that permute with ``x`` as the send-side value; on the
-    ``dest`` rank the waited value is the received buffer.  Prefer
+    ``dest`` rank the waited value is the received buffer.  ``recv_into``
+    scatters the message through a View/bound-datatype layout.  Prefer
     :func:`isendrecv` for new code (documented in README).
     """
     req = isendrecv(x, dest=dest, source=source, tag=tag, comm=comm,
-                    token=token)
+                    token=token, datatype=datatype, recv_into=recv_into)
     return SUCCESS, req
 
 
@@ -220,11 +229,13 @@ def testany(reqs: Sequence[Request], tag: int = ANY_TAG):
 
 def sendrecv(x, pairs=None, *, perm=None, dest=None, source=None, tag: int = 0,
              comm: Communicator | None = None, token=None,
-             recv_into: views_lib.View | None = None):
+             datatype=None, recv_into=None):
     """Blocking exchange: (status, received) — or (status, received, token)
-    when an explicit token is passed (control-flow-safe form)."""
+    when an explicit token is passed (control-flow-safe form).  Payloads
+    and receive targets are datatype-uniform (see :func:`isendrecv`)."""
     req = isendrecv(x, pairs=pairs, perm=perm, dest=dest, source=source,
-                    tag=tag, comm=comm, token=token, recv_into=recv_into)
+                    tag=tag, comm=comm, token=token, datatype=datatype,
+                    recv_into=recv_into)
     status, value = wait(req)
     if token is not None:
         return status, value, req.token
@@ -232,18 +243,21 @@ def sendrecv(x, pairs=None, *, perm=None, dest=None, source=None, tag: int = 0,
 
 
 def send(x, dest: int, *, source: int, tag: int = 0,
-         comm: Communicator | None = None, token=None) -> int:
+         comm: Communicator | None = None, token=None, datatype=None) -> int:
     """MPI_Send analogue (static ranks). The matched recv is the same fused
-    permute — use the return of the paired :func:`recv` for the payload."""
+    permute — use the return of the paired :func:`recv` for the payload.
+    ``datatype=`` packs ``x`` through an explicit derived datatype."""
     status, _ = sendrecv(x, dest=dest, source=source, tag=tag, comm=comm,
-                         token=token)
+                         token=token, datatype=datatype)
     return status
 
 
 def recv(x, source: int, *, dest: int, tag: int = 0,
-         comm: Communicator | None = None, token=None):
+         comm: Communicator | None = None, token=None, datatype=None,
+         recv_into=None):
     """MPI_Recv analogue: (status, payload). ``x`` is the send-side value (the
     fused SPMD permute needs it in-trace; on non-source ranks its contents are
-    ignored)."""
+    ignored).  ``recv_into`` scatters the message through a View/bound
+    datatype layout."""
     return sendrecv(x, dest=dest, source=source, tag=tag, comm=comm,
-                    token=token)
+                    token=token, datatype=datatype, recv_into=recv_into)

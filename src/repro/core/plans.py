@@ -38,16 +38,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import datatypes as datatypes_lib
 from repro.core import registry
 from repro.core import token as token_lib
-from repro.core import views as views_lib
 from repro.core.comm import Communicator, resolve
 from repro.core.operators import Operator
 from repro.core.p2p import Request
+from repro.core.token import ERR_TRUNCATE, SUCCESS
 
 __all__ = [
     "Plan", "collective_init", "allreduce_init", "bcast_init", "scatter_init",
     "gather_init", "allgather_init", "alltoall_init", "reduce_scatter_init",
+    "scatterv_init", "gatherv_init", "allgatherv_init", "alltoallv_init",
     "barrier_init", "sendrecv_init", "neighbor_allgather_init",
     "neighbor_alltoall_init", "neighbor_alltoallv_init",
     "plan_cache_stats", "plan_cache_clear",
@@ -66,7 +68,7 @@ def _as_struct(shape_dtype) -> jax.ShapeDtypeStruct:
                                 jnp.dtype(shape_dtype.dtype))
 
 
-_pack = views_lib.pack
+_pack = datatypes_lib.pack_payload
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +77,15 @@ class Plan:
     analogue).  ``start(x)`` issues one instance and returns a Request;
     ``issue_fn(val, tok) -> (out, tok)`` is the bound lowering (algorithm +
     communicator + static kwargs resolved at init time).
+
+    Payload handling rides the derived-datatype layer
+    (:mod:`repro.core.datatypes`) — the same pipeline as the blocking and
+    nonblocking paths: ``datatype`` is the frozen send-side layout
+    (``datatype.pack(x)`` materializes the wire message; None = the default
+    ``pack_payload``), ``recv`` is the completion adapter riding the
+    Request (``scatter_into`` protocol — slot splitting, view scatter),
+    and ``status`` is the statically-known request status (ERR_TRUNCATE
+    for a sendrecv plan whose receive layout is smaller than the message).
     """
 
     collective: str                      # "allreduce" … "sendrecv" | "barrier"
@@ -83,12 +94,10 @@ class Plan:
     dtype: Any
     comm: Communicator
     issue_fn: Callable[..., Any] = dataclasses.field(compare=False, repr=False)
-    # Optional payload adapters (vector ops, e.g. neighbor_alltoallv):
-    # ``pack_fn(x)`` replaces the default views.pack, ``unpack`` rides the
-    # Request and splits the completed flat buffer back into slot arrays.
-    pack_fn: Optional[Callable[..., Any]] = dataclasses.field(
+    datatype: Optional[datatypes_lib.Datatype] = dataclasses.field(
         default=None, compare=False, repr=False)
-    unpack: Any = dataclasses.field(default=None, compare=False, repr=False)
+    recv: Any = dataclasses.field(default=None, compare=False, repr=False)
+    status: int = SUCCESS
 
     def start(self, x=None, *, token=None, tag: int = 0) -> Request:
         """Issue one instance of the planned op (MPI_Start analogue).
@@ -109,7 +118,7 @@ class Plan:
         if self.collective == "barrier":
             val = None
         else:
-            val = _pack(x) if self.pack_fn is None else self.pack_fn(x)
+            val = _pack(x, self.datatype)
             if tuple(val.shape) != self.shape or \
                     jnp.dtype(val.dtype) != jnp.dtype(self.dtype):
                 raise ValueError(
@@ -123,8 +132,8 @@ class Plan:
         new_tok = token_lib.advance(tok, out)
         if not explicit:
             token_lib.ambient().set(new_tok)
-        return Request(value=out, token=new_tok, tag=tag, unpack=self.unpack,
-                       used_ambient=not explicit)
+        return Request(value=out, token=new_tok, tag=tag, recv=self.recv,
+                       used_ambient=not explicit, status=self.status)
 
     def describe(self) -> str:
         """One-line human-readable summary (collective, algorithm, frozen
@@ -334,6 +343,102 @@ def reduce_scatter_init(shape_dtype, op: Operator = Operator.SUM, *,
                            algorithm=algorithm, op=op)
 
 
+def scatterv_init(shape_dtype, counts, root: int = 0, *,
+                  comm: Communicator | None = None,
+                  algorithm: Optional[str] = None) -> Plan:
+    """MPI_Scatterv_init analogue (ragged chunks, padded-buffer SPMD form).
+
+    Args:
+        shape_dtype: root's full ``(sum(counts), ...)`` buffer signature.
+        counts: static per-rank row counts (frozen into the plan).
+        root: static scattering rank.
+        comm: communicator (None = ambient WORLD).
+        algorithm: registry entry to freeze (``xla_native`` | ``linear``).
+    Returns:
+        A cached :class:`Plan`; ``start(x)`` completes with
+        ``(max(counts), ...)`` (``counts[rank]`` valid rows).
+    Raises:
+        ValueError: bad counts or a signature/counts mismatch.
+    """
+    from repro.core import vcollectives
+    comm = resolve(comm)
+    val = _as_struct(shape_dtype)
+    counts = vcollectives._validate_scatterv(comm, val, counts)
+    return collective_init("scatterv", val, comm=comm, algorithm=algorithm,
+                           counts=counts, root=root)
+
+
+def gatherv_init(shape_dtype, counts, root: int = 0, *,
+                 comm: Communicator | None = None,
+                 algorithm: Optional[str] = None) -> Plan:
+    """MPI_Gatherv_init analogue (valid-at-root contract).
+
+    Args:
+        shape_dtype: the local padded ``(max(counts), ...)`` signature.
+        counts: static per-rank row counts (frozen into the plan).
+        root: rank at which the result is contractually valid.
+        comm: communicator (None = ambient WORLD).
+        algorithm: registry entry to freeze (``xla_native`` | ``ring``).
+    Returns:
+        A cached :class:`Plan`; ``start(x)`` completes with
+        ``(sum(counts), ...)``.
+    Raises:
+        ValueError: bad counts or a signature/counts mismatch.
+    """
+    from repro.core import vcollectives
+    comm = resolve(comm)
+    val = _as_struct(shape_dtype)
+    counts = vcollectives._validate_gatherv(comm, val, counts)
+    return collective_init("gatherv", val, comm=comm, algorithm=algorithm,
+                           counts=counts, root=root)
+
+
+def allgatherv_init(shape_dtype, counts, *, comm: Communicator | None = None,
+                    algorithm: Optional[str] = None) -> Plan:
+    """MPI_Allgatherv_init analogue.
+
+    Args:
+        shape_dtype: the local padded ``(max(counts), ...)`` signature.
+        counts: static per-rank row counts (frozen into the plan).
+        comm: communicator (None = ambient WORLD).
+        algorithm: registry entry to freeze (``xla_native`` | ``ring``).
+    Returns:
+        A cached :class:`Plan`; ``start(x)`` completes with
+        ``(sum(counts), ...)`` on every rank.
+    Raises:
+        ValueError: bad counts or a signature/counts mismatch.
+    """
+    from repro.core import vcollectives
+    comm = resolve(comm)
+    val = _as_struct(shape_dtype)
+    counts = vcollectives._validate_gatherv(comm, val, counts)
+    return collective_init("allgatherv", val, comm=comm, algorithm=algorithm,
+                           counts=counts)
+
+
+def alltoallv_init(shape_dtype, counts, *, comm: Communicator | None = None,
+                   algorithm: Optional[str] = None) -> Plan:
+    """MPI_Alltoallv_init analogue (n×n static counts matrix).
+
+    Args:
+        shape_dtype: the ``(n, max(counts), ...)`` stacked-slot signature.
+        counts: static n×n matrix ``counts[src][dst]`` (frozen).
+        comm: communicator (None = ambient WORLD).
+        algorithm: registry entry to freeze (``xla_native`` | ``pairwise``).
+    Returns:
+        A cached :class:`Plan`; ``start(x)`` completes with the same-shape
+        stack (slot ``s`` valid for ``counts[s][rank]`` rows).
+    Raises:
+        ValueError: bad counts matrix or a signature/counts mismatch.
+    """
+    from repro.core import vcollectives
+    comm = resolve(comm)
+    val = _as_struct(shape_dtype)
+    counts = vcollectives._validate_alltoallv(comm, val, counts)
+    return collective_init("alltoallv", val, comm=comm, algorithm=algorithm,
+                           counts=counts)
+
+
 def barrier_init(*, comm: Communicator | None = None) -> Plan:
     """MPI_Barrier_init analogue: ``plan.start()`` takes no payload."""
     comm = resolve(comm)
@@ -427,8 +532,9 @@ def neighbor_alltoallv_init(shape_dtypes, *, comm: Communicator | None = None,
     structs = [_as_struct(s) for s in shape_dtypes]
     dtype = topology.check_slots(comm, structs)
     shapes = tuple(tuple(s.shape) for s in structs)
-    total = sum(int(np.prod(s, dtype=int)) for s in shapes)
-    flat = jax.ShapeDtypeStruct((total,), dtype)
+    send_dt = datatypes_lib.slots(shapes, dtype)
+    recv_dt = datatypes_lib.slots(topology.recv_slot_shapes(shapes), dtype)
+    flat = send_dt.struct()
     sig = ("neighbor_alltoallv", tuple(flat.shape), str(jnp.dtype(flat.dtype)),
            comm, comm.size(), shapes)
 
@@ -442,20 +548,10 @@ def neighbor_alltoallv_init(shape_dtypes, *, comm: Communicator | None = None,
         def issue(v, t):
             return fn(v, t, comm, slot_shapes=shapes)
 
-        def pack_slots(xs):
-            packed, got = topology._pack_slots(comm, xs)
-            if got != shapes:
-                raise ValueError(
-                    f"plan neighbor_alltoallv/{algo.name} is frozen for "
-                    f"slot shapes {shapes}; got {got} — build a new plan "
-                    f"with *_init for the new signature")
-            return packed
-
         return Plan(collective="neighbor_alltoallv", algorithm=algo.name,
                     shape=tuple(flat.shape), dtype=jnp.dtype(flat.dtype),
-                    comm=comm, issue_fn=issue, pack_fn=pack_slots,
-                    unpack=topology._SlotUnpacker(
-                        topology.recv_slot_shapes(shapes)))
+                    comm=comm, issue_fn=issue, datatype=send_dt,
+                    recv=recv_dt.bind(None))
 
     return _cached_selected(sig, algorithm, select, build)
 
@@ -466,11 +562,20 @@ def neighbor_alltoallv_init(shape_dtypes, *, comm: Communicator | None = None,
 # ---------------------------------------------------------------------------
 
 def sendrecv_init(shape_dtype, pairs=None, *, perm=None, dest=None,
-                  source=None, comm: Communicator | None = None) -> Plan:
+                  source=None, comm: Communicator | None = None,
+                  recv_into=None) -> Plan:
     """Persistent fused send+recv along a static (src → dst) pattern.
 
     The permutation is validated (rank range, injectivity) at init and
     frozen; ``plan.start(strip)`` is one token-tied ppermute.
+
+    ``recv_into``: a View / bound datatype the received message scatters
+    into at completion (the same receive pipeline as ``sendrecv``); when
+    its layout is statically smaller than the frozen message signature,
+    every Request the plan starts carries ERR_TRUNCATE — computed once at
+    init from the static shapes, the persistent analogue of the direct
+    path's check.  Plans with a receive adapter are not cached (the
+    adapter binds a specific target buffer).
     """
     comm = resolve(comm)
     val = _as_struct(shape_dtype)
@@ -479,6 +584,11 @@ def sendrecv_init(shape_dtype, pairs=None, *, perm=None, dest=None,
                                                 source))
     key = ("sendrecv", "ppermute", tuple(val.shape),
            str(jnp.dtype(val.dtype)), comm, comm.size(), p)
+    recv = datatypes_lib.recv_adapter(recv_into)
+    rcount = datatypes_lib.adapter_count(recv)
+    status = SUCCESS
+    if rcount is not None and rcount < int(np.prod(val.shape, dtype=int)):
+        status = ERR_TRUNCATE
 
     def build():
         perm_list = [tuple(pr) for pr in p]
@@ -489,6 +599,8 @@ def sendrecv_init(shape_dtype, pairs=None, *, perm=None, dest=None,
 
         return Plan(collective="sendrecv", algorithm="ppermute",
                     shape=tuple(val.shape), dtype=jnp.dtype(val.dtype),
-                    comm=comm, issue_fn=issue)
+                    comm=comm, issue_fn=issue, recv=recv, status=status)
 
+    if recv is not None:
+        return build()
     return _cached(key, build)

@@ -119,3 +119,51 @@ def neighbor_alltoall(shards, dims, periods):
                          else shards[nb][mirror].copy())
         out.append(np.stack(slots))
     return out
+
+
+# ---------------------------------------------------------------------------
+# v-variant oracles (padded-buffer SPMD semantics, see repro.core.vcollectives)
+# ---------------------------------------------------------------------------
+
+def scatterv(shards, counts, root=0):
+    """Per rank: (max(counts), ...) padded chunk — counts[r] valid leading
+    rows of root's buffer at the rank's static offset, zeros beyond."""
+    maxc = max(counts) if counts else 0
+    offs = np.concatenate([[0], np.cumsum(counts)]).astype(int)
+    buf = np.asarray(shards[root])
+    out = []
+    for r, c in enumerate(counts):
+        chunk = np.zeros((maxc,) + buf.shape[1:], buf.dtype)
+        chunk[:c] = buf[offs[r]:offs[r] + c]
+        out.append(chunk)
+    return out
+
+
+def gatherv(shards, counts, root=0):
+    """Per rank: the (sum(counts), ...) concatenation of every rank's valid
+    prefix (SPMD lowering materializes it everywhere; valid-at-root
+    contract)."""
+    full = np.concatenate([np.asarray(shards[r])[:c]
+                           for r, c in enumerate(counts)], axis=0)
+    return [full.copy() for _ in shards]
+
+
+def allgatherv(shards, counts):
+    """Per rank: the (sum(counts), ...) concatenation, valid everywhere."""
+    return gatherv(shards, counts)
+
+
+def alltoallv(shards, counts):
+    """Per rank r: (n, max, ...) stack — slot s holds counts[s][r] valid
+    rows of rank s's slot-r send buffer, zeros beyond."""
+    n = len(shards)
+    maxc = max((c for row in counts for c in row), default=0)
+    out = []
+    for r in range(n):
+        slots = np.zeros((n, maxc) + np.asarray(shards[0]).shape[2:],
+                         np.asarray(shards[0]).dtype)
+        for s in range(n):
+            c = counts[s][r]
+            slots[s, :c] = np.asarray(shards[s])[r, :c]
+        out.append(slots)
+    return out

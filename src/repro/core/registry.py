@@ -26,7 +26,11 @@ If the chosen algorithm's ``supports`` predicate rejects the payload (e.g.
 ``recursive_doubling`` on a non-power-of-two group, ``ring`` allreduce for a
 non-SUM operator) the selection silently falls back to ``xla_native`` —
 except for case 1, where the caller asked by name and gets a trace-time
-``ValueError`` instead.
+``ValueError`` instead.  When even ``xla_native`` rejects the payload (an
+op whose native lowering is narrower than the op itself, e.g. alltoallv on
+a multi-axis communicator) selection scans the remaining registered
+lowerings for an eligible one and raises a trace-time error only when none
+exists — an ineligible choice is never silently executed.
 
 Policy tables serialize to JSON.  ``repro.launch.collective_tuner`` sweeps
 algorithms × sizes on the live backend and emits a tuned table;
@@ -42,6 +46,7 @@ import json
 from typing import Any, Callable, Optional
 
 OPS = ("allreduce", "bcast", "allgather", "reduce_scatter", "alltoall",
+       "scatterv", "gatherv", "allgatherv", "alltoallv",
        "neighbor_allgather", "neighbor_alltoall", "neighbor_alltoallv")
 DEFAULT_ALGORITHM = "xla_native"
 
@@ -403,6 +408,12 @@ def select(op_name: str, val, comm, algorithm: str | None = None,
     error from :meth:`Algorithm.operator_error` — both when the caller named
     the algorithm and when the policy fallback itself cannot honor the
     operator (it must never silently compute the wrong reduction).
+
+    Fallback eligibility IS checked: when even ``xla_native`` rejects the
+    payload (e.g. alltoallv on a multi-axis communicator — its native
+    lowering needs one axis, its pairwise schedule does not), selection
+    scans the remaining registered lowerings for an eligible one and only
+    errors when none exists — never a silently wrong transfer.
     """
     red_op = kw.get("op")
     if algorithm is not None:
@@ -423,4 +434,13 @@ def select(op_name: str, val, comm, algorithm: str | None = None,
     fallback = get(op_name, DEFAULT_ALGORITHM)
     if not fallback.supports_operator(red_op):
         raise ValueError(fallback.operator_error(red_op))
-    return fallback
+    if fallback.supports(val, comm, **kw):
+        return fallback
+    for other in algorithms(op_name):
+        cand = _REGISTRY[op_name][other]
+        if cand.supports_operator(red_op) and cand.supports(val, comm, **kw):
+            return cand
+    raise ValueError(
+        f"no registered algorithm for {op_name!r} supports this call "
+        f"(shape={tuple(val.shape)}, dtype={val.dtype}, "
+        f"ranks={comm.size()}, {kw}); registered: {algorithms(op_name)}")

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import datatypes as datatypes_lib
 from repro.core import registry
 from repro.core import token as token_lib
 from repro.core import views as views_lib
@@ -848,17 +849,6 @@ def neighbor_alltoall(x, *, comm: Communicator | None = None, token=None,
     return _coll._finish(req, explicit)
 
 
-@dataclasses.dataclass
-class _SlotUnpacker:
-    """Splits the kernel's flat receive buffer back into per-slot arrays
-    (plugged into ``Request.unpack`` — applied at completion time)."""
-
-    shapes: tuple
-
-    def scatter_into(self, flat):
-        return _split_slots(flat, self.shapes)
-
-
 def recv_slot_shapes(slot_shapes) -> tuple:
     """Receive-side slot shapes of a neighbor_alltoallv: slot ``k`` arrives
     from neighbour ``k``, which sent its mirror slot — so the static shape
@@ -897,11 +887,12 @@ def check_slots(cart: CartComm, slots):
 
 
 def _pack_slots(cart: CartComm, xs):
+    """Slot list → (flat wire vector, per-slot shapes) via the Slots
+    datatype (one packing pipeline with the persistent-plan path)."""
     slots = [views_lib.pack(x) for x in xs]
-    check_slots(cart, slots)
+    dtype = check_slots(cart, slots)
     shapes = tuple(tuple(s.shape) for s in slots)
-    flat = jnp.concatenate([s.reshape(-1) for s in slots])
-    return flat, shapes
+    return datatypes_lib.slots(shapes, dtype).pack(slots), shapes
 
 
 def ineighbor_alltoallv(xs, *, comm: Communicator | None = None, token=None,
@@ -928,9 +919,11 @@ def ineighbor_alltoallv(xs, *, comm: Communicator | None = None, token=None,
     from repro.core import collectives as _coll
     cart = _require_cart(resolve(comm))
     flat, shapes = _pack_slots(cart, xs)
+    recv_dt = datatypes_lib.slots(recv_slot_shapes(shapes),
+                                  jnp.dtype(flat.dtype))
     req, _ = _coll._issue("neighbor_alltoallv", flat, comm=cart, token=token,
                           algorithm=algorithm, tag=tag, slot_shapes=shapes,
-                          unpack=_SlotUnpacker(recv_slot_shapes(shapes)))
+                          recv=recv_dt.bind(None))
     return req
 
 

@@ -1,0 +1,503 @@
+"""Classic MPI v-variant collectives: scatterv / gatherv / allgatherv /
+alltoallv — first-class registry ops with ≥2 lowerings each, in the full
+jmpi 2.0 surface (blocking, ``i*`` → unified Request, ``*_init`` → Plan).
+
+SPMD reading of raggedness (DESIGN.md §2, static topology): MPI's
+per-rank ``counts`` arrays are **static Python ints**, identical on every
+rank (every device traces the same program), and per-rank buffers are
+padded to the maximum count so all ranks share one static shape:
+
+* ``scatterv(x, counts, root)`` — ``x`` is root's ``(sum(counts), ...)``
+  buffer; every rank completes with ``(max(counts), ...)`` holding its
+  ``counts[rank]`` valid leading rows, zeros beyond (the padded-buffer
+  translation of MPI's ``recvcount`` contract).
+* ``gatherv(x, counts, root)`` / ``allgatherv(x, counts)`` — ``x`` is the
+  local ``(max(counts), ...)`` padded buffer with ``counts[rank]`` valid
+  rows; completes with the ``(sum(counts), ...)`` concatenation of every
+  rank's valid prefix (gatherv: contractually valid at root only).
+* ``alltoallv(x, counts)`` — ``counts`` is the full static n×n matrix
+  (``counts[src][dst]`` rows from src to dst); ``x`` is the
+  ``(n, maxc, ...)`` stacked per-destination slot buffer.  Slot ``s`` of
+  the result holds the ``counts[s][rank]`` rows rank ``s`` sent here,
+  zeros beyond.  Invalid send rows are masked to zeros before transfer,
+  so garbage in the padding never crosses the wire.
+
+Lowerings (registered in ``registry.OPS``, policy-selectable like every
+other collective):
+
+* ``xla_native`` — one XLA collective plus static index math: masked-psum
+  bcast + per-rank dynamic slice (scatterv), ``all_gather`` + static
+  valid-row gather (gatherv/allgatherv), ``all_to_all`` on the padded
+  slot stack (alltoallv, single-axis comms).
+* p2p schedules — ``linear`` scatterv (root sends each rank its chunk,
+  n−1 token-tied ppermutes, the classic linear-scatter tree), ``ring``
+  gatherv/allgatherv (circulate the padded buffer n−1 forward hops,
+  depositing each origin's block), ``pairwise`` alltoallv (n−1 shifted
+  exchanges, the OMB pairwise schedule).
+
+Payloads are datatype-uniform: ``datatype=`` (or a ``dt.bind(buf)`` /
+``View`` payload) packs through :mod:`repro.core.datatypes` exactly like
+every other registry op — an ``indexed`` datatype describing ragged
+blocks of a flat buffer is the natural send-side companion of these ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from repro.core import token as token_lib
+from repro.core.comm import Communicator, resolve
+from repro.core.p2p import Request
+
+__all__ = [
+    "scatterv", "gatherv", "allgatherv", "alltoallv",
+    "iscatterv", "igatherv", "iallgatherv", "ialltoallv",
+]
+
+
+# ---------------------------------------------------------------------------
+# counts helpers (shared by the public ops, the plans layer and the kernels)
+# ---------------------------------------------------------------------------
+
+def check_counts(counts, n: int) -> tuple[int, ...]:
+    """Validate per-rank counts for scatterv/gatherv/allgatherv.
+
+    Args:
+        counts: one non-negative static int per rank.
+        n: communicator size.
+    Returns:
+        The counts as a tuple of Python ints.
+    Raises:
+        ValueError: wrong arity or a negative count.
+    """
+    cs = tuple(int(c) for c in counts)
+    if len(cs) != n:
+        raise ValueError(f"counts arity {len(cs)} != comm size {n}")
+    if any(c < 0 for c in cs):
+        raise ValueError(f"counts must be non-negative, got {cs}")
+    return cs
+
+
+def check_count_matrix(counts, n: int) -> tuple[tuple[int, ...], ...]:
+    """Validate the n×n alltoallv counts matrix (``counts[src][dst]``).
+
+    Args:
+        counts: n rows of n non-negative static ints.
+        n: communicator size.
+    Returns:
+        The matrix as a tuple of tuples of Python ints.
+    Raises:
+        ValueError: wrong arity or a negative count.
+    """
+    rows = tuple(tuple(int(c) for c in row) for row in counts)
+    if len(rows) != n or any(len(r) != n for r in rows):
+        raise ValueError(f"alltoallv needs an {n}x{n} counts matrix, got "
+                         f"shape {(len(rows),) + tuple(set(map(len, rows)))}")
+    if any(c < 0 for r in rows for c in r):
+        raise ValueError(f"counts must be non-negative, got {rows}")
+    return rows
+
+
+def _offsets(counts) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+
+
+def _row_mask(maxc: int, count, like):
+    """(maxc, 1, 1, ...) bool mask of the valid leading rows (traced
+    ``count``), broadcastable over the trailing dims of ``like``."""
+    mask = jnp.arange(maxc) < count
+    return mask.reshape((maxc,) + (1,) * (like.ndim - 1))
+
+
+def _hop(comm, perm, x, tok):
+    """One token-tied ppermute along a static pattern."""
+    tok, x = token_lib.tie(tok, x)
+    out = jax.lax.ppermute(x, comm.axes, perm)
+    tok = token_lib.advance(tok, out)
+    return out, tok
+
+
+# ---------------------------------------------------------------------------
+# scatterv kernels
+# ---------------------------------------------------------------------------
+
+def _scatterv_supports(val, comm, *, counts=(), root=0, **kw):
+    return (len(counts) == comm.size() and val.ndim >= 1
+            and val.shape[0] == sum(counts))
+
+
+@registry.register("scatterv", "xla_native", supports=_scatterv_supports)
+def _scatterv_xla(val, tok, comm, *, counts, root):
+    """Masked-psum bcast of the full buffer + per-rank dynamic slice at the
+    static offset, invalid tail rows masked to zeros."""
+    maxc = max(counts) if counts else 0
+    rank = comm.rank()
+    contrib = jnp.where(rank == root, val, jnp.zeros_like(val))
+    full = jax.lax.psum(contrib, comm.axes)
+    padded = jnp.concatenate(
+        [full, jnp.zeros((maxc,) + full.shape[1:], full.dtype)])
+    start = jnp.take(jnp.asarray(_offsets(counts)), rank)
+    out = jax.lax.dynamic_slice_in_dim(padded, start, maxc, axis=0)
+    cnt = jnp.take(jnp.asarray(counts, jnp.int32), rank)
+    return jnp.where(_row_mask(maxc, cnt, out), out, 0), tok
+
+
+@registry.register("scatterv", "linear", supports=_scatterv_supports)
+def _scatterv_linear(val, tok, comm, *, counts, root):
+    """Linear scatter tree: root sends each non-root rank its chunk as one
+    token-tied ppermute (n−1 hops of max-count size)."""
+    n = comm.size()
+    maxc = max(counts) if counts else 0
+    offs = _offsets(counts)
+    rank = comm.rank()
+    pad = jnp.zeros((maxc,) + val.shape[1:], val.dtype)
+    padded = jnp.concatenate([val, pad])
+
+    def chunk_for(r):
+        c = jax.lax.slice_in_dim(padded, int(offs[r]), int(offs[r]) + maxc,
+                                 axis=0)
+        return jnp.where(_row_mask(maxc, counts[r], c), c, 0)
+
+    out = jnp.where(rank == root, chunk_for(root),
+                    jnp.zeros((maxc,) + val.shape[1:], val.dtype))
+    for r in range(n):
+        if r == root:
+            continue
+        got, tok = _hop(comm, [(root, r)], chunk_for(r), tok)
+        out = jnp.where(rank == r, got, out)
+    return out, tok
+
+
+# ---------------------------------------------------------------------------
+# gatherv / allgatherv kernels (shared implementations)
+# ---------------------------------------------------------------------------
+
+def _gatherv_supports(val, comm, *, counts=(), **kw):
+    maxc = max(counts) if counts else 0
+    return (len(counts) == comm.size() and val.ndim >= 1
+            and val.shape[0] == maxc)
+
+
+def _valid_rows(counts) -> np.ndarray:
+    """Static row indices of every rank's valid prefix inside the padded
+    (n·maxc, ...) gather, in rank order."""
+    maxc = max(counts) if counts else 0
+    if not counts or sum(counts) == 0:
+        return np.zeros((0,), np.int32)
+    return np.concatenate(
+        [r * maxc + np.arange(c) for r, c in enumerate(counts)
+         if c > 0]).astype(np.int32)
+
+
+def _gatherv_xla(val, tok, comm, *, counts, root=0):
+    """all_gather of the padded buffer + static gather of the valid rows."""
+    g = jax.lax.all_gather(val, comm.axes, axis=0, tiled=False)
+    flat = g.reshape((-1,) + tuple(val.shape[1:]))
+    return jnp.take(flat, jnp.asarray(_valid_rows(counts)), axis=0), tok
+
+
+def _gatherv_ring(val, tok, comm, *, counts, root=0):
+    """Ring allgatherv: circulate the padded buffer n−1 forward hops,
+    depositing each origin's block into its padded slot, then the same
+    static valid-row gather as the native lowering."""
+    n = comm.size()
+    maxc = max(counts) if counts else 0
+    rank = comm.rank()
+    buf = jnp.zeros((n * maxc,) + tuple(val.shape[1:]), val.dtype)
+    buf = jax.lax.dynamic_update_slice_in_dim(buf, val, rank * maxc, axis=0)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    cur = val
+    for hop in range(1, n):
+        cur, tok = _hop(comm, fwd, cur, tok)
+        src = (rank - hop) % n
+        buf = jax.lax.dynamic_update_slice_in_dim(buf, cur, src * maxc,
+                                                  axis=0)
+    return jnp.take(buf, jnp.asarray(_valid_rows(counts)), axis=0), tok
+
+
+registry.register("gatherv", "xla_native",
+                  supports=_gatherv_supports)(_gatherv_xla)
+registry.register("gatherv", "ring", supports=_gatherv_supports)(_gatherv_ring)
+registry.register("allgatherv", "xla_native",
+                  supports=_gatherv_supports)(_gatherv_xla)
+registry.register("allgatherv", "ring",
+                  supports=_gatherv_supports)(_gatherv_ring)
+
+
+# ---------------------------------------------------------------------------
+# alltoallv kernels
+# ---------------------------------------------------------------------------
+
+def _alltoallv_supports(val, comm, *, counts=(), **kw):
+    n = comm.size()
+    if len(counts) != n or any(len(r) != n for r in counts):
+        return False
+    maxc = max((c for r in counts for c in r), default=0)
+    return val.ndim >= 2 and val.shape[0] == n and val.shape[1] == maxc
+
+
+def _alltoallv_natively_supported(val, comm, **kw):
+    return _alltoallv_supports(val, comm, **kw) and len(comm.axes) == 1
+
+
+def _mask_send_slots(val, counts, comm):
+    """Zero the invalid padded rows of every send slot (rows beyond
+    ``counts[rank][dst]``) so padding garbage never crosses the wire."""
+    maxc = val.shape[1]
+    row = jnp.take(jnp.asarray(counts, jnp.int32), comm.rank(), axis=0)
+    mask = jnp.arange(maxc)[None, :] < row[:, None]
+    return jnp.where(mask.reshape(mask.shape + (1,) * (val.ndim - 2)), val, 0)
+
+
+@registry.register("alltoallv", "xla_native",
+                   supports=_alltoallv_natively_supported)
+def _alltoallv_xla(val, tok, comm, *, counts):
+    """One tiled all_to_all over the masked padded slot stack."""
+    masked = _mask_send_slots(val, counts, comm)
+    out = jax.lax.all_to_all(masked, comm.axes[0], split_axis=0,
+                             concat_axis=0, tiled=True)
+    return out, tok
+
+
+@registry.register("alltoallv", "pairwise", supports=_alltoallv_supports)
+def _alltoallv_pairwise(val, tok, comm, *, counts):
+    """Pairwise-exchange schedule: at step s every rank sends slot
+    ``(rank+s) mod n`` to rank ``rank+s`` and deposits the block arriving
+    from rank ``rank−s`` — n−1 shifted token-tied ppermutes."""
+    n = comm.size()
+    rank = comm.rank()
+    masked = _mask_send_slots(val, counts, comm)
+    out = jnp.zeros_like(masked)
+    own = jnp.take(masked, rank, axis=0)
+    out = jax.lax.dynamic_update_slice_in_dim(out, own[None], rank, axis=0)
+    for s in range(1, n):
+        perm = [(i, (i + s) % n) for i in range(n)]
+        payload = jnp.take(masked, (rank + s) % n, axis=0)
+        got, tok = _hop(comm, perm, payload, tok)
+        src = (rank - s) % n
+        out = jax.lax.dynamic_update_slice_in_dim(out, got[None], src, axis=0)
+    return out, tok
+
+
+# ---------------------------------------------------------------------------
+# Public ops — blocking + i*, sharing the collective dispatch path.
+# (The *_init persistent forms live in repro.core.plans.)
+# ---------------------------------------------------------------------------
+
+def _validate_scatterv(comm, val, counts):
+    counts = check_counts(counts, comm.size())
+    if val.ndim < 1 or val.shape[0] != sum(counts):
+        raise ValueError(f"scatterv payload axis0={tuple(val.shape)[:1]} must "
+                         f"be (sum(counts),)=({sum(counts)},); got shape "
+                         f"{tuple(val.shape)}")
+    return counts
+
+
+def _validate_gatherv(comm, val, counts):
+    counts = check_counts(counts, comm.size())
+    maxc = max(counts) if counts else 0
+    if val.ndim < 1 or val.shape[0] != maxc:
+        raise ValueError(f"gatherv/allgatherv payload axis 0 must be "
+                         f"max(counts)={maxc}, got shape {tuple(val.shape)}")
+    return counts
+
+
+def _validate_alltoallv(comm, val, counts):
+    counts = check_count_matrix(counts, comm.size())
+    n = comm.size()
+    maxc = max((c for r in counts for c in r), default=0)
+    if val.ndim < 2 or val.shape[0] != n or val.shape[1] != maxc:
+        raise ValueError(f"alltoallv payload must be (n, max(counts), ...) = "
+                         f"({n}, {maxc}, ...), got shape {tuple(val.shape)}")
+    return counts
+
+
+def iscatterv(x, counts, root: int = 0, *, comm: Communicator | None = None,
+              token=None, algorithm: str | None = None, tag: int = 0,
+              datatype=None) -> Request:
+    """MPI_Iscatterv: start dealing ragged axis-0 chunks of root's buffer.
+
+    Args:
+        x: root's ``(sum(counts), ...)`` buffer (contents ignored off-root).
+        counts: static per-rank row counts.
+        root: static scattering rank.
+        comm: communicator (None = ambient WORLD).
+        token: explicit ordering token; None uses the ambient chain.
+        algorithm: registry entry to force (``xla_native`` | ``linear``).
+        tag: tag recorded on the Request.
+        datatype: optional derived datatype packing ``x``.
+    Returns:
+        :class:`Request` completing with ``(max(counts), ...)`` — this
+        rank's ``counts[rank]`` valid rows, zeros beyond.
+    Raises:
+        ValueError: bad counts or a payload/counts mismatch.
+    """
+    from repro.core import collectives as _coll
+    comm = resolve(comm)
+    val = _coll._pack(x, datatype)
+    counts = _validate_scatterv(comm, val, counts)
+    req, _ = _coll._issue("scatterv", val, comm=comm, token=token,
+                          algorithm=algorithm, tag=tag, counts=counts,
+                          root=root)
+    return req
+
+
+def scatterv(x, counts, root: int = 0, *, comm: Communicator | None = None,
+             token=None, algorithm: str | None = None, datatype=None):
+    """MPI_Scatterv: blocking form of :func:`iscatterv`.
+
+    Args: as :func:`iscatterv`.
+    Returns:
+        ``(status, chunk)`` — plus the token when one was passed
+        explicitly; ``chunk`` is ``(max(counts), ...)`` with this rank's
+        ``counts[rank]`` valid rows.
+    Raises:
+        ValueError: bad counts or a payload/counts mismatch.
+    """
+    from repro.core import collectives as _coll
+    explicit = token is not None
+    req = iscatterv(x, counts, root, comm=comm, token=token,
+                    algorithm=algorithm, datatype=datatype)
+    return _coll._finish(req, explicit)
+
+
+def igatherv(x, counts, root: int = 0, *, comm: Communicator | None = None,
+             token=None, algorithm: str | None = None, tag: int = 0,
+             datatype=None) -> Request:
+    """MPI_Igatherv: start gathering ragged per-rank prefixes (valid at
+    ``root``; the SPMD lowering materializes the result everywhere).
+
+    Args:
+        x: local ``(max(counts), ...)`` padded buffer, ``counts[rank]``
+            valid leading rows.
+        counts: static per-rank row counts.
+        root: rank at which the result is contractually valid.
+        comm: communicator (None = ambient WORLD).
+        token: explicit ordering token; None uses the ambient chain.
+        algorithm: registry entry to force (``xla_native`` | ``ring``).
+        tag: tag recorded on the Request.
+        datatype: optional derived datatype packing ``x``.
+    Returns:
+        :class:`Request` completing with the ``(sum(counts), ...)``
+        concatenation of every rank's valid prefix.
+    Raises:
+        ValueError: bad counts or a payload/counts mismatch.
+    """
+    from repro.core import collectives as _coll
+    comm = resolve(comm)
+    val = _coll._pack(x, datatype)
+    counts = _validate_gatherv(comm, val, counts)
+    req, _ = _coll._issue("gatherv", val, comm=comm, token=token,
+                          algorithm=algorithm, tag=tag, counts=counts,
+                          root=root)
+    return req
+
+
+def gatherv(x, counts, root: int = 0, *, comm: Communicator | None = None,
+            token=None, algorithm: str | None = None, datatype=None):
+    """MPI_Gatherv: blocking form of :func:`igatherv`.
+
+    Args: as :func:`igatherv`.
+    Returns:
+        ``(status, stacked)`` — plus the token when one was passed
+        explicitly; ``stacked`` is the ``(sum(counts), ...)``
+        concatenation, contractually valid at ``root``.
+    Raises:
+        ValueError: bad counts or a payload/counts mismatch.
+    """
+    from repro.core import collectives as _coll
+    explicit = token is not None
+    req = igatherv(x, counts, root, comm=comm, token=token,
+                   algorithm=algorithm, datatype=datatype)
+    return _coll._finish(req, explicit)
+
+
+def iallgatherv(x, counts, *, comm: Communicator | None = None, token=None,
+                algorithm: str | None = None, tag: int = 0,
+                datatype=None) -> Request:
+    """MPI_Iallgatherv: :func:`igatherv` valid on every rank.
+
+    Args: as :func:`igatherv` (no root).
+    Returns:
+        :class:`Request` completing with the ``(sum(counts), ...)``
+        concatenation on every rank.
+    Raises:
+        ValueError: bad counts or a payload/counts mismatch.
+    """
+    from repro.core import collectives as _coll
+    comm = resolve(comm)
+    val = _coll._pack(x, datatype)
+    counts = _validate_gatherv(comm, val, counts)
+    req, _ = _coll._issue("allgatherv", val, comm=comm, token=token,
+                          algorithm=algorithm, tag=tag, counts=counts)
+    return req
+
+
+def allgatherv(x, counts, *, comm: Communicator | None = None, token=None,
+               algorithm: str | None = None, datatype=None):
+    """MPI_Allgatherv: blocking form of :func:`iallgatherv`.
+
+    Args: as :func:`iallgatherv`.
+    Returns:
+        ``(status, stacked)`` — plus the token when one was passed
+        explicitly.
+    Raises:
+        ValueError: bad counts or a payload/counts mismatch.
+    """
+    from repro.core import collectives as _coll
+    explicit = token is not None
+    req = iallgatherv(x, counts, comm=comm, token=token, algorithm=algorithm,
+                      datatype=datatype)
+    return _coll._finish(req, explicit)
+
+
+def ialltoallv(x, counts, *, comm: Communicator | None = None, token=None,
+               algorithm: str | None = None, tag: int = 0,
+               datatype=None) -> Request:
+    """MPI_Ialltoallv: start the ragged all-to-all exchange.
+
+    Args:
+        x: ``(n, max(counts), ...)`` stacked per-destination slots; slot
+            ``d`` carries ``counts[rank][d]`` valid leading rows.
+        counts: static n×n matrix, ``counts[src][dst]``.
+        comm: communicator (None = ambient WORLD).
+        token: explicit ordering token; None uses the ambient chain.
+        algorithm: registry entry to force (``xla_native`` | ``pairwise``).
+        tag: tag recorded on the Request.
+        datatype: optional derived datatype packing ``x``.
+    Returns:
+        :class:`Request` completing with the same-shape stack — slot ``s``
+        holds the ``counts[s][rank]`` rows rank ``s`` sent here, zeros
+        beyond.
+    Raises:
+        ValueError: bad counts matrix or a payload/counts mismatch.
+    """
+    from repro.core import collectives as _coll
+    comm = resolve(comm)
+    val = _coll._pack(x, datatype)
+    counts = _validate_alltoallv(comm, val, counts)
+    req, _ = _coll._issue("alltoallv", val, comm=comm, token=token,
+                          algorithm=algorithm, tag=tag, counts=counts)
+    return req
+
+
+def alltoallv(x, counts, *, comm: Communicator | None = None, token=None,
+              algorithm: str | None = None, datatype=None):
+    """MPI_Alltoallv: blocking form of :func:`ialltoallv`.
+
+    Args: as :func:`ialltoallv`.
+    Returns:
+        ``(status, out)`` — plus the token when one was passed explicitly;
+        slot ``s`` of ``out`` is what rank ``s`` sent here (valid rows
+        ``counts[s][rank]``, zeros beyond).
+    Raises:
+        ValueError: bad counts matrix or a payload/counts mismatch.
+    """
+    from repro.core import collectives as _coll
+    explicit = token is not None
+    req = ialltoallv(x, counts, comm=comm, token=token, algorithm=algorithm,
+                     datatype=datatype)
+    return _coll._finish(req, explicit)

@@ -5,10 +5,19 @@ JAX arrays are functional values without a user-visible memory layout, so
 "non-contiguous" cannot mean strided pointers here.  What survives the
 translation is the *usability* contract: users hand jmpi a slice of a bigger
 array and receive into a slice of a bigger array, without manual staging
-copies.  ``View`` captures (array, index-expression); ``pack`` materializes
-the contiguous message (XLA fuses it into the transfer's prologue — the same
-zero-copy effect the paper gets from MPI datatypes), ``unpack`` scatters a
-received message back into the enclosing array.
+copies.  ``View`` captures (array, index-expression) and is sugar over the
+derived-datatype layer (``repro.core.datatypes``): the index expression
+resolves to a :class:`~repro.core.datatypes.Subarray` datatype, whose
+``pack`` materializes the contiguous message (XLA fuses it into the
+transfer's prologue — the same zero-copy effect the paper gets from MPI
+datatypes) and whose ``scatter_into`` writes a received message back with
+MPI-recv truncation semantics.
+
+Index support: per-dimension slices (any static step, including negative)
+and integers (the dimension is squeezed from the packed message).
+``Ellipsis``, ``None``/newaxis and array indices raise a clear
+``TypeError`` at construction time — previously they crashed deep inside
+jnp or silently mis-packed.
 
 Fortran order: logical jnp arrays are always C-indexed; layout is an XLA
 decision.  Transposed views (``View(x.T, ...)``) are the behavioural
@@ -22,28 +31,30 @@ from typing import Any
 
 import jax.numpy as jnp
 
-
-def _normalize_index(idx) -> tuple:
-    if not isinstance(idx, tuple):
-        idx = (idx,)
-    norm = []
-    for e in idx:
-        if isinstance(e, slice) or isinstance(e, int):
-            norm.append(e)
-        else:
-            raise TypeError(f"View index elements must be slice/int, got {e!r}")
-    return tuple(norm)
+from repro.core import datatypes as datatypes_lib
 
 
 @dataclasses.dataclass
 class View:
-    """A (possibly strided) rectangular slice of an array, as an MPI payload."""
+    """A (possibly strided) rectangular slice of an array, as an MPI payload.
+
+    Sugar over :func:`repro.core.datatypes.subarray_of`: the index
+    expression is resolved once (clear trace-time errors for unsupported
+    index kinds) and all pack/unpack work delegates to the datatype.
+    """
 
     array: Any
     index: tuple = ()
 
     def __post_init__(self):
-        self.index = _normalize_index(self.index)
+        shape = tuple(jnp.shape(self.array))
+        self._dt = datatypes_lib.subarray_of(shape, self.index)
+        self.index = tuple(self._dt._slices())
+
+    @property
+    def datatype(self) -> "datatypes_lib.Subarray":
+        """The resolved :class:`~repro.core.datatypes.Subarray` layout."""
+        return self._dt
 
     def pack(self):
         """Contiguous message buffer (gather/slice; fused by XLA).
@@ -51,8 +62,7 @@ class View:
         Returns:
             The selected slice as a dense jnp array.
         """
-        x = jnp.asarray(self.array)
-        return x[self.index] if self.index else x
+        return self._dt.pack(self.array)
 
     def unpack(self, message):
         """Enclosing array with ``message`` scattered into the view's slots.
@@ -64,10 +74,7 @@ class View:
             A new array equal to ``array`` outside the slice and
             ``message`` inside it.
         """
-        x = jnp.asarray(self.array)
-        if not self.index:
-            return jnp.asarray(message).reshape(x.shape).astype(x.dtype)
-        return x.at[self.index].set(message.astype(x.dtype))
+        return self._dt.unpack(message, into=self.array)
 
     def scatter_into(self, message):
         """MPI-recv style write of ``message`` into the view's slots.
@@ -77,28 +84,27 @@ class View:
         MPI_ERR_TRUNCATE condition, reported by the request's status — and
         when it is shorter the remaining view slots keep their prior
         contents (MPI writes only ``count`` received elements)."""
-        cur = self.pack()
-        m = jnp.ravel(jnp.asarray(message))[:cur.size]
-        if m.size < cur.size:
-            flat = jnp.concatenate(
-                [m.astype(cur.dtype), cur.ravel()[m.size:]])
-        else:
-            flat = m.astype(cur.dtype)
-        return self.unpack(flat.reshape(cur.shape))
+        return self._dt.scatter_into(self.array, message)
+
+    @property
+    def count(self) -> int:
+        """Packed element count (static; used by the truncation check)."""
+        return self._dt.count
 
     @property
     def shape(self):
-        return self.pack().shape
+        """Shape of the packed message."""
+        return self._dt.packed_shape
 
     @property
     def dtype(self):
+        """Element dtype of the enclosing array."""
         return jnp.asarray(self.array).dtype
 
 
 def pack(x):
-    """Materialize any jmpi payload: a View packs to its contiguous message,
-    anything NumPy-like becomes a jnp array (single helper shared by the
-    blocking, nonblocking and persistent dispatch paths)."""
-    if isinstance(x, View):
-        return x.pack()
-    return jnp.asarray(x)
+    """Materialize any jmpi payload: a View/Bound packs to its contiguous
+    message, anything NumPy-like becomes a jnp array.  Thin alias of
+    :func:`repro.core.datatypes.pack_payload` — the single helper shared by
+    the blocking, nonblocking and persistent dispatch paths."""
+    return datatypes_lib.pack_payload(x)

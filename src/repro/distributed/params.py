@@ -202,6 +202,28 @@ class ParamSharder:
 
         return jax.tree_util.tree_map_with_path(leaf_plan, tree)
 
+    def pytree_plan(self, tree, grad_dtype=np.float32):
+        """The bucketed counterpart of :meth:`collective_plan`: ONE pytree
+        derived datatype (``repro.core.datatypes.pytree``) carries the
+        whole gradient tree as a single wire vector, so the step issues
+        one allreduce instead of one per leaf.
+
+        Returns the plan the trace-time dispatch will make for that single
+        payload: the datatype's wire signature (leaf count, total wire
+        bytes) and the algorithm the active policy routes it to on this
+        mesh's DP group — the human-readable preview of the bucketed
+        ``build_jmpi_train_step`` path.
+        """
+        from repro.core import datatypes
+        dt = datatypes.pytree(tree, wire_dtype=grad_dtype)
+        nbytes = dt.count * np.dtype(grad_dtype).itemsize
+        n = self.dp_n
+        return {"op": "allreduce", "datatype": "pytree",
+                "leaves": len(dt.leaf_shapes), "count": dt.count,
+                "bytes": int(nbytes), "ranks": n,
+                "algorithm": registry.choose_name("allreduce", int(nbytes),
+                                                  n)}
+
     # ------------------------------------------------------------------ #
     # data & caches
     # ------------------------------------------------------------------ #

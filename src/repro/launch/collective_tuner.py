@@ -29,10 +29,13 @@ from repro.core import registry
 #: payload grid in fp32 elements: 256 B … 4 MiB — brackets the latency→
 #: bandwidth crossover on every transport we target.
 SIZES = (64, 1024, 16384, 262144, 1048576)
-#: Flat collectives only: the neighborhood ops need a CartComm topology and
-#: are benchmarked by ``benchmarks/bench_halo.py --neighbor`` instead of
-#: being silently skipped here (their policy defaults stay xla_native).
-OPS = tuple(op for op in registry.OPS if not op.startswith("neighbor_"))
+#: Flat equal-count collectives only: the neighborhood ops need a CartComm
+#: topology (benchmarked by ``benchmarks/bench_halo.py --neighbor``) and
+#: the v-variants need static counts arrays (benchmarked by the
+#: ``coll_allgatherv``/``coll_alltoallv`` cases of the collectives suite);
+#: both keep xla_native policy defaults rather than being silently skipped.
+OPS = tuple(op for op in registry.OPS
+            if not op.startswith("neighbor_") and not op.endswith("v"))
 INNER = 20
 
 

@@ -22,6 +22,12 @@ every step, so the exchange rides ``cart.neighbor_alltoall_init`` plans —
 topology and algorithm are validated and frozen once per (shape, dtype,
 comm) and the process-global plan cache serves every later step/trace
 (MPI_Neighbor_alltoall_init semantics; see ``repro.core.plans``).
+
+Halo slabs are **subarray datatypes** (``repro.core.datatypes.face``): the
+boundary faces are described declaratively per (axis, side, width) — the
+MPI ``MPI_Type_create_subarray`` idiom — and the datatype's ``pack``
+materializes each strip at the transfer boundary; no manual slicing at
+the call sites.
 """
 
 from __future__ import annotations
@@ -30,26 +36,30 @@ import jax
 import jax.numpy as jnp
 
 import repro.core as jmpi
+from repro.core import datatypes
 
 
-def _exchange_axis(sub: "jmpi.CartComm | None", lo_strip, hi_strip,
-                   algorithm=None):
-    """One decomposed axis as a persistent neighbor_alltoall.
+def _exchange_axis(sub: "jmpi.CartComm | None", field, axis: int,
+                   halo: int, algorithm=None):
+    """One decomposed axis as a persistent neighbor_alltoall over the
+    axis' two face datatypes.
 
     Args:
         sub: 1-D periodic CartComm along the axis (None = axis not
             decomposed → periodic local wrap).
-        lo_strip: strip addressed to the −1 neighbour (the block's leading
-            rows/cols).
-        hi_strip: strip addressed to the +1 neighbour (trailing rows/cols).
+        field: the local block (halo strips are its boundary faces).
+        axis: the decomposed array axis (0 = rows, 1 = cols).
+        halo: face width.
         algorithm: registry entry to freeze into the plan (None = policy).
     Returns:
         ``(from_minus, from_plus)`` — the halo strips received from the
         −1 / +1 neighbours.
     """
+    lo = datatypes.face(field.shape, axis, "lo", halo, dtype=field.dtype)
+    hi = datatypes.face(field.shape, axis, "hi", halo, dtype=field.dtype)
     if sub is None:
-        return hi_strip, lo_strip  # periodic self-wrap
-    send = jnp.stack([lo_strip, hi_strip])
+        return hi.pack(field), lo.pack(field)  # periodic self-wrap
+    send = jnp.stack([lo.pack(field), hi.pack(field)])
     plan = sub.neighbor_alltoall_init(
         jax.ShapeDtypeStruct(send.shape, send.dtype), algorithm=algorithm)
     _, recv = jmpi.wait(plan.start(send))
@@ -81,14 +91,12 @@ def halo_exchange_2d(field, cart: "jmpi.CartComm", halo: int = 1, *,
     sub_r = cart.cart_sub((True, False)) if cart.dims[0] > 1 else None
     sub_c = cart.cart_sub((False, True)) if cart.dims[1] > 1 else None
 
-    # --- axis 0 (rows): top strip to the -1 neighbour, bottom to the +1 --
-    top_halo, bot_halo = _exchange_axis(sub_r, field[:h, :], field[-h:, :],
-                                        algorithm)
+    # --- axis 0 (rows): 'lo' face to the -1 neighbour, 'hi' to the +1 ----
+    top_halo, bot_halo = _exchange_axis(sub_r, field, 0, h, algorithm)
     field = jnp.concatenate([top_halo, field, bot_halo], axis=0)
 
-    # --- axis 1 (cols): include the fresh halo rows so corners resolve ----
-    left_halo, right_halo = _exchange_axis(sub_c, field[:, :h], field[:, -h:],
-                                           algorithm)
+    # --- axis 1 (cols): faces of the row-padded block, so corners resolve -
+    left_halo, right_halo = _exchange_axis(sub_c, field, 1, h, algorithm)
     return jnp.concatenate([left_halo, field, right_halo], axis=1)
 
 

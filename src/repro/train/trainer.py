@@ -256,22 +256,6 @@ def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
                     if run_cfg.collective_policy else None)
     grad_algo = run_cfg.collective_algorithm or None
 
-    def _flatten_bucket(grads):
-        flat, tdef = jax.tree.flatten(grads)
-        sizes = [g.size for g in flat]
-        shapes = [g.shape for g in flat]
-        vec = jnp.concatenate([g.reshape(-1).astype(jnp.float32)
-                               for g in flat])
-        return vec, (tdef, sizes, shapes, [g.dtype for g in flat])
-
-    def _unflatten_bucket(vec, spec):
-        tdef, sizes, shapes, dtypes = spec
-        out, off = [], 0
-        for sz, shp, dt in zip(sizes, shapes, dtypes):
-            out.append(vec[off:off + sz].reshape(shp).astype(dt))
-            off += sz
-        return jax.tree.unflatten(tdef, out)
-
     def local_step(params, opt_state, comp_state, batch):
         from repro.core import registry as registry_lib
         prev_policy = registry_lib.active_policy()
@@ -301,17 +285,22 @@ def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
                                        algorithm=grad_algo)
 
         if bucket:
-            vec, spec = _flatten_bucket(grads)
+            # ONE pytree datatype for the whole gradient tree (NCCL-style
+            # bucketing as a derived datatype): dt.pack is the fp32 wire
+            # vector, dt.unpack restores every leaf's shape and dtype.
+            grad_dt = jmpi.pytree(grads, wire_dtype=jnp.float32)
+            vec = grad_dt.pack(grads)
             if bits:
-                cvec, cspec = _flatten_bucket(comp_state)
+                comp_dt = jmpi.pytree(comp_state, wire_dtype=jnp.float32)
+                cvec = comp_dt.pack(comp_state)
                 _, rvec, nc = jmpi.compressed_allreduce(
                     vec, jmpi.CompressionState(error=cvec), comm=comm,
                     bits=bits, mean=True)
-                comp_state = _unflatten_bucket(nc.error, cspec)
+                comp_state = comp_dt.unpack(nc.error)
             else:
                 _, rvec = jmpi.wait(_grad_plan(vec).start(vec))
                 rvec = rvec / n
-            grads = _unflatten_bucket(rvec, spec)
+            grads = grad_dt.unpack(rvec)
         else:
             flat, tdef = jax.tree.flatten(grads)
             if bits:

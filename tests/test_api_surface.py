@@ -1,0 +1,160 @@
+"""API-surface audit (host-side, no devices): the jmpi module-level
+wrappers and the ``Communicator`` method surface must stay in sync.
+
+The check is ``__all__``-driven so a routine added to one surface without
+the other fails here instead of drifting silently:
+
+1. every *routine-shaped* export in ``repro.core.__all__`` (a collective,
+   a v-variant, a p2p call, or one of their ``i*``/``*_init`` forms) must
+   exist as a ``Communicator`` method (``CartComm`` for the neighborhood
+   family), and
+2. every public ``Communicator``/``CartComm`` method that is one of those
+   routine shapes must be exported at module level.
+
+Infrastructure names (spmd/world/wait*/token helpers/registry controls)
+are module-only by design; identity/topology/pattern helpers are
+method-only; both exclusion lists are explicit so additions are a
+conscious decision.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import repro.core as jmpi
+from repro.core.comm import Communicator
+from repro.core.topology import CartComm
+
+# The logical op families.  Routine shapes derived from them: the blocking
+# name, the i<name> nonblocking form, and the <name>_init persistent form.
+COLLECTIVES = (
+    "allreduce", "bcast", "scatter", "gather", "allgather", "alltoall",
+    "reduce_scatter", "barrier",
+    # v-variants (ISSUE 5)
+    "scatterv", "gatherv", "allgatherv", "alltoallv",
+)
+NEIGHBOR = ("neighbor_allgather", "neighbor_alltoall", "neighbor_alltoallv")
+P2P = ("send", "recv", "sendrecv", "isend", "irecv", "isendrecv")
+
+# Module-only infrastructure that legitimately has no method form.
+MODULE_ONLY = {
+    "sendrecv_init",  # also a method; listed via P2P handling below
+}
+# Method-only helpers that legitimately have no module-level wrapper.
+METHOD_ONLY = {
+    "rank", "size", "coords", "axis_sizes", "split", "dup", "cart_create",
+    "ring_perm", "pairwise_perm", "neighbor_perm",
+    # CartComm topology queries (static coordinate math)
+    "cart_coords", "cart_rank", "cart_shift", "cart_shift_perm", "cart_sub",
+    "neighbor_ranks",
+}
+
+
+def _routine_names():
+    names = []
+    for op in COLLECTIVES:
+        names.append(op)
+        names.append(f"i{op}")
+        names.append(f"{op}_init")
+    for op in NEIGHBOR:
+        names.append(op)
+        names.append(f"i{op}")
+        names.append(f"{op}_init")
+    names.extend(P2P)
+    names.append("sendrecv_init")
+    return names
+
+
+def _method_host(name: str):
+    return CartComm if name.lstrip("i").startswith("neighbor_") \
+        or name.startswith("neighbor_") else Communicator
+
+
+def test_every_routine_on_both_surfaces():
+    """Every routine shape exists in __all__ AND as a communicator method."""
+    missing_module, missing_method = [], []
+    for name in _routine_names():
+        if name not in jmpi.__all__ or not callable(getattr(jmpi, name, None)):
+            missing_module.append(name)
+        host = _method_host(name)
+        if not callable(getattr(host, name, None)):
+            missing_method.append(f"{host.__name__}.{name}")
+    assert not missing_module, (
+        f"routines missing from the jmpi module surface (__all__): "
+        f"{missing_module}")
+    assert not missing_method, (
+        f"routines missing from the method surface: {missing_method}")
+
+
+def test_no_unexported_routine_methods():
+    """Every public op-shaped Communicator/CartComm method is exported at
+    module level (__all__) — additions to one surface must land on both."""
+    routine_shapes = set(_routine_names())
+    problems = []
+    for cls in (Communicator, CartComm):
+        for name, member in vars(cls).items():
+            if name.startswith("_") or not callable(member):
+                continue
+            if name in METHOD_ONLY:
+                continue
+            if name in routine_shapes and name not in jmpi.__all__:
+                problems.append(f"{cls.__name__}.{name}")
+    assert not problems, (
+        f"method-surface routines not exported in repro.core.__all__: "
+        f"{problems}")
+
+
+def test_surface_lists_are_complete():
+    """Guard the audit itself: any public Communicator method that is
+    neither a known routine shape nor an excluded helper fails here, so
+    new methods must be classified (routine on both surfaces, or an
+    explicit METHOD_ONLY helper)."""
+    routine_shapes = set(_routine_names())
+    unclassified = []
+    for cls in (Communicator, CartComm):
+        for name, member in vars(cls).items():
+            if name.startswith("_") or not (
+                    inspect.isfunction(member) or callable(member)):
+                continue
+            if isinstance(member, property):
+                continue
+            if name in routine_shapes or name in METHOD_ONLY \
+                    or name in MODULE_ONLY:
+                continue
+            unclassified.append(f"{cls.__name__}.{name}")
+    assert not unclassified, (
+        f"unclassified communicator methods (add to the routine families "
+        f"or METHOD_ONLY in tests/test_api_surface.py): {unclassified}")
+
+
+def test_ibarrier_and_plan_forms_callable():
+    """Spot-check the generated names actually resolve to callables with
+    matching arity conventions (smoke: signatures accept the documented
+    keyword-only args)."""
+    sig = inspect.signature(jmpi.scatterv)
+    assert "counts" in sig.parameters and "algorithm" in sig.parameters
+    sig = inspect.signature(Communicator.alltoallv)
+    assert "counts" in sig.parameters and "datatype" in sig.parameters
+    sig = inspect.signature(jmpi.alltoallv_init)
+    assert "counts" in sig.parameters
+
+
+def test_datatype_kwargs_parity_module_vs_method():
+    """The uniform (payload, datatype) contract holds on BOTH surfaces:
+    every p2p/collective routine that takes datatype= (and recv_into=) at
+    module level takes it as a Communicator method too."""
+    drift = []
+    i_forms = [f"i{op}" for op in COLLECTIVES if op != "barrier"]
+    for name in list(P2P) + list(COLLECTIVES) + i_forms + ["sendrecv_init"]:
+        mod_fn = getattr(jmpi, name, None)
+        meth = getattr(Communicator, name, None)
+        if mod_fn is None or meth is None:
+            continue
+        mod_params = set(inspect.signature(mod_fn).parameters)
+        meth_params = set(inspect.signature(meth).parameters)
+        for kw in ("datatype", "recv_into", "counts"):
+            if (kw in mod_params) != (kw in meth_params):
+                drift.append(f"{name}: {kw} on "
+                             f"{'module' if kw in mod_params else 'method'} "
+                             f"surface only")
+    assert not drift, f"datatype-kwarg drift between surfaces: {drift}"

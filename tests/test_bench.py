@@ -222,15 +222,23 @@ def test_compare_ignores_free_units():
     assert compare_docs(cur, base)[0] == []
 
 
-def test_compare_missing_row_fails_new_row_passes():
+def test_compare_missing_row_fails_stale_baseline_readable():
     base = _doc(rows=[_row("lat", 100.0, size=1024)])
     cur_missing = _doc(rows=[_row("other", 100.0, size=1024)])
     failures, _ = compare_docs(cur_missing, base)
-    assert failures and "missing" in failures[0]
+    assert failures and "missing" in str(failures)
+    # A baseline that PREDATES new suite rows fails with ONE readable
+    # message naming the rows and the --update-baselines fix — not a
+    # per-row wall.
     cur_extra = _doc(rows=[_row("lat", 100.0, size=1024),
-                           _row("new", 5000.0, size=4)])
+                           _row("new_a", 5000.0, size=4),
+                           _row("new_a", 5000.0, size=8),
+                           _row("new_b", 5000.0, size=4)])
     failures, report = compare_docs(cur_extra, base)
-    assert failures == []
+    stale = [f for f in failures if "predates" in f]
+    assert len(stale) == 1, failures
+    assert "new_a" in stale[0] and "new_b" in stale[0]
+    assert "--update-baselines" in stale[0]
     assert any("new row" in line for line in report)
 
 

@@ -1,0 +1,40 @@
+"""Pytest wrappers for the derived-datatype + v-variant collective cases
+(datatype algebra round-trips, scatterv/gatherv/allgatherv/alltoallv vs
+the numpy oracle under every lowering, i*/_init surfaces, (payload,
+datatype) uniformity on p2p, ERR_TRUNCATE across all three paths).
+
+Acceptance (ISSUE 5): every case passes for n ∈ {1, 2, 8} ranks.  The case
+module is device-count agnostic; each count runs it once in its own child
+process (cached transcript).  The 8-rank run is marked slow (quick lane
+covers 1 and 2 ranks), mirroring tests/test_plans_multidev.py.
+"""
+
+import pytest
+
+from repro.testing import assert_case
+
+pytestmark = pytest.mark.multidev
+
+CASES = [
+    "case_datatype_algebra_roundtrips",
+    "case_datatype_protocol_guards",
+    "case_view_index_errors_and_negative_steps",
+    "case_scatterv_matches_oracle_all_algorithms",
+    "case_gatherv_allgatherv_match_oracle_all_algorithms",
+    "case_alltoallv_matches_oracle_all_algorithms",
+    "case_alltoallv_multiaxis_comm_default_policy",
+    "case_vvariant_requests_and_plans",
+    "case_vvariant_validation_errors",
+    "case_p2p_datatype_payloads",
+    "case_collective_datatype_payloads",
+    "case_err_truncate_three_paths",
+    "case_face_datatypes_match_manual_slices",
+]
+
+N_RANKS = [1, 2, pytest.param(8, marks=pytest.mark.slow)]
+
+
+@pytest.mark.parametrize("n", N_RANKS)
+@pytest.mark.parametrize("case", CASES)
+def test_datatypes_case(case, n):
+    assert_case("tests.cases_datatypes", case, n_devices=n)

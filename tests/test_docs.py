@@ -87,11 +87,15 @@ def test_every_core_export_is_documented():
 
 def test_swept_modules_public_callables_have_docstrings():
     """The ISSUE-3 docstring sweep: every public callable defined in the
-    swept repro.core modules carries a docstring (methods included)."""
-    from repro.core import comm, operators, plans, registry, topology, views
+    swept repro.core modules carries a docstring (methods included).
+    ISSUE-5 adds the datatype layer (datatypes, vcollectives) to the
+    sweep."""
+    from repro.core import (comm, datatypes, operators, plans, registry,
+                            topology, vcollectives, views)
 
     problems = []
-    for mod in (comm, registry, plans, topology, operators, views):
+    for mod in (comm, registry, plans, topology, operators, views,
+                datatypes, vcollectives):
         for name, obj in vars(mod).items():
             if name.startswith("_") or not callable(obj):
                 continue

@@ -118,6 +118,15 @@ def test_param_sharder_collective_plan():
     assert plan["b"]["algorithm"] == registry.choose_name("allreduce", 32, 1)
     assert plan["w"]["algorithm"] == registry.choose_name(
         "allreduce", 1024 * 1024 * 4, 1)
+    # bucketed counterpart (ISSUE 5): ONE pytree datatype for the tree —
+    # a single wire payload whose size is the sum of the leaves
+    bucket = sharder.pytree_plan(tree)
+    assert bucket["op"] == "allreduce" and bucket["datatype"] == "pytree"
+    assert bucket["leaves"] == 2
+    assert bucket["count"] == 1024 * 1024 + 8
+    assert bucket["bytes"] == (1024 * 1024 + 8) * 4
+    assert bucket["algorithm"] == registry.choose_name(
+        "allreduce", bucket["bytes"], 1)
 
 
 def test_view_scatter_into_truncation_semantics():
