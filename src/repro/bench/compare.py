@@ -24,7 +24,10 @@ median regresses beyond a noise-calibrated threshold:
   the committed baseline predates (a suite grew new cases), the gate
   fails with ONE readable message naming the rows and the
   ``--update-baselines`` fix, instead of silently passing them or
-  emitting a per-row wall.
+  emitting a per-row wall;
+* **missing-baseline detection**: a suite with *no committed baseline
+  file at all* (a brand-new suite) fails the same way — one readable
+  line naming ``--update-baselines`` — never a silent pass.
 
 Modes::
 
@@ -286,8 +289,14 @@ def main(argv: list[str] | None = None) -> int:
             continue
         base_file = baseline_path(baselines_dir, current["suite"])
         if not os.path.exists(base_file):
-            print(f"# {current['suite']}: no committed baseline "
-                  f"({base_file}); run --update-baselines to add one")
+            # Same contract as the stale-baseline gate: a suite with no
+            # committed baseline at all must fail with ONE readable line
+            # naming the fix, not silently pass its rows.
+            all_failures.append(
+                f"{current['suite']}: no committed baseline ({base_file}); "
+                f"adopt one with `python -m repro.bench.compare "
+                f"--update-baselines` after a clean run "
+                f"(workflow: docs/BENCHMARKS.md)")
             continue
         baseline = schema.load(base_file)
         failures, report = compare_docs(current, baseline,

@@ -60,6 +60,9 @@ _ALL = [
     SuiteSpec("kernels", "repro.bench.suites.kernels", 1,
               "kernel-structure twins: blockwise attention, chunked SSD "
               "(single device)"),
+    SuiteSpec("serve", "repro.bench.suites.serve", 1,
+              "serving engines: continuous batching + paged KV cache vs "
+              "padded fixed batch (tokens/s, p50/p99 latency)"),
 ]
 
 SUITES: dict[str, SuiteSpec] = {s.name: s for s in _ALL}

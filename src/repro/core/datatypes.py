@@ -655,6 +655,52 @@ def indexed(blocklengths, displacements, dtype=None) -> Indexed:
                    blocklengths=ls, displacements=ds)
 
 
+def block_table(block_ids, block_size, n_tokens, row_elems=1,
+                dtype=None) -> Indexed:
+    """Per-sequence :func:`indexed` view of a paged KV pool.
+
+    A paged cache stores token rows in fixed-size blocks of one flat pool
+    (``(n_blocks * block_size, *row)``); a sequence's *block table* lists
+    the pool blocks holding its tokens in position order.  The returned
+    datatype selects the sequence's first ``n_tokens`` token rows from the
+    *raveled* pool, so ``dt.pack(pool_layer)`` materializes the dense
+    per-sequence K (or V) as one contiguous message — the view the
+    paged-vs-dense equivalence oracle in ``serve/paged_cache.py`` compares,
+    and the layout the engine's gather indices are derived from.
+
+    Args:
+        block_ids: pool block indices in sequence-position order.
+        block_size: token rows per block.
+        n_tokens: leading token count the view covers
+            (at most ``len(block_ids) * block_size``).
+        row_elems: flat elements per token row (``n_kv_heads * head_dim``
+            for a KV pool; 1 for a scalar-per-token pool).
+        dtype: optional static element dtype.
+    Returns:
+        The :class:`Indexed` datatype over the raveled pool.
+    Raises:
+        ValueError: ``n_tokens`` exceeds the table's capacity, a count is
+            negative, or two table entries name the same block (overlap).
+    """
+    ids = [int(b) for b in block_ids]
+    bs, n, re_ = int(block_size), int(n_tokens), int(row_elems)
+    if bs <= 0 or re_ <= 0 or n < 0:
+        raise ValueError(
+            f"block_table needs block_size/row_elems > 0 and n_tokens >= 0, "
+            f"got {bs}/{re_}/{n}")
+    if n > len(ids) * bs:
+        raise ValueError(f"block_table covers {len(ids) * bs} tokens "
+                         f"({len(ids)} blocks x {bs}), asked for {n}")
+    lengths, displs = [], []
+    for p, bid in enumerate(ids):
+        rows = min(bs, n - p * bs)
+        if rows <= 0:
+            break
+        lengths.append(rows * re_)
+        displs.append(bid * bs * re_)
+    return indexed(lengths, displs, dtype=dtype)
+
+
 # ---------------------------------------------------------------------------
 # Slots (the indexed layout over a list of per-slot arrays)
 # ---------------------------------------------------------------------------

@@ -8,8 +8,9 @@ state stays resident.
 Tiling: grid = (B·KH, n_kv_blocks); one q block holds the G = H/KH query
 heads of one kv group (rows ≤ 8 sublanes for small G — padded by Mosaic),
 K/V blocks are (bk, D) slabs; slot-validity (ring caches, partially filled
-caches) arrives as a precomputed (1, S) int8 mask so the kernel needs no
-scalar prefetch.  VMEM per step ≈ bk·D·2·2B + G·D·4B ≈ 0.27 MiB at bk=1024,
+caches) arrives as a precomputed int8 mask — (1, S) shared across the
+batch, or (B, S) per sequence for paged/continuous batching — so the
+kernel needs no scalar prefetch.  VMEM per step ≈ bk·D·2·2B + G·D·4B ≈ 0.27 MiB at bk=1024,
 D=128 — double-buffering the K/V stream dominates, as it should for a
 bandwidth-bound kernel.
 """
@@ -68,21 +69,28 @@ def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, acc_ref, m_ref, l_ref, *,
 def decode_attention_grouped(q, k, v, valid_mask, *, scale=None, bk=1024,
                              interpret=False):
     """q: (B,KH,G,D) one token per sequence; k/v: (B,KH,S,D);
-    valid_mask: (S,) bool/int — which cache slots may be attended.
+    valid_mask: (S,) bool/int — which cache slots may be attended — or
+    (B,S) with one validity row per sequence (paged/continuous batching,
+    where slots advance at per-sequence positions).
     Returns (B,KH,G,D)."""
     b, kh, g, d = q.shape
     s = k.shape[2]
     bk = min(bk, s)
     nk = -(-s // bk)
+    per_seq = valid_mask.ndim == 2
     if s % bk:
         pad = nk * bk - s
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        valid_mask = jnp.pad(valid_mask.astype(jnp.int8), (0, pad))
+        valid_mask = jnp.pad(valid_mask.astype(jnp.int8),
+                             ((0, 0), (0, pad)) if per_seq else (0, pad))
     qf = q.reshape(b * kh, g, d)
     kf = k.reshape(b * kh, nk * bk, d)
     vf = v.reshape(b * kh, nk * bk, d)
-    maskf = valid_mask.astype(jnp.int8).reshape(1, nk * bk)
+    maskf = valid_mask.astype(jnp.int8).reshape(b if per_seq else 1, nk * bk)
+    # grid axis 0 is b*kh with kh minor, so sequence = bh // kh
+    mask_idx = ((lambda bh, ki: (bh // kh, ki)) if per_seq
+                else (lambda bh, ki: (0, ki)))
     sc = scale if scale is not None else 1.0 / (d ** 0.5)
 
     kernel = functools.partial(_kernel, scale=sc, n_kv=nk)
@@ -93,7 +101,7 @@ def decode_attention_grouped(q, k, v, valid_mask, *, scale=None, bk=1024,
             pl.BlockSpec((1, g, d), lambda bh, ki: (bh, 0, 0)),
             pl.BlockSpec((1, bk, d), lambda bh, ki: (bh, ki, 0)),
             pl.BlockSpec((1, bk, d), lambda bh, ki: (bh, ki, 0)),
-            pl.BlockSpec((1, bk), lambda bh, ki: (0, ki)),
+            pl.BlockSpec((1, bk), mask_idx),
         ],
         out_specs=pl.BlockSpec((1, g, d), lambda bh, ki: (bh, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b * kh, g, d), q.dtype),

@@ -18,7 +18,8 @@ def _on_tpu() -> bool:
 def decode_attention(q, k, v, valid_mask, *, n_kv_heads, bk=1024,
                      interpret=None):
     """q: (B,1,H,D) single new token; k/v cache: (B,S,KH,D);
-    valid_mask: (S,). Returns (B,1,H,D)."""
+    valid_mask: (S,) shared across the batch, or (B,S) per sequence
+    (paged/continuous batching). Returns (B,1,H,D)."""
     it = (not _on_tpu()) if interpret is None else interpret
     b, _, h, d = q.shape
     kh = n_kv_heads

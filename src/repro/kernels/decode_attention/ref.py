@@ -8,12 +8,14 @@ NEG_INF = -2.0 ** 30
 
 
 def decode_attention_ref(q, k, v, valid_mask, *, scale=None):
-    """q: (B,KH,G,D); k/v: (B,KH,S,D); valid_mask: (S,)."""
+    """q: (B,KH,G,D); k/v: (B,KH,S,D); valid_mask: (S,) shared across the
+    batch, or (B,S) per sequence (continuous batching)."""
     d = q.shape[-1]
     sc = scale if scale is not None else 1.0 / (d ** 0.5)
     s = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * sc
-    s = jnp.where(valid_mask[None, None, None, :] > 0, s, NEG_INF)
+    vm = valid_mask[None] if valid_mask.ndim == 1 else valid_mask
+    s = jnp.where(vm[:, None, None, :] > 0, s, NEG_INF)
     w = jnp.exp(s - s.max(-1, keepdims=True))
     w = w / w.sum(-1, keepdims=True)
     o = jnp.einsum("bkgt,bktd->bkgd", w, v.astype(jnp.float32))

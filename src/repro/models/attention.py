@@ -245,6 +245,65 @@ def gqa_decode(params, cfg, x, t, kv_cache_layer):
     return y, {"k": new_k, "v": new_v, "slot_pos": new_slot}
 
 
+def gqa_decode_paged(params, cfg, x, step, pool_layer):
+    """Continuous-batch decode: one token per slot against the paged pool.
+
+    x: (B, 1, d) with B = max_slots (idle slots carry garbage rows);
+    pool_layer: {"k","v"} of shape (P, KH, D) — the flat token-row pool.
+    ``step`` carries per-sequence bookkeeping (host-built, static shapes):
+      pos    (B,)   int32 — this slot's decode position t (-1 = idle);
+      write  (B,)   int32 — flat pool row for the new K/V (idle → scratch);
+      gather (B, S) int32 — pool rows in position order per slot's table;
+      mask   (B, S) bool  — paged_valid_mask(pos, S, window) for live slots.
+    Unlike :func:`gqa_decode`, positions differ per sequence — the batch is
+    continuous, so there is no shared scalar t.
+    """
+    pos = jnp.maximum(step["pos"], 0)[:, None]            # (B, 1)
+    q, k, v = _qkv(params, cfg, x, pos)
+    new_k = pool_layer["k"].at[step["write"]].set(k[:, 0])
+    new_v = pool_layer["v"].at[step["write"]].set(v[:, 0])
+    kg = jnp.take(new_k, step["gather"], axis=0)          # (B, S, KH, D)
+    vg = jnp.take(new_v, step["gather"], axis=0)
+    if jax.default_backend() == "tpu":
+        from repro.kernels.decode_attention.ops import decode_attention
+        o = decode_attention(q, kg, vg, step["mask"],
+                             n_kv_heads=cfg.n_kv_heads)
+    else:
+        o = _sdpa(q, kg, vg, step["mask"][:, None, None, None, :],
+                  cfg.n_kv_heads)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return y, {"k": new_k, "v": new_v}
+
+
+def gqa_prefill_paged(params, cfg, x, step, pool_layer):
+    """Batched chunked prefill into the paged pool.
+
+    x: (B, C, d) — one fixed-size chunk per prefilling request (B is the
+    prefill batch width; idle rows and trailing pad rows are allowed);
+    ``step``:
+      pos    (B, C)    int32 — absolute position per chunk row (-1 = pad);
+      write  (B, C)    int32 — flat pool row per chunk row (pad → scratch);
+      gather (B, S)    int32 — each sequence's pool rows in position order;
+      mask   (B, C, S) bool  — causal/window validity per chunk row.
+    Sequences never share pool blocks, so the whole batch's K/V scatters
+    into the pool in one op before the per-sequence gathers; row (b, i)
+    attends exactly its own already-written prefix 0..pos[b, i] (the mask
+    enforces causality within the chunk, and pad/idle rows only ever touch
+    the scratch block).
+    """
+    pos = jnp.maximum(step["pos"], 0)                     # (B, C)
+    q, k, v = _qkv(params, cfg, x, pos)
+    kh, hd = k.shape[-2], k.shape[-1]
+    flat = step["write"].reshape(-1)
+    new_k = pool_layer["k"].at[flat].set(k.reshape(-1, kh, hd))
+    new_v = pool_layer["v"].at[flat].set(v.reshape(-1, kh, hd))
+    kg = jnp.take(new_k, step["gather"], axis=0)          # (B, S, KH, D)
+    vg = jnp.take(new_v, step["gather"], axis=0)
+    o = _sdpa(q, kg, vg, step["mask"][:, None, None], cfg.n_kv_heads)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return y, {"k": new_k, "v": new_v}
+
+
 # ===================================================================== #
 # Cross-attention (musicgen text conditioning; no cache, no causal mask)
 # ===================================================================== #

@@ -71,6 +71,45 @@ def init_slstm_state(cfg, batch, n_layers, dtype=None):
             "m": jnp.full((n_layers, batch, h, dh), -30.0, jnp.float32)}
 
 
+def init_paged_kv_cache(cfg, n_blocks, block_size, dtype=None):
+    """Paged KV pool for one attention layer stack (continuous batching).
+
+    Unlike :func:`init_kv_cache` there is no batch dim: the pool is
+    ``n_blocks * block_size`` flat token rows shared by every in-flight
+    sequence, carved into fixed-size blocks that a host-side allocator
+    (``serve/paged_cache.py``) hands out via per-sequence block tables.
+    Block 0 is reserved as the scratch block — writes from idle decode
+    slots and prefill padding land there and are never attended.  There is
+    no ``slot_pos`` array: validity is positional (gathered row ``j``
+    holds position ``j``), so :func:`paged_valid_mask` masks per sequence.
+    """
+    dt = dtype or cfg.act_dtype
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    p = int(n_blocks) * int(block_size)
+    return {
+        "k": jnp.zeros((cfg.n_layers, p, kh, hd), dt),
+        "v": jnp.zeros((cfg.n_layers, p, kh, hd), dt),
+    }
+
+
+def paged_valid_mask(pos, s_max, window=None):
+    """(..., s_max) mask for paged attention rows gathered in position order.
+
+    ``pos`` is int32 of any shape — the query position per row ((B,) slots
+    in decode, (B, C) chunk rows in batched chunked prefill); ``pos < 0``
+    marks an idle/pad row and masks everything.  Gathered key row ``j``
+    holds position ``j``, so the rule is the linear-cache one of
+    :func:`valid_mask` with ``slot_pos = arange``: ``j <= pos`` and (SWA)
+    ``pos - j < window``.
+    """
+    j = jnp.arange(s_max, dtype=jnp.int32)
+    p = pos.astype(jnp.int32)[..., None]
+    m = (j <= p) & (p >= 0)
+    if window is not None:
+        m &= (p - j) < window
+    return m
+
+
 def slot_write_index(slot_pos_row, t, window):
     """Where position t lands: t (linear cache) or t % window (ring)."""
     del slot_pos_row

@@ -133,6 +133,24 @@ def init_cache(cfg, batch, max_len):
     raise ValueError(fam)
 
 
+def init_paged_cache(cfg, n_blocks, block_size):
+    """Paged KV pool pytree for the continuous-batching serving engine.
+
+    Only GQA KV families page (dense/vlm/audio backbones and non-MLA moe):
+    their cache is per-token K/V rows that a block table can scatter across
+    a shared pool.  MLA latent and SSM/xLSTM state caches are linear-only —
+    asking for a paged cache there raises so the engine fails at
+    construction, not mid-serve.
+    """
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio") or (fam == "moe" and not cfg.mla):
+        return {"main": cache_lib.init_paged_kv_cache(cfg, n_blocks,
+                                                      block_size)}
+    raise NotImplementedError(
+        f"paged KV serving supports GQA families; {fam} caches "
+        f"(MLA latent / SSM state) are linear-only")
+
+
 # ===================================================================== #
 # trunk
 # ===================================================================== #
@@ -334,6 +352,39 @@ def decode_step(params, cfg, batch, caches, t):
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = head_logits(params, cfg, x)
     return logits, caches
+
+
+def prefill_chunk_paged(params, cfg, batch, caches, step):
+    """Prefill one fixed-size chunk of up to B sequences into the paged
+    pool.
+
+    batch["tokens"] is (B, C) — one chunk per prefilling request; ``step``
+    is the per-chunk bookkeeping dict (see
+    ``attention.gqa_prefill_paged``).  Returns (logits (B, C, V),
+    new_caches) — the caller picks each row's last *real* column when that
+    prompt is fully consumed.  Chunk shape is static, so the engine pays
+    one compile regardless of prompt length or how many requests share the
+    dispatch.
+    """
+    x, cond = embed_inputs(params, cfg, batch)
+    x, _, caches = trunk(params, cfg, x, step["pos"], "paged_prefill",
+                         t=step, caches=caches, cond=cond)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return head_logits(params, cfg, x), caches
+
+
+def decode_step_paged(params, cfg, batch, caches, step):
+    """One continuous-batch decode step over every serving slot.
+
+    batch["tokens"] is (B, 1) with B = max_slots; each slot advances at its
+    own position ``step["pos"][b]`` (idle slots are masked, their writes go
+    to the scratch block).  Returns (logits (B, 1, V), new_caches).
+    """
+    x, cond = embed_inputs(params, cfg, batch)
+    x, _, caches = trunk(params, cfg, x, step["pos"], "paged_decode",
+                         t=step, caches=caches, cond=cond)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return head_logits(params, cfg, x), caches
 
 
 # ===================================================================== #

@@ -66,7 +66,14 @@ def _mix(params, cfg, kind, x, positions, mode, t=None, cache=None, cond=None):
             return attn.gqa_forward(params["attn"], cfg, h, positions), None
         if mode == "prefill":
             return attn.gqa_prefill(params["attn"], cfg, h, positions, cache)
+        if mode == "paged_prefill":      # t carries the paged step dict
+            return attn.gqa_prefill_paged(params["attn"], cfg, h, t, cache)
+        if mode == "paged_decode":
+            return attn.gqa_decode_paged(params["attn"], cfg, h, t, cache)
         return attn.gqa_decode(params["attn"], cfg, h, t, cache)
+    if mode in ("paged_prefill", "paged_decode"):
+        raise ValueError(f"paged KV serving is GQA-only; {kind} caches "
+                         f"(MLA latent / SSM state) are linear-only")
     if kind in MLA_KINDS:
         if mode == "train":
             return attn.mla_forward(params["attn"], cfg, h, positions), None

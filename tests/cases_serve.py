@@ -1,0 +1,308 @@
+"""Serving-engine cases — device-count agnostic (run under 1 and 8
+emulated devices via tests/test_serve.py, reusing the assert_case child
+machinery; the engine itself is single-device, so every count must agree).
+
+Covers the ISSUE-6 tentpole + bugfix satellites: continuous batching over
+the paged KV cache is bitwise-equal to one-request-at-a-time padded
+generation (full-attention and sliding-window families), the EOS/output
+contract holds on both engines (post-EOS masking, early-exit width
+padding — the two seed bugs), paged K/V extracted through the block-table
+datatype view equals a dense linear cache, blocks/slots recycle to the
+exact initial state, admission control serializes under block pressure
+instead of failing mid-flight, the engine's gather rows are pinned to the
+``core.datatypes.block_table`` view, and the scheduler's FIFO admission
+is exercised host-side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+_CTX: dict = {}
+
+
+def _tiny(family="yi-6b"):
+    """Cached (cfg, params) for a tiny model family."""
+    if family not in _CTX:
+        import jax
+        from repro.configs import get_tiny
+        from repro.models import lm as lm_lib
+
+        cfg = get_tiny(family)
+        _CTX[family] = (cfg, lm_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    return _CTX[family]
+
+
+def _engine():
+    """Cached small ContinuousEngine (compiled once per child process)."""
+    if "eng" not in _CTX:
+        from repro.serve.engine import ContinuousEngine, ServeConfig
+
+        cfg, params = _tiny()
+        sc = ServeConfig(max_prompt=16, max_new_tokens=10, eos_id=-1,
+                         block_size=4, n_blocks=24, max_slots=4,
+                         prefill_chunk=6, prefill_batch=3)
+        _CTX["eng"] = ContinuousEngine(cfg, params, sc)
+    _CTX["eng"].reset()
+    return _CTX["eng"]
+
+
+# prompt lengths are drawn from a small fixed set so the sequential
+# reference engine compiles one prefill per length, not per request
+_LENS = (5, 9, 13)
+
+
+def _prompt(rng, i):
+    return rng.integers(0, 256, (_LENS[i % len(_LENS)],), dtype=np.int32)
+
+
+def _ref(prompt, mnt, family="yi-6b"):
+    """Sequential reference: one-request padded generation, first ``mnt``
+    tokens (greedy decoding is prefix-consistent in the budget)."""
+    from repro.serve.engine import Engine, ServeConfig
+
+    key = ("ref", family)
+    if key not in _CTX:
+        cfg, params = _tiny(family)
+        _CTX[key] = Engine(cfg, params, ServeConfig(
+            max_prompt=16, max_new_tokens=10, eos_id=-1))
+    out = _CTX[key].generate(np.asarray(prompt, np.int32)[None, :])
+    return list(np.asarray(out)[0, :mnt])
+
+
+def case_continuous_matches_sequential():
+    rng = np.random.default_rng(0)
+    eng = _engine()
+    work = [(_prompt(rng, i), mnt, arr)
+            for i, (mnt, arr) in enumerate(
+                [(7, 0), (10, 0), (3, 1), (1, 2), (6, 2)])]
+    rids = {eng.submit(p, mnt, arrival=arr): (p, mnt)
+            for p, mnt, arr in work}
+    res = eng.run()
+    assert set(res) == set(rids)
+    for rid, (p, mnt) in rids.items():
+        got = list(res[rid])
+        assert got == _ref(p, mnt), (rid, got, _ref(p, mnt))
+    # five requests over four slots: at least one slot was recycled
+    assert eng.stats["peak_active"] == 4
+
+
+def case_swa_continuous_matches_sequential():
+    from repro.serve.engine import ContinuousEngine, ServeConfig
+
+    cfg, params = _tiny("h2o-danube-3-4b")
+    assert cfg.window is not None   # the case exists to cover SWA masking
+    eng = ContinuousEngine(cfg, params, ServeConfig(
+        max_prompt=16, max_new_tokens=8, eos_id=-1, block_size=4,
+        n_blocks=16, max_slots=2, prefill_chunk=6, prefill_batch=2))
+    rng = np.random.default_rng(1)
+    work = [(_prompt(rng, i), mnt, arr)
+            for i, (mnt, arr) in enumerate([(6, 0), (4, 0), (8, 1)])]
+    rids = {eng.submit(p, mnt, arrival=arr): (p, mnt)
+            for p, mnt, arr in work}
+    res = eng.run()
+    for rid, (p, mnt) in rids.items():
+        assert list(res[rid]) == _ref(p, mnt, "h2o-danube-3-4b")
+
+
+def case_eos_contract_continuous():
+    rng = np.random.default_rng(2)
+    eng = _engine()
+    width = eng.sc.max_new_tokens
+    prompts = np.stack([_prompt(rng, 0) for _ in range(3)])
+    prompts[1, 0] ^= 1              # perturb so streams can diverge
+    base = np.asarray(eng.generate(prompts))
+    assert base.shape == (3, width)
+
+    # rerun with a token observed mid-stream as EOS: same prefix up to and
+    # including the first EOS, everything after masked to it, full width
+    eos = int(base[0, 2])
+    saved = eng.sc
+    try:
+        eng.sc = dataclasses.replace(saved, eos_id=eos)  # host-side only
+        out = np.asarray(eng.generate(prompts))
+    finally:
+        eng.sc = saved
+    assert out.shape == (3, width)
+    for r in range(3):
+        hits = np.flatnonzero(base[r] == eos)
+        first = hits[0] if len(hits) else width - 1
+        assert list(out[r, :first + 1]) == list(base[r, :first + 1])
+        assert np.all(out[r, first + 1:] == eos)
+
+
+def case_eos_contract_padded():
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg, params = _tiny()
+    rng = np.random.default_rng(3)
+    eng = Engine(cfg, params, ServeConfig(max_prompt=16, max_new_tokens=8,
+                                          eos_id=-1))
+    width = 8
+    p0 = _prompt(rng, 0)
+    prompts = np.stack([p0, p0])    # identical rows -> identical streams
+    base = np.asarray(eng.generate(prompts))
+    assert base.shape == (2, width)
+
+    def with_eos(eos):
+        saved = eng.sc
+        try:
+            eng.sc = dataclasses.replace(saved, eos_id=eos)
+            return np.asarray(eng.generate(prompts))
+        finally:
+            eng.sc = saved
+
+    # identical rows emit identical first tokens -> EOS at position 0 on
+    # every row -> the early-exit path must still pad to the full width
+    # and mask the tail (the two seed bugs)
+    out = with_eos(int(base[0, 0]))
+    assert out.shape == (2, width)
+    assert np.all(out == int(base[0, 0]))
+
+    # mid-stream EOS: prefix preserved, strictly-post-EOS masked
+    eos = int(base[0, 3])
+    out = with_eos(eos)
+    assert out.shape == (2, width)
+    for r in range(2):
+        hits = np.flatnonzero(base[r] == eos)
+        first = hits[0] if len(hits) else width - 1
+        assert list(out[r, :first + 1]) == list(base[r, :first + 1])
+        assert np.all(out[r, first + 1:] == eos)
+
+
+def case_paged_equals_dense():
+    import jax
+    import jax.numpy as jnp
+    from repro.models import lm as lm_lib
+
+    cfg, params = _tiny()
+    eng = _engine()
+    rng = np.random.default_rng(4)
+    prompt, mnt = _prompt(rng, 2), 6
+    n_kv = len(prompt) + mnt - 1
+
+    snap = {}
+    orig = eng.cache.free_slot
+    eng.cache.free_slot = lambda s: (snap.update(eng.cache.extract(s, n_kv)),
+                                     orig(s))[-1]
+    try:
+        rid = eng.submit(prompt, mnt)
+        res = eng.run()
+    finally:
+        eng.cache.free_slot = orig
+
+    pre = jax.jit(lambda p, b: lm_lib.prefill(p, cfg, b, 24))
+    dec = jax.jit(lambda p, b, c, t: lm_lib.decode_step(p, cfg, b, c, t))
+    logits, caches = pre(params, {"tokens": jnp.asarray(prompt[None, :])})
+    toks = [int(np.asarray(logits)[0, 0, :cfg.vocab_size].argmax())]
+    for i in range(mnt - 1):
+        logits, caches = dec(params, {"tokens": jnp.asarray([[toks[-1]]])},
+                             caches, len(prompt) + i)
+        toks.append(int(np.asarray(logits)[0, 0, :cfg.vocab_size].argmax()))
+    np.testing.assert_array_equal(
+        np.asarray(caches["main"]["k"])[:, 0, :n_kv], snap["k"])
+    np.testing.assert_array_equal(
+        np.asarray(caches["main"]["v"])[:, 0, :n_kv], snap["v"])
+    assert toks == list(res[rid])
+
+
+def case_block_recycling():
+    rng = np.random.default_rng(5)
+    eng = _engine()
+    free0 = eng.cache.free_blocks
+    v0 = eng.cache.version
+    for i in range(6):
+        eng.submit(_prompt(rng, i), 4 + (i % 3))
+    eng.run()
+    assert eng.cache.version > v0            # tables actually churned
+    assert eng.stats["peak_active"] == 4     # slots were saturated...
+    assert eng.cache.free_blocks == free0    # ...and everything came back
+    assert not eng.cache.tables.any()
+    assert not eng.cache.n_tokens.any()
+    assert eng.sched.idle
+
+
+def case_admission_under_pressure():
+    from repro.serve.engine import ContinuousEngine, ServeConfig
+
+    cfg, params = _tiny()
+    # 5 allocatable blocks; each request reserves 3 (5 + 6 - 1 = 10 rows
+    # at block_size 4) -> two free slots but block pressure forces the
+    # queue to drain strictly one at a time, in FIFO order
+    eng = ContinuousEngine(cfg, params, ServeConfig(
+        max_prompt=8, max_new_tokens=6, eos_id=-1, block_size=4,
+        n_blocks=6, max_slots=2, prefill_chunk=6, prefill_batch=2))
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, 256, (5,), dtype=np.int32) for _ in range(4)]
+    rids = [eng.submit(p, 6) for p in prompts]
+    res = eng.run()
+    assert eng.stats["peak_active"] == 1
+    assert list(res) == rids                 # completion kept FIFO order
+    for rid, p in zip(rids, prompts):
+        assert len(res[rid]) == 6
+        assert list(res[rid]) == _ref(p, 6)
+
+    # submit-time rejection of requests that could never be served
+    for bad in (lambda: eng.submit(rng.integers(0, 256, (9,), np.int32), 2),
+                lambda: eng.submit(prompts[0], 0),
+                lambda: eng.submit(prompts[0], 99)):
+        try:
+            bad()
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("expected ValueError at submit")
+
+
+def case_gather_matches_datatype_view():
+    import jax.numpy as jnp
+
+    eng = _engine()
+    cache = eng.cache
+    cache.alloc_slot(2, 10)
+    cache.alloc_slot(0, 5)       # interleave so slot 2's blocks aren't 1..k
+    try:
+        for slot, n in ((2, 10), (0, 5)):
+            view = cache.seq_datatype(slot, n)
+            pool_rows = jnp.arange(cache.n_blocks * cache.block_size,
+                                   dtype=jnp.int32)
+            picked = np.asarray(view.pack(pool_rows))
+            np.testing.assert_array_equal(picked,
+                                          cache.gather_row(slot)[:n])
+    finally:
+        cache.free_slot(2)
+        cache.free_slot(0)
+
+
+def case_scheduler_fifo():
+    from repro.serve.scheduler import DECODE, PREFILL, Request, Scheduler
+
+    sched = Scheduler(max_slots=2)
+    p = np.zeros((4,), np.int32)
+    for rid, arr in ((0, 0), (1, 0), (2, 5)):
+        sched.submit(Request(rid, p, 3, arrival=arr))
+
+    got = sched.admissible(0, lambda s_, n: True)
+    assert [r.rid for r in got] == [0, 1]
+    assert all(r.state == PREFILL for r in got)
+    assert sched.free_slots == 0
+    assert sched.admissible(5, lambda s_, n: True) == []   # no slot free
+    assert [r.rid for r in sched.prefills(5)] == [0, 1]
+
+    got[0].state = DECODE
+    assert [r.rid for r in sched.decoding()] == [got[0].rid]
+    sched.release(got[0])
+    assert sched.admissible(4, lambda s_, n: True) == []   # rid 2 not arrived
+    assert sched.admissible(5, lambda s_, n: False) == []  # blocks short
+    assert [r.rid for r in sched.admissible(5, lambda s_, n: True)] == [2]
+
+    # head-of-line: a blocked head must not be skipped
+    sched2 = Scheduler(max_slots=2)
+    sched2.submit(Request(0, p, 3))
+    sched2.submit(Request(1, p, 3))
+    calls = []
+    assert sched2.admissible(
+        0, lambda s_, n: (calls.append(n), False)[-1]) == []
+    assert len(calls) == 1                   # stopped at the blocked head

@@ -293,11 +293,15 @@ def test_update_and_compare_cli_end_to_end(tmp_path, capsys):
     doc = _doc(invariants={"plan_reuse": True})
     schema.dump(doc, str(cur_dir / "BENCH_p2p.json"))
 
-    # no baseline yet: compare reports it but passes
+    # no baseline yet: compare FAILS with one readable line naming the
+    # --update-baselines fix (a brand-new suite must not silently pass)
     rc = compare_main(["--current", str(cur_dir),
                        "--baselines", str(base_dir)])
-    assert rc == 0
-    assert "no committed baseline" in capsys.readouterr().out
+    assert rc == 1
+    out = capsys.readouterr().out
+    lines = [ln for ln in out.splitlines()
+             if "no committed baseline" in ln]
+    assert len(lines) == 1 and "--update-baselines" in lines[0], out
 
     # adopt, then compare: pass
     assert compare_main(["--current", str(cur_dir), "--baselines",

@@ -1,0 +1,38 @@
+"""Pytest wrappers for the serving-engine cases (continuous-vs-sequential
+bitwise oracle on full-attention and SWA families, the EOS/output-contract
+fixes on both engines, paged-vs-dense equivalence through the block-table
+datatype view, block/slot recycling, admission under block pressure, the
+gather-row/datatype pin, and the scheduler FIFO unit).
+
+Acceptance (ISSUE 6): every case passes for n ∈ {1, 8} emulated devices —
+the engine is single-device, so the device count must be irrelevant.  Each
+count runs the case module once in its own child process (cached
+transcript); the 8-device run is marked slow (quick lane covers 1),
+mirroring tests/test_datatypes_multidev.py.
+"""
+
+import pytest
+
+from repro.testing import assert_case
+
+pytestmark = pytest.mark.multidev
+
+CASES = [
+    "case_continuous_matches_sequential",
+    "case_swa_continuous_matches_sequential",
+    "case_eos_contract_continuous",
+    "case_eos_contract_padded",
+    "case_paged_equals_dense",
+    "case_block_recycling",
+    "case_admission_under_pressure",
+    "case_gather_matches_datatype_view",
+    "case_scheduler_fifo",
+]
+
+N_DEVICES = [1, pytest.param(8, marks=pytest.mark.slow)]
+
+
+@pytest.mark.parametrize("n", N_DEVICES)
+@pytest.mark.parametrize("case", CASES)
+def test_serve_case(case, n):
+    assert_case("tests.cases_serve", case, n_devices=n)
