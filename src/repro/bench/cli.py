@@ -60,6 +60,11 @@ def _build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--cases", default=None,
                     help="only run cases whose name contains one of these "
                          "comma-separated substrings")
+    ap.add_argument("--backend", choices=("emulated", "multiproc"),
+                    default=None,
+                    help="tag the run's artifacts with a transport backend "
+                         "(sets JMPI_BACKEND for the suite children; the "
+                         "compare gate refuses cross-backend comparisons)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="artifact path (single suite only)")
     ap.add_argument("--out-dir", default=None, metavar="DIR",
@@ -168,9 +173,12 @@ def main(argv: list[str] | None = None) -> int:
         with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
             emit_path = f.name
         try:
+            env = child_env(spec.n_devices)
+            if args.backend:
+                env["JMPI_BACKEND"] = args.backend
             proc = subprocess.run(
                 _child_argv(spec, args, emit_path),
-                env=child_env(spec.n_devices), capture_output=True,
+                env=env, capture_output=True,
                 text=True, timeout=CHILD_TIMEOUT_S)
             sys.stdout.write(proc.stdout)
             if proc.returncode != 0:

@@ -132,6 +132,17 @@ def compare_docs(current: dict, baseline: dict,
         failures.append(f"suite mismatch: current={suite!r} "
                         f"baseline={baseline.get('suite')!r}")
         return failures, report
+    # Backend is a hard wall, not an annotation: a multiproc (real process)
+    # artifact and an emulated (single-process mesh) artifact measure
+    # different transports and must never gate against each other.
+    cur_bk = current["env"].get("backend", "emulated")
+    base_bk = baseline["env"].get("backend", "emulated")
+    if cur_bk != base_bk:
+        failures.append(
+            f"{suite}: backend mismatch — current artifact was measured "
+            f"under {cur_bk!r}, baseline under {base_bk!r}; re-baseline "
+            f"with the matching backend instead of comparing across them")
+        return failures, report
     for key in ("device_count", "quick", "policy_hash"):
         cur, base = current["env"].get(key), baseline["env"].get(key)
         if cur != base:

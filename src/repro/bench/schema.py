@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import os
 import sys
 
 SCHEMA = "repro.bench/v2"
@@ -68,8 +69,10 @@ def env_fingerprint(quick: bool) -> dict:
     Args:
         quick: whether the run used the reduced quick-mode grids.
     Returns:
-        Dict with jax/python versions, backend platform, device count and
-        the active policy-table hash.
+        Dict with jax/python versions, backend platform, device count, the
+        active policy-table hash, and the jmpi transport backend the run
+        was tagged with (``JMPI_BACKEND``, default ``emulated`` — the
+        compare gate refuses cross-backend comparisons outright).
     """
     import jax
     return {
@@ -79,6 +82,7 @@ def env_fingerprint(quick: bool) -> dict:
         "device_count": len(jax.devices()),
         "policy_hash": policy_hash(),
         "quick": bool(quick),
+        "backend": os.environ.get("JMPI_BACKEND", "emulated"),
     }
 
 

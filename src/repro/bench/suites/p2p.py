@@ -17,6 +17,13 @@ JIT-resident transport:
   halo-padded tile), packed on send and scattered on receive through
   ``recv_into`` — against the contiguous ``p2p_latency`` row these
   measure the pack/unpack prologue XLA fuses into the transfer.
+* ``p2p_multiproc_latency`` / ``p2p_multiproc_bw`` — the same ping-pong
+  and window patterns executed by TWO REAL PROCESSES over the socket
+  transport (the multiproc backend's ``direct`` lowerings), driven
+  through one persistent interactive worker job shared by every cell.
+  Against the emulated rows these measure what the paper's §Performance
+  comparison measures: wire + serialization cost vs. compiled
+  intra-process movement.
 
 Sizes are float32 element counts; ``bytes`` records the per-message
 payload.  All cases honor a CLI ``--sizes`` override (the noncontig
@@ -128,6 +135,42 @@ def _noncontig_build(kind: str, inner: int):
     return build
 
 
+_MP_JOB = None
+
+
+def _mp_job():
+    """The lazily-started persistent 2-rank bench job (socket transport).
+
+    Started once per suite process and reused by every multiproc cell —
+    the launcher's atexit hook reaps it.  Restarted if a previous cell's
+    failure killed it.
+    """
+    global _MP_JOB
+    if _MP_JOB is None or _MP_JOB.procs[0].poll() is not None:
+        from repro.transport import launch
+        _MP_JOB = launch(2, "repro.transport.testing:_bench_worker",
+                         transport="sock", interactive=True, timeout=600)
+    return _MP_JOB
+
+
+def _multiproc_build(op: str, inner: int, window: int = WINDOW):
+    def build(size: int):
+        job = _mp_job()  # spawn + rendezvous happen here, outside the clock
+        cmd = {"op": op, "size": size * 4, "inner": inner}
+        if op == "window":
+            cmd["window"] = window
+
+        def thunk():
+            job.command(cmd)
+            reply = job.read_line()
+            if not reply.startswith("DONE "):
+                raise RuntimeError(f"bench worker replied {reply!r}")
+
+        return thunk
+
+    return build
+
+
 def build(cfg: BenchConfig) -> list[Case]:
     """Build the p2p cases for ``cfg`` (quick mode shrinks grid + inner)."""
     sizes = QUICK_SIZES if cfg.quick else FULL_SIZES
@@ -157,4 +200,12 @@ def build(cfg: BenchConfig) -> list[Case]:
              build=_noncontig_build("subarray", inner),
              sizes=sizes, inner=inner, unit="us", nbytes=nbytes,
              derived=lat_derived, sweepable=True, size_ok=square),
+        Case(name="p2p_multiproc_latency",
+             build=_multiproc_build("pingpong", inner),
+             sizes=sizes, inner=inner, unit="us", nbytes=nbytes,
+             derived=lat_derived, sweepable=True),
+        Case(name="p2p_multiproc_bw",
+             build=_multiproc_build("window", inner, WINDOW),
+             sizes=sizes, inner=inner, unit="us", nbytes=nbytes,
+             derived=bw_derived, sweepable=True),
     ]

@@ -102,7 +102,8 @@ from repro.core.collectives import (Operator, allgather, allreduce, alltoall,
                                     iallreduce, ialltoall, ibarrier, ibcast,
                                     igather, ireduce_scatter, iscatter,
                                     reduce_scatter, scatter)
-from repro.core.comm import Communicator, resolve, set_world, spmd, world
+from repro.core.comm import (Communicator, get_backend, resolve, set_backend,
+                             set_world, spmd, world)
 from repro.core.compression import (CompressionState, compressed_allreduce,
                                     init_state, wire_bytes_per_rank)
 from repro.core import datatypes
@@ -187,6 +188,7 @@ __all__ = [
     "isendrecv", "wait", "waitall", "waitany", "test", "testall", "testany",
     "ring_allreduce", "ring_allgather", "compressed_allreduce", "init_state",
     "wire_bytes_per_rank", "spmd", "world", "set_world", "resolve",
+    "set_backend", "get_backend",
     "ambient", "new_token", "reset_ambient", "tie",
     "initialized", "rank", "size", "wtime",
     "registry", "PolicyRule", "PolicyTable", "algorithms", "set_algorithm",

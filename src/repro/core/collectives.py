@@ -270,7 +270,7 @@ def ibarrier(*, comm: Communicator | None = None, token=None,
     rank reached the barrier."""
     comm = resolve(comm)
     tok, explicit = _tok_in(token)
-    probe = jax.lax.psum(tok, comm.axes)
+    probe = comm._barrier_probe(tok)
     new_tok = token_lib.advance(tok, probe)
     if not explicit:
         token_lib.ambient().set(new_tok)

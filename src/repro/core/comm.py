@@ -53,6 +53,13 @@ class Communicator:
     axes: tuple[str, ...]
     context: int = 0
 
+    #: Which transport backend this communicator's ops execute on.  The
+    #: emulated backend runs inside one process over shard_map mesh axes;
+    #: ``repro.transport.endpoint.MultiprocComm`` overrides this (plain class
+    #: attribute, not a dataclass field) together with the ``_ppermute`` /
+    #: ``_barrier_probe`` wire hooks below.
+    backend = "emulated"
+
     def __post_init__(self):
         if not self.axes:
             raise ValueError("Communicator needs at least one mesh axis")
@@ -202,6 +209,28 @@ class Communicator:
             if dst is not None:
                 perm.append((src, int(dst)))
         return self.pairwise_perm(perm)
+
+    # -- wire hooks (backend dispatch points; underscore = not API surface) --
+    def _ppermute(self, payload, perm):
+        """Execute one (src, dst) permutation step on this backend's wire.
+
+        The single point every p2p transfer and persistent sendrecv plan
+        funnels through: the emulated backend lowers to ``lax.ppermute``
+        over the mesh axes; a multiproc communicator overrides this with a
+        real inter-process exchange.  Ranks absent from ``perm``'s dst set
+        receive zeros (both backends).
+        """
+        return jax.lax.ppermute(payload, self.axes, perm)
+
+    def _barrier_probe(self, tok):
+        """Synchronize the group and return the post-barrier probe value.
+
+        The barrier primitive behind ``barrier``/``ibarrier``/
+        ``barrier_init``: emulated = a 1-element psum of the ordering token
+        (XLA schedules nothing past it before all ranks contribute);
+        multiproc = a wire-level dissemination barrier.
+        """
+        return jax.lax.psum(tok, self.axes)
 
     # ======================================================================
     # jmpi 2.0 — every routine as a communicator method.  Lazy imports:
@@ -979,6 +1008,43 @@ def world() -> Communicator:
             "No ambient communicator: call jmpi ops inside a repro.core.spmd-"
             "wrapped function, or pass comm= explicitly.")
     return _WORLD[0]
+
+
+_BACKENDS = ("emulated", "multiproc")
+_BACKEND = ["emulated"]
+
+
+def set_backend(name: str) -> None:
+    """Select the process-default transport backend (``jmpi.set_backend``).
+
+    ``"emulated"`` (the default) runs every op inside one process over
+    shard_map mesh axes; ``"multiproc"`` declares that ops run across real
+    host processes — inside a worker spawned by
+    :func:`repro.transport.launcher.launch` the bootstrap calls this and
+    installs a ``MultiprocComm`` as the ambient WORLD, so the same
+    ``comm.allreduce``/plan programs execute over the wire.  Selecting
+    ``"multiproc"`` outside a worker only affects default-policy knobs
+    (e.g. the bench env fingerprint); communication still needs a
+    multiproc communicator.
+
+    Args:
+        name: ``"emulated"`` or ``"multiproc"``.
+    Raises:
+        ValueError: unknown backend name.
+    """
+    if name not in _BACKENDS:
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of {_BACKENDS}")
+    _BACKEND[0] = name
+
+
+def get_backend() -> str:
+    """The process-default transport backend name (see :func:`set_backend`).
+
+    Returns:
+        ``"emulated"`` or ``"multiproc"``.
+    """
+    return _BACKEND[0]
 
 
 def resolve(comm: Communicator | None) -> Communicator:

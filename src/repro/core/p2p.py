@@ -109,7 +109,7 @@ def isendrecv(x, pairs=None, *, perm=None, dest=None, source=None, tag: int = 0,
     # Token-tie the payload so this ppermute cannot be hoisted over earlier
     # jmpi ops (MPI non-overtaking order), then transfer.
     tok, payload = token_lib.tie(tok, payload)
-    out = jax.lax.ppermute(payload, comm.axes, p)
+    out = comm._ppermute(payload, p)
     new_tok = token_lib.advance(tok, out)
     if token is None:
         token_lib.ambient().set(new_tok)

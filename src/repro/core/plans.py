@@ -154,12 +154,34 @@ class Plan:
 
 _PLAN_CACHE: dict = {}
 _STATS = {"hits": 0, "misses": 0}
+_BACKEND_STATS: dict = {}
+
+
+def _backend_key(comm) -> tuple:
+    """The backend/transport identity folded into every plan cache key.
+
+    A plan frozen under the emulated backend must never be served to a
+    multiproc communicator (its issue closure captures the comm's wire), so
+    the cache key carries ``(backend, transport_kind)`` — the latter
+    distinguishes shm from socket multiproc comms that otherwise compare
+    equal.
+    """
+    return (getattr(comm, "backend", "emulated"),
+            getattr(comm, "transport_kind", None))
+
+
+def _count(backend: str, outcome: str) -> None:
+    _STATS[outcome] += 1
+    per = _BACKEND_STATS.setdefault(backend, {"hits": 0, "misses": 0})
+    per[outcome] += 1
 
 
 def plan_cache_stats() -> dict:
-    """{'hits': int, 'misses': int, 'size': int} — cumulative *_init calls
-    served from / added to the plan cache."""
-    return dict(_STATS, size=len(_PLAN_CACHE))
+    """{'hits', 'misses', 'size', 'by_backend'} — cumulative *_init calls
+    served from / added to the plan cache; ``by_backend`` splits the same
+    counters per transport backend (``{"emulated": {"hits": ..}, ...}``)."""
+    return dict(_STATS, size=len(_PLAN_CACHE),
+                by_backend={b: dict(c) for b, c in _BACKEND_STATS.items()})
 
 
 def plan_cache_clear() -> None:
@@ -168,42 +190,45 @@ def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
     _STATS["hits"] = 0
     _STATS["misses"] = 0
+    _BACKEND_STATS.clear()
 
 
-def _cached(key, build: Callable[[], Plan]) -> Plan:
+def _cached(key, build: Callable[[], Plan], backend: str = "emulated") -> Plan:
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
-        _STATS["hits"] += 1
+        _count(backend, "hits")
         return plan
-    _STATS["misses"] += 1
+    _count(backend, "misses")
     plan = build()
     _PLAN_CACHE[key] = plan
     return plan
 
 
-def _cached_selected(sig, algorithm, select_fn, build_fn) -> Plan:
+def _cached_selected(sig, algorithm, select_fn, build_fn,
+                     backend: str = "emulated") -> Plan:
     """Two-level lookup for plans whose build needs ``registry.select``.
 
     ``sig`` must capture everything the selection *and* the built closure
     depend on besides the registry state — shape, dtype, comm (identity AND
     group size: the same axis names can span different mesh sizes across
-    traces in one process), and static kwargs.  Fast path: (sig, requested
-    algorithm, selection epoch) — a hit skips select() entirely; the epoch
-    is bumped by every policy/override change, so the skip is sound.  Slow
-    path: run select(), then dedupe on (sig, resolved name).
+    traces in one process), backend/transport identity, and static kwargs.
+    Fast path: (sig, requested algorithm, selection epoch) — a hit skips
+    select() entirely; the epoch is bumped by every policy/override change,
+    so the skip is sound.  Slow path: run select(), then dedupe on
+    (sig, resolved name).
     """
     pre_key = ("sel", sig, algorithm, registry.selection_epoch())
     plan = _PLAN_CACHE.get(pre_key)
     if plan is not None:
-        _STATS["hits"] += 1
+        _count(backend, "hits")
         return plan
     algo = select_fn()
     key = ("plan", sig, algo.name)
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
-        _STATS["hits"] += 1
+        _count(backend, "hits")
     else:
-        _STATS["misses"] += 1
+        _count(backend, "misses")
         plan = build_fn(algo)
         _PLAN_CACHE[key] = plan
     _PLAN_CACHE[pre_key] = plan
@@ -225,8 +250,9 @@ def collective_init(op_name: str, shape_dtype, *,
     selection fast path, so a fresh ``*_init`` re-selects."""
     comm = resolve(comm)
     val = _as_struct(shape_dtype)
+    bk = _backend_key(comm)
     sig = (op_name, tuple(val.shape), str(jnp.dtype(val.dtype)), comm,
-           comm.size(), tuple(sorted(kw.items())))
+           comm.size(), bk, tuple(sorted(kw.items())))
 
     def select():
         return registry.select(op_name, val, comm, algorithm=algorithm, **kw)
@@ -241,7 +267,7 @@ def collective_init(op_name: str, shape_dtype, *,
                     shape=tuple(val.shape), dtype=jnp.dtype(val.dtype),
                     comm=comm, issue_fn=issue)
 
-    return _cached_selected(sig, algorithm, select, build)
+    return _cached_selected(sig, algorithm, select, build, backend=bk[0])
 
 
 def allreduce_init(shape_dtype, op: Operator = Operator.SUM, *,
@@ -274,8 +300,9 @@ def scatter_init(shape_dtype, root: int = 0, *,
     if val.shape[0] % n:
         raise ValueError(f"scatter payload axis0={val.shape[0]} not divisible "
                          f"by comm size {n}")
+    bk = _backend_key(comm)
     sig = ("scatter", tuple(val.shape), str(jnp.dtype(val.dtype)), comm, n,
-           root)
+           bk, root)
 
     def select():
         return registry.select("bcast", val, comm, algorithm=algorithm,
@@ -295,7 +322,7 @@ def scatter_init(shape_dtype, root: int = 0, *,
                     shape=tuple(val.shape), dtype=jnp.dtype(val.dtype),
                     comm=comm, issue_fn=issue)
 
-    return _cached_selected(sig, algorithm, select, build)
+    return _cached_selected(sig, algorithm, select, build, backend=bk[0])
 
 
 def allgather_init(shape_dtype, *, comm: Communicator | None = None,
@@ -442,17 +469,18 @@ def alltoallv_init(shape_dtype, counts, *, comm: Communicator | None = None,
 def barrier_init(*, comm: Communicator | None = None) -> Plan:
     """MPI_Barrier_init analogue: ``plan.start()`` takes no payload."""
     comm = resolve(comm)
-    key = ("barrier", "psum_probe", (), "float32", comm, comm.size())
+    bk = _backend_key(comm)
+    key = ("barrier", "psum_probe", (), "float32", comm, comm.size(), bk)
 
     def build():
         def issue(v, t):
-            probe = jax.lax.psum(t, comm.axes)
+            probe = comm._barrier_probe(t)
             return probe, t
 
         return Plan(collective="barrier", algorithm="psum_probe", shape=(),
                     dtype=jnp.float32, comm=comm, issue_fn=issue)
 
-    return _cached(key, build)
+    return _cached(key, build, backend=bk[0])
 
 
 # ---------------------------------------------------------------------------
@@ -535,8 +563,9 @@ def neighbor_alltoallv_init(shape_dtypes, *, comm: Communicator | None = None,
     send_dt = datatypes_lib.slots(shapes, dtype)
     recv_dt = datatypes_lib.slots(topology.recv_slot_shapes(shapes), dtype)
     flat = send_dt.struct()
+    bk = _backend_key(comm)
     sig = ("neighbor_alltoallv", tuple(flat.shape), str(jnp.dtype(flat.dtype)),
-           comm, comm.size(), shapes)
+           comm, comm.size(), bk, shapes)
 
     def select():
         return registry.select("neighbor_alltoallv", flat, comm,
@@ -553,7 +582,7 @@ def neighbor_alltoallv_init(shape_dtypes, *, comm: Communicator | None = None,
                     comm=comm, issue_fn=issue, datatype=send_dt,
                     recv=recv_dt.bind(None))
 
-    return _cached_selected(sig, algorithm, select, build)
+    return _cached_selected(sig, algorithm, select, build, backend=bk[0])
 
 
 # ---------------------------------------------------------------------------
@@ -582,8 +611,9 @@ def sendrecv_init(shape_dtype, pairs=None, *, perm=None, dest=None,
     from repro.core.p2p import _resolve_perm
     p = tuple(tuple(pr) for pr in _resolve_perm(comm, pairs, perm, dest,
                                                 source))
+    bk = _backend_key(comm)
     key = ("sendrecv", "ppermute", tuple(val.shape),
-           str(jnp.dtype(val.dtype)), comm, comm.size(), p)
+           str(jnp.dtype(val.dtype)), comm, comm.size(), bk, p)
     recv = datatypes_lib.recv_adapter(recv_into)
     rcount = datatypes_lib.adapter_count(recv)
     status = SUCCESS
@@ -594,7 +624,7 @@ def sendrecv_init(shape_dtype, pairs=None, *, perm=None, dest=None,
         perm_list = [tuple(pr) for pr in p]
 
         def issue(v, t):
-            out = jax.lax.ppermute(v, comm.axes, perm_list)
+            out = comm._ppermute(v, perm_list)
             return out, t
 
         return Plan(collective="sendrecv", algorithm="ppermute",
@@ -603,4 +633,4 @@ def sendrecv_init(shape_dtype, pairs=None, *, perm=None, dest=None,
 
     if recv is not None:
         return build()
-    return _cached(key, build)
+    return _cached(key, build, backend=bk[0])

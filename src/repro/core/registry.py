@@ -50,6 +50,17 @@ OPS = ("allreduce", "bcast", "allgather", "reduce_scatter", "alltoall",
        "neighbor_allgather", "neighbor_alltoall", "neighbor_alltoallv")
 DEFAULT_ALGORITHM = "xla_native"
 
+#: Known transport backends.  Lowerings are registered per backend: the
+#: emulated (single-process shard_map) entries above, and the eager
+#: inter-process ``direct`` kernels contributed by
+#: ``repro.transport.endpoint``.  Selection keys off ``comm.backend``.
+BACKENDS = ("emulated", "multiproc")
+
+#: Per-backend final-fallback algorithm name (the emulated registry keeps
+#: the historical ``xla_native`` fallback; multiproc's wire kernels are all
+#: registered as ``direct``).
+BACKEND_DEFAULTS = {"emulated": DEFAULT_ALGORITHM, "multiproc": "direct"}
+
 
 @dataclasses.dataclass(frozen=True)
 class Algorithm:
@@ -100,23 +111,28 @@ class Algorithm:
                 f"operators: {sorted(self.operators)}")
 
 
-_REGISTRY: dict[str, dict[str, Algorithm]] = {op: {} for op in OPS}
+_REGISTRY: dict[str, dict[str, dict[str, Algorithm]]] = {
+    b: {op: {} for op in OPS} for b in BACKENDS}
 
 
 def register(op: str, name: str, supports: Callable[..., bool] | None = None,
-             operators=None):
-    """Decorator: register ``fn`` as algorithm ``name`` for logical ``op``.
+             operators=None, backend: str = "emulated"):
+    """Decorator: register ``fn`` as algorithm ``name`` for logical ``op``
+    on transport ``backend``.
 
     ``operators``: iterable of supported Operator members (or their string
     values); None = every operator (or the op takes no operator).
     """
-    if op not in _REGISTRY:
+    if backend not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if op not in _REGISTRY[backend]:
         raise ValueError(f"unknown collective op {op!r}; expected one of {OPS}")
     op_set = (None if operators is None else
               frozenset(getattr(o, "value", o) for o in operators))
 
     def deco(fn):
-        _REGISTRY[op][name] = Algorithm(
+        _REGISTRY[backend][op][name] = Algorithm(
             op=op, name=name, fn=fn,
             supports=supports if supports is not None
             else (lambda val, comm, **kw: True),
@@ -126,33 +142,39 @@ def register(op: str, name: str, supports: Callable[..., bool] | None = None,
     return deco
 
 
-def algorithms(op: str) -> list[str]:
-    """Registered algorithm names for ``op`` (sorted; xla_native first)."""
-    names = sorted(_REGISTRY[op])
-    if DEFAULT_ALGORITHM in names:
-        names.remove(DEFAULT_ALGORITHM)
-        names.insert(0, DEFAULT_ALGORITHM)
+def algorithms(op: str, backend: str = "emulated") -> list[str]:
+    """Registered algorithm names for ``op`` on ``backend`` (sorted; the
+    backend's default first)."""
+    default = BACKEND_DEFAULTS.get(backend, DEFAULT_ALGORITHM)
+    names = sorted(_REGISTRY[backend][op])
+    if default in names:
+        names.remove(default)
+        names.insert(0, default)
     return names
 
 
-def get(op: str, name: str) -> Algorithm:
+def get(op: str, name: str, backend: str = "emulated") -> Algorithm:
     """Look up a registered lowering by name.
 
     Args:
         op: logical collective (one of :data:`OPS`).
         name: registered algorithm name.
+        backend: transport backend the lowering was registered for.
     Returns:
         The :class:`Algorithm` entry.
     Raises:
-        ValueError: unknown ``op`` or unregistered ``name``.
+        ValueError: unknown ``op``/``backend`` or unregistered ``name``.
     """
-    if op not in _REGISTRY:
-        raise ValueError(f"unknown collective op {op!r}; expected one of {OPS}")
-    if name not in _REGISTRY[op]:
+    if backend not in _REGISTRY:
         raise ValueError(
-            f"no algorithm {name!r} registered for {op!r}; "
-            f"available: {algorithms(op)}")
-    return _REGISTRY[op][name]
+            f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if op not in _REGISTRY[backend]:
+        raise ValueError(f"unknown collective op {op!r}; expected one of {OPS}")
+    if name not in _REGISTRY[backend][op]:
+        raise ValueError(
+            f"no algorithm {name!r} registered for {op!r} on backend "
+            f"{backend!r}; available: {algorithms(op, backend)}")
+    return _REGISTRY[backend][op][name]
 
 
 # ---------------------------------------------------------------------------
@@ -416,8 +438,9 @@ def select(op_name: str, val, comm, algorithm: str | None = None,
     errors when none exists — never a silently wrong transfer.
     """
     red_op = kw.get("op")
+    backend = getattr(comm, "backend", "emulated")
     if algorithm is not None:
-        algo = get(op_name, algorithm)
+        algo = get(op_name, algorithm, backend)
         if not algo.supports_operator(red_op):
             raise ValueError(algo.operator_error(red_op))
         if not algo.supports(val, comm, **kw):
@@ -427,20 +450,22 @@ def select(op_name: str, val, comm, algorithm: str | None = None,
                 f"ranks={comm.size()}, {kw})")
         return algo
     name = choose_name(op_name, payload_bytes(val), comm.size())
-    algo = _REGISTRY[op_name].get(name)
+    algo = _REGISTRY[backend][op_name].get(name)
     if algo is not None and algo.supports_operator(red_op) \
             and algo.supports(val, comm, **kw):
         return algo
-    fallback = get(op_name, DEFAULT_ALGORITHM)
+    fallback = get(op_name, BACKEND_DEFAULTS.get(backend, DEFAULT_ALGORITHM),
+                   backend)
     if not fallback.supports_operator(red_op):
         raise ValueError(fallback.operator_error(red_op))
     if fallback.supports(val, comm, **kw):
         return fallback
-    for other in algorithms(op_name):
-        cand = _REGISTRY[op_name][other]
+    for other in algorithms(op_name, backend):
+        cand = _REGISTRY[backend][op_name][other]
         if cand.supports_operator(red_op) and cand.supports(val, comm, **kw):
             return cand
     raise ValueError(
         f"no registered algorithm for {op_name!r} supports this call "
         f"(shape={tuple(val.shape)}, dtype={val.dtype}, "
-        f"ranks={comm.size()}, {kw}); registered: {algorithms(op_name)}")
+        f"ranks={comm.size()}, backend={backend!r}, {kw}); "
+        f"registered: {algorithms(op_name, backend)}")

@@ -1,0 +1,75 @@
+"""``python -m repro.launch.procrun`` — mpiexec-style CLI for the
+multiproc backend.
+
+Examples::
+
+    # run an entry function on 4 real processes over shared memory
+    python -m repro.launch.procrun -n 4 --transport shm mypkg.mymod:main
+
+    # run a test-case module across 2 socket-connected workers
+    python -m repro.launch.procrun -n 2 --cases tests.cases_parity
+
+The entry contract is the launcher's: ``function(comm)`` — or
+``function(comm, args)`` with ``--args '<json>'`` — receives a live
+:class:`~repro.transport.endpoint.MultiprocComm` installed as the ambient
+WORLD.  Exit status is 0 only when every worker exits 0.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    """Parse args, run the job, relay rank 0's transcript; 0 on success."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.procrun",
+        description="Launch a multi-process jmpi job (real inter-process "
+                    "transport backend).")
+    ap.add_argument("entry", nargs="?", default=None,
+                    help="worker entry as module:function")
+    ap.add_argument("-n", "--nprocs", type=int, default=2,
+                    help="number of worker processes (default 2)")
+    ap.add_argument("--transport", choices=("shm", "sock"), default="sock",
+                    help="wire transport (default sock)")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="job deadline in seconds (default JMPI_TIMEOUT/120)")
+    ap.add_argument("--args", default=None,
+                    help="JSON value forwarded to the entry function")
+    ap.add_argument("--cases", default=None, metavar="MODULE",
+                    help="run a tests.cases_* module through the multiproc "
+                         "case runner instead of a custom entry")
+    ns = ap.parse_args(argv)
+
+    import json
+
+    from repro.transport import launcher
+
+    if ns.cases is not None:
+        entry = "repro.transport.testing:_case_entry"
+        args = {"module": ns.cases}
+    elif ns.entry is not None:
+        entry = ns.entry
+        args = json.loads(ns.args) if ns.args is not None else None
+    else:
+        ap.error("give an entry (module:function) or --cases MODULE")
+
+    job = launcher.launch(ns.nprocs, entry, transport=ns.transport,
+                          args=args, timeout=ns.timeout)
+    try:
+        transcript = job.wait()
+    except (launcher.WorkerFailure, TimeoutError) as e:
+        print(str(e), file=sys.stderr)
+        return 1
+    finally:
+        job.close()
+    if transcript.strip():
+        print(transcript, end="" if transcript.endswith("\n") else "\n")
+    if ns.cases is not None and "FAIL " in transcript:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

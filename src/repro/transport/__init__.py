@@ -1,0 +1,26 @@
+"""repro.transport — real inter-process backend behind the jmpi API.
+
+The emulated backend (default) runs MPI semantics inside ONE process over
+shard_map mesh axes; this package is the other lowering of the same
+surface: ``launch()`` spawns N real host processes, rendezvous wires them
+into a transport mesh (shared-memory rings or loopback sockets), and each
+worker's ambient WORLD becomes a ``MultiprocComm`` whose every op — p2p,
+collectives, v-variants, persistent plans, derived datatypes — executes
+over the wire through the same registry dispatch seam
+(``registry.select(backend="multiproc")``).  Select per process with
+``jmpi.set_backend("multiproc")`` (the worker bootstrap does) or per
+communicator by constructing a ``MultiprocComm``.
+
+Modules: ``base`` (frame format + Wire/Transport interfaces), ``shm`` /
+``sock`` (the two wires), ``endpoint`` (tag matching, barrier, the
+``direct`` collective kernels, ``MultiprocComm``), ``launcher`` (spawn /
+supervise / reap), ``worker`` (per-rank bootstrap), ``testing`` (runs the
+existing oracle case modules across a job).
+
+This module stays import-light (no jax): the launcher side runs in the
+parent test/bench process where pulling in jax is pure overhead.
+"""
+
+from repro.transport.launcher import Job, WorkerFailure, launch
+
+__all__ = ["Job", "WorkerFailure", "launch"]

@@ -1,0 +1,150 @@
+"""Wire framing + the ``Transport``/``Wire`` interfaces shared by the shm
+and socket transports.
+
+One frame = fixed header + optional JSON meta + raw payload bytes::
+
+    header  <iqqii  kind(i32)  tag(i64)  epoch(i64)  meta_len(i32)  data_len(i32)
+    meta    JSON (arrays: {"dtype": name, "shape": [...]}) — may be empty
+    data    raw payload (``ndarray.tobytes()`` for arrays, pickle for objects)
+
+``kind`` distinguishes the three frame classes the endpoint multiplexes over
+one ordered byte stream per directed peer pair: ARRAY (tensor payloads),
+OBJ (pickled python objects — status exchange, object allgather), CTRL
+(empty barrier/handshake probes).  ``epoch`` stamps every frame with the
+sender's message epoch so a receiver can lazily discard stragglers from an
+abandoned program region (e.g. a send whose matching wait raised a
+trace-time error) after the case runner bumps the epoch — see
+``repro.transport.endpoint.Endpoint.bump_epoch``.
+
+A ``Wire`` is one directed, ordered, reliable byte stream (socket or shm
+ring); a ``Transport`` owns the full peer mesh and hands out wires.  Both
+are deliberately dumb — MatlabMPI ran MPI over plain files; everything
+MPI-shaped (tag matching, collectives, datatypes) lives above, in the
+endpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import pickle
+import struct
+
+import numpy as np
+
+#: Frame kinds (header field 0).
+KIND_ARRAY, KIND_OBJ, KIND_CTRL = 0, 1, 2
+
+HEADER = struct.Struct("<iqqii")
+HEADER_LEN = HEADER.size
+
+
+class Wire:
+    """One directed, ordered, reliable byte stream to a single peer.
+
+    Concrete transports implement ``sendall``/``recv_exactly``/``close``;
+    the endpoint layers frames on top via :func:`send_frame` /
+    :func:`recv_frame`.
+    """
+
+    #: Optional ``() -> bool`` polled inside blocking recv loops; the
+    #: endpoint installs its stop flag here so dedicated reader threads
+    #: unblock promptly at shutdown (an ``EOFError`` is raised when it
+    #: fires) without racing buffer teardown.
+    stop_check = None
+
+    def sendall(self, data: bytes) -> None:
+        """Write ``data`` completely (blocking; may chunk internally)."""
+        raise NotImplementedError
+
+    def recv_exactly(self, n: int, deadline: float) -> bytes:
+        """Read exactly ``n`` bytes, raising ``TimeoutError`` past
+        ``deadline`` (absolute ``time.monotonic`` stamp)."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Release the stream (idempotent)."""
+        raise NotImplementedError
+
+
+class Transport:
+    """The full peer mesh for one rank: a :class:`Wire` per other rank.
+
+    Attributes:
+        kind: transport name (``"shm"`` | ``"sock"``) — surfaces in the
+            plan-cache key and the bench env fingerprint.
+    """
+
+    kind = "abstract"
+
+    def wire(self, peer: int) -> Wire:
+        """The directed stream pair shared with ``peer``."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Tear down every wire and free transport resources."""
+        raise NotImplementedError
+
+
+def _dtype_from_name(name: str) -> np.dtype:
+    """Reconstruct a numpy dtype from its wire name.
+
+    ``np.dtype("bfloat16")`` raises (numpy has no such builtin); the
+    extension dtypes jax registers live in ``ml_dtypes``, which jaxlib
+    ships — fall back to looking the name up there.
+    """
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def encode_array(arr: np.ndarray) -> tuple[bytes, bytes]:
+    """(meta, data) for an ARRAY frame — dtype/shape JSON + raw bytes."""
+    arr = np.asarray(arr)
+    # shape before ascontiguousarray: it promotes 0-d scalars to (1,)
+    meta = json.dumps({"dtype": arr.dtype.name,
+                       "shape": list(arr.shape)}).encode()
+    return meta, np.ascontiguousarray(arr).tobytes()
+
+
+def decode_array(meta: bytes, data: bytes) -> np.ndarray:
+    """Reverse of :func:`encode_array`."""
+    doc = json.loads(meta.decode())
+    dtype = _dtype_from_name(doc["dtype"])
+    return np.frombuffer(data, dtype=dtype).reshape(doc["shape"]).copy()
+
+
+def encode_obj(obj) -> tuple[bytes, bytes]:
+    """(meta, data) for an OBJ frame (pickle; trusted same-job peers)."""
+    return b"", pickle.dumps(obj)
+
+
+def decode_obj(data: bytes):
+    """Reverse of :func:`encode_obj`."""
+    return pickle.loads(data)
+
+
+def send_frame(wire: Wire, kind: int, tag: int, epoch: int,
+               meta: bytes = b"", data: bytes = b"") -> None:
+    """Write one framed message to ``wire``.
+
+    Header + meta + data go out as a single buffer so concurrent frames
+    from one sender can never interleave mid-frame.
+    """
+    wire.sendall(HEADER.pack(kind, tag, epoch, len(meta), len(data))
+                 + meta + data)
+
+
+def recv_frame(wire: Wire, deadline: float):
+    """Read one framed message: ``(kind, tag, epoch, meta, data)``.
+
+    Raises:
+        TimeoutError: ``deadline`` passed mid-read.
+        EOFError: the stream closed cleanly between frames (peer exit).
+    """
+    head = wire.recv_exactly(HEADER_LEN, deadline)
+    kind, tag, epoch, meta_len, data_len = HEADER.unpack(head)
+    meta = wire.recv_exactly(meta_len, deadline) if meta_len else b""
+    data = wire.recv_exactly(data_len, deadline) if data_len else b""
+    return kind, tag, epoch, meta, data

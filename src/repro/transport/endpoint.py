@@ -1,0 +1,477 @@
+"""The MPI-shaped layer over a wire transport: tag-matched message queues,
+a dissemination barrier, and :class:`MultiprocComm` — the communicator that
+runs the *existing* jmpi surface (p2p, collectives, v-variants, plans,
+derived datatypes) across real host processes.
+
+Layering (docs/ARCHITECTURE.md, transport section)::
+
+    comm.allreduce / isendrecv / plan.start       (unchanged user surface)
+        └─ registry.select(backend="multiproc")   (same dispatch seam)
+            └─ "direct" kernels below             (eager, rank-order exact)
+                └─ Endpoint.send_* / recv_*       (tag-matched frame queues)
+                    └─ ShmTransport | SockTransport  (dumb byte streams)
+
+Semantics notes:
+
+* MPI-level tag matching (ANY_TAG, trace-time mismatch errors) lives in
+  ``repro.core.p2p`` on the Request, exactly as on the emulated backend —
+  the endpoint only matches its own internal tags, so both backends share
+  one matching implementation and one error text.
+* Every multiproc kernel reduces/concatenates in rank order 0..n−1, so all
+  ranks compute bit-identical results (MPI's reproducibility guarantee for
+  a fixed algorithm) and match the emulated oracle within float tolerance.
+* Reader threads drain every inbound wire unconditionally into per-source
+  queues.  Consequence: a sender never blocks on an unposted receive, so
+  the eager kernels can use the simple send-then-receive schedule without
+  deadlock — the classic eager-protocol trade (memory for progress).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import threading
+import time
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from repro.core.comm import Communicator
+from repro.core.operators import combiner
+from repro.core.vcollectives import (_alltoallv_supports, _gatherv_supports,
+                                     _offsets, _scatterv_supports,
+                                     _valid_rows)
+from repro.transport import base
+from repro.transport.base import KIND_ARRAY, KIND_CTRL, KIND_OBJ
+
+#: Internal wire tags (negative: the public tag space is user-visible and
+#: non-negative by convention; p2p payloads, collective payloads and object
+#: frames each get their own stream so kernels can interleave).
+TAG_P2P = -10
+TAG_COLL = -11
+TAG_OBJ = -12
+_TAG_BARRIER = -101  # round k uses _TAG_BARRIER - k
+
+
+def default_timeout() -> float:
+    """Seconds an endpoint waits on a missing frame before declaring the
+    peer hung (env ``JMPI_TIMEOUT``; the launcher forwards its own job
+    timeout here so a wedged worker dies before the parent gives up)."""
+    return float(os.environ.get("JMPI_TIMEOUT", "120"))
+
+
+class Endpoint:
+    """Tag-matched messaging for one rank over a :class:`~.base.Transport`.
+
+    One dedicated reader thread per inbound wire drains frames into a
+    per-source queue; :meth:`recv` matches (kind, tag, epoch) FIFO against
+    the queue plus a pending list of not-yet-claimed frames.  Frames from
+    an older epoch are discarded lazily (see :meth:`bump_epoch`); frames
+    from a *newer* epoch stay pending until this rank catches up.
+    """
+
+    def __init__(self, transport: base.Transport, rank: int, nprocs: int,
+                 timeout: float | None = None):
+        self.transport, self.rank, self.nprocs = transport, rank, nprocs
+        self.timeout = default_timeout() if timeout is None else timeout
+        self._epoch = 0
+        self._stop = threading.Event()
+        self._queues: dict[int, queue.Queue] = {}
+        self._pending: dict[int, list] = {}
+        self._threads: list[threading.Thread] = []
+        for peer in range(nprocs):
+            if peer == rank:
+                continue
+            self._queues[peer] = queue.Queue()
+            self._pending[peer] = []
+            wire = transport.wire(peer)
+            wire.stop_check = self._stop.is_set
+            t = threading.Thread(target=self._reader, args=(peer, wire),
+                                 daemon=True, name=f"jmpi-read-r{peer}")
+            t.start()
+            self._threads.append(t)
+
+    # -- reader threads ----------------------------------------------------
+    def _reader(self, peer: int, wire: base.Wire) -> None:
+        while not self._stop.is_set():
+            try:
+                frame = base.recv_frame(wire, time.monotonic() + 86400.0)
+            except EOFError:
+                if not self._stop.is_set():
+                    self._queues[peer].put(("eof", None))
+                return
+            except Exception as e:  # noqa: BLE001 — surfaced at recv()
+                if not self._stop.is_set():
+                    self._queues[peer].put(("err", f"{type(e).__name__}: {e}"))
+                return
+            self._queues[peer].put(("frame", frame))
+
+    # -- send side ---------------------------------------------------------
+    def send_array(self, dst: int, arr, tag: int) -> None:
+        """Frame ``arr`` (dtype/shape preserved) to rank ``dst``."""
+        meta, data = base.encode_array(np.asarray(arr))
+        base.send_frame(self.transport.wire(dst), KIND_ARRAY, tag,
+                        self._epoch, meta, data)
+
+    def send_obj(self, dst: int, obj, tag: int = TAG_OBJ) -> None:
+        """Frame a pickled python object to rank ``dst``."""
+        meta, data = base.encode_obj(obj)
+        base.send_frame(self.transport.wire(dst), KIND_OBJ, tag,
+                        self._epoch, meta, data)
+
+    def send_ctrl(self, dst: int, tag: int) -> None:
+        """Frame an empty control probe (barrier rounds) to rank ``dst``."""
+        base.send_frame(self.transport.wire(dst), KIND_CTRL, tag, self._epoch)
+
+    # -- receive side ------------------------------------------------------
+    def _match(self, src: int, tag: int, kind: int):
+        found, keep = None, []
+        for fr in self._pending[src]:
+            k, t, ep, _, _ = fr
+            if ep < self._epoch:
+                continue  # stale frame from an abandoned program region
+            if found is None and ep == self._epoch and k == kind and t == tag:
+                found = fr
+            else:
+                keep.append(fr)
+        self._pending[src] = keep
+        return found
+
+    def _recv_frame(self, src: int, tag: int, kind: int):
+        deadline = time.monotonic() + self.timeout
+        while True:
+            fr = self._match(src, tag, kind)
+            if fr is not None:
+                return fr
+            try:
+                sort, payload = self._queues[src].get(timeout=0.2)
+            except queue.Empty:
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"rank {self.rank}: no frame (kind={kind}, tag={tag},"
+                        f" epoch={self._epoch}) from rank {src} within "
+                        f"{self.timeout:.0f}s")
+                continue
+            if sort == "eof":
+                raise RuntimeError(f"rank {self.rank}: peer {src} closed its "
+                                   "wire (worker exited early?)")
+            if sort == "err":
+                raise RuntimeError(f"rank {self.rank}: reader for peer {src} "
+                                   f"failed: {payload}")
+            self._pending[src].append(payload)
+
+    def recv_array(self, src: int, tag: int) -> np.ndarray:
+        """Next ARRAY frame from ``src`` with ``tag`` (blocking, FIFO)."""
+        _, _, _, meta, data = self._recv_frame(src, tag, KIND_ARRAY)
+        return base.decode_array(meta, data)
+
+    def recv_obj(self, src: int, tag: int = TAG_OBJ):
+        """Next OBJ frame from ``src`` with ``tag`` (blocking, FIFO)."""
+        _, _, _, _, data = self._recv_frame(src, tag, KIND_OBJ)
+        return base.decode_obj(data)
+
+    # -- group operations --------------------------------------------------
+    def barrier(self) -> None:
+        """Dissemination barrier: ⌈log₂n⌉ rounds; in round k rank i probes
+        rank ``(i+2^k) mod n`` and waits on ``(i−2^k) mod n``.  Exiting
+        implies every rank entered — the textbook butterfly argument."""
+        n, k = self.nprocs, 0
+        while (1 << k) < n:
+            self.send_ctrl((self.rank + (1 << k)) % n, _TAG_BARRIER - k)
+            self._recv_frame((self.rank - (1 << k)) % n, _TAG_BARRIER - k,
+                             KIND_CTRL)
+            k += 1
+
+    def allgather_obj(self, obj) -> list:
+        """Every rank's ``obj`` in rank order (python objects, pickled).
+
+        The testing harness uses this to agree on per-case outcomes so a
+        failure on any rank is visible in rank 0's transcript.
+        """
+        out = [None] * self.nprocs
+        out[self.rank] = obj
+        for peer in self._queues:
+            self.send_obj(peer, obj)
+        for peer in sorted(self._queues):
+            out[peer] = self.recv_obj(peer)
+        return out
+
+    def bump_epoch(self) -> None:
+        """Advance the message epoch: frames already in flight with the old
+        stamp will be lazily discarded.  The case runner calls this (plus a
+        barrier) between test cases so a case that raised mid-exchange
+        cannot leak a matching-but-wrong frame into the next case."""
+        self._epoch += 1
+
+    @property
+    def epoch(self) -> int:
+        """The current message epoch (stamped on every outbound frame)."""
+        return self._epoch
+
+    def close(self) -> None:
+        """Stop the readers and tear down the transport (idempotent)."""
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self.transport.close()
+
+
+# ---------------------------------------------------------------------------
+# MultiprocComm — the Communicator subtype that selects the wire kernels
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MultiprocComm(Communicator):
+    """A communicator whose ops execute across real host processes.
+
+    Drop-in for :class:`~repro.core.comm.Communicator`: same frozen-
+    dataclass identity semantics (``dup()`` still bumps ``context``; plan
+    caches key on it), but ``backend = "multiproc"`` routes every
+    ``registry.select`` to the ``direct`` wire kernels and the ``_ppermute``
+    / ``_barrier_probe`` hooks to the endpoint.  ``transport_kind``
+    participates in equality/hash — and hence in every plan-cache key — so
+    shm and socket plans never alias.  The ``endpoint`` handle is excluded
+    from comparison: it is per-process runtime state, not identity.
+    """
+
+    rank_id: int = 0
+    nprocs: int = 1
+    transport_kind: str = "sock"
+    endpoint: Any = dataclasses.field(default=None, compare=False, repr=False)
+
+    backend = "multiproc"  # plain class attribute, not a dataclass field
+
+    # -- topology / identity ------------------------------------------------
+    def size(self) -> int:
+        """Number of worker processes. Static Python int."""
+        return self.nprocs
+
+    def axis_sizes(self) -> tuple[int, ...]:
+        """Single proc axis: ``(nprocs,)``."""
+        return (self.nprocs,)
+
+    def rank(self):
+        """This process's rank (int32 scalar, eager)."""
+        return jnp.asarray(self.rank_id, jnp.int32)
+
+    def coords(self):
+        """Single-axis coordinates: ``(rank(),)``."""
+        return (self.rank(),)
+
+    def split(self, axes):
+        """Sub-communicator over an axis subset.
+
+        The multiproc world spans one proc axis, so only the identity
+        split is defined (MPI_Comm_split with a single color).
+        """
+        if tuple(axes) == self.axes:
+            return self
+        raise ValueError(f"multiproc communicator spans the single axis "
+                         f"{self.axes}; cannot split to {tuple(axes)}")
+
+    # -- wire hooks ---------------------------------------------------------
+    def _ppermute(self, payload, perm):
+        """Real inter-process (src, dst) exchange.
+
+        Matches ``lax.ppermute`` semantics exactly: each listed src sends
+        its payload, each listed dst receives the unique message addressed
+        to it (injectivity is validated upstream by ``pairwise_perm``), and
+        ranks absent from the dst set get zeros.
+        """
+        ep, me = self.endpoint, self.rank_id
+        arr = np.asarray(payload)
+        local = None
+        for s, d in perm:
+            if s == me:
+                if d == me:
+                    local = arr
+                else:
+                    ep.send_array(d, arr, TAG_P2P)
+        srcs = [s for s, d in perm if d == me]
+        if not srcs:
+            return jnp.zeros_like(payload)
+        if srcs[0] == me:
+            got = local
+        else:
+            got = ep.recv_array(srcs[0], TAG_P2P)
+        if got.shape != arr.shape or got.dtype != arr.dtype:
+            raise RuntimeError(f"rank {me}: wire payload mismatch — sent "
+                               f"{arr.dtype}{arr.shape}, received "
+                               f"{got.dtype}{got.shape}")
+        return jnp.asarray(got)
+
+    def _barrier_probe(self, tok):
+        """Wire-level dissemination barrier; the token passes through."""
+        self.endpoint.barrier()
+        return tok
+
+
+def make_comm(transport: base.Transport, rank: int, nprocs: int,
+              timeout: float | None = None) -> MultiprocComm:
+    """Endpoint + communicator for one worker (the bootstrap entry point).
+
+    Args:
+        transport: a connected :class:`~.shm.ShmTransport` or
+            :class:`~.sock.SockTransport` mesh.
+        rank / nprocs: this worker's identity.
+        timeout: endpoint frame-wait deadline (None = env default).
+    Returns:
+        A :class:`MultiprocComm` over the ``("proc",)`` axis.
+    """
+    ep = Endpoint(transport, rank, nprocs, timeout=timeout)
+    return MultiprocComm(("proc",), 0, rank_id=rank, nprocs=nprocs,
+                         transport_kind=transport.kind, endpoint=ep)
+
+
+# ---------------------------------------------------------------------------
+# "direct" wire kernels — registered for every collective op on the
+# multiproc backend.  All eager: ``val`` is a concrete array, ``comm`` a
+# MultiprocComm.  Reductions/concatenations run in rank order 0..n−1 on
+# every rank, so results are bit-identical across the group.
+# ---------------------------------------------------------------------------
+
+def _exchange_all(comm: MultiprocComm, arr: np.ndarray) -> list[np.ndarray]:
+    """Every rank's buffer, rank order (the allgather building block)."""
+    ep, me, n = comm.endpoint, comm.rank_id, comm.nprocs
+    for peer in range(n):
+        if peer != me:
+            ep.send_array(peer, arr, TAG_COLL)
+    return [arr if r == me else ep.recv_array(r, TAG_COLL) for r in range(n)]
+
+
+@registry.register("allreduce", "direct", backend="multiproc")
+def _direct_allreduce(val, tok, comm, *, op):
+    """Allgather the parts and reduce locally in rank order — n−1 messages
+    per rank, deterministic combine order (all six Operators honored via
+    the shared combiner algebra, like the emulated ring kernel)."""
+    combine, pre, post = combiner(op)
+    parts = [jnp.asarray(p) for p in _exchange_all(comm, np.asarray(val))]
+    if pre is not None:
+        parts = [pre(p) for p in parts]
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = combine(acc, p)
+    if post is not None:
+        acc = post(acc, val.dtype)
+    return acc, tok
+
+
+@registry.register("bcast", "direct", backend="multiproc")
+def _direct_bcast(val, tok, comm, *, root):
+    """Linear broadcast: root frames its buffer to every other rank."""
+    ep, me = comm.endpoint, comm.rank_id
+    arr = np.asarray(val)
+    if me == root:
+        for peer in range(comm.nprocs):
+            if peer != root:
+                ep.send_array(peer, arr, TAG_COLL)
+        out = arr
+    else:
+        out = ep.recv_array(root, TAG_COLL)
+    return jnp.asarray(out), tok
+
+
+@registry.register("allgather", "direct", backend="multiproc")
+def _direct_allgather(val, tok, comm):
+    """Direct exchange + rank-order concatenation (tiled layout, matching
+    the emulated ``all_gather(..., tiled=True)`` contract)."""
+    parts = _exchange_all(comm, np.asarray(val))
+    if parts[0].ndim == 0:
+        return jnp.stack([jnp.asarray(p) for p in parts]), tok
+    return jnp.concatenate([jnp.asarray(p) for p in parts], axis=0), tok
+
+
+def _rs_supports(val, comm, **kw):
+    return val.ndim >= 1 and val.shape[0] % comm.size() == 0
+
+
+@registry.register("reduce_scatter", "direct", backend="multiproc",
+                   supports=_rs_supports)
+def _direct_reduce_scatter(val, tok, comm, *, op):
+    """Allreduce then keep this rank's axis-0 chunk (all six Operators)."""
+    full, tok = _direct_allreduce(val, tok, comm, op=op)
+    chunk = val.shape[0] // comm.nprocs
+    me = comm.rank_id
+    return full[me * chunk:(me + 1) * chunk], tok
+
+
+def _a2a_supports(val, comm, *, split_axis=0, concat_axis=0, **kw):
+    return val.ndim > split_axis and val.shape[split_axis] % comm.size() == 0
+
+
+@registry.register("alltoall", "direct", backend="multiproc",
+                   supports=_a2a_supports)
+def _direct_alltoall(val, tok, comm, *, split_axis=0, concat_axis=0):
+    """Carve ``split_axis`` into per-destination chunks, exchange pairwise,
+    concatenate received chunks along ``concat_axis`` in rank order."""
+    ep, me, n = comm.endpoint, comm.rank_id, comm.nprocs
+    chunks = np.split(np.asarray(val), n, axis=split_axis)
+    for d in range(n):
+        if d != me:
+            ep.send_array(d, chunks[d], TAG_COLL)
+    got = [chunks[me] if s == me else ep.recv_array(s, TAG_COLL)
+           for s in range(n)]
+    return jnp.concatenate([jnp.asarray(g) for g in got],
+                           axis=concat_axis), tok
+
+
+@registry.register("scatterv", "direct", backend="multiproc",
+                   supports=_scatterv_supports)
+def _direct_scatterv(val, tok, comm, *, counts, root):
+    """Root frames each rank its padded ``(max(counts), ...)`` chunk —
+    ``counts[r]`` valid rows, zeros beyond (the v-variant contract)."""
+    ep, me = comm.endpoint, comm.rank_id
+    maxc = max(counts) if counts else 0
+    arr = np.asarray(val)
+
+    def chunk_for(r):
+        offs = _offsets(counts)
+        out = np.zeros((maxc,) + arr.shape[1:], arr.dtype)
+        out[:counts[r]] = arr[offs[r]:offs[r] + counts[r]]
+        return out
+
+    if me == root:
+        for r in range(comm.nprocs):
+            if r != root:
+                ep.send_array(r, chunk_for(r), TAG_COLL)
+        out = chunk_for(root)
+    else:
+        out = ep.recv_array(root, TAG_COLL)
+    return jnp.asarray(out), tok
+
+
+@registry.register("gatherv", "direct", backend="multiproc",
+                   supports=_gatherv_supports)
+@registry.register("allgatherv", "direct", backend="multiproc",
+                   supports=_gatherv_supports)
+def _direct_gatherv(val, tok, comm, *, counts, root=0):
+    """Exchange padded buffers + static valid-row gather — materialized on
+    every rank, exactly like the emulated lowering (gatherv's result is
+    contractually valid at root only)."""
+    parts = _exchange_all(comm, np.asarray(val))
+    flat = np.concatenate(parts, axis=0)
+    return jnp.asarray(np.take(flat, _valid_rows(counts), axis=0)), tok
+
+
+@registry.register("alltoallv", "direct", backend="multiproc",
+                   supports=_alltoallv_supports)
+def _direct_alltoallv(val, tok, comm, *, counts):
+    """Slot exchange: send slot ``d`` (invalid rows zeroed before the wire)
+    to rank ``d``; returned slot ``s`` holds rank ``s``'s rows for us."""
+    ep, me, n = comm.endpoint, comm.rank_id, comm.nprocs
+    arr = np.asarray(val)
+    out = np.zeros_like(arr)
+    for d in range(n):
+        slot = arr[d].copy()
+        slot[counts[me][d]:] = 0
+        if d == me:
+            out[me] = slot
+        else:
+            ep.send_array(d, slot, TAG_COLL)
+    for s in range(n):
+        if s != me:
+            out[s] = ep.recv_array(s, TAG_COLL)
+    return jnp.asarray(out), tok

@@ -1,0 +1,140 @@
+"""Socket transport: length-prefixed frames over loopback TCP.
+
+The portable wire.  Each rank opens one listening socket on 127.0.0.1
+(port 0 — the OS picks) and publishes ``addr_{rank}.json`` into the
+job's rendezvous directory (written atomically: tmp file + rename).
+Connection establishment is deterministic to avoid crossed dials: for
+every pair (i, j) with i < j, rank j connects to rank i, and the
+connector opens its hello with its own rank so the acceptor can map the
+inbound socket to a peer.  One socket per pair carries both directions
+(TCP is full duplex); TCP_NODELAY is set so small latency-bench frames
+are not Nagle-delayed.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import socket
+import time
+
+from repro.transport import base
+
+_HELLO = len("hello 00000000")  # fixed-width hello: "hello %08d"
+
+
+class SockWire(base.Wire):
+    """One connected TCP socket to a peer (both directions)."""
+
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        try:
+            self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass  # non-TCP stream socket (e.g. a test socketpair)
+
+    def sendall(self, data: bytes) -> None:
+        self._sock.sendall(data)
+
+    def recv_exactly(self, n: int, deadline: float) -> bytes:
+        chunks: list[bytes] = []
+        remaining = n
+        while remaining:
+            budget = deadline - time.monotonic()
+            if budget <= 0:
+                raise TimeoutError(f"socket recv timed out with {remaining} "
+                                   f"of {n} bytes outstanding")
+            # Slice the wait so a revoked deadline is honored promptly even
+            # when the peer never writes.
+            self._sock.settimeout(min(budget, 0.5))
+            try:
+                chunk = self._sock.recv(remaining)
+            except socket.timeout:
+                if self.stop_check is not None and self.stop_check():
+                    raise EOFError("endpoint stopped")
+                continue
+            if not chunk:
+                raise EOFError("peer closed the socket")
+            chunks.append(chunk)
+            remaining -= len(chunk)
+        return b"".join(chunks)
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+def _publish_addr(rdv: str, rank: int, host: str, port: int) -> None:
+    tmp = os.path.join(rdv, f".addr_{rank}.tmp")
+    with open(tmp, "w") as f:
+        json.dump({"host": host, "port": port}, f)
+    os.replace(tmp, os.path.join(rdv, f"addr_{rank}.json"))
+
+
+def _read_addr(rdv: str, rank: int, deadline: float) -> tuple[str, int]:
+    path = os.path.join(rdv, f"addr_{rank}.json")
+    while True:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            return doc["host"], doc["port"]
+        except (FileNotFoundError, json.JSONDecodeError):
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"rendezvous: rank {rank} never published "
+                                   f"its address at {path}")
+            time.sleep(0.01)
+
+
+class SockTransport(base.Transport):
+    """Full TCP mesh for one rank, built through file rendezvous.
+
+    Args:
+        rank / nprocs: this worker's identity.
+        rendezvous: shared directory for address publication.
+        timeout: seconds allowed for the whole mesh to come up.
+    """
+
+    kind = "sock"
+
+    def __init__(self, rank: int, nprocs: int, rendezvous: str,
+                 timeout: float = 60.0):
+        self.rank, self.nprocs = rank, nprocs
+        deadline = time.monotonic() + timeout
+        self._wires: dict[int, SockWire] = {}
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.bind(("127.0.0.1", 0))
+        listener.listen(nprocs)
+        _publish_addr(rendezvous, rank, *listener.getsockname())
+        # Lower ranks accept from higher ranks; higher ranks dial lower.
+        pending = {j for j in range(rank + 1, nprocs)}
+        for i in range(rank):
+            host, port = _read_addr(rendezvous, i, deadline)
+            s = socket.create_connection((host, port),
+                                         timeout=max(deadline - time.monotonic(), 1))
+            s.sendall((f"hello {rank:08d}").encode())
+            self._wires[i] = SockWire(s)
+        listener.settimeout(0.5)
+        while pending:
+            if time.monotonic() > deadline:
+                listener.close()
+                raise TimeoutError(f"rank {rank}: peers {sorted(pending)} "
+                                   "never connected")
+            try:
+                s, _ = listener.accept()
+            except socket.timeout:
+                continue
+            hello = s.recv(_HELLO, socket.MSG_WAITALL)
+            peer = int(hello.split()[1])
+            pending.discard(peer)
+            self._wires[peer] = SockWire(s)
+        listener.close()
+
+    def wire(self, peer: int) -> SockWire:
+        return self._wires[peer]
+
+    def close(self) -> None:
+        for w in self._wires.values():
+            w.close()
+        self._wires.clear()

@@ -1,0 +1,195 @@
+"""Multi-process test harness: run the existing ``tests/cases_*.py``
+oracle modules across real worker processes.
+
+The contract mirrors ``repro.testing`` exactly — same ``PASS {case}`` /
+``FAIL {case}: {err}`` transcript protocol, same run-the-module-once
+caching — but the module executes on every rank of a launched multiproc
+job instead of inside one XLA trace.  The case *functions* are untouched:
+the case modules read ``JMPI_BACKEND``/``JMPI_NP`` at import to size ``N``
+and to route their ``spmd_collective`` helper to :func:`run_collective`,
+so one oracle body is the parity test for both backends.
+
+Worker-side entries (referenced by ``module:function`` name from the
+launcher): :func:`_case_entry` (case runner), :func:`_bench_worker`
+(interactive OMB-style p2p timing loop), :func:`_spin_entry` (barrier
+heartbeat for launcher kill/orphan tests).
+"""
+
+from __future__ import annotations
+
+import functools
+import importlib
+import json
+import os
+import sys
+import time
+
+
+def run_collective(fn, shards):
+    """Multiproc twin of the case modules' ``spmd_collective``.
+
+    Each rank applies ``fn`` eagerly to its own shard (the ambient WORLD
+    is this worker's :class:`~repro.transport.endpoint.MultiprocComm`, so
+    every jmpi op inside ``fn`` goes over the wire), then object-allgathers
+    the results — every rank returns the full per-rank list, exactly like
+    the emulated helper, so case assertions run unmodified on all ranks.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import comm as comm_lib
+    from repro.core import token as token_lib
+
+    comm = comm_lib.world()
+    token_lib.reset_ambient()  # fresh ordering chain, like each spmd trace
+    out = fn(jnp.asarray(shards[comm.rank_id]))
+    gathered = comm.endpoint.allgather_obj(np.asarray(out))
+    return [np.asarray(g) for g in gathered]
+
+
+def _case_entry(comm, args) -> None:
+    """Worker entry: run every ``case_*`` of ``args["module"]`` on all
+    ranks, agree on the outcome, and have rank 0 emit the transcript.
+
+    Outcome agreement (an object-allgather of the per-rank error string)
+    makes a failure on ANY rank visible in rank 0's transcript; the
+    epoch bump + barrier between cases guarantees a case that raised
+    mid-exchange cannot leak a stale frame into the next case.
+    """
+    mod = importlib.import_module(args["module"])
+    ep = comm.endpoint
+    for name in sorted(n for n in dir(mod) if n.startswith("case_")):
+        err = None
+        try:
+            getattr(mod, name)()
+        except Exception as e:  # noqa: BLE001 — reported per case
+            err = f"{type(e).__name__}: {e}"
+        errs = ep.allgather_obj(err)
+        ep.bump_epoch()
+        ep.barrier()
+        if comm.rank_id == 0:
+            bad = next(((r, x) for r, x in enumerate(errs) if x), None)
+            if bad is None:
+                print(f"PASS {name}", flush=True)
+            else:
+                print(f"FAIL {name}: [rank {bad[0]}] {bad[1]}", flush=True)
+
+
+@functools.lru_cache(maxsize=None)
+def module_results_multiproc(module: str, nprocs: int, transport: str,
+                             timeout: float = 900.0
+                             ) -> dict[str, tuple[bool, str]]:
+    """Run ``module`` once under a (nprocs, transport) job; {case: (ok, log)}.
+
+    Cached per configuration for the life of the test process, mirroring
+    ``repro.testing.module_results`` (including the ``__import__`` /
+    ``__timeout__`` failure sentinels).
+    """
+    from repro.transport import launcher
+
+    job = launcher.launch(nprocs, "repro.transport.testing:_case_entry",
+                          transport=transport, args={"module": module},
+                          timeout=timeout)
+    try:
+        transcript = job.wait()
+    except TimeoutError as e:
+        return {"__timeout__": (False, str(e))}
+    except launcher.WorkerFailure as e:
+        return {"__import__": (False, str(e))}
+    finally:
+        job.close()
+    results: dict[str, tuple[bool, str]] = {}
+    for line in transcript.splitlines():
+        if line.startswith(("PASS ", "FAIL ")):
+            name = line.split()[1].rstrip(":")
+            results[name] = (line.startswith("PASS "), line)
+    if not results:
+        results["__import__"] = (
+            False, f"case module {module} produced no transcript under "
+                   f"multiproc n={nprocs} ({transport}):\n{transcript}")
+    return results
+
+
+def assert_case_multiproc(module: str, case: str, nprocs: int,
+                          transport: str) -> None:
+    """Assert one case passed under a real-process job (module runs once
+    per (nprocs, transport) configuration, cached)."""
+    results = module_results_multiproc(module, nprocs, transport)
+    for sentinel in ("__import__", "__timeout__"):
+        if sentinel in results:
+            raise AssertionError(results[sentinel][1])
+    assert case in results, (
+        f"case {case} not found in {module} under multiproc n={nprocs} "
+        f"({transport}); known: {sorted(results)}")
+    passed, log = results[case]
+    assert passed, (f"case {case} of {module} failed under multiproc "
+                    f"n={nprocs} ({transport}):\n{log}")
+
+
+# ---------------------------------------------------------------------------
+# interactive bench worker (driven by repro.bench.suites.p2p)
+# ---------------------------------------------------------------------------
+
+def _bench_worker(comm, args=None) -> None:
+    """Interactive OMB-style timing loop over the jmpi p2p surface.
+
+    Reads one JSON command per stdin line (the launcher writes each
+    command to every rank, so all ranks execute the same schedule)::
+
+        {"op": "pingpong", "size": <bytes>, "inner": <iters>}
+        {"op": "window",   "size": <bytes>, "window": <w>, "inner": <iters>}
+        {"op": "exit"}
+
+    Rank 0 replies ``DONE {"secs": ...}`` per command on stdout.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import p2p, token as token_lib
+
+    ep = comm.endpoint
+    for line in sys.stdin:
+        line = line.strip()
+        if not line:
+            continue
+        cmd = json.loads(line)
+        if cmd["op"] == "exit":
+            return
+        n_f32 = max(1, int(cmd["size"]) // 4)
+        x = jnp.zeros((n_f32,), jnp.float32)
+        inner = int(cmd.get("inner", 10))
+        token_lib.reset_ambient()
+        ep.barrier()
+        t0 = time.perf_counter()
+        if cmd["op"] == "pingpong":
+            for _ in range(inner):
+                _, y = p2p.sendrecv(x, pairs=[(0, 1)], comm=comm)
+                _, x = p2p.sendrecv(y, pairs=[(1, 0)], comm=comm)
+        elif cmd["op"] == "window":
+            window = int(cmd.get("window", 16))
+            for _ in range(inner):
+                reqs = [p2p.isendrecv(x, pairs=[(0, 1)], tag=i, comm=comm)
+                        for i in range(window)]
+                p2p.waitall(reqs)
+                p2p.sendrecv(x[:1], pairs=[(1, 0)], comm=comm)  # completion ack
+        else:
+            raise ValueError(f"unknown bench op {cmd['op']!r}")
+        secs = time.perf_counter() - t0
+        ep.barrier()
+        if comm.rank_id == 0:
+            print("DONE " + json.dumps({"secs": secs}), flush=True)
+
+
+def _spin_entry(comm, args) -> None:
+    """Barrier heartbeat loop for launcher hardening tests: workers stay
+    collectively synchronized until the parent kills one (the survivor's
+    barrier then times out) or ``seconds`` elapse."""
+    deadline = time.monotonic() + float((args or {}).get("seconds", 60))
+    while time.monotonic() < deadline:
+        comm.endpoint.barrier()
+        time.sleep(0.02)
+
+
+def backend_name() -> str:
+    """The backend this process is configured for (env ``JMPI_BACKEND``,
+    default ``emulated``) — the bench env fingerprint reads this."""
+    return os.environ.get("JMPI_BACKEND", "emulated")

@@ -1,0 +1,71 @@
+"""Worker bootstrap: the ``__main__`` every launched rank executes.
+
+Reads the ``JMPI_*`` environment the launcher injected, builds the
+transport mesh + endpoint + :class:`~repro.transport.endpoint.MultiprocComm`,
+installs it as the ambient WORLD (with a fresh ordering-token chain — the
+same initialization :func:`repro.core.spmd` performs around an emulated
+trace), and hands control to the ``module:function`` entry.  A final
+barrier before teardown keeps a fast rank from unlinking shared state while
+a slow peer is still draining; any exception prints its traceback to stdout
+(the launcher's transcript channel) and exits 1, which the parent monitor
+converts into a :class:`~repro.transport.launcher.WorkerFailure`.
+"""
+
+from __future__ import annotations
+
+import importlib
+import json
+import os
+import sys
+import traceback
+
+
+def main() -> int:
+    """Bootstrap this rank and run the configured entry; 0 on success."""
+    rank = int(os.environ["JMPI_RANK"])
+    nprocs = int(os.environ["JMPI_NP"])
+    transport_kind = os.environ["JMPI_TRANSPORT"]
+    session = os.environ["JMPI_SESSION"]
+    rdv = os.environ["JMPI_RENDEZVOUS"]
+    entry = os.environ["JMPI_ENTRY"]
+    args = json.loads(os.environ.get("JMPI_ENTRY_ARGS", "null"))
+    timeout = float(os.environ.get("JMPI_TIMEOUT", "120"))
+
+    from repro.core import comm as comm_lib
+    from repro.core import token as token_lib
+    from repro.transport import endpoint as ep_lib
+
+    if transport_kind == "shm":
+        from repro.transport.shm import ShmTransport
+        transport = ShmTransport(rank, nprocs, session, timeout=timeout)
+    else:
+        from repro.transport.sock import SockTransport
+        transport = SockTransport(rank, nprocs, rdv, timeout=timeout)
+
+    comm = ep_lib.make_comm(transport, rank, nprocs, timeout=timeout)
+    comm_lib.set_backend("multiproc")
+    comm_lib.set_world(comm)
+    token_lib.reset_ambient()
+
+    mod_name, fn_name = entry.split(":", 1)
+    fn = getattr(importlib.import_module(mod_name), fn_name)
+    try:
+        if args is None:
+            fn(comm)
+        else:
+            fn(comm, args)
+        comm.endpoint.barrier()  # nobody tears down while peers still drain
+        return 0
+    finally:
+        comm_lib.set_world(None)
+        comm.endpoint.close()
+
+
+if __name__ == "__main__":
+    try:
+        code = main()
+    except Exception:
+        traceback.print_exc(file=sys.stdout)
+        sys.stdout.flush()
+        code = 1
+    sys.exit(code)

@@ -19,7 +19,12 @@ import repro.core as jmpi
 from repro.core import compat
 from repro.core import ref
 
-N = 8
+import os
+
+# Under the multiproc backend the launcher sets JMPI_BACKEND/JMPI_NP and the
+# world size is the real process count; otherwise the emulated 8-device mesh.
+_BACKEND = os.environ.get("JMPI_BACKEND", "emulated")
+N = int(os.environ["JMPI_NP"]) if _BACKEND == "multiproc" else 8
 DTYPES = [jnp.float32, jnp.float64, jnp.int32, jnp.int64, jnp.complex64,
           jnp.bfloat16]
 
@@ -38,6 +43,9 @@ def shards_of(out):
 
 def spmd_collective(fn, shards, out_shape_factor=1):
     """Run fn(rank_local_block) on every rank; return per-rank results."""
+    if _BACKEND == "multiproc":
+        from repro.transport.testing import run_collective
+        return run_collective(fn, shards)
     mesh = mesh1d()
 
     @jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))

@@ -1,0 +1,48 @@
+"""Backend-parity subset: the oracle cases that are meaningful on BOTH
+backends (emulated shard_map mesh and real multiproc transport).
+
+The case *functions* are re-exported unmodified from ``cases_core`` /
+``cases_datatypes`` — the whole point is that one oracle body validates
+both lowerings.  Membership is conditioned on the world size ``N`` (which
+the source modules derive from ``JMPI_NP`` under multiproc): e.g. the
+tag-matching case posts receives from ranks 2 and 3, and the topology
+error case needs the out-of-range probe to be distinguishable from the
+injectivity probe, so both join only at N >= 4.
+
+Excluded on purpose (not N-portable): subcommunicator/multiaxis cases
+(need a 2-D mesh), ring-schedule/compressed cases (emulated-only
+algorithm studies), and cases whose pair schedules hardcode ranks >= 4.
+"""
+
+from __future__ import annotations
+
+from tests.cases_core import (  # noqa: F401 — re-exported for the case runner
+    N,
+    case_allreduce_logical,
+    case_allreduce_operators,
+    case_alltoall_reduce_scatter,
+    case_barrier_and_token_sequencing,
+    case_disable_jit_debug_mode,
+    case_listing5_exchange,
+    case_p2p_err_truncate,
+    case_property_collectives_match_oracle,
+    case_property_permute_roundtrip,
+    case_scatter_gather_allgather,
+    case_sendrecv_ring_all_dtypes,
+    case_view_strided_send_recv,
+    case_wtime,
+)
+from tests.cases_datatypes import (  # noqa: F401
+    case_err_truncate_three_paths,
+    case_p2p_datatype_payloads,
+    case_vvariant_requests_and_plans,
+    case_vvariant_validation_errors,
+)
+
+if N >= 4:
+    from tests.cases_core import (  # noqa: F401
+        case_bcast_all_dtypes,
+        case_p2p_tag_matching,
+        case_p2p_trace_time_topology_errors,
+        case_view_transposed_fortran_analogue,
+    )

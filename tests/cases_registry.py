@@ -19,7 +19,13 @@ import repro.core as jmpi
 from repro.core import compat, ref, registry
 from repro.testing import property_testing
 
-N = len(jax.devices())  # the emulated device count chosen by the harness
+import os
+
+# Multiproc jobs size the world by real process count (JMPI_NP); emulated
+# runs use the device count chosen by the harness.
+_BACKEND = os.environ.get("JMPI_BACKEND", "emulated")
+N = (int(os.environ["JMPI_NP"]) if _BACKEND == "multiproc"
+     else len(jax.devices()))
 
 DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32]
 OP_NAMES = {jmpi.Operator.SUM: "sum", jmpi.Operator.PROD: "prod",
@@ -32,6 +38,9 @@ def mesh1d():
 
 
 def spmd_collective(fn, shards):
+    if _BACKEND == "multiproc":
+        from repro.transport.testing import run_collective
+        return run_collective(fn, shards)
     mesh = mesh1d()
 
     @jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))

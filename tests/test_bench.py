@@ -73,10 +73,13 @@ def test_stats_errors():
 # schema round-trip + validation
 # ---------------------------------------------------------------------- #
 
-def _env(device_count=2, quick=True, policy_hash="abc"):
-    return {"jax": "0.0", "python": "3.10.0", "platform": "cpu",
-            "device_count": device_count, "policy_hash": policy_hash,
-            "quick": quick}
+def _env(device_count=2, quick=True, policy_hash="abc", backend=None):
+    env = {"jax": "0.0", "python": "3.10.0", "platform": "cpu",
+           "device_count": device_count, "policy_hash": policy_hash,
+           "quick": quick}
+    if backend is not None:
+        env["backend"] = backend
+    return env
 
 
 def _row(name, value, size=0, unit="us", stats_block=True):
@@ -192,6 +195,35 @@ def test_compare_floor_skips_noise():
     cur2 = _doc(rows=[_row("lat", 300.0, size=1024)])
     assert compare_docs(cur2, base2)[0] != []
     assert compare_docs(cur2, base2, floor_us=200.0)[0] == []
+
+
+def test_compare_backend_mismatch_is_a_hard_wall():
+    """A multiproc artifact must never gate against an emulated baseline
+    (or vice versa) — one clear failure line, no row comparison at all."""
+    base = _doc(backend="emulated")
+    cur = _doc(rows=[_row("lat", 99999.0, size=1024)], backend="multiproc")
+    failures, report = compare_docs(cur, base)
+    assert len(failures) == 1
+    assert "backend mismatch" in failures[0]
+    assert "'multiproc'" in failures[0] and "'emulated'" in failures[0]
+    assert report == []  # refused before any per-row work
+
+
+def test_compare_backend_defaults_to_emulated():
+    """Legacy baselines without an env.backend key compare as emulated."""
+    legacy_base = _doc()                 # no backend key at all
+    cur = _doc(backend="emulated")
+    assert compare_docs(cur, legacy_base)[0] == []
+    mp = _doc(backend="multiproc")
+    failures, _ = compare_docs(mp, legacy_base)
+    assert failures and "backend mismatch" in failures[0]
+
+
+def test_env_fingerprint_backend_tag(monkeypatch):
+    monkeypatch.delenv("JMPI_BACKEND", raising=False)
+    assert schema.env_fingerprint(True)["backend"] == "emulated"
+    monkeypatch.setenv("JMPI_BACKEND", "multiproc")
+    assert schema.env_fingerprint(True)["backend"] == "multiproc"
 
 
 def test_compare_unit_conversion():

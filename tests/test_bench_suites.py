@@ -97,7 +97,8 @@ def test_p2p_acceptance_artifact(tmp_path):
     assert proc.returncode == 0, proc.stdout + proc.stderr
     schema.assert_valid(doc)
     names = {r["name"] for r in doc["rows"]}
-    assert {"p2p_latency", "p2p_bandwidth"} <= names
+    assert {"p2p_latency", "p2p_bandwidth",
+            "p2p_multiproc_latency", "p2p_multiproc_bw"} <= names
 
     cur_dir, base_dir = tmp_path / "cur", tmp_path / "base"
     cur_dir.mkdir()

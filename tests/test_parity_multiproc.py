@@ -1,0 +1,63 @@
+"""Backend parity: the same unmodified oracle case functions
+(tests/cases_parity.py) must pass under the emulated shard_map backend AND
+under real multi-process jobs — at n=2 and n=4, over both wire transports.
+
+Each (transport, nprocs) job runs the whole case module once (cached in
+:func:`repro.transport.testing.module_results_multiproc`); the parametrized
+tests then assert per-case slices, mirroring the emulated harness.  CI's
+multiproc smoke lane selects the socket/n=2 slice with ``-k "sock-2"``.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.testing import assert_case
+from repro.transport.testing import assert_case_multiproc
+
+MODULE = "tests.cases_parity"
+
+# Cases meaningful at any world size >= 2.
+CASES = [
+    "case_allreduce_logical",
+    "case_allreduce_operators",
+    "case_alltoall_reduce_scatter",
+    "case_barrier_and_token_sequencing",
+    "case_disable_jit_debug_mode",
+    "case_err_truncate_three_paths",
+    "case_listing5_exchange",
+    "case_p2p_datatype_payloads",
+    "case_p2p_err_truncate",
+    "case_property_collectives_match_oracle",
+    "case_property_permute_roundtrip",
+    "case_scatter_gather_allgather",
+    "case_sendrecv_ring_all_dtypes",
+    "case_view_strided_send_recv",
+    "case_vvariant_requests_and_plans",
+    "case_vvariant_validation_errors",
+    "case_wtime",
+]
+
+# Join only at n >= 4 (rank schedules / error-path shapes need the room).
+CASES_N4_ONLY = [
+    "case_bcast_all_dtypes",
+    "case_p2p_tag_matching",
+    "case_p2p_trace_time_topology_errors",
+    "case_view_transposed_fortran_analogue",
+]
+
+CONFIGS = [("sock", 2), ("shm", 2), ("sock", 4), ("shm", 4)]
+
+
+@pytest.mark.parametrize("case", CASES + CASES_N4_ONLY)
+def test_parity_emulated(case):
+    assert_case(MODULE, case, n_devices=8)
+
+
+@pytest.mark.parametrize("transport,nprocs", CONFIGS,
+                         ids=[f"{t}-{n}" for t, n in CONFIGS])
+@pytest.mark.parametrize("case", CASES + CASES_N4_ONLY)
+def test_parity_multiproc(case, transport, nprocs):
+    if nprocs < 4 and case in CASES_N4_ONLY:
+        pytest.skip("case needs a world size >= 4")
+    assert_case_multiproc(MODULE, case, nprocs, transport)

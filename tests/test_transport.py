@@ -1,0 +1,305 @@
+"""Unit tests for the multiproc transport subsystem (jax-light: no
+emulated-device subprocesses; real processes only where the launcher is
+the thing under test)."""
+
+from __future__ import annotations
+
+import os
+import signal
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.transport import base
+from repro.transport.sock import SockWire
+
+
+# ---------------------------------------------------------------------------
+# frame protocol
+# ---------------------------------------------------------------------------
+
+def _wire_pair():
+    a, b = socket.socketpair()
+    return SockWire(a), SockWire(b)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float64", "int32", "int64",
+                                   "complex64", "bfloat16"])
+def test_frame_array_roundtrip(dtype):
+    if dtype == "bfloat16":
+        import ml_dtypes
+        np_dtype = np.dtype(ml_dtypes.bfloat16)
+    else:
+        np_dtype = np.dtype(dtype)
+    arr = np.arange(12).reshape(3, 4).astype(np_dtype)
+    w0, w1 = _wire_pair()
+    meta, data = base.encode_array(arr)
+    base.send_frame(w0, base.KIND_ARRAY, tag=7, epoch=3, meta=meta, data=data)
+    kind, tag, epoch, meta2, data2 = base.recv_frame(
+        w1, time.monotonic() + 5)
+    assert (kind, tag, epoch) == (base.KIND_ARRAY, 7, 3)
+    out = base.decode_array(meta2, data2)
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+    w0.close(), w1.close()
+
+
+def test_frame_array_noncontiguous():
+    arr = np.arange(24.0).reshape(4, 6)[::2, ::3]  # strided view
+    meta, data = base.encode_array(arr)
+    np.testing.assert_array_equal(base.decode_array(meta, data), arr)
+
+
+def test_frame_array_zero_dim():
+    # regression: ascontiguousarray promotes 0-d to (1,); a scalar
+    # allreduce payload must come off the wire still 0-d
+    arr = np.asarray(np.float32(2.5))
+    out = base.decode_array(*base.encode_array(arr))
+    assert out.shape == () and out == np.float32(2.5)
+
+
+def test_frame_obj_and_ctrl_roundtrip():
+    w0, w1 = _wire_pair()
+    meta, data = base.encode_obj({"err": None, "n": [1, 2]})
+    base.send_frame(w0, base.KIND_OBJ, tag=-12, epoch=0, meta=meta, data=data)
+    base.send_frame(w0, base.KIND_CTRL, tag=-101, epoch=0)
+    kind, _, _, _, data2 = base.recv_frame(w1, time.monotonic() + 5)
+    assert kind == base.KIND_OBJ
+    assert base.decode_obj(data2) == {"err": None, "n": [1, 2]}
+    kind, tag, _, meta3, data3 = base.recv_frame(w1, time.monotonic() + 5)
+    assert (kind, tag, meta3, data3) == (base.KIND_CTRL, -101, b"", b"")
+    w0.close(), w1.close()
+
+
+def test_frame_recv_timeout_and_eof():
+    w0, w1 = _wire_pair()
+    with pytest.raises(TimeoutError):
+        base.recv_frame(w1, time.monotonic() + 0.3)
+    w0.close()
+    with pytest.raises(EOFError):
+        base.recv_frame(w1, time.monotonic() + 5)
+    w1.close()
+
+
+# ---------------------------------------------------------------------------
+# shm ring
+# ---------------------------------------------------------------------------
+
+def test_shm_ring_wraparound():
+    """Stream several ring capacities through one SPSC ring: exercises the
+    wrap-around copy split and the monotonic head/tail counters."""
+    from repro.transport import shm as shm_mod
+
+    seg = shm_mod._attach(f"jmpi_test_{os.getpid()}", create=True,
+                          deadline=time.monotonic() + 5)
+    writer = shm_mod._Ring(seg, writer=True, owner=False)
+    reader = shm_mod._Ring(seg, writer=False, owner=False)
+    total = 3 * shm_mod.RING_SIZE + 12345
+    rng = np.random.default_rng(0)
+    payload = rng.integers(0, 256, size=total, dtype=np.uint8).tobytes()
+
+    def produce():
+        deadline = time.monotonic() + 30
+        for ofs in range(0, total, 70_001):  # odd chunking vs. ring size
+            writer.write(payload[ofs:ofs + 70_001], deadline)
+
+    t = threading.Thread(target=produce, daemon=True)
+    t.start()
+    got = reader.read(total, time.monotonic() + 30)
+    t.join(timeout=10)
+    assert got == payload
+    seg.close()
+    seg.unlink()
+
+
+# ---------------------------------------------------------------------------
+# endpoint: tag matching, epochs, barrier — two endpoints in one process
+# ---------------------------------------------------------------------------
+
+class _PairTransport(base.Transport):
+    kind = "sock"
+
+    def __init__(self, wires):
+        self._wires = wires
+
+    def wire(self, peer):
+        return self._wires[peer]
+
+    def close(self):
+        for w in self._wires.values():
+            w.close()
+
+
+@pytest.fixture()
+def endpoints():
+    from repro.transport.endpoint import Endpoint
+    s0, s1 = socket.socketpair()
+    ep0 = Endpoint(_PairTransport({1: SockWire(s0)}), 0, 2, timeout=1.0)
+    ep1 = Endpoint(_PairTransport({0: SockWire(s1)}), 1, 2, timeout=1.0)
+    yield ep0, ep1
+    ep0.close()
+    ep1.close()
+
+
+def test_endpoint_tag_matching_out_of_order(endpoints):
+    ep0, ep1 = endpoints
+    a, b = np.arange(3.0), np.arange(4) + 10
+    ep0.send_array(1, a, tag=5)
+    ep0.send_array(1, b, tag=3)
+    # tag 3 arrived second but is claimable first; tag 5 stays pending.
+    np.testing.assert_array_equal(ep1.recv_array(0, 3), b)
+    np.testing.assert_array_equal(ep1.recv_array(0, 5), a)
+
+
+def test_endpoint_obj_and_barrier(endpoints):
+    ep0, ep1 = endpoints
+    ep0.send_obj(1, ("payload", 42))
+    assert ep1.recv_obj(0) == ("payload", 42)
+    done = []
+    t = threading.Thread(target=lambda: (ep1.barrier(), done.append(1)),
+                         daemon=True)
+    t.start()
+    ep0.barrier()
+    t.join(timeout=5)
+    assert done == [1]
+
+
+def test_endpoint_epoch_discards_stale_frames(endpoints):
+    ep0, ep1 = endpoints
+    ep0.send_array(1, np.arange(3.0), tag=5)   # epoch 0: will go stale
+    ep1.bump_epoch()                           # ep1 now only accepts epoch 1
+    with pytest.raises(TimeoutError, match="no frame"):
+        ep1.recv_array(0, 5)
+    ep0.bump_epoch()
+    fresh = np.arange(4.0) + 1
+    ep0.send_array(1, fresh, tag=5)
+    np.testing.assert_array_equal(ep1.recv_array(0, 5), fresh)
+
+
+def test_endpoint_future_epoch_stays_pending(endpoints):
+    ep0, ep1 = endpoints
+    ep0.bump_epoch()                           # ep0 runs ahead
+    future = np.arange(5.0)
+    ep0.send_array(1, future, tag=9)
+    with pytest.raises(TimeoutError):          # not claimable at epoch 0 ...
+        ep1.recv_array(0, 9)
+    ep1.bump_epoch()                           # ... but kept, not dropped
+    np.testing.assert_array_equal(ep1.recv_array(0, 9), future)
+
+
+def test_endpoint_peer_close_is_an_error(endpoints):
+    ep0, ep1 = endpoints
+    ep0.close()
+    with pytest.raises(RuntimeError, match="closed its wire"):
+        ep1.recv_array(0, 5)
+
+
+# ---------------------------------------------------------------------------
+# launcher hardening: crash/timeout containment, zero orphans
+# ---------------------------------------------------------------------------
+
+def _assert_all_dead(job):
+    for p in job.procs:
+        assert p.poll() is not None, f"worker pid {p.pid} still running"
+    for pid in job.pids():
+        # reparented orphans would still answer signal 0
+        try:
+            os.kill(pid, 0)
+        except ProcessLookupError:
+            continue
+        # pid exists: must be our own zombie already reaped by Popen.wait
+        assert False, f"orphan worker pid {pid} survived teardown"
+
+
+def test_launcher_kill_mid_collective_no_orphans():
+    """SIGKILL one worker of a live shm job mid-barrier: wait() must raise
+    promptly, every other worker must be reaped, and every shared-memory
+    segment must be unlinked."""
+    from repro.transport import launch, WorkerFailure
+
+    job = launch(2, "repro.transport.testing:_spin_entry", transport="shm",
+                 args={"seconds": 120}, timeout=60)
+    try:
+        time.sleep(2.0)  # let the mesh come up and the barrier loop spin
+        os.kill(job.pids()[1], signal.SIGKILL)
+        t0 = time.monotonic()
+        with pytest.raises(WorkerFailure, match="rank 1"):
+            job.wait()
+        assert time.monotonic() - t0 < 30, "dead worker detected too slowly"
+        _assert_all_dead(job)
+        from multiprocessing import shared_memory
+        from repro.transport.shm import segment_name
+        for i, j in ((0, 1), (1, 0)):
+            with pytest.raises(FileNotFoundError):
+                shared_memory.SharedMemory(
+                    name=segment_name(job.session, i, j))
+    finally:
+        job.close()
+
+
+def test_launcher_job_timeout_reaps_workers():
+    from repro.transport import launch
+
+    job = launch(2, "repro.transport.testing:_spin_entry",
+                 args={"seconds": 120}, timeout=6)
+    try:
+        with pytest.raises(TimeoutError, match="exceeded 6s"):
+            job.wait()
+        _assert_all_dead(job)
+    finally:
+        job.close()
+
+
+def test_launcher_worker_exception_carries_transcript():
+    from repro.transport import launch, WorkerFailure
+
+    job = launch(2, "repro.transport.testing:_case_entry",
+                 args={"module": "tests.no_such_module"}, timeout=60)
+    try:
+        with pytest.raises(WorkerFailure, match="no_such_module"):
+            job.wait()
+        _assert_all_dead(job)
+    finally:
+        job.close()
+
+
+def test_launcher_rejects_bad_arguments():
+    from repro.transport import launch
+
+    with pytest.raises(ValueError, match="transport"):
+        launch(2, "mod:fn", transport="carrier-pigeon")
+    with pytest.raises(ValueError, match="module:function"):
+        launch(2, "not-an-entry")
+
+
+# ---------------------------------------------------------------------------
+# satellite: plan cache keys carry backend/transport identity
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_backend_identity():
+    import jax.numpy as jnp
+
+    from repro.core import plans
+    from repro.core.comm import Communicator
+    from repro.transport.endpoint import MultiprocComm
+
+    emu = Communicator(("ranks",), 0)
+    shm = MultiprocComm(("proc",), 0, rank_id=0, nprocs=2,
+                        transport_kind="shm")
+    sock = MultiprocComm(("proc",), 0, rank_id=0, nprocs=2,
+                         transport_kind="sock")
+    keys = {plans._backend_key(c) for c in (emu, shm, sock)}
+    assert len(keys) == 3, "backend/transport identity must split cache keys"
+
+    plans.plan_cache_clear()
+    x = jnp.zeros((4,), jnp.float32)
+    p_shm = plans.allreduce_init(x, comm=shm)
+    p_sock = plans.allreduce_init(x, comm=sock)
+    assert p_shm is not p_sock, "shm plan served to a sock communicator"
+    assert plans.allreduce_init(x, comm=sock) is p_sock
+    stats = plans.plan_cache_stats()
+    assert stats["by_backend"]["multiproc"]["misses"] >= 2
+    assert stats["by_backend"]["multiproc"]["hits"] >= 1
