@@ -12,13 +12,42 @@ Same tiny LM, same data:
 * ``trainer_hostbridge`` — per-rank grads to host, numpy reduction,
   re-upload (the full mpi4py pattern).
 
-Rows are ms/step (``case size`` = sequence length); ``extras`` emits the
-speedup-vs-roundtrip ratios.
+Compressed/overlapped gradient sync (ISSUE 8) — the bucketed
+``distributed.overlap.bucketed_grad_sync`` path measured over the REAL
+wire (one persistent 8-rank socket job driven like the p2p suite's
+multiproc rows, ``_bench_worker``'s ``gradsync`` op), because that is
+where the compressed formats' byte win is literal — on the emulated mesh
+the int8 two-phase schedule only adds work:
+
+* ``trainer_sync_fp32``          — serial fp32 bucketed sync (baseline);
+* ``trainer_sync_int8``          — serial ``int8_ef`` bucketed sync;
+* ``trainer_compressed_overlap`` — issue-all-then-waitall ``int8_ef``;
+* ``trainer_wire_bytes``         — measured int8/fp32 transmitted payload
+  ratio from the endpoint spy (gate-free row; ~0.25), plus the topk twin.
+
+Invariants (``compare --smoke`` gates these): ``compressed_not_slower_
+than_fp32`` (the overlapped compressed sync must beat the fp32 serial
+baseline — the PR's headline step-time claim) and ``overlap_not_slower_
+than_serial`` (overlap may not cost more than 1.35× serial — on the
+eager wire backend both orders do identical work, so this bounds noise).
+Both are median claims, so they are only emitted when every sync row
+carries >= 3 samples (the CI gate's repeats=5 qualifies; a repeats=1
+smoke run records the timing rows without gating them).
+
+Rows are ms/step (``case size`` = sequence length for the train-step
+rows, gradient float count for the sync rows); ``extras`` emits the
+speedup-vs-roundtrip ratios and the wire-byte rows.
 """
 
 from __future__ import annotations
 
+import json
+
 from repro.bench.core import BenchConfig, Case, free_row
+
+_SYNC_NPROCS = 8
+_SYNC_BUCKETS = 4
+_SYNC_INNER = 2
 
 
 def _seq(cfg: BenchConfig) -> int:
@@ -124,9 +153,55 @@ def _split_builds(cfg: BenchConfig):
     return make("roundtrip"), make("hostbridge")
 
 
+def _sync_total(cfg: BenchConfig) -> int:
+    """Per-rank gradient float count for the wire-sync rows."""
+    return (1 << 19) if cfg.quick else (1 << 21)
+
+
+_SYNC_JOB = None
+
+
+def _sync_job():
+    """The lazily-started persistent 8-rank socket job shared by every
+    sync row (and the wire-byte measurement); restarted if a prior cell's
+    failure killed it, reaped by the launcher's atexit hook."""
+    global _SYNC_JOB
+    if _SYNC_JOB is None or _SYNC_JOB.procs[0].poll() is not None:
+        from repro.transport import launch
+        _SYNC_JOB = launch(_SYNC_NPROCS,
+                           "repro.transport.testing:_bench_worker",
+                           transport="sock", interactive=True, timeout=900)
+    return _SYNC_JOB
+
+
+def _sync_cmd(cmd: dict) -> dict:
+    job = _sync_job()
+    job.command(cmd)
+    reply = job.read_line()
+    if not reply.startswith("DONE "):
+        raise RuntimeError(f"gradsync worker replied {reply!r}")
+    return json.loads(reply[len("DONE "):])
+
+
+def _gradsync_build(algorithm: str, overlap: bool):
+    def build(total: int):
+        _sync_job()  # spawn + rendezvous outside the clock
+        cmd = {"op": "gradsync", "total": total, "algorithm": algorithm,
+               "buckets": _SYNC_BUCKETS, "overlap": overlap,
+               "inner": _SYNC_INNER}
+
+        def thunk():
+            _sync_cmd(cmd)
+
+        return thunk
+
+    return build
+
+
 def build(cfg: BenchConfig) -> list[Case]:
     """Build the trainer-backend cases for ``cfg``."""
     seq = _seq(cfg)
+    total = _sync_total(cfg)
     roundtrip, hostbridge = _split_builds(cfg)
     return [
         Case(name="trainer_jmpi", build=_jmpi_build(cfg, bits=0),
@@ -137,12 +212,25 @@ def build(cfg: BenchConfig) -> list[Case]:
              unit="ms"),
         Case(name="trainer_hostbridge", build=hostbridge, sizes=(seq,),
              unit="ms"),
+        Case(name="trainer_sync_fp32", build=_gradsync_build("", False),
+             sizes=(total,), inner=_SYNC_INNER, unit="ms",
+             nbytes=lambda t: t * 4),
+        Case(name="trainer_sync_int8", build=_gradsync_build("int8_ef",
+                                                             False),
+             sizes=(total,), inner=_SYNC_INNER, unit="ms",
+             nbytes=lambda t: t * 4),
+        Case(name="trainer_compressed_overlap",
+             build=_gradsync_build("int8_ef", True),
+             sizes=(total,), inner=_SYNC_INNER, unit="ms",
+             nbytes=lambda t: t * 4),
     ]
 
 
 def extras(cfg: BenchConfig, rows: list[dict]) -> tuple[list[dict], dict]:
-    """Speedup-vs-roundtrip ratio rows."""
+    """Speedup-vs-roundtrip ratios, measured wire-byte rows, and the
+    compressed-sync invariants."""
     seq = _seq(cfg)
+    total = _sync_total(cfg)
     by_name = {r["name"]: r["value"] for r in rows if r["size"] == seq}
     extra: list[dict] = []
     base = by_name.get("trainer_roundtrip")
@@ -152,4 +240,34 @@ def extras(cfg: BenchConfig, rows: list[dict]) -> tuple[list[dict], dict]:
             if by_name.get(name):
                 extra.append(free_row(f"{name}_speedup_vs_roundtrip",
                                       base / by_name[name], size=seq))
-    return extra, {}
+
+    sync_rows = {r["name"]: r for r in rows if r["size"] == total}
+    sync = {k: r["value"] for k, r in sync_rows.items()}
+    fp32 = sync.get("trainer_sync_fp32")
+    int8 = sync.get("trainer_sync_int8")
+    over = sync.get("trainer_compressed_overlap")
+    # The sync invariants are claims about steady-state MEDIANS over a
+    # noisy eager wire (single samples at this size swing ±50% under
+    # load) — only gate them when every row has enough samples for a
+    # meaningful median.  The CI perf-gate runs repeats=5; the in-tree
+    # repeats=1 smoke run only validates the artifact.
+    stable = all(
+        (r.get("stats") or {}).get("n", 0) >= 3
+        for r in sync_rows.values())
+    invariants: dict[str, bool] = {}
+    if fp32 and over:
+        if stable:
+            invariants["compressed_not_slower_than_fp32"] = over <= fp32
+        extra.append(free_row("trainer_compressed_speedup_vs_fp32",
+                              fp32 / over, size=total))
+    if int8 and over and stable:
+        invariants["overlap_not_slower_than_serial"] = over <= 1.35 * int8
+    try:
+        wb = _sync_cmd({"op": "wire_bytes", "total": total})
+        extra.append(free_row("trainer_wire_bytes",
+                              wb["int8"] / wb["fp32"], size=total))
+        extra.append(free_row("trainer_wire_bytes_topk",
+                              wb["topk"] / wb["fp32"], size=total))
+    except Exception:
+        pass  # wire-byte spy is reporting-only; timing rows already gated
+    return extra, invariants

@@ -146,6 +146,10 @@ class RunConfig:
     opt_state_dtype: str = "float32"  # float32 | bfloat16 (deepseek memory plan)
     comm_backend: str = "gspmd"      # gspmd | jmpi | hostbridge
     grad_compression_bits: int = 0   # 0 = off, 8 or 16
+    # Compressed/bucketed gradient sync (repro.distributed.overlap):
+    grad_compression: str = ""       # "" | int8_ef | topk_ef (registry lowering)
+    grad_buckets: int = 1            # gradient-sync buckets (bucketed path)
+    overlap_grad_sync: bool = False  # issue all bucket iallreduces, one waitall
     # Collective-algorithm registry knobs (repro.core.registry):
     collective_policy: str = ""      # path to a tuner-emitted policy JSON
     collective_algorithm: str = ""   # force the grad-allreduce algorithm

@@ -105,7 +105,9 @@ from repro.core.collectives import (Operator, allgather, allreduce, alltoall,
 from repro.core.comm import (Communicator, get_backend, resolve, set_backend,
                              set_world, spmd, world)
 from repro.core.compression import (CompressionState, compressed_allreduce,
-                                    init_state, wire_bytes_per_rank)
+                                    compressed_reduce_scatter,
+                                    icompressed_allreduce, init_state,
+                                    wire_bytes_per_rank)
 from repro.core import datatypes
 from repro.core.datatypes import (Datatype, contiguous, face, indexed,
                                   pytree, slots, subarray, vector)
@@ -186,7 +188,8 @@ __all__ = [
     "face", "slots", "pytree",
     "sendrecv", "send", "recv", "isend", "irecv",
     "isendrecv", "wait", "waitall", "waitany", "test", "testall", "testany",
-    "ring_allreduce", "ring_allgather", "compressed_allreduce", "init_state",
+    "ring_allreduce", "ring_allgather", "compressed_allreduce",
+    "icompressed_allreduce", "compressed_reduce_scatter", "init_state",
     "wire_bytes_per_rank", "spmd", "world", "set_world", "resolve",
     "set_backend", "get_backend",
     "ambient", "new_token", "reset_ambient", "tie",

@@ -1,28 +1,52 @@
 """Gradient compression for data-parallel allreduce (beyond-paper feature).
 
-Two wire-honest modes:
+Three wire-honest formats, the stateful two registered as first-class
+collective lowerings (``int8_ef``, ``topk_ef``) next to the stateless
+``bf16_wire`` entry:
 
-* ``bits=16`` — bf16 payload through native ``psum`` (XLA keeps the wire in
-  bf16): 2× fewer collective bytes than fp32.
-* ``bits=8``  — int8 wire format via the two-phase schedule
+* ``bf16_wire`` — bf16 payload through native ``psum`` (XLA keeps the wire
+  in bf16): 2× fewer collective bytes than fp32.  Stateless registry entry.
+* ``int8_ef``  — int8 wire format via the two-phase schedule
   ``all_to_all(int8) → local int32 accumulate → requantize → all_gather(int8)``.
   Per-rank wire bytes ≈ 2·|g|·1B versus ≈ 2·(n−1)/n·|g|·4B for an fp32 ring
   allreduce: a 4× reduction.  (A plain ``psum(int8→int32)`` would *not* be
   compressed — XLA moves int32 on the wire — which is why the schedule is
   explicit here.)
+* ``topk_ef``  — top-k sparsification: each rank keeps the k = round(frac·|g|)
+  largest-magnitude entries and allgathers (int32 index, fp32 value) pairs;
+  everything it dropped feeds the residual.  Wire bytes scale with k, not
+  |g| — the win grows as ``frac`` shrinks.
 
 Error feedback (Seide et al. 2014; Karimireddy et al. 2019) is applied to the
-send-side quantization: the residual e_t is added to g_{t+1} before the next
+send-side compression: the residual e_t is added to g_{t+1} before the next
 compression, keeping the accumulated transmitted gradient unbiased up to a
-vanishing tail.  The second-stage (post-sum) quantization error is not fed
-back (it is shared across ranks and one quantization level of an n-fold sum);
-this matches common practice and is covered by the convergence test in
+vanishing tail.  The second-stage (post-sum) quantization error of the int8
+schedule is not fed back (it is shared across ranks and one quantization
+level of an n-fold sum); this matches common practice and is covered by the
+oracle suite in ``tests/cases_compression.py`` and the convergence test in
 ``tests/test_compression.py``.
 
-The two-phase int8 schedule's inner collectives (alltoall, allgather) go
-through the collective-algorithm registry like every other jmpi op, so a
-tuned policy table applies to the compressed path too; the stateless
-``bf16_wire`` allreduce below is itself a registry entry.
+State threading through the registry
+------------------------------------
+A registry kernel's contract is ``fn(val, tok, comm, **kw) -> (out, tok)``
+with ``out`` a plain array (the dispatch's ``advance(tok, out)`` folds one
+scalar of it into the ordering token).  The EF lowerings extend the contract
+*conditionally*: called with ``state=None`` (the stateless route — explicit
+``algorithm="int8_ef"`` on a plain ``jmpi.allreduce``, or a policy-table
+rule) they return the reduced array like any other kernel; called with a
+:class:`CompressionState` they return ``(reduced, new_state)``, which the
+plain ``_issue`` dispatch cannot thread — so the stateful front-ends below
+(:func:`icompressed_allreduce`, :func:`compressed_allreduce`,
+:func:`compressed_reduce_scatter`) run the select/tie/fn/advance sequence
+themselves and hand back ``(Request, new_state)``.  Persistent plans freeze
+kwargs in their cache signature, so traced state can never ride a plan —
+stateful compression is Request-based by construction.
+
+The emulated kernels' inner collectives (alltoall, allgather) go through the
+registry like every other jmpi op, so a tuned policy table applies to the
+compressed path too; the multiproc backend registers native ``direct``
+twins in ``repro.transport.endpoint`` that put the small payloads on the
+actual wire (int8 frames, index+value frames).
 """
 
 from __future__ import annotations
@@ -34,17 +58,34 @@ import jax.numpy as jnp
 
 from repro.core import collectives
 from repro.core import registry
+from repro.core import token as token_lib
 from repro.core.comm import Communicator, resolve
+from repro.core.p2p import Request, wait
+
+#: Default keep fraction for the ``topk_ef`` lowering (k = frac·numel).
+DEFAULT_TOPK_FRAC = 0.125
+
+#: Lowerings that thread a CompressionState (the stateful front-ends below
+#: accept exactly these names).
+EF_ALGORITHMS = ("int8_ef", "topk_ef")
 
 
 # ---------------------------------------------------------------------------
 # Registry entry: stateless half-width wire for bandwidth-bound float sums.
-# (The stateful error-feedback path below remains the training-grade API;
+# (The stateful error-feedback lowerings below are the training-grade path;
 # this entry makes "halve the allreduce wire" a policy-table choice.)
 # ---------------------------------------------------------------------------
 
 def _bf16_supports(val, comm, *, op=None, **kw):
-    return jnp.issubdtype(val.dtype, jnp.floating)
+    """Float payloads only.  Integer and bool payloads must never be
+    silently rounded through a bfloat16 wire, so they are rejected here —
+    an explicit ``algorithm="bf16_wire"`` on such a payload raises the
+    registry's uniform trace-time ValueError (message pinned in
+    ``tests/test_registry.py``); policy-routed calls fall back."""
+    dtype = jnp.dtype(val.dtype)
+    if dtype == jnp.bool_ or jnp.issubdtype(dtype, jnp.integer):
+        return False
+    return jnp.issubdtype(dtype, jnp.floating)
 
 
 @registry.register("allreduce", "bf16_wire", supports=_bf16_supports,
@@ -63,7 +104,7 @@ class CompressionState(NamedTuple):
 
 
 def init_state(like: jax.Array) -> CompressionState:
-    """Fresh error-feedback state for :func:`compressed_allreduce`.
+    """Fresh error-feedback state for the compressed lowerings.
 
     Args:
         like: array whose shape the residual accumulator mirrors.
@@ -80,26 +121,33 @@ def _quantize(x32: jax.Array, qmax: float, comm: Communicator):
     return q, scale
 
 
-def compressed_allreduce(g: jax.Array, state: CompressionState, *,
-                         comm: Communicator | None = None,
-                         bits: int = 8, mean: bool = True):
-    """(status, reduced, new_state) — mean/sum-allreduce with compressed wire."""
-    comm = resolve(comm)
+# ---------------------------------------------------------------------------
+# Stateful EF lowerings (emulated backend).  Shared ``supports`` predicates
+# are also used by the multiproc ``direct`` twins in transport/endpoint.py.
+# ---------------------------------------------------------------------------
+
+def _ef_supports(val, comm, **kw):
+    """EF-lowering payload eligibility: real floating payloads only —
+    quantizing an integer/bool payload would silently corrupt it, so the
+    registry must reject (explicit name → uniform trace-time ValueError)."""
+    dtype = jnp.dtype(val.dtype)
+    if dtype == jnp.bool_ or jnp.issubdtype(dtype, jnp.integer):
+        return False
+    return jnp.issubdtype(dtype, jnp.floating)
+
+
+def _ef_rs_supports(val, comm, **kw):
+    """reduce_scatter additionally needs axis 0 divisible into rank chunks."""
+    return (_ef_supports(val, comm) and val.ndim >= 1
+            and val.shape[0] % comm.size() == 0)
+
+
+def _int8_ef_exchange(g32, tok, comm):
+    """Two-phase int8 wire schedule on the (EF-corrected) fp32 gradient:
+    returns ``(summed_f32, new_error, tok)`` with explicit token threading
+    so the kernel never touches the ambient chain of the outer dispatch."""
     n = comm.size()
-    g32 = g.astype(jnp.float32) + state.error
-
-    if bits == 16:
-        sent = g32.astype(jnp.bfloat16)
-        status, summed = collectives.allreduce(sent, comm=comm)
-        summed = summed.astype(jnp.float32)
-        new_error = g32 - sent.astype(jnp.float32)  # send-side rounding residual
-        out = summed / n if mean else summed
-        return status, out.astype(g.dtype), CompressionState(error=new_error)
-
-    if bits != 8:
-        raise ValueError(f"bits must be 8 or 16, got {bits}")
     qmax = 127.0
-
     q, scale = _quantize(g32, qmax, comm)
     new_error = g32 - q.astype(jnp.float32) * scale
 
@@ -110,28 +158,225 @@ def compressed_allreduce(g: jax.Array, state: CompressionState, *,
     seg_len = flat.shape[0] // n
 
     # Phase 1 (int8 wire): every rank receives its segment from all ranks.
-    status, segs = collectives.alltoall(flat.reshape(n, seg_len), comm=comm)
-    acc = segs.astype(jnp.int32).sum(axis=0).astype(jnp.float32) * scale  # (seg_len,)
+    _, segs, tok = collectives.alltoall(flat.reshape(n, seg_len), comm=comm,
+                                        token=tok)
+    acc = segs.astype(jnp.int32).sum(axis=0).astype(jnp.float32) * scale
 
     # Requantize the reduced segment for the gather phase (int8 wire again).
     q2, scale2 = _quantize(acc, qmax, comm)
 
     # Phase 2 (int8 wire): collect every rank's reduced segment.
-    status, gathered = collectives.allgather(q2, comm=comm)
+    _, gathered, tok = collectives.allgather(q2, comm=comm, token=tok)
     summed = gathered.astype(jnp.float32) * scale2
     if pad:
         summed = summed[:-pad]
-    out = summed.reshape(g.shape)
-    if mean:
-        out = out / n
-    return status, out.astype(g.dtype), CompressionState(error=new_error)
+    return summed.reshape(g32.shape), new_error, tok
+
+
+def _topk_ef_exchange(g32, tok, comm, frac):
+    """Top-k sparsified sum: allgather (int32 index, fp32 value) pairs and
+    scatter-add; the dropped entries become the residual.  ``lax.top_k``
+    breaks magnitude ties toward the lower index, so the selection is
+    deterministic.  Returns ``(summed_f32, new_error, tok)``."""
+    flat = g32.reshape(-1)
+    k = max(1, int(round(frac * flat.shape[0])))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    idx = idx.astype(jnp.int32)
+    vals = jnp.take(flat, idx)
+    new_error = flat.at[idx].set(0.0).reshape(g32.shape)
+    _, all_idx, tok = collectives.allgather(idx, comm=comm, token=tok)
+    _, all_vals, tok = collectives.allgather(vals, comm=comm, token=tok)
+    summed = jnp.zeros_like(flat).at[all_idx].add(all_vals)
+    return summed.reshape(g32.shape), new_error, tok
+
+
+def _ef_in(val, state):
+    """fp32 working gradient with the EF residual folded in."""
+    g32 = val.astype(jnp.float32)
+    if state is not None:
+        g32 = g32 + state.error.reshape(g32.shape).astype(jnp.float32)
+    return g32
+
+
+def _ef_out(val, out32, new_error, tok, *, state, mean, n):
+    """Package a kernel result per the conditional contract: plain array
+    when stateless, ``(reduced, CompressionState)`` when state was given."""
+    out = (out32 / n if mean else out32).astype(val.dtype)
+    if state is None:
+        return out, tok
+    return (out, CompressionState(error=new_error)), tok
+
+
+@registry.register("allreduce", "int8_ef", supports=_ef_supports,
+                   operators=(collectives.Operator.SUM,))
+def _int8_ef_allreduce(val, tok, comm, *, op=None, state=None, mean=False,
+                       **_kw):
+    """SUM-allreduce over an int8 wire (two-phase schedule) with optional
+    error-feedback state; ``mean=True`` divides by the group size after the
+    exact int32 accumulation."""
+    g32 = _ef_in(val, state)
+    summed, new_error, tok = _int8_ef_exchange(g32, tok, comm)
+    return _ef_out(val, summed, new_error, tok, state=state, mean=mean,
+                   n=comm.size())
+
+
+@registry.register("allreduce", "topk_ef", supports=_ef_supports,
+                   operators=(collectives.Operator.SUM,))
+def _topk_ef_allreduce(val, tok, comm, *, op=None, state=None, mean=False,
+                       frac=DEFAULT_TOPK_FRAC, **_kw):
+    """SUM-allreduce carrying only the top-k entries per rank as
+    (index, value) pairs; the rest feeds the error-feedback residual."""
+    g32 = _ef_in(val, state)
+    summed, new_error, tok = _topk_ef_exchange(g32, tok, comm, frac)
+    return _ef_out(val, summed, new_error, tok, state=state, mean=mean,
+                   n=comm.size())
+
+
+@registry.register("reduce_scatter", "int8_ef", supports=_ef_rs_supports,
+                   operators=(collectives.Operator.SUM,))
+def _int8_ef_reduce_scatter(val, tok, comm, *, op=None, state=None,
+                            mean=False, **_kw):
+    """reduce_scatter over the int8 wire: full two-phase sum, then this
+    rank's axis-0 chunk.  The residual stays full-shape (it corrects the
+    *input* gradient, which every rank holds whole)."""
+    n = comm.size()
+    g32 = _ef_in(val, state)
+    summed, new_error, tok = _int8_ef_exchange(g32, tok, comm)
+    chunk = val.shape[0] // n
+    piece = jax.lax.dynamic_slice_in_dim(summed, comm.rank() * chunk, chunk,
+                                         axis=0)
+    return _ef_out(val, piece, new_error, tok, state=state, mean=mean, n=n)
+
+
+@registry.register("reduce_scatter", "topk_ef", supports=_ef_rs_supports,
+                   operators=(collectives.Operator.SUM,))
+def _topk_ef_reduce_scatter(val, tok, comm, *, op=None, state=None,
+                            mean=False, frac=DEFAULT_TOPK_FRAC, **_kw):
+    """reduce_scatter carrying top-k (index, value) pairs: sparse sum, then
+    this rank's axis-0 chunk; residual full-shape as for int8."""
+    n = comm.size()
+    g32 = _ef_in(val, state)
+    summed, new_error, tok = _topk_ef_exchange(g32, tok, comm, frac)
+    chunk = val.shape[0] // n
+    piece = jax.lax.dynamic_slice_in_dim(summed, comm.rank() * chunk, chunk,
+                                         axis=0)
+    return _ef_out(val, piece, new_error, tok, state=state, mean=mean, n=n)
+
+
+# ---------------------------------------------------------------------------
+# Stateful front-ends: the select/tie/fn/advance sequence of the shared
+# ``_issue`` dispatch, run by hand because the stateful kernel result is a
+# (reduced, CompressionState) pair the plain dispatch cannot thread.
+# ---------------------------------------------------------------------------
+
+def _issue_compressed(op_name, g, state, *, comm, algorithm, mean, tag,
+                      **algo_kw):
+    if algorithm not in EF_ALGORITHMS:
+        raise ValueError(
+            f"stateful compression requires one of {EF_ALGORITHMS}, got "
+            f"{algorithm!r} (stateless lowerings ride the plain collective "
+            f"calls via algorithm=)")
+    comm = resolve(comm)
+    val = jnp.asarray(g)
+    kw = dict(op=collectives.Operator.SUM, state=state, mean=mean, **algo_kw)
+    algo = registry.select(op_name, val, comm, algorithm=algorithm, **kw)
+    tok = token_lib.ambient().get()
+    tok, val = token_lib.tie(tok, val)
+    (out, new_state), tok = algo.fn(val, tok, comm, **kw)
+    new_tok = token_lib.advance(tok, out)
+    token_lib.ambient().set(new_tok)
+    return Request(value=out, token=new_tok, tag=tag), new_state
+
+
+def icompressed_allreduce(g, state: CompressionState, *,
+                          comm: Communicator | None = None,
+                          algorithm: str = "int8_ef", mean: bool = True,
+                          tag: int = 0, frac: float = DEFAULT_TOPK_FRAC):
+    """Nonblocking compressed allreduce: ``(Request, new_state)``.
+
+    The EF residual depends only on this rank's local compression, so
+    ``new_state`` is available at issue time; the reduced value completes
+    at ``wait``/``waitall`` like any other Request.  This is what lets
+    bucketed gradient sync put every bucket in flight before a single
+    ``waitall`` ahead of the optimizer (``distributed.overlap``).
+
+    Args:
+        g: local gradient (any float dtype/shape).
+        state: :class:`CompressionState` threaded across steps.
+        algorithm: one of :data:`EF_ALGORITHMS`.
+        mean: divide the sum by the group size.
+        frac: keep fraction for ``topk_ef`` (ignored by ``int8_ef``).
+    """
+    algo_kw = {"frac": frac} if algorithm == "topk_ef" else {}
+    return _issue_compressed("allreduce", g, state, comm=comm,
+                             algorithm=algorithm, mean=mean, tag=tag,
+                             **algo_kw)
+
+
+def compressed_allreduce(g: jax.Array, state: CompressionState, *,
+                         comm: Communicator | None = None,
+                         bits: int = 8, mean: bool = True,
+                         algorithm: str | None = None,
+                         frac: float = DEFAULT_TOPK_FRAC):
+    """(status, reduced, new_state) — mean/sum-allreduce with compressed wire.
+
+    ``algorithm`` (preferred) names a registered EF lowering directly;
+    ``bits`` keeps the historical selector: 8 → ``int8_ef`` (now routed
+    through the registry), 16 → the inline bf16 send-side-EF path.
+    """
+    comm = resolve(comm)
+    n = comm.size()
+
+    if algorithm is None:
+        if bits == 16:
+            g32 = g.astype(jnp.float32) + state.error
+            sent = g32.astype(jnp.bfloat16)
+            status, summed = collectives.allreduce(sent, comm=comm)
+            summed = summed.astype(jnp.float32)
+            new_error = g32 - sent.astype(jnp.float32)  # send-side residual
+            out = summed / n if mean else summed
+            return status, out.astype(g.dtype), CompressionState(error=new_error)
+        if bits != 8:
+            raise ValueError(f"bits must be 8 or 16, got {bits}")
+        algorithm = "int8_ef"
+
+    req, new_state = icompressed_allreduce(g, state, comm=comm,
+                                           algorithm=algorithm, mean=mean,
+                                           frac=frac)
+    status, out = wait(req)
+    return status, out, new_state
+
+
+def compressed_reduce_scatter(g: jax.Array, state: CompressionState, *,
+                              comm: Communicator | None = None,
+                              algorithm: str = "int8_ef", mean: bool = True,
+                              frac: float = DEFAULT_TOPK_FRAC):
+    """(status, chunk, new_state) — reduce_scatter over a compressed wire:
+    this rank's axis-0 chunk of the (mean-)reduced gradient, with the EF
+    residual threaded exactly as in :func:`compressed_allreduce`."""
+    algo_kw = {"frac": frac} if algorithm == "topk_ef" else {}
+    req, new_state = _issue_compressed("reduce_scatter", g, state, comm=comm,
+                                       algorithm=algorithm, mean=mean, tag=0,
+                                       **algo_kw)
+    status, out = wait(req)
+    return status, out, new_state
 
 
 def wire_bytes_per_rank(numel: int, n: int, bits: int = 8,
-                        baseline_dtype=jnp.float32) -> tuple[float, float]:
-    """(compressed, fp32-ring-psum) wire bytes per rank — used by §Perf math."""
+                        baseline_dtype=jnp.float32,
+                        topk_frac: float | None = None) -> tuple[float, float]:
+    """(compressed, fp32-ring-psum) wire bytes per rank — used by §Perf math.
+
+    ``topk_frac`` switches the compressed model to the ``topk_ef`` lowering:
+    each rank allgathers k = max(1, round(frac·numel)) (int32 index, fp32
+    value) pairs — the index bytes count toward the wire, so top-k only wins
+    below frac ≈ base/(8·numel) of the dense payload.
+    """
     base = 2 * (n - 1) / n * numel * jnp.dtype(baseline_dtype).itemsize
-    if bits == 16:
+    if topk_frac is not None:
+        k = max(1, int(round(topk_frac * numel)))
+        comp = (n - 1) * k * (4 + 4)  # ring allgather of (idx i32, val f32)
+    elif bits == 16:
         comp = 2 * (n - 1) / n * numel * 2
     else:
         comp = 2 * numel * 1

@@ -1,4 +1,6 @@
-"""Collective matmul: ring allgather fused with partial matmuls (overlap).
+"""Overlapped communication schedules: the ring collective matmuls, and the
+bucketed gradient sync that lifts the same issue-early/complete-late pattern
+to the data-parallel gradient path (:func:`bucketed_grad_sync`).
 
 The classic TPU optimization for tensor-parallel layers whose input is
 sharded on the contraction-adjacent dim: instead of ``all_gather(x) @ w``
@@ -107,3 +109,126 @@ def matmul_reduce_scatter(x_full, w_shard, comm: jmpi.Communicator):
     partial = (x_full @ w_shard).astype(x_full.dtype)
     _, out = jmpi.wait(plan.start(partial))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Bucketed gradient sync — the overlap pattern lifted to the gradient path.
+# ---------------------------------------------------------------------------
+
+def _bucket_spans(leaves, buckets: int) -> list[tuple[int, int]]:
+    """Contiguous [lo, hi) leaf spans, greedily balanced by element count.
+
+    Deterministic (pure function of the static leaf shapes), so every rank
+    and every re-trace carves identical buckets — a requirement for the
+    collective payloads to match across the group.
+    """
+    import numpy as np
+    buckets = max(1, min(buckets, len(leaves)))
+    sizes = [int(np.prod(l.shape, dtype=int)) for l in leaves]
+    total = sum(sizes)
+    target = total / buckets
+    spans, lo, acc = [], 0, 0
+    for i, s in enumerate(sizes):
+        acc += s
+        # close the bucket once it reaches its share, keeping enough leaves
+        # behind to give every remaining bucket at least one
+        if (acc >= target * (len(spans) + 1) or
+                len(leaves) - (i + 1) <= buckets - len(spans) - 1) \
+                and len(spans) < buckets - 1:
+            spans.append((lo, i + 1))
+            lo = i + 1
+    spans.append((lo, len(leaves)))
+    return [s for s in spans if s[0] < s[1]]
+
+
+def bucketed_grad_sync(grads, comp, *, comm: jmpi.Communicator,
+                       algorithm: str = "", buckets: int = 1,
+                       overlap: bool = False, mean: bool = True,
+                       plan_algorithm: str | None = None,
+                       trace_log: list | None = None):
+    """Data-parallel gradient sync over contiguous leaf buckets, optionally
+    compressed and overlap-issued.  Returns ``(reduced_tree, new_comp)``.
+
+    Each bucket's leaves pack into one fp32 wire vector via a ``jmpi.pytree``
+    derived datatype (NCCL-style bucketing as a datatype).  ``algorithm``:
+
+    * ``""`` — fp32 buckets through persistent allreduce plans (the policy
+      table picks the lowering per bucket size, or ``plan_algorithm``
+      forces one); ``comp`` passes through.
+    * ``"int8_ef"`` / ``"topk_ef"`` — the stateful compressed lowerings;
+      ``comp`` must be a tree of :class:`jmpi.CompressionState` congruent
+      with ``grads`` (``jax.tree.map(jmpi.init_state, params)``); per-bucket
+      residual vectors ride their own fp32 pytree datatype.
+
+    ``overlap=True`` issues every bucket's nonblocking allreduce first and
+    completes them with ONE ``jmpi.waitall`` barrier — the Request model's
+    issue-early/complete-late window, during which XLA's latency-hiding
+    scheduler overlaps the remaining backward/optimizer-prep compute with
+    the in-flight collectives.  ``overlap=False`` waits on each bucket
+    before issuing the next.  Both orders chain the same collectives over
+    the same payloads, so results are bitwise identical — pinned by the
+    overlap-ordering case in ``tests/cases_compression.py``.
+
+    ``trace_log``: optional Python list capturing trace-time scheduling
+    events — ``("issue", b)``, ``("wait", b)``, ``("waitall",)`` — so tests
+    can pin that every issue precedes the single waitall.
+    """
+    from repro.core.compression import EF_ALGORITHMS
+
+    compressed = bool(algorithm)
+    if compressed and algorithm not in EF_ALGORITHMS:
+        raise ValueError(f"unknown gradient compression {algorithm!r}; "
+                         f"expected one of {EF_ALGORITHMS} (or \"\" for fp32)")
+
+    leaves, tdef = jax.tree.flatten(grads)
+    spans = _bucket_spans(leaves, buckets)
+    n = comm.size()
+    out_leaves: list = [None] * len(leaves)
+    if compressed:
+        cstates = tdef.flatten_up_to(comp)
+        new_cstates = list(cstates)
+
+    pending = []  # (span, grad_dt, err_dt, Request)
+    for b, (lo, hi) in enumerate(spans):
+        sub = leaves[lo:hi]
+        dt = jmpi.pytree(sub, wire_dtype=jnp.float32)
+        vec = dt.pack(sub)
+        if trace_log is not None:
+            trace_log.append(("issue", b))
+        if compressed:
+            errs = [cs.error for cs in cstates[lo:hi]]
+            edt = jmpi.pytree(errs, wire_dtype=jnp.float32)
+            req, new_state = jmpi.icompressed_allreduce(
+                vec, jmpi.CompressionState(error=edt.pack(errs)),
+                comm=comm, algorithm=algorithm, mean=mean)
+            # The residual depends only on the local quantization, so it is
+            # available at issue time — thread it immediately.
+            for i, ne in zip(range(lo, hi), edt.unpack(new_state.error)):
+                new_cstates[i] = jmpi.CompressionState(error=ne)
+        else:
+            plan = comm.allreduce_init(
+                jax.ShapeDtypeStruct(vec.shape, vec.dtype),
+                algorithm=plan_algorithm)
+            req = plan.start(vec)
+        if overlap:
+            pending.append(((lo, hi), dt, req))
+        else:
+            if trace_log is not None:
+                trace_log.append(("wait", b))
+            _, rvec = jmpi.wait(req)
+            if not compressed and mean:
+                rvec = rvec / n
+            out_leaves[lo:hi] = dt.unpack(rvec)
+
+    if overlap:
+        if trace_log is not None:
+            trace_log.append(("waitall",))
+        _, rvecs = jmpi.waitall([req for _, _, req in pending])
+        for ((lo, hi), dt, _), rvec in zip(pending, rvecs):
+            if not compressed and mean:
+                rvec = rvec / n
+            out_leaves[lo:hi] = dt.unpack(rvec)
+
+    reduced = jax.tree.unflatten(tdef, out_leaves)
+    new_comp = jax.tree.unflatten(tdef, new_cstates) if compressed else comp
+    return reduced, new_comp

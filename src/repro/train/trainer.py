@@ -246,7 +246,16 @@ def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
     policy table before tracing; ``run_cfg.collective_algorithm`` forces a
     specific algorithm for the gradient allreduce (bucketed → one big
     payload; per-leaf → each leaf routed by its own size).
+
+    Compressed/overlapped sync (``repro.distributed.overlap``):
+    ``run_cfg.grad_compression`` ("int8_ef" | "topk_ef") rides the stateful
+    EF registry lowerings; ``run_cfg.grad_buckets`` splits the gradient tree
+    into that many wire vectors; ``run_cfg.overlap_grad_sync`` issues every
+    bucket's nonblocking allreduce before one ``waitall`` ahead of the
+    optimizer, opening the overlap window for XLA's scheduler.
     """
+    from repro.distributed import overlap as overlap_lib
+
     axes = tuple(mesh.axis_names)
     bits = run_cfg.grad_compression_bits
     # Policy is applied around the step's trace only (see local_step), so
@@ -285,22 +294,35 @@ def build_jmpi_train_step(cfg: ModelConfig, run_cfg: RunConfig, mesh,
                                        algorithm=grad_algo)
 
         if bucket:
-            # ONE pytree datatype for the whole gradient tree (NCCL-style
-            # bucketing as a derived datatype): dt.pack is the fp32 wire
-            # vector, dt.unpack restores every leaf's shape and dtype.
-            grad_dt = jmpi.pytree(grads, wire_dtype=jnp.float32)
-            vec = grad_dt.pack(grads)
-            if bits:
-                comp_dt = jmpi.pytree(comp_state, wire_dtype=jnp.float32)
-                cvec = comp_dt.pack(comp_state)
-                _, rvec, nc = jmpi.compressed_allreduce(
-                    vec, jmpi.CompressionState(error=cvec), comm=comm,
-                    bits=bits, mean=True)
-                comp_state = comp_dt.unpack(nc.error)
+            if run_cfg.grad_compression or run_cfg.grad_buckets > 1 \
+                    or run_cfg.overlap_grad_sync:
+                # Multi-bucket / compressed / overlapped path: one wire
+                # vector per bucket, stateful EF lowerings when compressed,
+                # issue-all + waitall when overlapped.
+                grads, comp_state = overlap_lib.bucketed_grad_sync(
+                    grads, comp_state, comm=comm,
+                    algorithm=run_cfg.grad_compression,
+                    buckets=max(1, run_cfg.grad_buckets),
+                    overlap=run_cfg.overlap_grad_sync, mean=True,
+                    plan_algorithm=grad_algo)
             else:
-                _, rvec = jmpi.wait(_grad_plan(vec).start(vec))
-                rvec = rvec / n
-            grads = grad_dt.unpack(rvec)
+                # ONE pytree datatype for the whole gradient tree (NCCL-
+                # style bucketing as a derived datatype): dt.pack is the
+                # fp32 wire vector, dt.unpack restores every leaf's shape
+                # and dtype.
+                grad_dt = jmpi.pytree(grads, wire_dtype=jnp.float32)
+                vec = grad_dt.pack(grads)
+                if bits:
+                    comp_dt = jmpi.pytree(comp_state, wire_dtype=jnp.float32)
+                    cvec = comp_dt.pack(comp_state)
+                    _, rvec, nc = jmpi.compressed_allreduce(
+                        vec, jmpi.CompressionState(error=cvec), comm=comm,
+                        bits=bits, mean=True)
+                    comp_state = comp_dt.unpack(nc.error)
+                else:
+                    _, rvec = jmpi.wait(_grad_plan(vec).start(vec))
+                    rvec = rvec / n
+                grads = grad_dt.unpack(rvec)
         else:
             flat, tdef = jax.tree.flatten(grads)
             if bits:

@@ -136,17 +136,37 @@ def _bench_worker(comm, args=None) -> None:
     Reads one JSON command per stdin line (the launcher writes each
     command to every rank, so all ranks execute the same schedule)::
 
-        {"op": "pingpong", "size": <bytes>, "inner": <iters>}
-        {"op": "window",   "size": <bytes>, "window": <w>, "inner": <iters>}
+        {"op": "pingpong",   "size": <bytes>, "inner": <iters>}
+        {"op": "window",     "size": <bytes>, "window": <w>, "inner": <iters>}
+        {"op": "gradsync",   "total": <floats>, "algorithm": ""|"int8_ef"|
+                             "topk_ef", "buckets": <b>, "overlap": <bool>,
+                             "inner": <iters>}
+        {"op": "wire_bytes", "total": <floats>}
         {"op": "exit"}
 
-    Rank 0 replies ``DONE {"secs": ...}`` per command on stdout.
+    Rank 0 replies ``DONE {"secs": ...}`` per command on stdout
+    (``wire_bytes`` replies the per-rank transmitted payload bytes of one
+    fp32 / int8_ef / topk_ef(1/32) allreduce instead — the endpoint spy
+    measuring the compressed frames' literal size, ISSUE 8).
     """
     import jax.numpy as jnp
+    import numpy as np
 
+    import repro.core as jmpi
     from repro.core import p2p, token as token_lib
+    from repro.distributed import overlap as overlap_lib
+
+    def grad_tree(total):
+        # synthetic uneven leaf split of one rank's `total`-float gradient
+        fr = (0.4, 0.2, 0.1, 0.1, 0.08, 0.06, 0.04, 0.02)
+        sizes = [int(total * f) for f in fr]
+        sizes[0] += total - sum(sizes)
+        rng = np.random.default_rng(comm.rank_id)
+        return [jnp.asarray(rng.standard_normal(s), jnp.float32)
+                for s in sizes]
 
     ep = comm.endpoint
+    grads_cache: dict[int, list] = {}
     for line in sys.stdin:
         line = line.strip()
         if not line:
@@ -154,6 +174,46 @@ def _bench_worker(comm, args=None) -> None:
         cmd = json.loads(line)
         if cmd["op"] == "exit":
             return
+        if cmd["op"] == "gradsync":
+            grads = grads_cache.setdefault(int(cmd["total"]),
+                                           grad_tree(int(cmd["total"])))
+            comp = [jmpi.init_state(g) for g in grads]
+            token_lib.reset_ambient()
+            ep.barrier()
+            t0 = time.perf_counter()
+            for _ in range(int(cmd.get("inner", 3))):
+                _, comp = overlap_lib.bucketed_grad_sync(
+                    grads, comp, comm=comm,
+                    algorithm=cmd.get("algorithm", ""),
+                    buckets=int(cmd.get("buckets", 4)),
+                    overlap=bool(cmd.get("overlap", False)), mean=True)
+            secs = time.perf_counter() - t0
+            ep.barrier()
+            if comm.rank_id == 0:
+                print("DONE " + json.dumps({"secs": secs}), flush=True)
+            continue
+        if cmd["op"] == "wire_bytes":
+            g = jnp.asarray(
+                np.random.default_rng(3).standard_normal(int(cmd["total"])),
+                jnp.float32)
+            token_lib.reset_ambient()
+            ep.barrier()
+            out = {}
+            for name, run in (
+                    ("fp32", lambda: jmpi.allreduce(g, comm=comm)),
+                    ("int8", lambda: jmpi.compressed_allreduce(
+                        g, jmpi.init_state(g), comm=comm,
+                        algorithm="int8_ef")),
+                    ("topk", lambda: jmpi.compressed_allreduce(
+                        g, jmpi.init_state(g), comm=comm,
+                        algorithm="topk_ef", frac=1 / 32))):
+                ep.reset_wire_stats()
+                run()
+                out[name] = ep.wire_stats()["data_bytes"]
+            ep.barrier()
+            if comm.rank_id == 0:
+                print("DONE " + json.dumps(out), flush=True)
+            continue
         n_f32 = max(1, int(cmd["size"]) // 4)
         x = jnp.zeros((n_f32,), jnp.float32)
         inner = int(cmd.get("inner", 10))

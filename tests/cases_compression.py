@@ -1,0 +1,373 @@
+"""Error-feedback compression oracle suite (ISSUE 8 satellite 1).
+
+Backend-portable ``case_*`` functions for the stateful compressed-wire
+lowerings (``int8_ef``, ``topk_ef``, ``repro.core.compression``): the
+telescoping-identity oracle, residual-norm boundedness, bitwise
+determinism, integer-payload rejection, bucket-overlap scheduling order,
+and the wire-byte accounting (closed-form on emulated, the endpoint
+``wire_stats()`` spy on multiproc).
+
+Runs under the emulated mesh at any device count (``tests/
+test_compression_multidev.py`` pins n ∈ {1, 2, 8}) AND under real
+multi-process jobs via the parity suite (``tests/test_parity_multiproc.py``
+at {sock, shm} × {2, 4}) — ``N`` is derived from the environment, never
+hardcoded.
+
+The telescoping identity (the EF correctness anchor): with a fixed per-rank
+gradient g_r and e_{r,0} = 0, every lowering satisfies
+
+    sum_t out_t  =  T · sum_r g_r  −  sum_r e_{r,T}   (+ second-stage error)
+
+because each step transmits (g_r + e_{r,t-1}) − e_{r,t} exactly — for
+``topk_ef`` exactly (fp32 values ride the wire), for ``int8_ef`` up to the
+post-sum requantization of the gather phase, which is shared across ranks,
+NOT fed back, and bounded by T·n·amax/254 per element (the derived
+tolerance below).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # match cases_core (parity module)
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+import repro.core as jmpi
+from repro.core import compat
+from repro.core.compression import EF_ALGORITHMS
+
+# Same environment contract as cases_core, but N follows the actual world
+# size on BOTH backends: the launcher's JMPI_NP under multiproc, the
+# emulated device count (--xla_force_host_platform_device_count) otherwise —
+# this module must hold at n ∈ {1, 2, 8}, so nothing may assume n == 8.
+_BACKEND = os.environ.get("JMPI_BACKEND", "emulated")
+N = (int(os.environ["JMPI_NP"]) if _BACKEND == "multiproc"
+     else len(jax.devices()))
+
+
+def mesh1d():
+    return compat.make_mesh((N,), ("ranks",))
+
+
+def spmd_collective(fn, shards):
+    """Run fn(rank_local_block) on every rank; return per-rank results."""
+    if _BACKEND == "multiproc":
+        from repro.transport.testing import run_collective
+        return run_collective(fn, shards)
+    mesh = mesh1d()
+
+    @jmpi.spmd(mesh, in_specs=P("ranks"), out_specs=P("ranks"))
+    def run(x):
+        y = fn(x[0])
+        return y[None]
+
+    glob = jnp.stack(shards)
+    return [np.asarray(run(glob)[i]) for i in range(N)]
+
+
+def rand(shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.asarray(jnp.asarray(rng.standard_normal(shape), dtype=dtype))
+
+
+# ---------------------------------------------------------------------- #
+# (a) telescoping-identity oracle
+# ---------------------------------------------------------------------- #
+
+_ORACLE_T = 3          # EF steps per grid point
+_ORACLE_NUMEL = 64     # divisible by every world size in {1, 2, 4, 8}
+
+
+def _oracle_run(op, algo, dtype, shards):
+    """T compressed steps on a fixed gradient; per rank, return
+    concat(sum of outputs, final residual)."""
+
+    def run(g):
+        comm = jmpi.world()
+        st = jmpi.init_state(g)
+        acc = None
+        for _ in range(_ORACLE_T):
+            if op == "allreduce":
+                status, out, st = jmpi.compressed_allreduce(
+                    g, st, comm=comm, algorithm=algo, mean=False)
+            else:
+                status, out, st = jmpi.compressed_reduce_scatter(
+                    g, st, comm=comm, algorithm=algo, mean=False)
+            assert status == jmpi.SUCCESS
+            out32 = out.astype(jnp.float32).reshape(-1)
+            acc = out32 if acc is None else acc + out32
+        return jnp.concatenate([acc, st.error.astype(jnp.float32).reshape(-1)])
+
+    return spmd_collective(run, shards)
+
+
+def case_ef_telescoping_identity_grid():
+    """sum_t out_t + sum_r e_{r,T} == T·(exact fp32 sum), per lowering ×
+    collective × dtype, within the derived second-stage tolerance."""
+    for algo in EF_ALGORITHMS:
+        for op in ("allreduce", "reduce_scatter"):
+            for dtype in (jnp.float32, jnp.float64):
+                shards = [rand((_ORACLE_NUMEL,), dtype, seed=10 + r)
+                          for r in range(N)]
+                exact = np.sum(np.stack([s.astype(np.float64)
+                                         for s in shards]), axis=0)
+                amax = max(float(np.max(np.abs(s))) for s in shards)
+                got = _oracle_run(op, algo, dtype, shards)
+
+                chunk = (_ORACLE_NUMEL if op == "allreduce"
+                         else _ORACLE_NUMEL // N)
+                errs = np.stack([np.asarray(r)[chunk:] for r in got])
+                err_sum = errs.sum(axis=0)
+                expected = _ORACLE_T * exact - err_sum
+
+                if algo == "int8_ef":
+                    # post-sum requantization: <= amax(acc)/254 per element
+                    # per step, amax(acc) <= n·amax(g+e); factor 2 headroom.
+                    atol = _ORACLE_T * N * amax / 127.0
+                else:
+                    atol = 1e-4 * _ORACLE_T * max(amax, 1.0)  # fp ordering
+
+                for r, res in enumerate(got):
+                    acc = np.asarray(res)[:chunk]
+                    want = (expected if op == "allreduce"
+                            else expected[r * chunk:(r + 1) * chunk])
+                    np.testing.assert_allclose(
+                        acc, want, atol=atol, rtol=0,
+                        err_msg=f"{algo}/{op}/{np.dtype(dtype)} rank {r}")
+
+
+# ---------------------------------------------------------------------- #
+# (b) residual-norm boundedness on a fixed gradient
+# ---------------------------------------------------------------------- #
+
+def _norm_run(algo, steps, shards):
+    def run(g):
+        comm = jmpi.world()
+        st = jmpi.init_state(g)
+        norms = []
+        for _ in range(steps):
+            _, _, st = jmpi.compressed_allreduce(g, st, comm=comm,
+                                                 algorithm=algo, mean=True)
+            norms.append(jnp.linalg.norm(st.error))
+        return jnp.stack(norms)
+    return [np.asarray(r) for r in spmd_collective(run, shards)]
+
+
+def case_ef_residual_norm_bounded():
+    """Residual norms on a fixed gradient stay at/below their initial level.
+
+    Honest form of the "non-increasing" property — the strict per-step
+    statement is FALSE for both lowerings, so this case pins what actually
+    holds (measured in EXPERIMENTS-style sweeps before pinning):
+
+    * ``int8_ef``: e_t is the quantization error of g + e_{t-1}; its norm
+      sits at the quantization floor sqrt(numel)·amax/254 from step 0 and
+      fluctuates ±~25% (independent rounding noise), without trend.  Pinned:
+      floor bound, no-upward-trend, and <= 2% of ||g||.
+    * ``topk_ef``: untransmitted coordinates accumulate t·|g_i| until they
+      cross the top-k threshold and flush, so the norm RISES from ||e_1||
+      toward a plateau (~3.5·||g|| at frac=0.125) — pinned: bounded plateau
+      (<= 5·||g||) and decelerating growth.
+    """
+    shards = [rand((_ORACLE_NUMEL,), jnp.float32, seed=20 + r)
+              for r in range(N)]
+    amax = max(float(np.max(np.abs(s))) for s in shards)
+    gnorm = [float(np.linalg.norm(s)) for s in shards]
+
+    # int8: quantization-floor bound + no upward trend
+    for r, norms in enumerate(_norm_run("int8_ef", 10, shards)):
+        floor = np.sqrt(_ORACLE_NUMEL) * amax * 1.05 / 254.0
+        assert norms.max() <= floor + 1e-6, (r, norms, floor)
+        assert norms.max() <= 0.02 * gnorm[r], (r, norms, gnorm[r])
+        assert norms[5:].mean() <= 1.2 * norms[:5].mean(), (r, norms)
+
+    # topk: bounded plateau + decelerating accumulate-then-flush growth
+    for r, norms in enumerate(_norm_run("topk_ef", 12, shards)):
+        assert norms.max() <= 5.0 * gnorm[r] + 1.0, (r, norms, gnorm[r])
+        early = norms[2] - norms[0]
+        late = norms[11] - norms[9]
+        assert late <= 0.5 * early + 0.05 * gnorm[r], (r, norms)
+
+
+# ---------------------------------------------------------------------- #
+# (c) bitwise determinism
+# ---------------------------------------------------------------------- #
+
+def case_ef_determinism_bitwise():
+    """Two identical compressed runs produce bit-identical outputs AND
+    residuals on every rank, for both lowerings (deterministic top-k
+    tie-break, rank-order combines on the wire backend)."""
+    for algo in EF_ALGORITHMS:
+        shards = [rand((_ORACLE_NUMEL,), jnp.float32, seed=30 + r)
+                  for r in range(N)]
+        a = _oracle_run("allreduce", algo, jnp.float32, shards)
+        b = _oracle_run("allreduce", algo, jnp.float32, shards)
+        for r in range(N):
+            assert np.array_equal(np.asarray(a[r]), np.asarray(b[r])), (
+                f"{algo}: rank {r} differs between identical runs")
+
+
+# ---------------------------------------------------------------------- #
+# trace-time rejection of non-float payloads
+# ---------------------------------------------------------------------- #
+
+def case_compressed_rejects_integer_payloads():
+    """Quantizing an int payload would silently corrupt it: an explicit
+    ``algorithm="int8_ef"/"topk_ef"`` on int32 raises the registry's
+    uniform trace-time ValueError (same message shape as every other
+    lowering mismatch; exact text pinned host-side in test_registry.py)."""
+    src = [np.arange(8, dtype=np.int32) + r for r in range(N)]
+    for algo in EF_ALGORITHMS:
+        def bad(x, algo=algo):
+            _, y = jmpi.allreduce(x, algorithm=algo)
+            return y
+
+        try:
+            spmd_collective(bad, src)
+        except Exception as e:
+            msg = str(e)
+            assert "cannot handle this allreduce call" in msg, msg
+            assert algo in msg, msg
+        else:
+            raise AssertionError(f"{algo} accepted an int32 payload")
+
+    # the stateful front-end rejects unknown lowerings before any traffic
+    z = jnp.zeros((4,), jnp.float32)
+    try:
+        jmpi.icompressed_allreduce(z, jmpi.init_state(z), algorithm="gzip")
+    except ValueError as e:
+        assert "stateful compression requires" in str(e)
+    else:
+        raise AssertionError("unknown algorithm accepted")
+
+
+# ---------------------------------------------------------------------- #
+# bucketed sync: overlap scheduling order + bitwise serial equivalence
+# ---------------------------------------------------------------------- #
+
+_OVL_SHAPES = ((40,), (24,), (8, 2))
+
+
+def _ovl_split(flat):
+    out, o = [], 0
+    for s in _OVL_SHAPES:
+        n = int(np.prod(s))
+        out.append(flat[o:o + n].reshape(s))
+        o += n
+    return out
+
+
+def case_bucketed_overlap_ordering():
+    """``overlap=True`` issues EVERY bucket's iallreduce before the single
+    waitall (the issue-early/complete-late window the trainer hides backward
+    compute in); ``overlap=False`` waits per bucket.  Both schedules chain
+    the same collectives over the same payloads, so their reduced gradients
+    AND residuals are bitwise identical — for fp32 plan buckets and for both
+    compressed lowerings."""
+    from repro.distributed import overlap as overlap_lib
+
+    total = sum(int(np.prod(s)) for s in _OVL_SHAPES)
+    shards = [rand((total,), jnp.float32, seed=40 + r) for r in range(N)]
+
+    for algo in ("",) + EF_ALGORITHMS:
+        logs = {}
+
+        def make(overlap, log):
+            def run(flat):
+                comm = jmpi.world()
+                grads = _ovl_split(flat)
+                comp = [jmpi.init_state(g) for g in grads]
+                red, newc = overlap_lib.bucketed_grad_sync(
+                    grads, comp, comm=comm, algorithm=algo, buckets=2,
+                    overlap=overlap, mean=True, trace_log=log)
+                parts = [r.reshape(-1) for r in red]
+                if algo:
+                    parts += [c.error.reshape(-1) for c in newc]
+                return jnp.concatenate(parts)
+            return run
+
+        logs["serial"], logs["overlap"] = [], []
+        serial = spmd_collective(make(False, logs["serial"]), shards)
+        over = spmd_collective(make(True, logs["overlap"]), shards)
+
+        # scheduling order (captured at trace time / eager execution):
+        # serial interleaves issue/wait; overlap ends with one waitall.
+        n_issue = sum(1 for ev in logs["overlap"] if ev[0] == "issue")
+        assert logs["overlap"][-1] == ("waitall",), logs["overlap"]
+        assert logs["overlap"][:-1] == [("issue", b) for b in range(n_issue)]
+        assert logs["serial"] == [ev for b in range(n_issue)
+                                  for ev in (("issue", b), ("wait", b))]
+
+        for r in range(N):
+            assert np.array_equal(np.asarray(serial[r]), np.asarray(over[r])), \
+                f"algorithm={algo!r}: rank {r} serial != overlap"
+
+
+# ---------------------------------------------------------------------- #
+# wire bytes: measured on multiproc, closed-form on emulated
+# ---------------------------------------------------------------------- #
+
+def case_wire_bytes_compressed():
+    """Compressed frames are literally smaller on the wire.
+
+    Multiproc: bracket collectives with the endpoint's transmit spy
+    (``reset_wire_stats``/``wire_stats``) — int8 payload bytes must be
+    <= 26% of the fp32 direct baseline ((numel+4)/(4·numel) ≈ 25%), top-k
+    at frac=1/32 <= 10% (measured ≈ 6.25%).
+
+    Emulated: no real wire, so pin the closed-form ``wire_bytes_per_rank``
+    model instead — including that top-k counts its int32 INDEX bytes
+    (satellite-4 fix), and that the two-phase int8 model is N-aware (ratio
+    1/2 at n=2, 2/7 at n=8 — the ≈25% figure belongs to the single-phase
+    direct kernel measured above)."""
+    numel = 16384
+    if _BACKEND == "multiproc":
+        from repro.core import comm as comm_lib
+        from repro.core import token as token_lib
+
+        comm = comm_lib.world()
+        ep, n = comm.endpoint, comm.size()
+        g = jnp.asarray(rand((numel,), jnp.float32, seed=3))
+        token_lib.reset_ambient()
+        ep.barrier()
+
+        ep.reset_wire_stats()
+        jmpi.allreduce(g, comm=comm)
+        base = ep.wire_stats()["data_bytes"]
+        assert base == (n - 1) * 4 * numel, (base, n)
+
+        ep.reset_wire_stats()
+        jmpi.compressed_allreduce(g, jmpi.init_state(g), comm=comm,
+                                  algorithm="int8_ef")
+        int8_bytes = ep.wire_stats()["data_bytes"]
+        assert int8_bytes <= 0.26 * base, (int8_bytes, base)
+
+        ep.reset_wire_stats()
+        jmpi.compressed_allreduce(g, jmpi.init_state(g), comm=comm,
+                                  algorithm="topk_ef", frac=1 / 32)
+        topk_bytes = ep.wire_stats()["data_bytes"]
+        assert topk_bytes <= 0.10 * base, (topk_bytes, base)
+    else:
+        comp8, base8 = jmpi.wire_bytes_per_rank(numel, 8)
+        assert comp8 == 2 * numel
+        assert base8 == 2 * (7 / 8) * numel * 4
+        assert comp8 / base8 <= 0.30
+
+        comp16, _ = jmpi.wire_bytes_per_rank(numel, 8, bits=16)
+        assert comp16 == 2 * (7 / 8) * numel * 2
+
+        # topk model: (n−1)·k·(idx 4B + val 4B) vs the RING fp32 baseline,
+        # i.e. ratio = frac·n — the ≈6% figure belongs to the direct-kernel
+        # measurement above, whose fp32 baseline is n/2× the ring's.
+        k = numel // 32
+        compk, _ = jmpi.wire_bytes_per_rank(numel, 8, topk_frac=1 / 32)
+        assert compk == 7 * k * (4 + 4)      # index bytes are counted
+        assert compk / base8 == (1 / 32) * 8
+
+        comp2, base2 = jmpi.wire_bytes_per_rank(numel, 2)
+        assert comp2 / base2 == 0.5          # two-phase model at n=2

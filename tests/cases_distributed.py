@@ -190,3 +190,41 @@ def case_jmpi_trainer_compressed_grads_converge():
         params, opt, comp, loss = step(params, opt, comp, batch)
         losses.append(float(loss))
     assert losses[-1] < losses[0] - 0.5, losses
+
+
+def case_jmpi_trainer_overlap_bitwise():
+    """Backward-overlapped bucketed int8 sync == serial bucketed sync,
+    bitwise (ISSUE 8): both orders chain the same per-bucket collectives
+    over the same payloads, so params, optimizer state, residuals and loss
+    must be identical after several steps — overlap may only move WHEN the
+    waits happen, never what is computed."""
+    from repro.configs import get_tiny
+    from repro.configs.base import RunConfig
+    from repro.launch.specs import synth_batch
+    from repro.models import lm as lm_lib
+    from repro.train import optim
+    from repro.train.trainer import build_jmpi_train_step
+
+    cfg = get_tiny("yi-6b")
+    cfg.dtype = "float32"
+    mesh = compat.make_mesh((N,), ("data",))
+    batch = synth_batch(cfg, batch=8, seq=16, kind="train", seed=0)
+
+    def run(overlap):
+        rc = RunConfig(learning_rate=1e-2, grad_compression="int8_ef",
+                       grad_buckets=4, overlap_grad_sync=overlap)
+        params = lm_lib.init_params(cfg, jax.random.PRNGKey(0))
+        opt = optim.init(params, rc)
+        comp = jax.tree.map(lambda p: jmpi.init_state(p), params)
+        step = build_jmpi_train_step(cfg, rc, mesh, None)
+        loss = None
+        for _ in range(3):
+            params, opt, comp, loss = step(params, opt, comp, batch)
+        return params, comp, float(loss)
+
+    p_ser, c_ser, l_ser = run(False)
+    p_ovl, c_ovl, l_ovl = run(True)
+    assert l_ser == l_ovl, (l_ser, l_ovl)
+    for a, b in zip(jax.tree.leaves((p_ser, c_ser)),
+                    jax.tree.leaves((p_ovl, c_ovl))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

@@ -9,9 +9,14 @@ tag-matching case posts receives from ranks 2 and 3, and the topology
 error case needs the out-of-range probe to be distinguishable from the
 injectivity probe, so both join only at N >= 4.
 
+The compressed-wire lowerings joined the parity set with ISSUE 8: the
+error-feedback oracle suite (``cases_compression``) derives N from the
+environment and its multiproc run is what exercises the native ``direct``
+int8/top-k kernels — including the measured wire-byte reduction.
+
 Excluded on purpose (not N-portable): subcommunicator/multiaxis cases
-(need a 2-D mesh), ring-schedule/compressed cases (emulated-only
-algorithm studies), and cases whose pair schedules hardcode ranks >= 4.
+(need a 2-D mesh), ring-schedule cases (emulated-only algorithm studies),
+and cases whose pair schedules hardcode ranks >= 4.
 """
 
 from __future__ import annotations
@@ -31,6 +36,14 @@ from tests.cases_core import (  # noqa: F401 — re-exported for the case runner
     case_sendrecv_ring_all_dtypes,
     case_view_strided_send_recv,
     case_wtime,
+)
+from tests.cases_compression import (  # noqa: F401
+    case_bucketed_overlap_ordering,
+    case_compressed_rejects_integer_payloads,
+    case_ef_determinism_bitwise,
+    case_ef_residual_norm_bounded,
+    case_ef_telescoping_identity_grid,
+    case_wire_bytes_compressed,
 )
 from tests.cases_datatypes import (  # noqa: F401
     case_err_truncate_three_paths,

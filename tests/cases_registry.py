@@ -60,8 +60,18 @@ def rand(shape, dtype, seed):
     return jnp.asarray(x, dtype=dtype)
 
 
+# topk_ef keeps only the top-k magnitudes per call and banks the rest as
+# error-feedback residual — its stateless output is intentionally NOT a
+# pointwise approximation of the dense reduce, so the exhaustive sweeps
+# skip it; its contract is oracle-pinned by the EF telescoping identity
+# in tests/cases_compression.py.
+SPARSIFYING = ("topk_ef",)
+
+
 def _tol(dtype, algo, op):
-    if dtype == jnp.bfloat16 or algo == "bf16_wire":
+    # int8_ef quantizes to 8 bits against the per-rank amax — same loss
+    # class as the bf16 wire format (error << 0.1·N for randn payloads).
+    if dtype == jnp.bfloat16 or algo in ("bf16_wire", "int8_ef"):
         return dict(rtol=0.1, atol=0.1 * max(1, N))
     if dtype == jnp.int32:
         return dict(rtol=0, atol=0)
@@ -90,6 +100,8 @@ def case_allreduce_all_algorithms_match_oracle():
             deflt = spmd_collective(
                 lambda x, o=op: jmpi.allreduce(x, o)[1], src)
             for algo in registry.algorithms("allreduce"):
+                if algo in SPARSIFYING:
+                    continue
                 try:
                     got = spmd_collective(
                         lambda x, a=algo, o=op: jmpi.allreduce(
@@ -109,7 +121,6 @@ def case_bcast_allgather_rs_alltoall_algorithms_match_oracle():
         src = [rand((N * 2, 3), dt, seed=7 * i + 3) for i in range(N)]
         np_src = [np.asarray(s, np.float64) if dt != jnp.int32
                   else np.asarray(s) for s in src]
-        tol = _tol(dt, "", "sum")
         for algo in registry.algorithms("bcast"):
             got = spmd_collective(
                 lambda x, a=algo: jmpi.bcast(x, root=N - 1, algorithm=a)[1],
@@ -123,13 +134,16 @@ def case_bcast_allgather_rs_alltoall_algorithms_match_oracle():
             _oracle_cmp(got, ref.allgather(np_src), rtol=0, atol=0,
                         err_msg=f"allgather {algo} {dt}")
         for algo in registry.algorithms("reduce_scatter"):
+            if algo in SPARSIFYING:
+                continue
             try:
                 got = spmd_collective(
                     lambda x, a=algo: jmpi.reduce_scatter(
                         x, algorithm=a)[1], src)
             except ValueError:
                 continue
-            _oracle_cmp(got, ref.reduce_scatter(np_src), **tol,
+            _oracle_cmp(got, ref.reduce_scatter(np_src),
+                        **_tol(dt, algo, "sum"),
                         err_msg=f"reduce_scatter {algo} {dt}")
         for algo in registry.algorithms("alltoall"):
             got = spmd_collective(
@@ -141,6 +155,8 @@ def case_bcast_allgather_rs_alltoall_algorithms_match_oracle():
 def case_view_payloads_all_allreduce_algorithms():
     """Non-contiguous (strided) View payloads through every algorithm."""
     for algo in registry.algorithms("allreduce"):
+        if algo in SPARSIFYING:
+            continue
         src = [rand((6, 6), jnp.float32, seed=13 * i + 5) for i in range(N)]
 
         def f(x, a=algo):
@@ -165,7 +181,8 @@ def case_view_payloads_all_allreduce_algorithms():
 def case_property_all_algorithms_match_default():
     given, settings, st = property_testing()
 
-    algos = registry.algorithms("allreduce")
+    algos = [a for a in registry.algorithms("allreduce")
+             if a not in SPARSIFYING]
     ops = [jmpi.Operator.SUM, jmpi.Operator.MIN, jmpi.Operator.MAX]
 
     @settings(max_examples=12, deadline=None)

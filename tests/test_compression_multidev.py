@@ -1,0 +1,26 @@
+"""Pytest wrappers for the error-feedback compression oracle suite at
+world sizes 1, 2 and 8 (ISSUE 8: the cases derive N from the environment,
+so the same bodies also run under real processes via the parity suite)."""
+
+import pytest
+
+from repro.testing import assert_case
+
+pytestmark = pytest.mark.multidev
+
+MODULE = "tests.cases_compression"
+
+CASES = [
+    "case_bucketed_overlap_ordering",
+    "case_compressed_rejects_integer_payloads",
+    "case_ef_determinism_bitwise",
+    "case_ef_residual_norm_bounded",
+    "case_ef_telescoping_identity_grid",
+    "case_wire_bytes_compressed",
+]
+
+
+@pytest.mark.parametrize("n", [1, 2, 8])
+@pytest.mark.parametrize("case", CASES)
+def test_compression_case(case, n):
+    assert_case(MODULE, case, n_devices=n)

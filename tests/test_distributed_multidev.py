@@ -15,6 +15,8 @@ CASES = [
                  marks=pytest.mark.slow),
     pytest.param("case_jmpi_trainer_compressed_grads_converge",
                  marks=pytest.mark.slow),
+    pytest.param("case_jmpi_trainer_overlap_bitwise",
+                 marks=pytest.mark.slow),
 ]
 
 

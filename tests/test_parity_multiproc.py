@@ -23,7 +23,12 @@ CASES = [
     "case_allreduce_operators",
     "case_alltoall_reduce_scatter",
     "case_barrier_and_token_sequencing",
+    "case_bucketed_overlap_ordering",
+    "case_compressed_rejects_integer_payloads",
     "case_disable_jit_debug_mode",
+    "case_ef_determinism_bitwise",
+    "case_ef_residual_norm_bounded",
+    "case_ef_telescoping_identity_grid",
     "case_err_truncate_three_paths",
     "case_listing5_exchange",
     "case_p2p_datatype_payloads",
@@ -34,6 +39,7 @@ CASES = [
     "case_sendrecv_ring_all_dtypes",
     "case_view_strided_send_recv",
     "case_vvariant_requests_and_plans",
+    "case_wire_bytes_compressed",
     "case_vvariant_validation_errors",
     "case_wtime",
 ]

@@ -101,6 +101,60 @@ def test_tuner_build_policy_from_records():
     assert "recursive_doubling" in report and "2.00x" in report
 
 
+class _FakeComm:
+    """select() only reads ``backend`` and ``size()`` on the explicit-name
+    path, so the message pins below run host-side without a mesh."""
+
+    backend = "emulated"
+
+    def size(self):
+        return 8
+
+
+def test_compressed_lowerings_reject_non_float_payloads():
+    """ISSUE 8 satellite pin: ``bf16_wire`` and both EF lowerings refuse
+    integer/bool payloads (silent rounding through a quantized wire would
+    corrupt them) with the registry's uniform trace-time message — exact
+    text pinned here, backend-portable behavior in cases_compression."""
+    comm = _FakeComm()
+    for name in ("bf16_wire", "int8_ef", "topk_ef"):
+        for bad in (jnp.zeros((8,), jnp.int32), jnp.zeros((8,), jnp.bool_)):
+            with pytest.raises(
+                    ValueError,
+                    match=rf"algorithm '{name}' cannot handle this "
+                          rf"allreduce call \(shape=\(8,\), "
+                          rf"dtype={np.dtype(bad.dtype).name}"):
+                registry.select("allreduce", bad, comm, algorithm=name)
+        # float payloads select the named lowering
+        algo = registry.select("allreduce", jnp.zeros((8,), jnp.float32),
+                               comm, algorithm=name,
+                               op=jmpi.Operator.SUM)
+        assert algo.name == name
+
+
+def test_compressed_lowerings_reject_non_sum_operators():
+    """EF quantization only commutes with SUM — MAX/PROD must raise the
+    uniform (algorithm, Operator) error, never silently mis-reduce."""
+    comm = _FakeComm()
+    x = jnp.zeros((8,), jnp.float32)
+    for name in ("int8_ef", "topk_ef"):
+        with pytest.raises(ValueError,
+                           match=rf"algorithm '{name}' for 'allreduce' does "
+                                 rf"not support Operator\.MAX"):
+            registry.select("allreduce", x, comm, algorithm=name,
+                            op=jmpi.Operator.MAX)
+
+
+def test_wire_bytes_model_counts_topk_index_bytes():
+    """Satellite-4 fix: the top-k wire model charges 8 bytes per kept entry
+    (int32 index + fp32 value), with the k >= 1 floor."""
+    comp, base = jmpi.wire_bytes_per_rank(4096, 8, topk_frac=1 / 64)
+    assert comp == 7 * (4096 // 64) * (4 + 4)
+    assert base == 2 * (7 / 8) * 4096 * 4
+    tiny, _ = jmpi.wire_bytes_per_rank(16, 8, topk_frac=0.001)
+    assert tiny == 7 * 1 * (4 + 4)
+
+
 def test_param_sharder_collective_plan():
     from repro.distributed.params import ParamSharder
     from repro.launch.mesh import make_host_mesh
