@@ -52,9 +52,16 @@ class Request:
     recv: Any = None  # receive adapter (View / bound datatype) to scatter into
     used_ambient: bool = True
     status: int = SUCCESS
+    #: Host-synchronous request (persistent-channel plan): the value is
+    #: already materialized when the request is created, so completion
+    #: skips the token tie — there is no in-flight XLA op to order.
+    host: bool = False
 
     def _materialize(self):
-        token, value = token_lib.tie(self.token, self.value)
+        if self.host:
+            token, value = self.token, self.value
+        else:
+            token, value = token_lib.tie(self.token, self.value)
         if self.recv is not None:
             value = self.recv.scatter_into(value)
         return token, value
@@ -180,7 +187,10 @@ def waitall(reqs: Sequence[Request], tag: int = ANY_TAG):
     toks = [t for t, _ in out]
     vals = [v for _, v in out]
     if toks and all(r.used_ambient for r in reqs):
-        token_lib.ambient().set(sum(toks) / len(toks))
+        if all(r.host for r in reqs):
+            token_lib.ambient().set(toks[-1])  # host tokens pass through
+        else:
+            token_lib.ambient().set(sum(toks) / len(toks))
     status = next((r.status for r in reqs if r.status != SUCCESS), SUCCESS)
     return status, vals
 

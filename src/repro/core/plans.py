@@ -98,6 +98,12 @@ class Plan:
         default=None, compare=False, repr=False)
     recv: Any = dataclasses.field(default=None, compare=False, repr=False)
     status: int = SUCCESS
+    #: The issue closure runs synchronously on the host (persistent-channel
+    #: lowering): the transfer is complete when it returns, so start/wait
+    #: skip the token tie/advance jnp ops — there is nothing for XLA to
+    #: order, and those per-call dispatches would dominate the µs-scale
+    #: channel itself.
+    host: bool = dataclasses.field(default=False, compare=False)
 
     def start(self, x=None, *, token=None, tag: int = 0) -> Request:
         """Issue one instance of the planned op (MPI_Start analogue).
@@ -118,7 +124,11 @@ class Plan:
         if self.collective == "barrier":
             val = None
         else:
-            val = _pack(x, self.datatype)
+            if self.host and self.datatype is None \
+                    and not (hasattr(x, "pack") and callable(x.pack)):
+                val = np.asarray(x)  # host path: forces the jnp value, no jnp
+            else:
+                val = _pack(x, self.datatype)
             if tuple(val.shape) != self.shape or \
                     jnp.dtype(val.dtype) != jnp.dtype(self.dtype):
                 raise ValueError(
@@ -127,13 +137,15 @@ class Plan:
                     f"got shape={tuple(val.shape)} "
                     f"dtype={jnp.dtype(val.dtype).name} — build a new plan "
                     f"with *_init for the new signature")
-            tok, val = token_lib.tie(tok, val)
+            if not self.host:
+                tok, val = token_lib.tie(tok, val)
         out, tok = self.issue_fn(val, tok)
-        new_tok = token_lib.advance(tok, out)
+        new_tok = tok if self.host else token_lib.advance(tok, out)
         if not explicit:
             token_lib.ambient().set(new_tok)
         return Request(value=out, token=new_tok, tag=tag, recv=self.recv,
-                       used_ambient=not explicit, status=self.status)
+                       used_ambient=not explicit, status=self.status,
+                       host=self.host)
 
     def describe(self) -> str:
         """One-line human-readable summary (collective, algorithm, frozen
@@ -259,13 +271,23 @@ def collective_init(op_name: str, shape_dtype, *,
 
     def build(algo):
         fn = algo.fn
-
-        def issue(v, t):
-            return fn(v, t, comm, **kw)
+        # Transport-backed comms may bind a persistent-channel issue
+        # closure: fixed (shape, dtype) channels negotiated once, right
+        # here at init time — the MPI-4 persistent-collective intent.
+        # The hook is duck-typed (core never imports transport); None
+        # falls back to re-issuing the frozen kernel.
+        factory = getattr(comm, "persistent_issue_factory", None)
+        issue = factory(op_name, algo.name, tuple(val.shape),
+                        str(jnp.dtype(val.dtype)), dict(kw)) \
+            if factory is not None else None
+        host = issue is not None
+        if issue is None:
+            def issue(v, t):
+                return fn(v, t, comm, **kw)
 
         return Plan(collective=op_name, algorithm=algo.name,
                     shape=tuple(val.shape), dtype=jnp.dtype(val.dtype),
-                    comm=comm, issue_fn=issue)
+                    comm=comm, issue_fn=issue, host=host)
 
     return _cached_selected(sig, algorithm, select, build, backend=bk[0])
 
@@ -622,14 +644,25 @@ def sendrecv_init(shape_dtype, pairs=None, *, perm=None, dest=None,
 
     def build():
         perm_list = [tuple(pr) for pr in p]
+        # Same duck-typed seam as collective_init: a transport-backed
+        # comm negotiates fixed-signature channels with the frozen
+        # pattern's peers once, at init — plan.start then writes payload
+        # straight into channel memory.  The algorithm name records
+        # which path was frozen.
+        factory = getattr(comm, "persistent_sendrecv_factory", None)
+        issue = factory(tuple(val.shape), str(jnp.dtype(val.dtype)),
+                        perm_list) if factory is not None else None
+        algo_name = "channel" if issue is not None else "ppermute"
+        host = issue is not None
+        if issue is None:
+            def issue(v, t):
+                out = comm._ppermute(v, perm_list)
+                return out, t
 
-        def issue(v, t):
-            out = comm._ppermute(v, perm_list)
-            return out, t
-
-        return Plan(collective="sendrecv", algorithm="ppermute",
+        return Plan(collective="sendrecv", algorithm=algo_name,
                     shape=tuple(val.shape), dtype=jnp.dtype(val.dtype),
-                    comm=comm, issue_fn=issue, recv=recv, status=status)
+                    comm=comm, issue_fn=issue, recv=recv, status=status,
+                    host=host)
 
     if recv is not None:
         return build()

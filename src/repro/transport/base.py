@@ -7,10 +7,13 @@ One frame = fixed header + optional JSON meta + raw payload bytes::
     meta    JSON (arrays: {"dtype": name, "shape": [...]}) — may be empty
     data    raw payload (``ndarray.tobytes()`` for arrays, pickle for objects)
 
-``kind`` distinguishes the three frame classes the endpoint multiplexes over
+``kind`` distinguishes the frame classes the endpoint multiplexes over
 one ordered byte stream per directed peer pair: ARRAY (tensor payloads),
 OBJ (pickled python objects — status exchange, object allgather), CTRL
-(empty barrier/handshake probes).  ``epoch`` stamps every frame with the
+(empty barrier/handshake probes), and CHAN (persistent-channel payloads:
+``tag`` carries the negotiated channel id, ``meta_len`` is always zero —
+dtype/shape were frozen at negotiation, so steady-state sends never parse
+or even transmit meta).  ``epoch`` stamps every frame with the
 sender's message epoch so a receiver can lazily discard stragglers from an
 abandoned program region (e.g. a send whose matching wait raised a
 trace-time error) after the case runner bumps the epoch — see
@@ -28,14 +31,57 @@ from __future__ import annotations
 import json
 import pickle
 import struct
+import time
 
 import numpy as np
 
 #: Frame kinds (header field 0).
-KIND_ARRAY, KIND_OBJ, KIND_CTRL = 0, 1, 2
+KIND_ARRAY, KIND_OBJ, KIND_CTRL, KIND_CHAN = 0, 1, 2, 3
 
 HEADER = struct.Struct("<iqqii")
 HEADER_LEN = HEADER.size
+
+
+class Backoff:
+    """Adaptive wait strategy: spin, then yield the GIL, then sleep with
+    exponential escalation.
+
+    Replaces the fixed 200 µs poll the shm ring shipped with: a waiter
+    whose condition flips within a few microseconds (the common case for
+    a peer mid-copy) completes inside the spin phase at nanosecond
+    granularity; a genuinely idle waiter escalates to ``max_sleep`` so it
+    does not burn a core.  ``pause()`` returns True once it has entered
+    the sleeping phase — callers use that to amortize their deadline
+    check off the hot spin loop.
+
+    ``time.sleep(0)`` is used for the yield steps (it reliably releases
+    the GIL; ``os.sched_yield`` may not), which matters here: reader
+    threads and app threads share one interpreter, so a spinning waiter
+    that never yields can starve the very thread it waits on.
+    """
+
+    __slots__ = ("_spin", "_min_sleep", "_max_sleep", "_n", "_sleep")
+
+    def __init__(self, spin: int = 200, min_sleep: float = 1e-6,
+                 max_sleep: float = 1e-4):
+        self._spin, self._min_sleep, self._max_sleep = spin, min_sleep, max_sleep
+        self._n, self._sleep = 0, min_sleep
+
+    def reset(self) -> None:
+        """Re-arm after the awaited condition fired (reuse across waits)."""
+        self._n, self._sleep = 0, self._min_sleep
+
+    def pause(self) -> bool:
+        """One adaptive wait step; True once in the sleeping phase."""
+        self._n += 1
+        if self._n <= self._spin:
+            return False
+        if self._n <= self._spin + 4:
+            time.sleep(0.0)
+            return False
+        time.sleep(self._sleep)
+        self._sleep = min(self._sleep * 2.0, self._max_sleep)
+        return True
 
 
 class Wire:
@@ -52,6 +98,11 @@ class Wire:
     #: fires) without racing buffer teardown.
     stop_check = None
 
+    #: True when buffers returned by ``recv_exactly`` are freshly
+    #: allocated and owned by the caller (never aliased or reused by the
+    #: wire) — lets :func:`decode_array` skip its defensive copy.
+    owns_recv = False
+
     def sendall(self, data: bytes) -> None:
         """Write ``data`` completely (blocking; may chunk internally)."""
         raise NotImplementedError
@@ -60,6 +111,16 @@ class Wire:
         """Read exactly ``n`` bytes, raising ``TimeoutError`` past
         ``deadline`` (absolute ``time.monotonic`` stamp)."""
         raise NotImplementedError
+
+    def recv_into(self, buf, deadline: float) -> None:
+        """Fill the writable buffer ``buf`` completely with stream bytes.
+
+        The persistent-channel receive path: payload lands directly in a
+        preallocated array with zero intermediate allocation.  The default
+        falls back to ``recv_exactly`` + copy; transports override.
+        """
+        mv = memoryview(buf).cast("B")
+        mv[:] = self.recv_exactly(len(mv), deadline)
 
     def close(self) -> None:
         """Release the stream (idempotent)."""
@@ -108,11 +169,18 @@ def encode_array(arr: np.ndarray) -> tuple[bytes, bytes]:
     return meta, np.ascontiguousarray(arr).tobytes()
 
 
-def decode_array(meta: bytes, data: bytes) -> np.ndarray:
-    """Reverse of :func:`encode_array`."""
+def decode_array(meta: bytes, data: bytes, owned: bool = False) -> np.ndarray:
+    """Reverse of :func:`encode_array`.
+
+    ``owned=True`` (the wire's ``owns_recv`` contract) skips the defensive
+    copy and returns an array viewing ``data`` directly — correct when the
+    buffer was freshly allocated for this frame and will never be reused.
+    Borrowed buffers (``owned=False``) stay copied.
+    """
     doc = json.loads(meta.decode())
     dtype = _dtype_from_name(doc["dtype"])
-    return np.frombuffer(data, dtype=dtype).reshape(doc["shape"]).copy()
+    arr = np.frombuffer(data, dtype=dtype).reshape(doc["shape"])
+    return arr if owned else arr.copy()
 
 
 def encode_obj(obj) -> tuple[bytes, bytes]:

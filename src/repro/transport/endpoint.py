@@ -47,7 +47,8 @@ from repro.core.vcollectives import (_alltoallv_supports, _gatherv_supports,
                                      _offsets, _scatterv_supports,
                                      _valid_rows)
 from repro.transport import base
-from repro.transport.base import KIND_ARRAY, KIND_CTRL, KIND_OBJ
+from repro.transport import channel as channel_lib
+from repro.transport.base import KIND_ARRAY, KIND_CHAN, KIND_CTRL, KIND_OBJ
 
 #: Internal wire tags (negative: the public tag space is user-visible and
 #: non-negative by convention; p2p payloads, collective payloads and object
@@ -55,6 +56,8 @@ from repro.transport.base import KIND_ARRAY, KIND_CTRL, KIND_OBJ
 TAG_P2P = -10
 TAG_COLL = -11
 TAG_OBJ = -12
+TAG_CHAN = -13   # persistent-channel negotiation (SYN/ACK OBJ frames)
+TAG_STAT = -14   # status agreement (CTRL when ok, OBJ when failed)
 _TAG_BARRIER = -101  # round k uses _TAG_BARRIER - k
 
 
@@ -80,11 +83,17 @@ class Endpoint:
         self.transport, self.rank, self.nprocs = transport, rank, nprocs
         self.timeout = default_timeout() if timeout is None else timeout
         self._epoch = 0
-        self._tx = {"frames": 0, "bytes": 0, "data_bytes": 0}
+        self._tx = {"frames": 0, "bytes": 0, "data_bytes": 0,
+                    "meta_bytes": 0, "chan_msgs": 0, "chan_bytes": 0}
         self._stop = threading.Event()
         self._queues: dict[int, queue.Queue] = {}
         self._pending: dict[int, list] = {}
         self._threads: list[threading.Thread] = []
+        self._ctrl_cache: dict = {}       # (tag, epoch) -> pre-packed frame
+        self._chan_rx: dict = {}          # (peer, cid) -> SockRecvChannel
+        self._chan_cache: dict = {}       # (peer, role, key) -> channel
+        self._channels: list = []         # every open channel, for close()
+        self._chan_next = 0               # next channel id this rank issues
         for peer in range(nprocs):
             if peer == rank:
                 continue
@@ -101,7 +110,27 @@ class Endpoint:
     def _reader(self, peer: int, wire: base.Wire) -> None:
         while not self._stop.is_set():
             try:
-                frame = base.recv_frame(wire, time.monotonic() + 86400.0)
+                head = wire.recv_exactly(base.HEADER_LEN,
+                                         time.monotonic() + 86400.0)
+                kind, tag, epoch, meta_len, data_len = base.HEADER.unpack(
+                    bytes(head))
+                if kind == KIND_CHAN:
+                    # Persistent-channel payload: route by channel id into
+                    # the channel's pooled receive buffer — no meta parse,
+                    # no allocation, no queue handoff.
+                    chan = self._chan_rx.get((peer, tag))
+                    deadline = time.monotonic() + self.timeout
+                    if chan is None:  # channel closed: drain and drop
+                        wire.recv_exactly(data_len, deadline)
+                    else:
+                        chan.deliver(wire, epoch, data_len, deadline)
+                    continue
+                deadline = time.monotonic() + 86400.0
+                meta = wire.recv_exactly(meta_len, deadline) \
+                    if meta_len else b""
+                data = wire.recv_exactly(data_len, deadline) \
+                    if data_len else b""
+                frame = (kind, tag, epoch, meta, data)
             except EOFError:
                 if not self._stop.is_set():
                     self._queues[peer].put(("eof", None))
@@ -117,13 +146,23 @@ class Endpoint:
         self._tx["frames"] += 1
         self._tx["bytes"] += base.HEADER_LEN + meta_len + data_len
         self._tx["data_bytes"] += data_len
+        self._tx["meta_bytes"] += meta_len
+
+    def _count_chan(self, payload: int, overhead: int) -> None:
+        # Persistent-channel sends: counted apart from the eager frame
+        # counters so the wire spy can assert the fast path carries zero
+        # meta and zero eager frames in steady state.
+        self._tx["chan_msgs"] += 1
+        self._tx["chan_bytes"] += payload + overhead
 
     def wire_stats(self) -> dict[str, int]:
-        """Snapshot of this endpoint's transmit counters: frames sent,
-        total wire bytes (header + meta + data), and raw payload
-        ``data_bytes``.  The frame-size spy for the compressed-wire parity
-        tests — bracket a collective with :meth:`reset_wire_stats` and a
-        read to measure exactly what it put on the wire."""
+        """Snapshot of this endpoint's transmit counters: eager ``frames``
+        sent, their total wire ``bytes`` (header + meta + data), raw eager
+        payload ``data_bytes``, JSON ``meta_bytes``, and the persistent
+        fast path's ``chan_msgs``/``chan_bytes``.  The frame-size spy for
+        the compressed-wire and zero-meta parity tests — bracket an op
+        with :meth:`reset_wire_stats` and a read to measure exactly what
+        it put on the wire."""
         return dict(self._tx)
 
     def reset_wire_stats(self) -> None:
@@ -146,28 +185,39 @@ class Endpoint:
                         self._epoch, meta, data)
 
     def send_ctrl(self, dst: int, tag: int) -> None:
-        """Frame an empty control probe (barrier rounds) to rank ``dst``."""
+        """Frame an empty control probe (barrier rounds, ok-status votes)
+        to rank ``dst``.  The 28-byte frame is fully determined by
+        ``(tag, epoch)``, so it is packed once and cached — steady-state
+        control traffic never re-serializes."""
+        frame = self._ctrl_cache.get((tag, self._epoch))
+        if frame is None:
+            if len(self._ctrl_cache) > 128:
+                self._ctrl_cache.clear()  # old epochs never come back
+            frame = base.HEADER.pack(KIND_CTRL, tag, self._epoch, 0, 0)
+            self._ctrl_cache[(tag, self._epoch)] = frame
         self._count_tx(0, 0)
-        base.send_frame(self.transport.wire(dst), KIND_CTRL, tag, self._epoch)
+        self.transport.wire(dst).sendall(frame)
 
     # -- receive side ------------------------------------------------------
-    def _match(self, src: int, tag: int, kind: int):
+    def _match(self, src: int, tag: int, kinds: tuple):
         found, keep = None, []
         for fr in self._pending[src]:
             k, t, ep, _, _ = fr
             if ep < self._epoch:
                 continue  # stale frame from an abandoned program region
-            if found is None and ep == self._epoch and k == kind and t == tag:
+            if found is None and ep == self._epoch and k in kinds \
+                    and t == tag:
                 found = fr
             else:
                 keep.append(fr)
         self._pending[src] = keep
         return found
 
-    def _recv_frame(self, src: int, tag: int, kind: int):
+    def _recv_frame(self, src: int, tag: int, kind):
+        kinds = (kind,) if isinstance(kind, int) else tuple(kind)
         deadline = time.monotonic() + self.timeout
         while True:
-            fr = self._match(src, tag, kind)
+            fr = self._match(src, tag, kinds)
             if fr is not None:
                 return fr
             try:
@@ -175,9 +225,9 @@ class Endpoint:
             except queue.Empty:
                 if time.monotonic() > deadline:
                     raise TimeoutError(
-                        f"rank {self.rank}: no frame (kind={kind}, tag={tag},"
-                        f" epoch={self._epoch}) from rank {src} within "
-                        f"{self.timeout:.0f}s")
+                        f"rank {self.rank}: no frame (kind={kinds}, "
+                        f"tag={tag}, epoch={self._epoch}) from rank {src} "
+                        f"within {self.timeout:.0f}s")
                 continue
             if sort == "eof":
                 raise RuntimeError(f"rank {self.rank}: peer {src} closed its "
@@ -190,7 +240,10 @@ class Endpoint:
     def recv_array(self, src: int, tag: int) -> np.ndarray:
         """Next ARRAY frame from ``src`` with ``tag`` (blocking, FIFO)."""
         _, _, _, meta, data = self._recv_frame(src, tag, KIND_ARRAY)
-        return base.decode_array(meta, data)
+        # Both wires hand over freshly allocated buffers (owns_recv), so
+        # decoding aliases them instead of paying a second full copy.
+        return base.decode_array(meta, data,
+                                 owned=self.transport.wire(src).owns_recv)
 
     def recv_obj(self, src: int, tag: int = TAG_OBJ):
         """Next OBJ frame from ``src`` with ``tag`` (blocking, FIFO)."""
@@ -223,6 +276,112 @@ class Endpoint:
             out[peer] = self.recv_obj(peer)
         return out
 
+    def allgather_status(self, err: str | None) -> list:
+        """Rank-ordered outcome agreement with pickle kept off the hot
+        path: the overwhelmingly common ``None`` (ok) vote travels as a
+        pre-encoded empty CTRL frame; only actual failures pickle their
+        error string into an OBJ frame."""
+        out: list = [None] * self.nprocs
+        out[self.rank] = err
+        for peer in self._queues:
+            if err is None:
+                self.send_ctrl(peer, TAG_STAT)
+            else:
+                self.send_obj(peer, err, tag=TAG_STAT)
+        for peer in sorted(self._queues):
+            kind, _, _, _, data = self._recv_frame(peer, TAG_STAT,
+                                                   (KIND_CTRL, KIND_OBJ))
+            out[peer] = None if kind == KIND_CTRL else base.decode_obj(data)
+        return out
+
+    # -- persistent channels -------------------------------------------------
+    def open_channels(self, sends, recvs) -> tuple[dict, dict]:
+        """Negotiate (or fetch cached) persistent channels.
+
+        ``sends``/``recvs`` are lists of ``(peer, key)`` with
+        ``key = (op, shape, dtype_name, extra)`` — the frozen signature
+        both ends derive independently from the same SPMD plan-init call.
+        Returns ``({peer: send_channel}, {peer: recv_channel})``.
+
+        The negotiation is a batched three-phase SYN/ACK over OBJ frames:
+        (1) create sender-side resources and SYN every new send channel,
+        (2) service the expected inbound SYNs — validating the announced
+        key against the locally derived one — attach, and ACK, (3) collect
+        ACKs.  No phase blocks before all of this rank's phase-1 frames
+        are out, so any static pattern opens deadlock-free.  Channels are
+        cached per ``(peer, direction, key)`` on the endpoint — distinct
+        plans with the same frozen signature share channels (safe: both
+        ends issue in the same SPMD program order), and rebuilt plans
+        (e.g. ``recv_into`` variants, which skip the plan cache) never
+        leak new segments.
+        """
+        tx, rx, new_tx, new_rx = {}, {}, [], []
+        for peer, key in sends:
+            cached = self._chan_cache.get((peer, "tx", key))
+            (tx.__setitem__(peer, cached) if cached is not None
+             else new_tx.append((peer, key)))
+        for peer, key in recvs:
+            cached = self._chan_cache.get((peer, "rx", key))
+            (rx.__setitem__(peer, cached) if cached is not None
+             else new_rx.append((peer, key)))
+        if not new_tx and not new_rx:
+            return tx, rx
+        shm_kind = self.transport.kind == "shm"
+        deadline = time.monotonic() + self.timeout
+        pending = []
+        for peer, key in new_tx:  # phase 1: resources up, SYNs out
+            cid = self._chan_next
+            self._chan_next += 1
+            spec = {"cid": cid, "key": key}
+            if shm_kind:
+                from multiprocessing import shared_memory
+                cap, _ = channel_lib.chunk_layout(channel_lib.key_layout(key)[2])
+                name = channel_lib.channel_segment_name(
+                    self.transport.session, self.rank, peer, cid)
+                seg = shared_memory.SharedMemory(
+                    name=name, create=True,
+                    size=channel_lib._CTRL_BYTES + channel_lib.NSLOTS * cap)
+                spec["segment"] = name
+                chan = channel_lib.ShmChannel(self, peer, key, seg,
+                                              sender=True, owner=True)
+            else:
+                chan = channel_lib.SockSendChannel(self, peer, key, cid,
+                                                   self.transport.wire(peer))
+            self.send_obj(peer, ("chan-syn", spec), tag=TAG_CHAN)
+            pending.append((peer, key, chan))
+        for peer, key in new_rx:  # phase 2: service inbound SYNs, ACK
+            sort, spec = self.recv_obj(peer, tag=TAG_CHAN)
+            if sort != "chan-syn" or spec["key"] != key:
+                raise RuntimeError(
+                    f"rank {self.rank}: persistent-channel negotiation "
+                    f"mismatch with rank {peer} — peer announced "
+                    f"{spec.get('key') if sort == 'chan-syn' else sort!r}, "
+                    f"this rank expected {key}")
+            if shm_kind:
+                from repro.transport.shm import _attach
+                seg = _attach(spec["segment"], create=False,
+                              deadline=deadline)
+                chan = channel_lib.ShmChannel(self, peer, key, seg,
+                                              sender=False, owner=False)
+            else:
+                chan = channel_lib.SockRecvChannel(self, peer, key,
+                                                   spec["cid"])
+                self._chan_rx[(peer, spec["cid"])] = chan
+            self._chan_cache[(peer, "rx", key)] = chan
+            self._channels.append(chan)
+            rx[peer] = chan
+            self.send_obj(peer, ("chan-ack", spec["cid"]), tag=TAG_CHAN)
+        for peer, key, chan in pending:  # phase 3: collect ACKs
+            sort, cid = self.recv_obj(peer, tag=TAG_CHAN)
+            if sort != "chan-ack":
+                raise RuntimeError(
+                    f"rank {self.rank}: expected channel ACK from rank "
+                    f"{peer}, got {sort!r}")
+            self._chan_cache[(peer, "tx", key)] = chan
+            self._channels.append(chan)
+            tx[peer] = chan
+        return tx, rx
+
     def bump_epoch(self) -> None:
         """Advance the message epoch: frames already in flight with the old
         stamp will be lazily discarded.  The case runner calls this (plus a
@@ -236,10 +395,18 @@ class Endpoint:
         return self._epoch
 
     def close(self) -> None:
-        """Stop the readers and tear down the transport (idempotent)."""
+        """Stop the readers, release every persistent channel, and tear
+        down the transport (idempotent).  Channel owners unlink their shm
+        segments here — the worker's final barrier has already run, so no
+        peer is still reading them."""
         self._stop.set()
         for t in self._threads:
             t.join(timeout=5.0)
+        for chan in self._channels:
+            chan.close()
+        self._channels.clear()
+        self._chan_cache.clear()
+        self._chan_rx.clear()
         self.transport.close()
 
 
@@ -332,6 +499,28 @@ class MultiprocComm(Communicator):
         self.endpoint.barrier()
         return tok
 
+    # -- persistent-channel fast path ----------------------------------------
+    # Duck-typed hooks the plans layer probes with getattr: *_init on a
+    # MultiprocComm negotiates fixed-signature channels once and binds an
+    # issue closure that moves only payload bytes in steady state.  Both
+    # return None (plans fall back to the generic issue closure) when no
+    # channel lowering applies — or when this comm object carries no live
+    # endpoint (identity-only instances, e.g. plan-cache key tests).
+
+    def persistent_sendrecv_factory(self, shape, dtype_name, perm):
+        """Channel-backed issue closure for a frozen sendrecv pattern."""
+        if self.endpoint is None:
+            return None
+        return channel_lib.sendrecv_issue(self, shape, dtype_name, perm)
+
+    def persistent_issue_factory(self, op_name, algo_name, shape,
+                                 dtype_name, kw):
+        """Channel-backed issue closure for a frozen direct collective."""
+        if self.endpoint is None:
+            return None
+        return channel_lib.collective_issue(self, op_name, algo_name,
+                                            shape, dtype_name, kw)
+
 
 def make_comm(transport: base.Transport, rank: int, nprocs: int,
               timeout: float | None = None) -> MultiprocComm:
@@ -368,16 +557,24 @@ def _exchange_all(comm: MultiprocComm, arr: np.ndarray) -> list[np.ndarray]:
 
 @registry.register("allreduce", "direct", backend="multiproc")
 def _direct_allreduce(val, tok, comm, *, op):
-    """Allgather the parts and reduce locally in rank order — n−1 messages
-    per rank, deterministic combine order (all six Operators honored via
-    the shared combiner algebra, like the emulated ring kernel)."""
+    """Send to all peers, then reduce-on-receive in rank order — n−1
+    messages per rank and never more than one peer buffer plus the
+    accumulator live at once (the old gather-then-reduce held all n).
+    The combine order is unchanged (0..n−1), so results stay bit-identical
+    across ranks and with the previous kernel (all six Operators honored
+    via the shared combiner algebra, like the emulated ring kernel)."""
     combine, pre, post = combiner(op)
-    parts = [jnp.asarray(p) for p in _exchange_all(comm, np.asarray(val))]
-    if pre is not None:
-        parts = [pre(p) for p in parts]
-    acc = parts[0]
-    for p in parts[1:]:
-        acc = combine(acc, p)
+    ep, me, n = comm.endpoint, comm.rank_id, comm.nprocs
+    arr = np.asarray(val)
+    for peer in range(n):
+        if peer != me:
+            ep.send_array(peer, arr, TAG_COLL)
+    acc = None
+    for r in range(n):
+        part = jnp.asarray(arr if r == me else ep.recv_array(r, TAG_COLL))
+        if pre is not None:
+            part = pre(part)
+        acc = part if acc is None else combine(acc, part)
     if post is not None:
         acc = post(acc, val.dtype)
     return acc, tok
@@ -415,11 +612,27 @@ def _rs_supports(val, comm, **kw):
 @registry.register("reduce_scatter", "direct", backend="multiproc",
                    supports=_rs_supports)
 def _direct_reduce_scatter(val, tok, comm, *, op):
-    """Allreduce then keep this rank's axis-0 chunk (all six Operators)."""
-    full, tok = _direct_allreduce(val, tok, comm, op=op)
-    chunk = val.shape[0] // comm.nprocs
-    me = comm.rank_id
-    return full[me * chunk:(me + 1) * chunk], tok
+    """Send each destination only ITS axis-0 chunk and reduce-on-receive
+    in rank order — n× fewer wire bytes than the old allreduce-then-slice
+    form, elementwise-identical results (the combiner ops are all
+    elementwise, so summing chunks equals slicing the summed whole)."""
+    combine, pre, post = combiner(op)
+    ep, me, n = comm.endpoint, comm.rank_id, comm.nprocs
+    arr = np.asarray(val)
+    chunk = arr.shape[0] // n
+    for d in range(n):
+        if d != me:
+            ep.send_array(d, arr[d * chunk:(d + 1) * chunk], TAG_COLL)
+    acc = None
+    for r in range(n):
+        part = jnp.asarray(arr[me * chunk:(me + 1) * chunk] if r == me
+                           else ep.recv_array(r, TAG_COLL))
+        if pre is not None:
+            part = pre(part)
+        acc = part if acc is None else combine(acc, part)
+    if post is not None:
+        acc = post(acc, val.dtype)
+    return acc, tok
 
 
 def _a2a_supports(val, comm, *, split_axis=0, concat_axis=0, **kw):

@@ -183,7 +183,11 @@ class Job:
 
     def _release_segments(self) -> None:
         """Unlink any shm segments the workers left behind (backstop — the
-        creating worker unlinks its own on a clean exit)."""
+        creating worker unlinks its own on a clean exit).  Ring segments
+        are enumerable from (session, nprocs); persistent-channel segments
+        carry dynamic channel ids, so those are swept by session-prefix
+        scan of /dev/shm (best-effort: the scan is Linux-specific, and a
+        clean worker exit already unlinked everything)."""
         if self.transport != "shm":
             return
         for i in range(self.nprocs):
@@ -197,6 +201,18 @@ class Job:
                     seg.unlink()
                 except (FileNotFoundError, OSError):
                     pass
+        try:
+            leaked = [n for n in os.listdir("/dev/shm")
+                      if n.startswith(f"{self.session}_c")]
+        except OSError:
+            leaked = []
+        for name in leaked:
+            try:
+                seg = shared_memory.SharedMemory(name=name)
+                seg.close()
+                seg.unlink()
+            except (FileNotFoundError, OSError):
+                pass
 
     def close(self) -> None:
         """Reap workers and delete the rendezvous directory (idempotent)."""

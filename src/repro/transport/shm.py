@@ -52,6 +52,7 @@ def _attach(name: str, create: bool, deadline: float) -> shared_memory.SharedMem
                                          size=_HDR_BYTES + RING_SIZE)
         shm.buf[:_HDR_BYTES] = b"\x00" * _HDR_BYTES
         return shm
+    backoff = base.Backoff(spin=0, min_sleep=5e-5, max_sleep=5e-3)
     while True:
         try:
             shm = shared_memory.SharedMemory(name=name)
@@ -60,7 +61,7 @@ def _attach(name: str, create: bool, deadline: float) -> shared_memory.SharedMem
             if time.monotonic() > deadline:
                 raise TimeoutError(f"shm rendezvous: segment {name} never "
                                    "appeared (creator died?)")
-            time.sleep(0.005)
+            backoff.pause()
     # The stdlib resource_tracker assumes every attacher owns the segment
     # and double-unlinks it at exit (bpo-38119).  Only the creator unlinks;
     # deregister the attach so teardown stays single-owner.
@@ -87,14 +88,15 @@ class _Ring:
 
     def write(self, data: bytes, deadline: float) -> None:
         mv, pos = memoryview(data), 0
+        backoff = base.Backoff(spin=100)
         while pos < len(mv):
             head, tail = self._head(), self._tail()
             free = RING_SIZE - (head - tail)
             if free == 0:
-                if time.monotonic() > deadline:
+                if backoff.pause() and time.monotonic() > deadline:
                     raise TimeoutError("shm ring stayed full (reader gone?)")
-                time.sleep(0.0002)
                 continue
+            backoff.reset()
             n = min(free, len(mv) - pos)
             start = head % RING_SIZE
             first = min(n, RING_SIZE - start)
@@ -107,20 +109,23 @@ class _Ring:
             _U64.pack_into(self._shm.buf, 0, head + n)
             pos += n
 
-    def read(self, n: int, deadline: float, stop=None) -> bytes:
+    def read(self, n: int, deadline: float, stop=None) -> bytearray:
+        # Returned buffer is freshly built here and owned by the caller
+        # (``ShmWire.owns_recv``) — no trailing bytes() copy.
         out = bytearray()
+        backoff = base.Backoff(spin=100)
         while len(out) < n:
             head, tail = self._head(), self._tail()
             avail = head - tail
             if avail == 0:
                 if stop is not None and stop():
                     raise EOFError("endpoint stopped")
-                if time.monotonic() > deadline:
+                if backoff.pause() and time.monotonic() > deadline:
                     raise TimeoutError(f"shm recv timed out with "
                                        f"{n - len(out)} of {n} bytes "
                                        "outstanding")
-                time.sleep(0.0002)
                 continue
+            backoff.reset()
             take = min(avail, n - len(out))
             start = tail % RING_SIZE
             first = min(take, RING_SIZE - start)
@@ -128,7 +133,7 @@ class _Ring:
             if take > first:
                 out += self._shm.buf[_HDR_BYTES:_HDR_BYTES + take - first]
             _U64.pack_into(self._shm.buf, 8, tail + take)
-        return bytes(out)
+        return out
 
     def close(self) -> None:
         try:
@@ -141,6 +146,10 @@ class _Ring:
 
 class ShmWire(base.Wire):
     """Wire over a pair of directed rings (out: me→peer, in: peer→me)."""
+
+    #: ``_Ring.read`` builds a fresh bytearray per call — the receiver
+    #: owns it, so frame decoding may alias it instead of copying.
+    owns_recv = True
 
     def __init__(self, out_ring: _Ring, in_ring: _Ring,
                  write_timeout: float = 120.0):

@@ -26,6 +26,10 @@ _HELLO = len("hello 00000000")  # fixed-width hello: "hello %08d"
 class SockWire(base.Wire):
     """One connected TCP socket to a peer (both directions)."""
 
+    #: ``recv_exactly`` allocates a fresh buffer per call — the receiver
+    #: owns it, so frame decoding may alias it instead of copying.
+    owns_recv = True
+
     def __init__(self, sock: socket.socket):
         self._sock = sock
         try:
@@ -33,31 +37,37 @@ class SockWire(base.Wire):
         except OSError:
             pass  # non-TCP stream socket (e.g. a test socketpair)
 
-    def sendall(self, data: bytes) -> None:
+    def sendall(self, data) -> None:
         self._sock.sendall(data)
 
-    def recv_exactly(self, n: int, deadline: float) -> bytes:
-        chunks: list[bytes] = []
-        remaining = n
-        while remaining:
+    def recv_exactly(self, n: int, deadline: float) -> bytearray:
+        # One allocation, zero joins: chunks land directly in the final
+        # buffer as they arrive (large messages pipeline through the TCP
+        # window instead of accumulating a chunk list + join copy).
+        out = bytearray(n)
+        self.recv_into(out, deadline)
+        return out
+
+    def recv_into(self, buf, deadline: float) -> None:
+        mv = memoryview(buf).cast("B")
+        pos, n = 0, len(mv)
+        while pos < n:
             budget = deadline - time.monotonic()
             if budget <= 0:
-                raise TimeoutError(f"socket recv timed out with {remaining} "
+                raise TimeoutError(f"socket recv timed out with {n - pos} "
                                    f"of {n} bytes outstanding")
             # Slice the wait so a revoked deadline is honored promptly even
             # when the peer never writes.
             self._sock.settimeout(min(budget, 0.5))
             try:
-                chunk = self._sock.recv(remaining)
+                got = self._sock.recv_into(mv[pos:])
             except socket.timeout:
                 if self.stop_check is not None and self.stop_check():
                     raise EOFError("endpoint stopped")
                 continue
-            if not chunk:
+            if not got:
                 raise EOFError("peer closed the socket")
-            chunks.append(chunk)
-            remaining -= len(chunk)
-        return b"".join(chunks)
+            pos += got
 
     def close(self) -> None:
         try:
@@ -75,6 +85,7 @@ def _publish_addr(rdv: str, rank: int, host: str, port: int) -> None:
 
 def _read_addr(rdv: str, rank: int, deadline: float) -> tuple[str, int]:
     path = os.path.join(rdv, f"addr_{rank}.json")
+    backoff = base.Backoff(spin=0, min_sleep=1e-4, max_sleep=1e-2)
     while True:
         try:
             with open(path) as f:
@@ -84,7 +95,7 @@ def _read_addr(rdv: str, rank: int, deadline: float) -> tuple[str, int]:
             if time.monotonic() > deadline:
                 raise TimeoutError(f"rendezvous: rank {rank} never published "
                                    f"its address at {path}")
-            time.sleep(0.01)
+            backoff.pause()
 
 
 class SockTransport(base.Transport):

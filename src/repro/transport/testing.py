@@ -51,9 +51,10 @@ def _case_entry(comm, args) -> None:
     """Worker entry: run every ``case_*`` of ``args["module"]`` on all
     ranks, agree on the outcome, and have rank 0 emit the transcript.
 
-    Outcome agreement (an object-allgather of the per-rank error string)
-    makes a failure on ANY rank visible in rank 0's transcript; the
-    epoch bump + barrier between cases guarantees a case that raised
+    Outcome agreement (a status-allgather of the per-rank error string —
+    pre-encoded CTRL frames for the common all-ok vote, pickle only on
+    failure) makes a failure on ANY rank visible in rank 0's transcript;
+    the epoch bump + barrier between cases guarantees a case that raised
     mid-exchange cannot leak a stale frame into the next case.
     """
     mod = importlib.import_module(args["module"])
@@ -64,7 +65,7 @@ def _case_entry(comm, args) -> None:
             getattr(mod, name)()
         except Exception as e:  # noqa: BLE001 — reported per case
             err = f"{type(e).__name__}: {e}"
-        errs = ep.allgather_obj(err)
+        errs = ep.allgather_status(err)
         ep.bump_epoch()
         ep.barrier()
         if comm.rank_id == 0:
@@ -138,11 +139,19 @@ def _bench_worker(comm, args=None) -> None:
 
         {"op": "pingpong",   "size": <bytes>, "inner": <iters>}
         {"op": "window",     "size": <bytes>, "window": <w>, "inner": <iters>}
+        {"op": "pingpong_persistent", "size": <bytes>, "inner": <iters>}
+        {"op": "window_persistent",   "size": <bytes>, "window": <w>,
+                             "inner": <iters>}
         {"op": "gradsync",   "total": <floats>, "algorithm": ""|"int8_ef"|
                              "topk_ef", "buckets": <b>, "overlap": <bool>,
                              "inner": <iters>}
         {"op": "wire_bytes", "total": <floats>}
         {"op": "exit"}
+
+    The ``*_persistent`` twins run the same exchange through cached
+    ``sendrecv_init`` plans — first command per size pays the channel
+    negotiation (outside the timed region), steady state runs the
+    zero-copy channel fast path.
 
     Rank 0 replies ``DONE {"secs": ...}`` per command on stdout
     (``wire_bytes`` replies the per-rank transmitted payload bytes of one
@@ -218,6 +227,16 @@ def _bench_worker(comm, args=None) -> None:
         x = jnp.zeros((n_f32,), jnp.float32)
         inner = int(cmd.get("inner", 10))
         token_lib.reset_ambient()
+        if cmd["op"].endswith("_persistent"):
+            # Plan/channel setup (negotiation on first use per size;
+            # process-global plan cache makes repeats free) happens here,
+            # BEFORE the barrier and the clock — steady state is timed.
+            from repro.core import plans as plans_lib
+            sig = ((n_f32,), jnp.float32)
+            fwd = plans_lib.sendrecv_init(sig, pairs=[(0, 1)], comm=comm)
+            bwd = plans_lib.sendrecv_init(sig, pairs=[(1, 0)], comm=comm)
+            ack = plans_lib.sendrecv_init(((1,), jnp.float32),
+                                          pairs=[(1, 0)], comm=comm)
         ep.barrier()
         t0 = time.perf_counter()
         if cmd["op"] == "pingpong":
@@ -231,6 +250,16 @@ def _bench_worker(comm, args=None) -> None:
                         for i in range(window)]
                 p2p.waitall(reqs)
                 p2p.sendrecv(x[:1], pairs=[(1, 0)], comm=comm)  # completion ack
+        elif cmd["op"] == "pingpong_persistent":
+            for _ in range(inner):
+                _, y = p2p.wait(fwd.start(x))
+                _, x = p2p.wait(bwd.start(y))
+        elif cmd["op"] == "window_persistent":
+            window = int(cmd.get("window", 16))
+            for _ in range(inner):
+                reqs = [fwd.start(x, tag=i) for i in range(window)]
+                p2p.waitall(reqs)
+                p2p.wait(ack.start(x[:1]))  # completion ack
         else:
             raise ValueError(f"unknown bench op {cmd['op']!r}")
         secs = time.perf_counter() - t0

@@ -1,0 +1,163 @@
+"""Persistent-channel lifecycle cases (multiproc backend ONLY — these
+exercise the zero-copy channel fast path behind ``*_init`` plans, so they
+are launched exclusively through ``assert_case_multiproc`` by
+``tests/test_channels_multiproc.py``; there is no emulated twin).
+
+Covered per (transport, nprocs) job: plan execution through negotiated
+channels (ring sendrecv, repeated), channel reuse across epoch bumps (the
+case-runner's own bump+barrier discipline), every channel-lowered
+collective against a local numpy oracle, static ERR_TRUNCATE surfacing at
+plan-init/negotiation time, and the wire-spy proof that steady state
+moves ZERO meta bytes and zero eager frames.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as jmpi
+from repro.core import p2p, plans
+from repro.core.operators import Operator
+
+N = int(os.environ.get("JMPI_NP", "2"))
+
+
+def _comm():
+    comm = jmpi.world()
+    assert comm.endpoint is not None, "cases_channels requires multiproc"
+    return comm
+
+
+def _ring_perm():
+    return [(r, (r + 1) % N) for r in range(N)]
+
+
+def case_persistent_sendrecv_ring():
+    """A ring sendrecv plan binds the channel lowering and executes
+    repeatedly: after k hops every rank holds the payload that originated
+    k ranks behind it."""
+    comm = _comm()
+    me = comm.rank_id
+    plan = plans.sendrecv_init(((8,), jnp.float32), pairs=_ring_perm(),
+                               comm=comm)
+    assert plan.algorithm == "channel", plan.algorithm
+    hops = 5
+    x = jnp.arange(8, dtype=jnp.float32) + 100.0 * me
+    for _ in range(hops):
+        status, x = p2p.wait(plan.start(x))
+        assert status == jmpi.SUCCESS
+    src = (me - hops) % N
+    np.testing.assert_array_equal(
+        np.asarray(x), np.arange(8, dtype=np.float32) + 100.0 * src)
+
+
+def case_channel_reuse_across_epochs():
+    """One plan, three program epochs: the negotiated channels survive
+    ``bump_epoch`` (shm republishes its generation word in place, sock
+    re-packs its cached header) and carry the next epoch's messages."""
+    comm = _comm()
+    ep, me = comm.endpoint, comm.rank_id
+    plan = plans.sendrecv_init(((4,), jnp.float32), pairs=_ring_perm(),
+                               comm=comm)
+    before = len(ep._channels)
+    for round_ in range(3):
+        x = jnp.full((4,), float(10 * round_ + me), jnp.float32)
+        _, y = p2p.wait(plan.start(x))
+        np.testing.assert_array_equal(
+            np.asarray(y), np.full(4, 10.0 * round_ + (me - 1) % N))
+        ep.bump_epoch()   # collective: every rank bumps, then aligns
+        ep.barrier()
+    assert len(ep._channels) == before, \
+        "epoch bumps must reuse channels, not renegotiate"
+
+
+def case_persistent_collectives_match_numpy():
+    """Every channel-lowered collective plan (allreduce, bcast, allgather,
+    reduce_scatter, alltoall) against a locally computed numpy oracle."""
+    comm = _comm()
+    me = comm.rank_id
+    ranks = np.arange(N, dtype=np.float32)
+
+    x = jnp.arange(6, dtype=jnp.float32) + me
+    p = plans.allreduce_init(x, comm=comm)
+    _, out = p2p.wait(p.start(x))
+    want = N * np.arange(6, dtype=np.float32) + ranks.sum()
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
+
+    p = plans.allreduce_init(x, Operator.MAX, comm=comm)
+    _, out = p2p.wait(p.start(x))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.arange(6, dtype=np.float32) + (N - 1))
+
+    root = N - 1
+    p = plans.bcast_init(((5,), jnp.float32), root=root, comm=comm)
+    xb = jnp.arange(5, dtype=jnp.float32) * (me + 1)
+    _, out = p2p.wait(p.start(xb))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.arange(5, dtype=np.float32) * (root + 1))
+
+    p = plans.allgather_init(((3,), jnp.float32), comm=comm)
+    xg = jnp.full((3,), float(me), jnp.float32)
+    _, out = p2p.wait(p.start(xg))
+    np.testing.assert_array_equal(np.asarray(out), np.repeat(ranks, 3))
+
+    p = plans.reduce_scatter_init(((2 * N,), jnp.float32), comm=comm)
+    xr = jnp.arange(2 * N, dtype=jnp.float32) + me
+    _, out = p2p.wait(p.start(xr))
+    want = N * np.arange(2 * N, dtype=np.float32)[2 * me:2 * me + 2] \
+        + ranks.sum()
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
+
+    p = plans.alltoall_init(((2 * N, 3), jnp.float32), comm=comm)
+    xa = jnp.asarray(
+        np.arange(2 * N * 3, dtype=np.float32).reshape(2 * N, 3) + 100 * me)
+    _, out = p2p.wait(p.start(xa))
+    base_block = np.arange(2 * N * 3, dtype=np.float32).reshape(2 * N, 3)
+    # rank r receives slot r of every sender s
+    want = np.concatenate(
+        [base_block[2 * me:2 * me + 2] + 100 * s for s in range(N)], axis=0)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
+
+
+def case_err_truncate_at_init():
+    """A ``recv_into`` layout statically smaller than the frozen message
+    carries ERR_TRUNCATE on every Request the plan starts — the status is
+    computed at init (the same moment the channels are negotiated), and
+    the truncated leading elements still land through the channel."""
+    comm = _comm()
+    me = comm.rank_id
+    x = jnp.arange(16, dtype=jnp.float32).reshape(4, 4) + 100.0 * me
+    dst = jnp.full((3, 3), -1.0, jnp.float32)
+    view = jmpi.View(dst, (slice(0, 3), slice(0, 3)))   # 9 < 16
+    plan = plans.sendrecv_init(((4, 4), jnp.float32), pairs=_ring_perm(),
+                               comm=comm, recv_into=view)
+    assert plan.algorithm == "channel", plan.algorithm
+    assert plan.status == jmpi.ERR_TRUNCATE, \
+        "truncation must be known statically at plan init"
+    status, y = p2p.wait(plan.start(x))
+    assert status == jmpi.ERR_TRUNCATE
+    src = (me - 1) % N
+    want = (np.arange(16, dtype=np.float32) + 100.0 * src)[:9].reshape(3, 3)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-6)
+
+
+def case_zero_meta_steady_state():
+    """The wire spy proves the fast path: after warmup, three plan starts
+    move ZERO meta bytes and ZERO eager frames — only channel payload."""
+    comm = _comm()
+    ep = comm.endpoint
+    plan = plans.sendrecv_init(((32,), jnp.float32), pairs=_ring_perm(),
+                               comm=comm)
+    x = jnp.ones((32,), jnp.float32)
+    _, x = p2p.wait(plan.start(x))        # warm: negotiation already done
+    ep.reset_wire_stats()
+    for _ in range(3):
+        _, x = p2p.wait(plan.start(x))
+    stats = ep.wire_stats()
+    assert stats["meta_bytes"] == 0, stats
+    assert stats["frames"] == 0, stats
+    assert stats["chan_msgs"] == 3, stats
+    assert stats["chan_bytes"] >= 3 * 32 * 4, stats

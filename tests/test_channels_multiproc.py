@@ -1,0 +1,55 @@
+"""Persistent-channel lifecycle under REAL processes: the cases in
+``tests/cases_channels.py`` run at {sock, shm} x {n=2, n=4}, exercising
+channel negotiation, zero-copy plan execution, epoch reuse, the channel-
+lowered collectives, static ERR_TRUNCATE, and the zero-meta steady-state
+wire-spy assertion — all across genuine process boundaries.
+
+The final test proves teardown hygiene: a completed shm job leaves no
+``/dev/shm`` segment behind (ring segments AND the dynamically-named
+persistent-channel segments swept by session prefix).
+"""
+
+from __future__ import annotations
+
+import os
+
+import pytest
+
+from repro.transport import launcher
+from repro.transport.testing import assert_case_multiproc
+
+MODULE = "tests.cases_channels"
+
+CASES = [
+    "case_persistent_sendrecv_ring",
+    "case_channel_reuse_across_epochs",
+    "case_persistent_collectives_match_numpy",
+    "case_err_truncate_at_init",
+    "case_zero_meta_steady_state",
+]
+
+CONFIGS = [("sock", 2), ("shm", 2), ("sock", 4), ("shm", 4)]
+
+
+@pytest.mark.parametrize("transport,nprocs", CONFIGS,
+                         ids=[f"{t}-{n}" for t, n in CONFIGS])
+@pytest.mark.parametrize("case", CASES)
+def test_channels_multiproc(case, transport, nprocs):
+    assert_case_multiproc(MODULE, case, nprocs, transport)
+
+
+def test_shm_job_leaves_no_segments():
+    """After a shm job that negotiated persistent channels exits, no ring
+    or channel segment with the job's session prefix survives in /dev/shm."""
+    if not os.path.isdir("/dev/shm"):
+        pytest.skip("no /dev/shm on this platform")
+    job = launcher.launch(2, "repro.transport.testing:_case_entry",
+                          transport="shm", args={"module": MODULE},
+                          timeout=600.0)
+    session = job.session
+    try:
+        job.wait()
+    finally:
+        job.close()
+    leaked = [n for n in os.listdir("/dev/shm") if n.startswith(session)]
+    assert not leaked, f"leaked /dev/shm segments: {leaked}"
